@@ -1,0 +1,64 @@
+"""Kernel harness: correctness-scale timing + max error vs oracle.
+
+Wall times on this CPU container are NOT TPU performance (the Pallas kernels
+execute in interpret mode); the meaningful derived quantity is the error vs
+the pure-jnp oracle and the VMEM working-set the BlockSpec tiling implies
+(reported for the roofline narrative)."""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+from repro.kernels.ops import decode_attention, flash_attention
+
+
+def _time(fn, *args, reps=3, **kw):
+    out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    t0 = time.time()
+    for _ in range(reps):
+        out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    return out, (time.time() - t0) / reps * 1e6
+
+
+def run() -> List[dict]:
+    rows = []
+    B, S, H, KV, hd = 1, 512, 8, 2, 128
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, KV, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, KV, hd), jnp.float32)
+
+    ref_out, t_ref = _time(flash_attention, q, k, v, use_pallas=False)
+    pal_out, t_pal = _time(flash_attention, q, k, v, use_pallas=True,
+                           block_q=128, block_k=128, interpret=True)
+    err = float(jnp.abs(pal_out - ref_out).max())
+    bq, bk = 128, 128
+    vmem = (bq * hd * 2 * 2 + bk * hd * 2 * 2 + bq * hd * 4 + bq * 8) / 2**20
+    rows.append({
+        "name": "kernel_flash_attention",
+        "us_ref_jnp": round(t_ref, 1), "us_pallas_interpret": round(t_pal, 1),
+        "max_abs_err": err, "vmem_tile_mib": round(vmem, 3),
+        "note": "interpret mode on CPU; timing not TPU-representative",
+    })
+
+    kc = jax.random.normal(ks[1], (B * 4, 2048, KV, hd), jnp.float32)
+    vc = jax.random.normal(ks[2], (B * 4, 2048, KV, hd), jnp.float32)
+    qd = jax.random.normal(ks[0], (B * 4, H, hd), jnp.float32)
+    lengths = jnp.array([2048, 1024, 7, 512])
+    r_out, t_r = _time(decode_attention, qd, kc, vc, lengths, use_pallas=False)
+    p_out, t_p = _time(decode_attention, qd, kc, vc, lengths, use_pallas=True,
+                       block_s=512, interpret=True)
+    rows.append({
+        "name": "kernel_decode_attention",
+        "us_ref_jnp": round(t_r, 1), "us_pallas_interpret": round(t_p, 1),
+        "max_abs_err": float(jnp.abs(p_out - r_out).max()),
+        "hbm_bytes_per_token_sweep": int(2048 * KV * hd * 2 * 2),
+    })
+    return rows

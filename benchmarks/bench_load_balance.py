@@ -1,0 +1,63 @@
+"""Fig. 5: (a) JFFC vs JSQ/JIQ/SED/SA-JSQ on GBP-CR+GCA chains;
+(b) JFFC vs the Theorem 3.7 closed-form bounds, swept over load."""
+from __future__ import annotations
+
+import time
+from typing import List
+
+from repro.core import (
+    gbp_cr,
+    gca,
+    response_time_bounds,
+    simulate_policy_name,
+    total_rate,
+)
+from .common import BLOOM_SPEC, make_cluster
+
+C = 7
+RHO = 0.7
+POLICIES = ("jffc", "sa-jsq", "sed", "jsq", "jiq")
+
+
+def _chains(seed: int):
+    servers = make_cluster(20, 0.2, seed)
+    pl = gbp_cr(servers, BLOOM_SPEC, C, 0.2, RHO, use_all_servers=True)
+    return gca(servers, pl).job_servers()
+
+
+def run(seeds=range(4), loads=(0.3, 0.5, 0.7, 0.85), n_jobs=30_000) -> List[dict]:
+    rows = []
+    for load in loads:
+        t0 = time.time()
+        acc = {p: [] for p in POLICIES}
+        bounds_lo, bounds_hi, service_frac = [], [], []
+        for seed in seeds:
+            js = _chains(seed)
+            if not js:
+                continue
+            lam = load * total_rate(js)
+            for p in POLICIES:
+                res = simulate_policy_name(p, js, lam, n_jobs, seed=seed)
+                acc[p].append(res.mean_response)
+                if p == "jffc":
+                    lo, hi = response_time_bounds(js, lam)
+                    bounds_lo.append(lo)
+                    bounds_hi.append(hi)
+                    service_frac.append(
+                        float(res.service_times.mean() / res.mean_response))
+        mean = lambda xs: sum(xs) / len(xs)
+        row = {"name": f"fig5_load_balance_load{int(load*100)}"}
+        for p in POLICIES:
+            row[f"mean_rt_{p}"] = mean(acc[p])
+        row["thm37_lower"] = mean(bounds_lo)
+        row["thm37_upper"] = mean(bounds_hi)
+        row["jffc_within_bounds"] = sum(
+            lo * 0.93 <= rt <= hi * 1.07
+            for lo, rt, hi in zip(bounds_lo, acc["jffc"], bounds_hi)
+        ) / len(acc["jffc"])
+        row["jffc_service_fraction"] = mean(service_frac)
+        row["jffc_best_or_close"] = all(
+            mean(acc["jffc"]) <= mean(acc[p]) * 1.03 for p in POLICIES)
+        row["seconds"] = round(time.time() - t0, 2)
+        rows.append(row)
+    return rows

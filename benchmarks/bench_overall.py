@@ -1,0 +1,66 @@
+"""Fig. 8: overall mean response time — Proposed (GBP-CR+GCA+JFFC) vs
+PETALS-style and BPRR baselines, across (J, eta) grids."""
+from __future__ import annotations
+
+import math
+import random
+import time
+from typing import List
+
+from repro.core import compose, simulate
+from repro.core.baselines import (
+    BPRRRouter,
+    PetalsRouter,
+    bprr_placement,
+    petals_placement,
+    simulate_dynamic,
+)
+from repro.core.load_balance import JFFC
+from repro.core.simulator import poisson_arrivals
+from .common import BLOOM_SPEC, make_cluster
+
+RHO = 0.7
+LAM = 0.2
+
+
+def one_case(j: int, eta: float, seeds, n_jobs=8_000) -> dict:
+    res = {"proposed": [], "petals": [], "bprr": []}
+    for seed in seeds:
+        servers = make_cluster(j, eta, seed)
+        arrivals = poisson_arrivals(LAM, n_jobs, random.Random(seed + 999))
+        try:
+            _, placement, alloc = compose(servers, BLOOM_SPEC, LAM, RHO)
+        except ValueError:
+            return {}                                  # infeasible (paper omits)
+        pairs = alloc.sorted_by_rate()
+        pol = JFFC([c.rate for c, _ in pairs], [cap for _, cap in pairs])
+        res["proposed"].append(simulate(pol, arrivals).mean_response)
+        res["petals"].append(simulate_dynamic(
+            PetalsRouter(servers, petals_placement(servers, BLOOM_SPEC, seed), seed),
+            arrivals).mean_response)
+        res["bprr"].append(simulate_dynamic(
+            BPRRRouter(servers, bprr_placement(servers, BLOOM_SPEC, LAM, RHO), seed),
+            arrivals).mean_response)
+    return res
+
+
+def run(seeds=range(4)) -> List[dict]:
+    rows = []
+    for j, eta in ((10, 0.2), (10, 0.5), (20, 0.1), (20, 0.2), (20, 0.5),
+                   (30, 0.1), (30, 0.2)):
+        t0 = time.time()
+        res = one_case(j, eta, seeds)
+        if not res:
+            rows.append({"name": f"fig8_overall_J{j}_eta{eta}",
+                         "status": "infeasible (omitted, as in the paper)"})
+            continue
+        mean = lambda xs: sum(xs) / len(xs)
+        prop, pet, bpr = (mean(res[k]) for k in ("proposed", "petals", "bprr"))
+        rows.append({
+            "name": f"fig8_overall_J{j}_eta{eta}",
+            "proposed_rt": prop, "petals_rt": pet, "bprr_rt": bpr,
+            "reduction_vs_petals_pct": 100 * (1 - prop / pet),
+            "reduction_vs_bprr_pct": 100 * (1 - prop / bpr),
+            "seconds": round(time.time() - t0, 2),
+        })
+    return rows

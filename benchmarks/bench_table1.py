@@ -1,0 +1,145 @@
+"""Table 1: trace-driven comparison on the paper's PETALS testbed analogue —
+LLaMA-2-7B on 9 MIG instances (3x 3g.40gb + 6x 2g.20gb), Azure-trace-like
+workload (bursty arrivals, in~2048/out~28 tokens), per-job service times from
+the paper's footnote-11 model (prefill compute-bound, decode memory-bound).
+
+Benchmarks: PETALS, BPRR, 'JFFC only' (whole model per server), Proposed.
+"""
+from __future__ import annotations
+
+import math
+import random
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core import Server, ServiceSpec, compose, simulate
+from repro.core.baselines import (
+    BPRRRouter,
+    PetalsRouter,
+    bprr_placement,
+    jffc_only_allocation,
+    petals_placement,
+    simulate_dynamic,
+)
+from repro.core.load_balance import JFFC
+from repro.core.simulator import Job
+from repro.core.workload import azure_like_trace, interarrival_std_ratio
+from .common import OVERHEAD_S, ripe_like_rtt
+
+# LLaMA-2-7B: 32 blocks; the paper reports ~2 GiB KV per active session on a
+# full-model server => s_c ~ 2/32 GiB per block per job.
+LLAMA_SPEC = ServiceSpec(num_blocks=32, block_size_gb=0.52, cache_size_gb=0.0625)
+# footnote 11 coefficients: t_I = F/f (ms/token), t_O = s_m/bw (ms/token).
+# Effective TFLOPS calibrated to the paper's Fig. 9 (≈2.5 s prefill of 2000
+# tokens over 25 blocks on 3g.40gb — PETALS-style serving overheads, not MIG
+# nameplate FLOPS).
+F_GFLOPS_PER_BLOCK_TOKEN = 0.44            # ~2 * 7B/32 params
+MIGS = {
+    # name: (count, mem GB, f TFLOPS effective, bw GB/ms)
+    "3g.40gb": (3, 40.0, 9.0, 1.02),
+    "2g.20gb": (6, 20.0, 4.5, 0.51),
+}
+T_OVERHEAD_MS = 1.0
+
+
+def build_servers(seed=0):
+    rng = random.Random(seed)
+    servers, coeff = [], {}
+    i = 0
+    for name, (count, mem, f, bw) in MIGS.items():
+        for _ in range(count):
+            sid = f"{name}-{i}"
+            # representative tau_p at the trace's mean lengths (for placement)
+            t_i = F_GFLOPS_PER_BLOCK_TOKEN / f / 1e3        # s/token
+            t_o = LLAMA_SPEC.block_size_gb / bw / 1e3       # s/token
+            tau_p = T_OVERHEAD_MS / 1e3 + t_i * 2048 + t_o * 27
+            tau_c = ripe_like_rtt(rng) + OVERHEAD_S
+            servers.append(Server(sid, mem, tau_c, tau_p))
+            coeff[sid] = (t_i, t_o, tau_c)
+            i += 1
+    return servers, coeff
+
+
+def per_job_chain_time(coeff, hops, job: Job) -> float:
+    """Sum over (server, blocks) hops of tau_c + blocks * tau_p(job)."""
+    total = 0.0
+    for sid, m in hops:
+        t_i, t_o, tau_c = coeff[sid]
+        tau_p = T_OVERHEAD_MS / 1e3 + t_i * job.in_tokens + t_o * max(job.out_tokens - 1, 0)
+        total += tau_c + tau_p * m
+    return total
+
+
+def _stats(res) -> Dict[str, float]:
+    s = res.summary()
+    return {
+        "mean_rt": s["response"]["mean"], "median_rt": s["response"]["median"],
+        "p95_rt": s["response"]["p95"], "p99_rt": s["response"]["p99"],
+        "mean_wait": s["waiting"]["mean"], "mean_service": s["service"]["mean"],
+    }
+
+
+def run(n_requests: int = 3000, rate_scale: float = 1.0, seed: int = 3) -> List[dict]:
+    """Azure-trace rate (2.57 req/s) against the 9-MIG testbed; with the
+    Fig.-9-calibrated service times the system runs at a meaningful load and
+    the policies separate, as in the paper's Table 1."""
+    t0 = time.time()
+    servers, coeff = build_servers(seed)
+    trace = azure_like_trace(n_requests, seed=seed, rate_scale=rate_scale)
+    lam = 1.0 / np.mean(np.diff([a[0] for a in trace]))
+
+    out_rows: List[dict] = []
+    results: Dict[str, Dict[str, float]] = {}
+
+    # --- Proposed: compose + JFFC with per-job service times ----------------
+    c_star, placement, alloc = compose(servers, LLAMA_SPEC, lam, 0.7)
+    pairs = alloc.sorted_by_rate()
+    chains = [c for c, _ in pairs]
+    pol = JFFC([c.rate for c, _ in pairs], [cap for _, cap in pairs])
+
+    def proposed_service(job: Job, k: int) -> float:
+        return per_job_chain_time(coeff, list(chains[k].hops()), job)
+
+    results["proposed"] = _stats(simulate(pol, trace, service_time_fn=proposed_service))
+
+    # --- JFFC only: whole model on each server -------------------------------
+    jo = jffc_only_allocation(servers, LLAMA_SPEC)
+    if jo is not None:
+        _, alloc_j = jo
+        pairs_j = alloc_j.sorted_by_rate()
+        chains_j = [c for c, _ in pairs_j]
+        pol_j = JFFC([c.rate for c, _ in pairs_j], [cap for _, cap in pairs_j])
+        results["jffc_only"] = _stats(simulate(
+            pol_j, trace,
+            service_time_fn=lambda job, k: per_job_chain_time(
+                coeff, list(chains_j[k].hops()), job)))
+
+    # --- PETALS / BPRR dynamic routing ---------------------------------------
+    def dyn_service(job: Job, route) -> float:
+        return per_job_chain_time(coeff, list(zip(route.servers, route.blocks)), job)
+
+    results["petals"] = _stats(simulate_dynamic(
+        PetalsRouter(servers, petals_placement(servers, LLAMA_SPEC, seed), seed),
+        trace, service_time_fn=dyn_service))
+    results["bprr"] = _stats(simulate_dynamic(
+        BPRRRouter(servers, bprr_placement(servers, LLAMA_SPEC, lam, 0.7), seed),
+        trace, service_time_fn=dyn_service))
+
+    pet = results["petals"]["mean_rt"]
+    row = {"name": "table1_trace_driven", "c_star": c_star,
+           "lambda_effective": float(lam),
+           "trace_interarrival_std_ratio": interarrival_std_ratio(trace)}
+    for k, st in results.items():
+        for m, v in st.items():
+            row[f"{k}_{m}"] = round(float(v), 3)
+    for k in results:
+        row[f"{k}_improvement_vs_petals_pct"] = round(
+            100 * (1 - results[k]["mean_rt"] / pet), 1)
+    row["ordering_ok"] = int(
+        results["proposed"]["mean_rt"] <= results.get(
+            "jffc_only", {"mean_rt": math.inf})["mean_rt"]
+        and results["proposed"]["mean_rt"] < results["bprr"]["mean_rt"] < pet * 1.2)
+    row["seconds"] = round(time.time() - t0, 2)
+    return [row]

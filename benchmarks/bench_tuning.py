@@ -1,0 +1,87 @@
+"""Fig. 6/7: the cache-reservation parameter c.
+
+Fig. 6: for one cluster, sweep c — simulated mean response time of
+GBP-CR(c)+GCA+JFFC vs the surrogate c*K(c)/lambda and the Thm 3.7 bounds;
+report each criterion's argmin and its simulated response time.
+Fig. 7: optimal c* vs arrival rate for each criterion.
+"""
+from __future__ import annotations
+
+import math
+import time
+from typing import Dict, List
+
+from repro.core import (
+    chains_needed_from_servers,
+    gbp_cr,
+    gca,
+    is_stable,
+    response_time_bounds,
+    simulate_policy_name,
+)
+from .common import BLOOM_SPEC, make_cluster
+
+RHO = 0.7
+
+
+def sweep_c(servers, lam, c_values, n_jobs=20_000, seed=0) -> Dict[int, dict]:
+    out = {}
+    for c in c_values:
+        pl = gbp_cr(servers, BLOOM_SPEC, c, lam, RHO, use_all_servers=True)
+        if not pl.feasible:
+            continue
+        k = chains_needed_from_servers(servers, BLOOM_SPEC, pl, lam, RHO)
+        alloc = gca(servers, pl)
+        js = alloc.job_servers()
+        if not js or not is_stable(js, lam):
+            continue
+        lo, hi = response_time_bounds(js, lam)
+        sim = simulate_policy_name("jffc", js, lam, n_jobs, seed=seed).mean_response
+        out[c] = {"surrogate": c * k / lam if k else math.inf,
+                  "lower": lo, "upper": hi, "sim": sim}
+    return out
+
+
+def run(seed: int = 1, c_values=tuple(range(1, 36, 2)),
+        lams=(0.1, 0.2, 0.4, 0.8)) -> List[dict]:
+    rows = []
+    servers = make_cluster(20, 0.2, seed)
+
+    t0 = time.time()
+    table = sweep_c(servers, 0.2, c_values, seed=seed)
+    argmin = lambda key: min(table, key=lambda c: table[c][key])
+    c_sim = argmin("sim")
+    row = {"name": "fig6_tuning_curves", "lambda": 0.2}
+    for key in ("surrogate", "lower", "upper", "sim"):
+        c_star = argmin(key)
+        row[f"c_star_{key}"] = c_star
+        row[f"sim_rt_at_c_{key}"] = table[c_star]["sim"]
+    row["regret_lower_vs_sim"] = (
+        table[argmin("lower")]["sim"] / table[c_sim]["sim"] - 1.0)
+    row["regret_surrogate_vs_sim"] = (
+        table[argmin("surrogate")]["sim"] / table[c_sim]["sim"] - 1.0)
+    row["nonmonotone_c"] = int(
+        any(table[a]["sim"] > table[b]["sim"] for a, b in
+            zip(sorted(table), sorted(table)[1:])))
+    row["seconds"] = round(time.time() - t0, 2)
+    rows.append(row)
+
+    t0 = time.time()
+    trend = {"surrogate": [], "lower": [], "upper": []}
+    for lam in lams:
+        tab = sweep_c(servers, lam, c_values, n_jobs=8_000, seed=seed)
+        if not tab:
+            continue
+        for key in trend:
+            trend[key].append(min(tab, key=lambda c: tab[c][key]))
+    rows.append({
+        "name": "fig7_cstar_vs_lambda",
+        "lambdas": list(lams),
+        "c_star_lower_trend": trend["lower"],
+        "c_star_surrogate_trend": trend["surrogate"],
+        "c_star_upper_trend": trend["upper"],
+        "lower_bound_monotone_nondecreasing": int(
+            all(a <= b for a, b in zip(trend["lower"], trend["lower"][1:]))),
+        "seconds": round(time.time() - t0, 2),
+    })
+    return rows

@@ -1,0 +1,51 @@
+"""Shared benchmark scaffolding: the paper's simulation setting (§4.1.1).
+
+BLOOM-176B: L=70, s_m=1.32 GB (NF4), s_c=0.11 GB (KV @ 2048 ctx);
+high-perf GPU:  M=40 GB, tau_p = 109 ms;  low-perf: M=20 GB, tau_p = 175 ms.
+tau_c: RIPE-Atlas-like RTTs (lognormal around tens of ms) + 18 ms overhead.
+Defaults: J=20, eta=0.2 (high-perf fraction), lambda=0.2 req/s, rho=0.7.
+"""
+from __future__ import annotations
+
+import random
+from typing import List, Tuple
+
+from repro.core import Server, ServiceSpec
+
+BLOOM_SPEC = ServiceSpec(num_blocks=70, block_size_gb=1.32, cache_size_gb=0.11)
+
+TAU_P_HI = 0.109
+TAU_P_LO = 0.175
+M_HI = 40.0
+M_LO = 20.0
+OVERHEAD_S = 0.018
+
+
+def ripe_like_rtt(rng: random.Random) -> float:
+    """RIPE Atlas Europe RTTs: ~5-120 ms, heavy-ish tail."""
+    return min(max(rng.lognormvariate(-3.6, 0.8), 0.003), 0.25)
+
+
+def make_cluster(j: int = 20, eta: float = 0.2, seed: int = 0) -> List[Server]:
+    rng = random.Random(seed)
+    hi_idx = set(rng.sample(range(j), max(int(round(eta * j)), 0)))
+    servers = []
+    for i in range(j):
+        hi = i in hi_idx
+        tau_c = ripe_like_rtt(rng) + OVERHEAD_S
+        servers.append(Server(
+            f"s{i}", M_HI if hi else M_LO, tau_c, TAU_P_HI if hi else TAU_P_LO))
+    return servers
+
+
+def greedy_servers_needed(job_servers: List[Tuple[float, int]], required: float) -> int:
+    """Minimum job-server count to reach ``required`` rate, packing fastest
+    first (used to read 'number of job servers' off a GCA allocation)."""
+    total, used = 0.0, 0
+    for mu, c in sorted(job_servers, key=lambda p: -p[0]):
+        for _ in range(c):
+            if total >= required:
+                return used
+            total += mu
+            used += 1
+    return used if total >= required else -1

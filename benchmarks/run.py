@@ -1,0 +1,91 @@
+"""Benchmark driver — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (us_per_call = wall time of the
+experiment; derived = its headline metric) and writes the full records to
+results/benchmarks.json.
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig8,table1] [--fast]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+from . import (
+    bench_cache_alloc,
+    bench_kernels,
+    bench_load_balance,
+    bench_model_validation,
+    bench_overall,
+    bench_placement,
+    bench_table1,
+    bench_tuning,
+)
+
+SUITES = {
+    "fig3_placement": bench_placement.run,
+    "fig4_cache_alloc": bench_cache_alloc.run,
+    "fig5_load_balance": bench_load_balance.run,
+    "fig6_7_tuning": bench_tuning.run,
+    "fig8_overall": bench_overall.run,
+    "table1_trace": bench_table1.run,
+    "model_validation": bench_model_validation.run,
+    "kernels": bench_kernels.run,
+}
+
+FAST_OVERRIDES = {
+    "fig3_placement": lambda: bench_placement.run(seeds=range(3), n_random=30),
+    "fig4_cache_alloc": lambda: bench_cache_alloc.run(seeds=range(2), loads=(0.4, 0.8)),
+    "fig5_load_balance": lambda: bench_load_balance.run(seeds=range(2), loads=(0.5, 0.7),
+                                                        n_jobs=10_000),
+    "fig8_overall": lambda: bench_overall.run(seeds=range(2)),
+    "table1_trace": lambda: bench_table1.run(n_requests=1200),
+}
+
+
+def _headline(row: dict) -> str:
+    for key in ("reduction_vs_petals_pct", "proposed_improvement_vs_petals_pct",
+                "gbp_beats_or_ties_best_random", "gca_within_1_of_ilp",
+                "jffc_within_bounds", "regret_lower_vs_sim",
+                "lower_bound_monotone_nondecreasing", "max_abs_err",
+                "within_5pct", "interarrival_std_ratio", "ordering_ok"):
+        if key in row:
+            return f"{key}={row[key]}"
+    return ""
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--out", default="results/benchmarks.json")
+    args = ap.parse_args()
+
+    only = set(filter(None, args.only.split(",")))
+    all_rows = []
+    print("name,us_per_call,derived")
+    for suite, fn in SUITES.items():
+        if only and not any(o in suite for o in only):
+            continue
+        runner = FAST_OVERRIDES.get(suite, fn) if args.fast else fn
+        t0 = time.time()
+        try:
+            rows = runner()
+        except Exception as e:  # pragma: no cover — keep the sweep going
+            rows = [{"name": suite, "error": f"{type(e).__name__}: {e}"}]
+        dt_us = (time.time() - t0) * 1e6
+        for row in rows:
+            print(f"{row['name']},{dt_us/max(len(rows),1):.0f},{_headline(row)}",
+                  flush=True)
+        all_rows.extend(rows)
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(all_rows, f, indent=1, default=float)
+    print(f"# wrote {len(all_rows)} records to {args.out}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

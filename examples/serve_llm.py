@@ -1,0 +1,77 @@
+"""End-to-end LLM serving: real JAX model, composed chains, JFFC dispatch.
+
+A reduced qwen3-family model is served by an orchestrator whose chains were
+composed by GBP-CR + GCA; batched requests stream in, decode runs in batched
+steps per chain, and greedy outputs are verified against a direct rollout.
+
+  PYTHONPATH=src python examples/serve_llm.py [--requests 12] [--servers 5]
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get
+from repro.core import Server
+from repro.models import Model
+from repro.serving import Orchestrator, OrchestratorConfig, Request, service_spec_for
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--servers", type=int, default=5)
+    ap.add_argument("--prompt-len", type=int, default=12)
+    ap.add_argument("--max-new", type=int, default=8)
+    args = ap.parse_args()
+
+    cfg = get("qwen3-8b").reduced(num_layers=2, vocab_size=512)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    spec = service_spec_for(cfg, max_seq=64)
+
+    rng = np.random.default_rng(0)
+    model_gb = spec.block_size_gb * cfg.num_layers
+    servers = [
+        Server(f"srv{i}",
+               model_gb * (1.4 if i % 2 == 0 else 0.8)
+               + spec.cache_size_gb * cfg.num_layers * 6,
+               0.02, 0.01 * (1 + i % 3))
+        for i in range(args.servers)
+    ]
+    orch = Orchestrator(servers, spec, model, params, arrival_rate=2.0,
+                        config=OrchestratorConfig(max_seq=64))
+    print(f"composed {len(orch.engines)} chains (c*={orch.c_star}):")
+    for e in orch.engines:
+        print(f"  {list(e.chain.servers)} cap={e.capacity} "
+              f"T_k={e.chain.service_time:.3f}s")
+
+    reqs = [
+        Request(rid=i,
+                prompt=rng.integers(1, cfg.vocab_size, args.prompt_len).astype(np.int32),
+                max_new_tokens=args.max_new, arrival_time=0.1 * i)
+        for i in range(args.requests)
+    ]
+    t0 = time.time()
+    for r in reqs:
+        orch.submit(r, r.arrival_time)
+    orch.drain()
+    print(f"\nserved {len(orch.finished)} requests in {time.time()-t0:.1f}s wall")
+
+    # verify one output against a direct greedy rollout
+    import jax.numpy as jnp
+
+    r = reqs[0]
+    toks = list(r.prompt)
+    for _ in range(args.max_new):
+        logits = model.forward_train(params, {"tokens": jnp.asarray([toks])})
+        toks.append(int(jnp.argmax(logits[0, -1])))
+    oracle = toks[len(r.prompt):]
+    assert r.output == oracle, (r.output, oracle)
+    print(f"request 0 output verified against direct rollout: {r.output}")
+    print(f"queue stats: {orch.stats()['chains']}")
+
+
+if __name__ == "__main__":
+    main()

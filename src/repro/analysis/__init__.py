@@ -1,0 +1,3 @@
+from . import hlo_parse, roofline
+
+__all__ = ["hlo_parse", "roofline"]

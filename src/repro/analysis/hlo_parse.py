@@ -1,0 +1,426 @@
+"""Collective-traffic accounting from compiled HLO text.
+
+XLA's cost_analysis() counts while-loop bodies once and excludes collective
+traffic, so we parse the compiled module text:
+  * split into computations,
+  * build the call graph (fusion calls=, while body=/condition=, call
+    to_apply=, reduce/scatter/sort to_apply=),
+  * extract while-loop trip counts from the condition's compare constant,
+  * multiply each collective's bytes by the product of trip counts on its
+    call path (scan-over-layers => one textual collective, L executions).
+
+Byte conventions per op (documented in EXPERIMENTS.md):
+  all-reduce      2 x output bytes     (ring: reduce-scatter + all-gather)
+  all-gather      1 x output bytes     (received per device)
+  reduce-scatter  group_size x output  (input traverses the ring)
+  all-to-all      1 x output bytes
+  collective-permute  1 x output bytes
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z]?[a-z0-9]+)\[([\d,]*)\]")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*(?:\([^)]*\))?.*\{\s*$")
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Sum bytes over every `dtype[dims]` occurring in a type string
+    (handles tuples)."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> Optional[int]:
+    m = re.search(r"replica_groups=\{\{([\d,]+)\}", line)
+    if m:
+        return len(m.group(1).split(","))
+    # iota format: replica_groups=[G,S]<=[N]  => S per group
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+    if m:
+        return int(m.group(2))
+    return None
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_op: Dict[str, float]
+    count_by_op: Dict[str, int]
+
+    @property
+    def total_bytes(self) -> float:
+        return sum(self.bytes_by_op.values())
+
+
+@dataclasses.dataclass
+class ModuleCosts:
+    """Per-device execution costs with while-loop trip counts applied."""
+    flops: float                 # 2*M*N*K over every dot, x multiplier
+    bytes: float                 # operand+output bytes of top-level ops
+    collectives: CollectiveStats
+
+
+_SKIP_BYTES_OPS = (
+    "parameter(", "constant(", "tuple(", "get-tuple-element(", "while(",
+    "bitcast(", "bitcast-convert(", "after-all(", "custom-call(",
+)
+
+
+def parse_costs(hlo_text: str) -> ModuleCosts:
+    """FLOPs + bytes-accessed + collective bytes from compiled HLO text.
+
+    Unlike XLA's cost_analysis(), while-loop bodies are scaled by their trip
+    count (scan-over-layers, microbatch accumulation, flash KV sweeps), so
+    the numbers reflect what actually executes.  FLOPs counts dot ops
+    everywhere (incl. fusion interiors); bytes counts operands+outputs of
+    top-level instructions only (fusion = one op), matching cost_analysis
+    conventions."""
+    comps, calls, entry_name, fusion_bodies = _structure(hlo_text)
+    if entry_name is None:
+        return ModuleCosts(0.0, 0.0, CollectiveStats({}, {}))
+    mult = _multipliers(comps, calls, entry_name)
+
+    # Per fusion computation: parameter index -> sliced-read bytes, for
+    # parameters that are only touched via dynamic-slice/gather inside the
+    # fusion (a loop body reading one layer of a stacked carry must be
+    # charged the slice, not the whole stack, per iteration).
+    fusion_param_slice: Dict[str, Dict[int, int]] = {}
+    for fname in fusion_bodies:
+        lines = comps.get(fname, [])
+        pidx: Dict[str, int] = {}
+        for ln in lines:
+            pm = re.match(r"%?([\w\.\-]+) = .*? parameter\((\d+)\)", ln)
+            if pm:
+                pidx[pm.group(1)] = int(pm.group(2))
+        sliced: Dict[int, int] = {}
+        direct: set = set()
+        for ln in lines:
+            mm = re.match(r"(?:ROOT\s+)?%?[\w\.\-]+ = ([^=]*?) ([a-z][\w\-]*)\(([^)]*)\)", ln)
+            if not mm:
+                continue
+            opname = mm.group(2)
+            out_b = _shape_bytes(mm.group(1))
+            for operand in mm.group(3).split(","):
+                oname = operand.strip().lstrip("%").split(" ")[0]
+                if oname not in pidx:
+                    continue
+                if opname in ("dynamic-slice", "gather", "slice"):
+                    i = pidx[oname]
+                    sliced[i] = max(sliced.get(i, 0), out_b)
+                elif opname != "parameter":
+                    direct.add(pidx[oname])
+        fusion_param_slice[fname] = {i: b for i, b in sliced.items()
+                                     if i not in direct}
+
+    dot_re = re.compile(r"%?([\w\.\-]+) = ([^=]*?) dot\(([^)]*)\)(.*)$")
+    flops = 0.0
+    bytes_total = 0.0
+    coll_bytes: Dict[str, float] = defaultdict(float)
+    coll_count: Dict[str, int] = defaultdict(int)
+
+    for name, lines in comps.items():
+        if name == "__entry__":
+            continue
+        m_c = mult.get(name, 0.0)
+        if m_c == 0.0:
+            continue
+        # local name -> shape-string map for operand resolution
+        shapes: Dict[str, str] = {}
+        for ln in lines:
+            mm = re.match(r"(?:ROOT\s+)?%?([\w\.\-]+) = (.*)$", ln)
+            if mm:
+                shapes[mm.group(1)] = mm.group(2)
+        for ln in lines:
+            stripped = ln[5:] if ln.startswith("ROOT ") else ln
+            # --- flops: dot ops anywhere -------------------------------------
+            dm = dot_re.match(stripped)
+            if dm:
+                out_type = dm.group(2)
+                out_elems = _shape_elems(out_type)
+                lhs_name = dm.group(3).split(",")[0].strip().lstrip("%")
+                lhs_dims = _dims_of(shapes.get(lhs_name, ""))
+                cdims = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", stripped)
+                k = 1
+                if cdims and lhs_dims:
+                    for d in filter(None, cdims.group(1).split(",")):
+                        di = int(d)
+                        if di < len(lhs_dims):
+                            k *= lhs_dims[di]
+                flops += 2.0 * out_elems * k * m_c
+            # --- bytes: top-level ops only ------------------------------------
+            if name not in fusion_bodies:
+                mm = re.match(
+                    r"%?[\w\.\-]+ = ([^=]*?) ([a-z][\w\-]*)\(([^)]*)\)", stripped)
+                if mm and f"{mm.group(2)}(" not in _SKIP_BYTES_OPS:
+                    opname = mm.group(2)
+                    out_b = _shape_bytes(mm.group(1))
+                    operands = [o.strip().lstrip("%").split(" ")[0]
+                                for o in mm.group(3).split(",") if o.strip()]
+                    op_bytes = [
+                        _shape_bytes(shapes[o].split(" ", 1)[0] if " " in shapes[o]
+                                     else shapes[o])
+                        for o in operands if o in shapes]
+                    if opname in ("dynamic-slice", "gather", "slice"):
+                        b = 2.0 * out_b            # reads only the slice
+                    elif opname in ("dynamic-update-slice", "scatter"):
+                        small = min((x for x in op_bytes if 0 < x < out_b),
+                                    default=out_b)
+                        b = 2.0 * small            # touches only the update
+                    elif opname == "fusion":
+                        callee = None
+                        fm = re.search(r"calls=%?([\w\.\-]+)", stripped)
+                        if fm:
+                            callee = fm.group(1)
+                        slice_map = fusion_param_slice.get(callee, {})
+                        b = out_b
+                        for i, ob in enumerate(op_bytes):
+                            b += slice_map.get(i, ob)
+                    else:
+                        b = out_b + sum(op_bytes)
+                    bytes_total += b * m_c
+            # --- collectives ----------------------------------------------------
+            for op in _COLLECTIVES:
+                site = f" {op}("                   # avoid matching the op NAME
+                if site not in stripped or f"{op}-done" in stripped:
+                    continue
+                head = stripped.split(site, 1)[0]
+                out_bytes = _shape_bytes(head)
+                if out_bytes == 0:
+                    continue
+                if op == "all-reduce":
+                    moved = 2.0 * out_bytes
+                elif op == "reduce-scatter":
+                    moved = float(out_bytes * (_group_size(stripped) or 1))
+                else:
+                    moved = float(out_bytes)
+                coll_bytes[op] += moved * m_c
+                coll_count[op] += 1
+                break
+    return ModuleCosts(flops, bytes_total,
+                       CollectiveStats(dict(coll_bytes), dict(coll_count)))
+
+
+def _shape_elems(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n
+    return total
+
+
+def _dims_of(type_str: str):
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    dims = m.group(2)
+    return [int(d) for d in dims.split(",")] if dims else []
+
+
+def _structure(hlo_text: str):
+    comps: Dict[str, List[str]] = {}
+    cur: Optional[str] = None
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if cur is None:
+            m = _COMP_HDR.match(line)
+            if m and ("->" in line or line.startswith("ENTRY")):
+                cur = m.group(1)
+                comps[cur] = []
+                if line.startswith("ENTRY"):
+                    comps["__entry__"] = comps[cur]
+        else:
+            if stripped == "}":
+                cur = None
+            else:
+                comps[cur].append(stripped)
+    entry = comps.get("__entry__")
+    entry_name = None
+    for name, lines in comps.items():
+        if name != "__entry__" and lines is entry:
+            entry_name = name
+            break
+    callee_re = re.compile(r"(?:calls|to_apply|body)=%?([\w\.\-]+)")
+    cond_re = re.compile(r"condition=%?([\w\.\-]+)")
+    fusion_re = re.compile(r"fusion\(.*calls=%?([\w\.\-]+)")
+    calls: Dict[str, List[Tuple[str, int]]] = defaultdict(list)
+    fusion_bodies: set = set()
+
+    def trip_of(cond_name: str) -> int:
+        best = 1
+        for ln in comps.get(cond_name, []):
+            for m in re.finditer(r"constant\((\d+)\)", ln):
+                best = max(best, int(m.group(1)))
+        return best
+
+    for name, lines in comps.items():
+        if name == "__entry__":
+            continue
+        for ln in lines:
+            trip = 1
+            if " while(" in ln or ln.startswith("while("):
+                mc = cond_re.search(ln)
+                if mc:
+                    trip = trip_of(mc.group(1))
+            fm = fusion_re.search(ln)
+            if fm and fm.group(1) in comps:
+                fusion_bodies.add(fm.group(1))
+            for m in callee_re.finditer(ln):
+                callee = m.group(1)
+                if callee in comps:
+                    calls[name].append((callee, trip))
+    return comps, calls, entry_name, fusion_bodies
+
+
+def _multipliers(comps, calls, entry_name) -> Dict[str, float]:
+    topo: List[str] = []
+    state: Dict[str, int] = {}
+
+    def dfs(node: str) -> None:
+        state[node] = 1
+        for callee, _ in calls.get(node, []):
+            if state.get(callee, 0) == 0:
+                dfs(callee)
+        state[node] = 2
+        topo.append(node)
+
+    dfs(entry_name)
+    mult: Dict[str, float] = defaultdict(float)
+    mult[entry_name] = 1.0
+    for node in reversed(topo):
+        for callee, trip in calls.get(node, []):
+            mult[callee] += mult[node] * trip
+    return mult
+
+
+def parse_collectives(hlo_text: str, default_trip: int = 1) -> CollectiveStats:
+    """Trip-count-aware collective byte totals for one compiled module."""
+    # --- split into computations ------------------------------------------------
+    comps: Dict[str, List[str]] = {}
+    cur: Optional[str] = None
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if cur is None:
+            m = _COMP_HDR.match(line)
+            if m and ("->" in line or line.startswith("ENTRY")):
+                cur = m.group(1)
+                comps[cur] = []
+                if line.startswith("ENTRY"):
+                    comps["__entry__"] = comps[cur]
+        else:
+            if stripped == "}":
+                cur = None
+            else:
+                comps[cur].append(stripped)
+
+    entry = comps.get("__entry__")
+    if entry is None and comps:
+        entry = comps[max(comps, key=lambda c: len(comps[c]))]
+
+    # --- call graph + while trip counts ------------------------------------------
+    calls: Dict[str, List[Tuple[str, int]]] = defaultdict(list)  # (callee, trip)
+    callee_re = re.compile(
+        r"(?:calls|to_apply|body)=%?([\w\.\-]+)")
+    cond_re = re.compile(r"condition=%?([\w\.\-]+)")
+
+    def trip_of(cond_name: str) -> int:
+        best = default_trip
+        for ln in comps.get(cond_name, []):
+            for m in re.finditer(r"constant\((\d+)\)", ln):
+                best = max(best, int(m.group(1)))
+        return best
+
+    for name, lines in comps.items():
+        if name == "__entry__":
+            continue
+        for ln in lines:
+            trip = 1
+            if " while(" in ln or ln.startswith("while("):
+                mc = cond_re.search(ln)
+                if mc:
+                    trip = trip_of(mc.group(1))
+            for m in callee_re.finditer(ln):
+                callee = m.group(1)
+                if callee in comps:
+                    calls[name].append((callee, trip))
+
+    entry_name = None
+    for name, lines in comps.items():
+        if name != "__entry__" and lines is entry:
+            entry_name = name
+            break
+
+    # --- propagate multipliers (topological order over the acyclic call graph)
+    if entry_name is None:
+        return CollectiveStats({}, {})
+    topo: List[str] = []
+    state: Dict[str, int] = {}
+
+    def dfs(node: str) -> None:
+        state[node] = 1
+        for callee, _ in calls.get(node, []):
+            if state.get(callee, 0) == 0:
+                dfs(callee)
+        state[node] = 2
+        topo.append(node)
+
+    dfs(entry_name)
+    mult: Dict[str, float] = defaultdict(float)
+    mult[entry_name] = 1.0
+    for node in reversed(topo):                 # callers before callees
+        for callee, trip in calls.get(node, []):
+            mult[callee] += mult[node] * trip
+
+    # --- sum collective bytes -------------------------------------------------------
+    bytes_by_op: Dict[str, float] = defaultdict(float)
+    count_by_op: Dict[str, int] = defaultdict(int)
+    for name, lines in comps.items():
+        if name == "__entry__" or mult.get(name, 0.0) == 0.0:
+            continue
+        m_c = mult[name]
+        for ln in lines:
+            for op in _COLLECTIVES:
+                site = f" {op}("
+                if site not in ln or f"{op}-done" in ln:
+                    continue
+                head = ln.split(site, 1)[0]
+                out_bytes = _shape_bytes(head)
+                if out_bytes == 0:
+                    continue
+                if op == "all-reduce":
+                    moved = 2.0 * out_bytes
+                elif op == "reduce-scatter":
+                    g = _group_size(ln) or 1
+                    moved = float(out_bytes * g)
+                else:
+                    moved = float(out_bytes)
+                bytes_by_op[op] += moved * m_c
+                count_by_op[op] += 1
+                break
+    return CollectiveStats(dict(bytes_by_op), dict(count_by_op))

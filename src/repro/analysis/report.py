@@ -1,0 +1,88 @@
+"""Assemble EXPERIMENTS.md sections from dry-run / benchmark JSON records.
+
+  PYTHONPATH=src python -m repro.analysis.report \
+      --dryrun results/dryrun --bench results/benchmarks.json \
+      --out EXPERIMENTS_tables.md
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List
+
+
+def _gib(x) -> str:
+    return f"{x / 2**30:.2f}"
+
+
+def load_dryrun(dirpath: str, tag: str = "baseline") -> List[dict]:
+    recs = []
+    for f in sorted(glob.glob(os.path.join(dirpath, f"*__{tag}.json"))):
+        recs.append(json.load(open(f)))
+    return recs
+
+
+def dryrun_table(recs: List[dict]) -> str:
+    lines = [
+        "| arch | shape | status | 1-pod peak GiB | fits 16G | 2-pod peak GiB | "
+        "coll GiB (1-pod) | compile s |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r.get("status") == "skipped":
+            lines.append(f"| {r['arch']} | {r['shape']} | skipped | — | — | — | — | — |")
+            continue
+        s = r.get("single", {})
+        m = r.get("multi", {})
+        if "memory" not in s:
+            lines.append(f"| {r['arch']} | {r['shape']} | FAILED | | | | | |")
+            continue
+        coll = s.get("collectives", {}).get("total_bytes", 0) / s.get(
+            "memory", {}).get("peak_bytes", 1)  # placeholder replaced below
+        coll_gib = s.get("collectives", {}).get("total_bytes", 0) / 2**30
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['status']} | "
+            f"{_gib(s['memory']['peak_bytes'])} | "
+            f"{'yes' if s['memory']['fits_hbm'] else 'NO'} | "
+            f"{_gib(m['memory']['peak_bytes']) if 'memory' in m else '—'} | "
+            f"{coll_gib:.1f} | {s.get('lower_compile_s', 0)} |")
+    return "\n".join(lines)
+
+
+def roofline_table(recs: List[dict]) -> str:
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | dominant | "
+        "MODEL_FLOPs | HLO_FLOPs | ratio | roofline frac |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        t = r.get("roofline", {}).get("terms")
+        if not t:
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {t['compute_s']:.3e} | "
+            f"{t['memory_s']:.3e} | {t['collective_s']:.3e} | "
+            f"**{t['dominant']}** | {t['model_flops']:.2e} | "
+            f"{t['hlo_flops']:.2e} | {t['flops_ratio']:.2f} | "
+            f"{t['roofline_fraction']:.3f} |")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun", default="results/dryrun")
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--out", default="results/tables.md")
+    args = ap.parse_args()
+    recs = load_dryrun(args.dryrun, args.tag)
+    out = ["## Dry-run (per-device memory, both meshes)\n", dryrun_table(recs),
+           "\n\n## Roofline (single-pod, per cell)\n", roofline_table(recs)]
+    with open(args.out, "w") as f:
+        f.write("\n".join(out) + "\n")
+    print(f"wrote {args.out} ({len(recs)} records)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,147 @@
+"""Roofline-term assembly (TPU v5e target; CPU container, so terms are
+derived from the compiled artifact, not wall clocks).
+
+Per (arch x shape x mesh) cell:
+  compute term    = HLO_FLOPs_total   / (chips * PEAK_FLOPS)
+  memory term     = HLO_bytes_total   / (chips * HBM_BW)
+  collective term = collective_bytes  / (chips * ICI_BW)
+
+cost_analysis() is per-device and counts scan bodies once, so FLOPs/bytes
+come from truncated-UNROLLED variants of the same cell (2-4 layer configs,
+scan_layers=False): solving  cost = const + sum_kind count_kind * kind_cost
+gives exact per-layer-kind costs, scaled to the full depth.  Collective
+bytes come from the full compiled module via hlo_parse (trip-count aware).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per v5e chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    hlo_flops: float          # totals across chips
+    hlo_bytes: float
+    collective_bytes: float
+    chips: int
+    model_flops: float
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """No-overlap estimate: the dominant term bounds the step; report the
+        max (perfect overlap) — pessimistic variant is the sum."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful-compute fraction: time the hardware would need for the
+        model's mathematical FLOPs vs the bound from the dominant term."""
+        ideal = self.model_flops / (self.chips * PEAK_FLOPS)
+        if self.step_time_s == 0:
+            return 0.0
+        return ideal / self.step_time_s
+
+    @property
+    def flops_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs — catches remat / dispatch waste."""
+        return self.model_flops / self.hlo_flops if self.hlo_flops else 0.0
+
+    def as_dict(self) -> dict:
+        return {
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "hlo_flops": self.hlo_flops, "hlo_bytes": self.hlo_bytes,
+            "collective_bytes": self.collective_bytes,
+            "model_flops": self.model_flops,
+            "flops_ratio": self.flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "step_time_s": self.step_time_s, "chips": self.chips,
+        }
+
+
+def model_flops_for(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """MODEL_FLOPS = 6*N*D (train) / 2*N*D (inference), N = active params,
+    plus the attention score/value FLOPs (which 6ND excludes)."""
+    N = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        mult = 6.0
+        attn_ctx = shape.seq_len / 2            # causal average context
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        mult = 2.0
+        attn_ctx = shape.seq_len / 2
+    else:  # decode: one token per sequence
+        tokens = shape.global_batch
+        mult = 2.0
+        attn_ctx = shape.seq_len                # full cache per new token
+    flops = mult * N * tokens
+    # attention: 2 matmuls (QK^T, PV) of H*hd width over the context; fwd
+    # cost 4*w*ctx per token, so total = 2*mult*w*ctx (mult folds in bwd).
+    if cfg.attn_type == "mla":
+        width = cfg.num_heads * (cfg.mla.nope_head_dim + cfg.mla.rope_head_dim
+                                 + cfg.mla.v_head_dim) / 2
+    else:
+        width = cfg.num_heads * cfg.hd
+    n_full = cfg.num_layers
+    if cfg.attn_type == "swa":
+        n_glob = len(cfg.global_attn_layers)
+        eff_ctx = min(cfg.window, attn_ctx)
+        flops += 2.0 * mult * tokens * width * (
+            n_glob * attn_ctx + (cfg.num_layers - n_glob) * eff_ctx)
+        n_full = 0
+    if cfg.family == "ssm":
+        n_full = 0                               # recurrent: no KV attention
+    if n_full:
+        flops += 2.0 * mult * tokens * width * attn_ctx * n_full
+    return flops
+
+
+def solve_per_kind_costs(
+    variants: List[Tuple[Dict[str, int], float]],
+) -> Tuple[float, Dict[str, float]]:
+    """Solve cost = const + sum_kind count*cost_kind by least squares."""
+    kinds = sorted({k for counts, _ in variants for k in counts})
+    A = np.array([[1.0] + [float(c.get(k, 0)) for k in kinds]
+                  for c, _ in variants])
+    y = np.array([v for _, v in variants])
+    x, *_ = np.linalg.lstsq(A, y, rcond=None)
+    const = float(x[0])
+    return const, {k: float(v) for k, v in zip(kinds, x[1:])}
+
+
+def extrapolate(const: float, kind_costs: Dict[str, float],
+                full_counts: Dict[str, int]) -> float:
+    return const + sum(kind_costs.get(k, 0.0) * n for k, n in full_counts.items())
+
+
+def build_terms(
+    *, flops_total: float, bytes_total: float, collective_bytes: float,
+    chips: int, model_flops: float,
+) -> RooflineTerms:
+    return RooflineTerms(
+        compute_s=flops_total / (chips * PEAK_FLOPS),
+        memory_s=bytes_total / (chips * HBM_BW),
+        collective_s=collective_bytes / (chips * ICI_BW),
+        hlo_flops=flops_total, hlo_bytes=bytes_total,
+        collective_bytes=collective_bytes, chips=chips,
+        model_flops=model_flops,
+    )

@@ -1,0 +1,4 @@
+"""Config for --arch bloom_176b (see registry.py for the source citation)."""
+from .registry import BLOOM_176B as CONFIG
+
+__all__ = ["CONFIG"]

@@ -1,0 +1,4 @@
+"""Config for --arch dbrx_132b (see registry.py for the source citation)."""
+from .registry import DBRX_132B as CONFIG
+
+__all__ = ["CONFIG"]

@@ -1,0 +1,4 @@
+"""Config for --arch deepseek_v3_671b (see registry.py for the source citation)."""
+from .registry import DEEPSEEK_V3_671B as CONFIG
+
+__all__ = ["CONFIG"]

@@ -1,0 +1,4 @@
+"""Config for --arch hymba_1_5b (see registry.py for the source citation)."""
+from .registry import HYMBA_1_5B as CONFIG
+
+__all__ = ["CONFIG"]

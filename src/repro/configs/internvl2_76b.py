@@ -1,0 +1,4 @@
+"""Config for --arch internvl2_76b (see registry.py for the source citation)."""
+from .registry import INTERNVL2_76B as CONFIG
+
+__all__ = ["CONFIG"]

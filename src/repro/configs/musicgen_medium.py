@@ -1,0 +1,4 @@
+"""Config for --arch musicgen_medium (see registry.py for the source citation)."""
+from .registry import MUSICGEN_MEDIUM as CONFIG
+
+__all__ = ["CONFIG"]

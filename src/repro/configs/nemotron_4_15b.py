@@ -1,0 +1,4 @@
+"""Config for --arch nemotron_4_15b (see registry.py for the source citation)."""
+from .registry import NEMOTRON_4_15B as CONFIG
+
+__all__ = ["CONFIG"]

@@ -1,0 +1,4 @@
+"""Config for --arch qwen2_7b (see registry.py for the source citation)."""
+from .registry import QWEN2_7B as CONFIG
+
+__all__ = ["CONFIG"]

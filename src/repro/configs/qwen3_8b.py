@@ -1,0 +1,4 @@
+"""Config for --arch qwen3_8b (see registry.py for the source citation)."""
+from .registry import QWEN3_8B as CONFIG
+
+__all__ = ["CONFIG"]

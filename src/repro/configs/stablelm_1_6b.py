@@ -1,0 +1,4 @@
+"""Config for --arch stablelm_1_6b (see registry.py for the source citation)."""
+from .registry import STABLELM_1_6B as CONFIG
+
+__all__ = ["CONFIG"]

@@ -1,0 +1,4 @@
+"""Config for --arch xlstm_350m (see registry.py for the source citation)."""
+from .registry import XLSTM_350M as CONFIG
+
+__all__ = ["CONFIG"]

@@ -1,0 +1,38 @@
+"""Core control-plane algorithms from the paper.
+
+Offline:  GBP-CR block placement (Alg. 1) -> GCA cache allocation (Alg. 2),
+          with the cache-reservation parameter c tuned by Eq. (14) or the
+          Theorem 3.7 bounds.
+Online:   JFFC load balancing (Alg. 3) over the composed job servers.
+Analysis: Theorem 3.7 response-time bounds, exact K=2 CTMC, stability checks.
+"""
+from .servers import Server, ServiceSpec, max_blocks, service_time, amortized_time, cache_slots
+from .placement import Placement, gbp_cr, random_placement, chains_needed_from_servers
+from .chains import Chain, ChainGraph, disjoint_chain_objects
+from .cache_alloc import Allocation, gca, reserved_allocation, optimal_ilp, rate_lower_bound, initial_slots
+from .load_balance import JFFC, JSQ, JIQ, SED, SAJSQ, POLICIES, Policy
+from .queueing import (
+    response_time_bounds,
+    occupancy_lower_bound,
+    occupancy_upper_bound,
+    exact_occupancy_k2,
+    exact_occupancy_ctmc,
+    is_stable,
+    total_rate,
+)
+from .simulator import Job, SimResult, simulate, simulate_policy_name, poisson_arrivals
+from .tuning import TuningResult, tune_surrogate, tune_bound, compose
+from .workload import poisson_exponential, azure_like_trace, AZURE_STATS, interarrival_std_ratio
+
+__all__ = [
+    "Server", "ServiceSpec", "max_blocks", "service_time", "amortized_time", "cache_slots",
+    "Placement", "gbp_cr", "random_placement", "chains_needed_from_servers",
+    "Chain", "ChainGraph", "disjoint_chain_objects",
+    "Allocation", "gca", "reserved_allocation", "optimal_ilp", "rate_lower_bound", "initial_slots",
+    "JFFC", "JSQ", "JIQ", "SED", "SAJSQ", "POLICIES", "Policy",
+    "response_time_bounds", "occupancy_lower_bound", "occupancy_upper_bound",
+    "exact_occupancy_k2", "exact_occupancy_ctmc", "is_stable", "total_rate",
+    "Job", "SimResult", "simulate", "simulate_policy_name", "poisson_arrivals",
+    "TuningResult", "tune_surrogate", "tune_bound", "compose",
+    "poisson_exponential", "azure_like_trace", "AZURE_STATS", "interarrival_std_ratio",
+]

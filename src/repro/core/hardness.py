@@ -1,0 +1,130 @@
+"""NP-hardness reduction constructions (Theorem 3.1 and Lemma 3.3).
+
+These are executable versions of the proofs' constructions, used by tests to
+verify the reductions behave as claimed on small instances (the reduction is
+the paper's *argument*; making it executable pins the system model's
+semantics).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .chains import Chain
+from .servers import Server, ServiceSpec
+
+
+@dataclasses.dataclass
+class MKPInstance:
+    """max sum mu_k c_k  s.t.  sum_k m_jk c_k <= D_j  (c binary)."""
+    values: List[int]                 # mu_k
+    sizes: List[List[int]]            # m[j][k] — dimension j, item k
+    capacities: List[int]             # D_j
+
+    def brute_force(self) -> int:
+        K = len(self.values)
+        best = 0
+        for picks in itertools.product((0, 1), repeat=K):
+            ok = all(
+                sum(self.sizes[j][k] * picks[k] for k in range(K)) <= self.capacities[j]
+                for j in range(len(self.capacities))
+            )
+            if ok:
+                best = max(best, sum(v * p for v, p in zip(self.values, picks)))
+        return best
+
+
+@dataclasses.dataclass
+class CacheAllocInstance:
+    """A cache-allocation subproblem: fixed chains, per-server slot budgets,
+    per-chain per-server slot usage; maximize total rate under budgets."""
+    chain_rates: List[float]
+    usage: List[Dict[str, int]]       # per chain: sid -> slots per job
+    budgets: Dict[str, int]
+    cap_limit: int = 1                # c_k in {0..cap_limit}
+
+    def brute_force_max_rate(self) -> float:
+        K = len(self.chain_rates)
+        best = 0.0
+        for caps in itertools.product(range(self.cap_limit + 1), repeat=K):
+            used: Dict[str, int] = {}
+            for k, c in enumerate(caps):
+                for sid, u in self.usage[k].items():
+                    used[sid] = used.get(sid, 0) + u * c
+            if all(used.get(s, 0) <= b for s, b in self.budgets.items()):
+                best = max(best, sum(r * c for r, c in zip(self.chain_rates, caps)))
+        return best
+
+
+def mkp_to_cache_alloc(inst: MKPInstance) -> CacheAllocInstance:
+    """Theorem 3.1's construction: items -> chains (rate mu_k), dimensions ->
+    shared servers with D_j slots; item k uses m_jk slots at server j.  The
+    auxiliary servers of the proof (v_jk and the tail server) have dedicated
+    budgets that never bind, so they are represented implicitly."""
+    K = len(inst.values)
+    usage: List[Dict[str, int]] = []
+    for k in range(K):
+        u = {f"srv{j}": inst.sizes[j][k] for j in range(len(inst.capacities))
+             if inst.sizes[j][k] > 0}
+        usage.append(u)
+    budgets = {f"srv{j}": inst.capacities[j] for j in range(len(inst.capacities))}
+    return CacheAllocInstance(
+        chain_rates=[float(v) for v in inst.values], usage=usage, budgets=budgets,
+    )
+
+
+def partition_to_placement(xs: Sequence[int]) -> Tuple[List[Server], ServiceSpec, float]:
+    """Lemma 3.3's construction: number x_j -> server with m_j(c)=t_j(c)=x_j
+    (at c=1), L = sum(x)/2, required scaled rate 2/L.
+
+    Returns (servers, spec, required_rate).  A 2-chain solution to (10) exists
+    iff the multiset ``xs`` can be partitioned into equal halves.
+    """
+    total = sum(xs)
+    if total % 2:
+        raise ValueError("partition instances need an even total")
+    L = total // 2
+    # Build servers: s_m = 1, s_c = 1, c = 1 -> m_j(c) = floor(M_j / 2) = x_j
+    # (M_j = 2 x_j); t_j(c) = tau_c + tau_p * m_j = x_j with tau_c=0, tau_p=1.
+    servers = [
+        Server(sid=f"s{idx}", memory_gb=2.0 * x, tau_c=0.0, tau_p=1.0)
+        for idx, x in enumerate(xs)
+    ]
+    spec = ServiceSpec(num_blocks=L, block_size_gb=1.0, cache_size_gb=1.0)
+    required_rate = 2.0 / L
+    return servers, spec, required_rate
+
+
+def partition_brute_force(xs: Sequence[int]) -> bool:
+    total = sum(xs)
+    if total % 2:
+        return False
+    target = total // 2
+    reachable = {0}
+    for x in xs:
+        reachable |= {r + x for r in reachable}
+    return target in reachable
+
+
+def two_chain_feasible(xs: Sequence[int]) -> bool:
+    """Brute-force feasibility of (10) with |K| = 2 for the constructed
+    instance: exists a split of servers into two groups, each with
+    sum m_j >= L, total scaled rate >= 2/L?  (Groups may not overlap; unused
+    servers allowed.)"""
+    n = len(xs)
+    L = sum(xs) // 2
+    for mask in range(3 ** n):
+        g: List[List[int]] = [[], [], []]
+        mm = mask
+        for i in range(n):
+            g[mm % 3].append(xs[i])
+            mm //= 3
+        if not g[0] or not g[1]:
+            continue
+        if sum(g[0]) >= L and sum(g[1]) >= L:
+            rate = 1.0 / sum(g[0]) + 1.0 / sum(g[1])
+            if rate >= 2.0 / L - 1e-12:
+                return True
+    return False

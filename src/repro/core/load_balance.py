@@ -1,0 +1,162 @@
+"""Load-balancing policies over composed job servers (Section 3.2).
+
+JFFC (Algorithm 3) is the paper's policy: a single central FIFO queue; an
+arrival joins the fastest chain with free capacity, else queues; a completion
+on chain k pulls the queue head onto chain k (faithful to Alg. 3 — NOT onto
+the fastest free chain).
+
+The benchmark policies (JSQ / JIQ / SED / SA-JSQ) use dedicated per-chain
+queues, extended to parallel chains exactly as in Section 4.1.2.
+"""
+from __future__ import annotations
+
+import random
+from collections import deque
+from typing import Deque, List, Optional, Sequence, Tuple
+
+
+class Policy:
+    """Strategy interface used by :mod:`repro.core.simulator`.
+
+    ``rates``/``caps`` describe the composed job servers (chain k can run
+    ``caps[k]`` jobs concurrently at rate ``rates[k]`` each).
+    """
+
+    name = "base"
+
+    def __init__(self, rates: Sequence[float], caps: Sequence[int],
+                 rng: Optional[random.Random] = None):
+        self.rates = list(rates)
+        self.caps = list(caps)
+        self.running = [0] * len(rates)
+        self.rng = rng or random.Random(0)
+
+    # -- hooks ---------------------------------------------------------------
+    def on_arrival(self, job) -> Optional[int]:
+        """Return the chain index to start ``job`` on now, or None if queued."""
+        raise NotImplementedError
+
+    def on_departure(self, k: int) -> Optional[object]:
+        """Chain ``k`` freed one slot; return a queued job to start (on any
+        chain — set ``job.assigned_chain``) or None."""
+        raise NotImplementedError
+
+    def queue_len(self) -> int:
+        raise NotImplementedError
+
+    # -- shared helpers --------------------------------------------------------
+    def free_chains(self) -> List[int]:
+        return [k for k in range(len(self.caps)) if self.running[k] < self.caps[k]]
+
+
+class JFFC(Policy):
+    """Join-the-Fastest-Free-Chain (Algorithm 3)."""
+
+    name = "jffc"
+
+    def __init__(self, rates, caps, rng=None):
+        super().__init__(rates, caps, rng)
+        self.queue: Deque = deque()
+
+    def on_arrival(self, job):
+        free = self.free_chains()
+        if free:
+            k = max(free, key=lambda i: self.rates[i])
+            return k
+        self.queue.append(job)
+        return None
+
+    def on_departure(self, k):
+        if self.queue:
+            job = self.queue.popleft()
+            job.assigned_chain = k
+            return job
+        return None
+
+    def queue_len(self):
+        return len(self.queue)
+
+
+class _DedicatedQueuePolicy(Policy):
+    """Base for policies with one FIFO queue per chain."""
+
+    def __init__(self, rates, caps, rng=None):
+        super().__init__(rates, caps, rng)
+        self.queues: List[Deque] = [deque() for _ in rates]
+
+    def choose(self, job) -> int:
+        raise NotImplementedError
+
+    def on_arrival(self, job):
+        k = self.choose(job)
+        if self.running[k] < self.caps[k]:
+            return k
+        job.assigned_chain = k
+        self.queues[k].append(job)
+        return None
+
+    def on_departure(self, k):
+        if self.queues[k]:
+            job = self.queues[k].popleft()
+            job.assigned_chain = k
+            return job
+        return None
+
+    def queue_len(self):
+        return sum(len(q) for q in self.queues)
+
+    def in_system(self, k: int) -> int:
+        return self.running[k] + len(self.queues[k])
+
+
+class JSQ(_DedicatedQueuePolicy):
+    """Join-the-Shortest-Queue, parallel-chain extension."""
+
+    name = "jsq"
+
+    def choose(self, job):
+        n = min(self.in_system(k) for k in range(len(self.caps)))
+        cands = [k for k in range(len(self.caps)) if self.in_system(k) == n]
+        return self.rng.choice(cands)
+
+
+class SAJSQ(_DedicatedQueuePolicy):
+    """Speed-Aware JSQ [5]: shortest queue, ties to the fastest chain."""
+
+    name = "sa-jsq"
+
+    def choose(self, job):
+        return min(
+            range(len(self.caps)),
+            key=lambda k: (self.in_system(k), -self.rates[k]),
+        )
+
+
+class SED(_DedicatedQueuePolicy):
+    """Smallest-Expected-Delay for parallel chains (M/M/c-style estimate)."""
+
+    name = "sed"
+
+    def choose(self, job):
+        def delay(k):
+            n = self.in_system(k)
+            mu, c = self.rates[k], self.caps[k]
+            wait = max(0, n + 1 - c) / (c * mu)
+            return wait + 1.0 / mu
+
+        return min(range(len(self.caps)), key=delay)
+
+
+class JIQ(_DedicatedQueuePolicy):
+    """Join-the-Idle-Queue [17]: any chain with a free slot, else random."""
+
+    name = "jiq"
+
+    def choose(self, job):
+        free = self.free_chains()
+        if free:
+            return self.rng.choice(free)
+        return self.rng.randrange(len(self.caps))
+
+
+POLICIES = {cls.name: cls for cls in (JFFC, JSQ, SAJSQ, SED, JIQ)}

@@ -1,0 +1,13 @@
+from .sharding import (
+    ShardingContext,
+    batch_shardings,
+    cache_shardings,
+    opt_shardings,
+    param_pspec,
+    params_shardings,
+)
+
+__all__ = [
+    "ShardingContext", "batch_shardings", "cache_shardings",
+    "opt_shardings", "param_pspec", "params_shardings",
+]

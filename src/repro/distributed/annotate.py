@@ -1,0 +1,107 @@
+"""Logical sharding annotations for model code.
+
+Model code stays mesh-agnostic: it calls ``constrain(x, "batch", "seq",
+None)`` with *logical* axis names.  Launchers install a mapping from logical
+names to physical mesh axes (plus the mesh) around tracing; with no context
+installed the calls are no-ops, so unit tests and single-device runs are
+untouched.
+
+These anchors matter: GSPMD propagation alone loses the batch sharding
+through gathers/scans and then replicates (B, S, V)-scale intermediates per
+device (measured: 1.2 TB/device for a 1.6 B model's logits).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_STATE = threading.local()
+
+# Default logical-axis table used by launchers (seq=None => no sequence
+# parallelism; the hillclimb flips individual entries).
+DEFAULT_RULES: Dict[str, object] = {
+    "batch": ("data",),          # set to ("pod", "data") on the multi-pod mesh
+    "seq": None,
+    "vocab": "model",
+    "experts": "model",
+    "heads": "model",
+    "kv_seq": "model",
+}
+
+
+@contextlib.contextmanager
+def logical_sharding(mesh: Mesh, rules: Dict[str, object]):
+    prev = getattr(_STATE, "ctx", None)
+    _STATE.ctx = (mesh, dict(rules))
+    try:
+        yield
+    finally:
+        _STATE.ctx = prev
+
+
+def rules_for(mesh: Mesh, **overrides) -> Dict[str, object]:
+    rules = dict(DEFAULT_RULES)
+    rules["batch"] = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    rules.update(overrides)
+    return rules
+
+
+def current() -> Optional[Tuple[Mesh, Dict[str, object]]]:
+    """(mesh, rules) if a logical-sharding context is installed, else None."""
+    return getattr(_STATE, "ctx", None)
+
+
+def rule(name: str, default=None):
+    ctx = current()
+    if ctx is None:
+        return default
+    return ctx[1].get(name, default)
+
+
+def axis_fits(name: str, dim: int) -> bool:
+    """Does logical axis ``name`` divide ``dim`` under the current context?"""
+    ctx = current()
+    if ctx is None:
+        return False
+    mesh, rules = ctx
+    axis = rules.get(name)
+    if axis is None:
+        return False
+    size = 1
+    for a in (axis if isinstance(axis, tuple) else (axis,)):
+        size *= mesh.shape.get(a, 1)
+    return dim % size == 0
+
+
+def constrain(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    ctx = getattr(_STATE, "ctx", None)
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    dims = []
+    used: set = set()
+    for i, name in enumerate(logical):
+        axis = rules.get(name) if name else None
+        if axis is None:
+            dims.append(None)
+            continue
+        parts = axis if isinstance(axis, tuple) else (axis,)
+        if any(a in used for a in parts):     # one mesh axis per spec position
+            dims.append(None)
+            continue
+        sizes = mesh.shape
+        size = 1
+        for a in parts:
+            size *= sizes.get(a, 1)
+        if x.shape[i] % size == 0:
+            dims.append(axis)
+            used.update(parts)
+        else:
+            dims.append(None)
+    if len(logical) < x.ndim:
+        dims += [None] * (x.ndim - len(logical))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*dims)))

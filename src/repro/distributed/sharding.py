@@ -1,0 +1,230 @@
+"""Logical-axis sharding rules for params / optimizer state / caches / inputs.
+
+Axes:
+  "data"  — DP / FSDP (batch; weight shards in train mode; expert-FFN shards)
+  "model" — TP (heads, d_ff, vocab, experts; KV-cache sequence in decode)
+  "pod"   — cross-pod DP (multi-pod mesh only)
+
+Rules are name-based over the param tree leaves (leaf names are a stable
+contract of repro.models) and divisibility-guarded: a dim that does not
+divide the axis size falls back to replication (e.g. hymba's vocab 32001).
+
+Decode KV caches are sequence-sharded over "model" (flash-decoding style):
+it sidesteps kv_heads < axis-size divisibility AND parallelizes the
+memory-bound cache sweep — see DESIGN.md §5.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+# Column-parallel weights: last dim -> "model"; FSDP dim is dim -2 (train).
+_COL = {
+    "wq", "wk", "wv", "w_uq", "w_ukv", "w_up", "w_gate", "w_q", "w_k", "w_v",
+    "w_dq", "w_dkv", "w_kr", "w_in",
+}
+# Row-parallel: dim -2 -> "model" (input arrives model-sharded), FSDP on last.
+_ROW = {"wo", "w_down", "w_out"}
+# 1-D biases of column-parallel outputs.
+_COL_BIAS = {"bq", "bk", "bv", "b"}
+# Expert-stacked weights (E, in, out): EP rules.
+_EXPERT = {"w_up_e", "w_gate_e", "w_down_e"}
+# SSM per-channel (d_inner-leading) params.
+_SSM_CH = {"b_dt", "d_skip"}
+_SSM_CH2 = {"w_bc", "w_dt", "log_a"}    # (d_inner, X)
+_REPLICATED = {
+    "ln1", "ln2", "ln_q", "ln_kv", "q_norm", "k_norm", "final_norm",
+    "router", "w_gates", "b_gates", "r_blk",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingContext:
+    mesh: Mesh
+    cfg: ModelConfig
+    mode: str                    # "train" | "serve"
+
+    @property
+    def dp_axes(self) -> Tuple[str, ...]:
+        return tuple(a for a in ("pod", "data") if a in self.mesh.axis_names)
+
+    def axis_size(self, name) -> int:
+        if isinstance(name, tuple):
+            return int(np.prod([self.axis_size(n) for n in name]))
+        return self.mesh.shape[name] if name in self.mesh.axis_names else 1
+
+    def fits(self, dim: int, axis) -> bool:
+        return dim % self.axis_size(axis) == 0
+
+    def model_if(self, dim: int) -> Optional[str]:
+        return "model" if self.fits(dim, "model") else None
+
+    def fsdp_if(self, dim: int) -> Optional[Any]:
+        if self.mode != "train":
+            return None
+        # ZeRO-3 across pods too (multi-pod mesh): params/grads/moments shard
+        # over every data-parallel axis — required for 671B-scale training.
+        if self.fits(dim, self.dp_axes) and len(self.dp_axes) > 1:
+            return self.dp_axes
+        return "data" if self.fits(dim, "data") else None
+
+
+def _leaf_name(path) -> str:
+    for p in reversed(path):
+        k = getattr(p, "key", None)
+        if isinstance(k, str):
+            return k
+    return ""
+
+
+def param_pspec(ctx: ShardingContext, path, leaf) -> P:
+    name = _leaf_name(path)
+    shape = leaf.shape
+    in_stage = any(getattr(p, "key", None) == "stages" for p in path)
+    lead = (None,) if in_stage else ()            # stacked layer dim
+    core = shape[1:] if in_stage else shape
+
+    def spec(*dims) -> P:
+        return P(*lead, *dims)
+
+    if name == "embed":
+        # D-sharded (not V-sharded): the backward scatter-add then partitions
+        # on the unsharded vocab dim; a V-sharded table makes GSPMD replicate
+        # the full (V, D) f32 gradient per device.
+        return P(None, ctx.model_if(shape[1]))
+    if name == "lm_head":
+        return P(ctx.fsdp_if(shape[0]), ctx.model_if(shape[1]))
+    if name in _REPLICATED or not core:
+        return spec(*([None] * len(core)))
+    if name in _EXPERT:
+        E, d_in, d_out = core
+        both = ("data", "model")
+        if ctx.mode == "serve" and ctx.fits(E, both) and ctx.axis_size(both) > 1:
+            # serving: deepseek's 1.3 TB of experts only fits spread over all
+            # 256 chips; the shard_map MoE gathers one layer's local experts
+            # over "data" transiently.
+            return spec(both, None, None)
+        if ctx.fits(E, "model"):
+            # E over model; FSDP the wide dim over data (matches the
+            # shard_map MoE's P("model", ...) view up to an FSDP all-gather).
+            wide = 2 if d_out >= d_in else 1
+            dims = [None, None, None]
+            dims[0] = "model"
+            if ctx.fits(core[wide], "data"):
+                dims[wide] = "data"
+            return spec(*dims)
+        return spec(None, None, ctx.model_if(d_out))
+    if name in _COL and len(core) == 2:
+        return spec(ctx.fsdp_if(core[0]), ctx.model_if(core[1]))
+    if name in _ROW and len(core) == 2:
+        return spec(ctx.model_if(core[0]), ctx.fsdp_if(core[1]))
+    if name in _COL_BIAS and len(core) == 1:
+        return spec(ctx.model_if(core[0]))
+    if name in _SSM_CH and len(core) == 1:
+        return spec(ctx.model_if(core[0]))
+    if name in _SSM_CH2 and len(core) == 2:
+        return spec(ctx.model_if(core[0]), None)
+    if name == "conv" and len(core) == 2:        # (width, d_inner)
+        return spec(None, ctx.model_if(core[1]))
+    return spec(*([None] * len(core)))
+
+
+def params_shardings(ctx: ShardingContext, params_spec) -> Any:
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(ctx.mesh, param_pspec(ctx, path, leaf)),
+        params_spec)
+
+
+def opt_shardings(ctx: ShardingContext, params_spec, opt_spec) -> Any:
+    """Optimizer state mirrors param sharding; factored/scalar leaves are
+    sharded like the matching param prefix when shapes allow, else
+    best-effort by divisibility."""
+    param_specs: Dict[Tuple, P] = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params_spec)[0]:
+        param_specs[tuple(str(p) for p in path)] = param_pspec(ctx, path, leaf)
+
+    def for_leaf(path, leaf):
+        # match the param leaf whose path is a subsequence of this opt path
+        keys = tuple(str(p) for p in path)
+        best = None
+        for pk, spec in param_specs.items():
+            if all(k in keys for k in pk):
+                best = spec
+                break
+        if best is not None and len(best) == leaf.ndim:
+            ok = all(
+                ax is None or leaf.shape[i] % ctx.axis_size(ax) == 0
+                for i, ax in enumerate(best))
+            if ok:
+                return NamedSharding(ctx.mesh, best)
+        if best is not None and leaf.ndim == len(best) - 1:
+            # factored v_row/v_col: drop the reduced dim's spec
+            for drop in (len(best) - 1, len(best) - 2):
+                cand = P(*(ax for i, ax in enumerate(best) if i != drop))
+                if all(ax is None or leaf.shape[i] % ctx.axis_size(ax) == 0
+                       for i, ax in enumerate(cand)):
+                    return NamedSharding(ctx.mesh, cand)
+        return NamedSharding(ctx.mesh, P(*([None] * leaf.ndim)))
+
+    return jax.tree_util.tree_map_with_path(for_leaf, opt_spec)
+
+
+def batch_shardings(ctx: ShardingContext, batch_spec) -> Any:
+    dp = ctx.dp_axes
+
+    def for_leaf(path, leaf):
+        if leaf.ndim == 0:
+            return NamedSharding(ctx.mesh, P())
+        if leaf.shape[0] % ctx.axis_size(dp) == 0:
+            return NamedSharding(ctx.mesh, P(dp, *([None] * (leaf.ndim - 1))))
+        if "data" in dp and leaf.shape[0] % ctx.axis_size("data") == 0:
+            return NamedSharding(ctx.mesh, P("data", *([None] * (leaf.ndim - 1))))
+        return NamedSharding(ctx.mesh, P(*([None] * leaf.ndim)))
+
+    return jax.tree_util.tree_map_with_path(for_leaf, batch_spec)
+
+
+# cache leaf names -> which axis index (after the leading (layers, batch))
+# is the sequence/state dim to shard over "model".
+_CACHE_SEQ_LEAF = {"k": 2, "v": 2, "latent": 2}
+
+
+def cache_shardings(ctx: ShardingContext, cache_spec) -> Any:
+    dp = ctx.dp_axes
+
+    def for_leaf(path, leaf):
+        name = _leaf_name(path)
+        dims = [None] * leaf.ndim
+        # (n_layers, batch, ...)
+        if leaf.ndim >= 2 and leaf.shape[1] % ctx.axis_size(dp) == 0:
+            dims[1] = dp
+        elif leaf.ndim >= 2 and "data" in dp \
+                and leaf.shape[1] % ctx.axis_size("data") == 0:
+            dims[1] = "data"
+        if name in _CACHE_SEQ_LEAF:
+            i = _CACHE_SEQ_LEAF[name]
+            if leaf.ndim > i and leaf.shape[i] % ctx.axis_size("model") == 0:
+                dims[i] = "model"
+        elif name in ("C", "n") and leaf.ndim >= 4:
+            # mLSTM state (n, B, H, d, d): shard matrix dim over model
+            if leaf.shape[-1] % ctx.axis_size("model") == 0:
+                dims[-1] = "model"
+        elif name in ("h", "conv_buf"):
+            # SSM state (n, B, d_inner, N) / conv buffer (n, B, W-1, d_inner)
+            i = 2 if name == "h" else leaf.ndim - 1
+            if leaf.shape[i] % ctx.axis_size("model") == 0:
+                dims[i] = "model"
+        return NamedSharding(ctx.mesh, P(*dims))
+
+    return jax.tree_util.tree_map_with_path(for_leaf, cache_spec)
+
+
+def replicated(ctx: ShardingContext, spec) -> Any:
+    return jax.tree.map(
+        lambda leaf: NamedSharding(ctx.mesh, P(*([None] * leaf.ndim))), spec)

@@ -1,0 +1,115 @@
+"""Pallas TPU flash-decoding: single-token attention over a long KV cache.
+
+One new query per sequence attends to S cached keys.  The KV sweep is the
+memory-bound hot loop of decode, so the kernel splits the cache sequence into
+blocks (split-K) and carries online-softmax state across the sequential grid
+dimension.  GQA: all G query heads of one KV group are processed together as
+the M dimension of the matmul, so the tile is (G x bs) — MXU-shaped when
+G is folded with blocks of queries; for small G this is the standard
+flash-decoding latency shape (bandwidth-, not compute-, limited).
+
+Validity masking uses a precomputed (B, S) bool mask (cheap, int8-sized)
+instead of scalar prefetch, which keeps the kernel portable to interpret
+mode for CPU validation.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(
+    q_ref,                        # (G, hd)
+    k_ref, v_ref,                 # (bs, hd)
+    mask_ref,                     # (1, bs) bool
+    o_ref,                        # (G, hd)
+    m_ref, l_ref, acc_ref,        # scratch: (G, 1), (G, 1), (G, hd)
+    *, scale: float, num_s_blocks: int,
+):
+    ik = pl.program_id(1)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[...]
+    k = k_ref[...]
+    v = v_ref[...]
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32,
+    ) * scale                                                 # (G, bs)
+    valid = mask_ref[...]                                     # (1, bs)
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    m_ref[...] = m_new
+
+    @pl.when(ik == num_s_blocks - 1)
+    def _finalize():
+        o_ref[...] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def decode_attention_pallas(
+    q: jnp.ndarray,               # (B, H, hd)
+    k_cache: jnp.ndarray,         # (B, S, KV, hd)
+    v_cache: jnp.ndarray,         # (B, S, KV, hd)
+    lengths: jnp.ndarray,         # (B,) int32
+    *,
+    block_s: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    B, H, hd = q.shape
+    S, KV = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    block_s = min(block_s, S)
+    if S % block_s:
+        raise ValueError(f"cache length {S} must divide block_s {block_s}")
+    ns = S // block_s
+
+    qh = q.reshape(B * KV, G, hd)
+    kh = jnp.moveaxis(k_cache, 2, 1).reshape(B * KV, S, hd)
+    vh = jnp.moveaxis(v_cache, 2, 1).reshape(B * KV, S, hd)
+    mask = (jnp.arange(S)[None, :] < lengths[:, None])[:, None, :]   # (B, 1, S)
+
+    kernel = functools.partial(
+        _decode_kernel, scale=1.0 / math.sqrt(hd), num_s_blocks=ns,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * KV, ns),
+        in_specs=[
+            pl.BlockSpec((None, G, hd), lambda bk, ik: (bk, 0, 0)),
+            pl.BlockSpec((None, block_s, hd), lambda bk, ik: (bk, ik, 0)),
+            pl.BlockSpec((None, block_s, hd), lambda bk, ik: (bk, ik, 0)),
+            pl.BlockSpec((None, 1, block_s), lambda bk, ik, KV=KV: (bk // KV, 0, ik)),
+        ],
+        out_specs=pl.BlockSpec((None, G, hd), lambda bk, ik: (bk, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * KV, G, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(qh, kh, vh, mask)
+    return out.reshape(B, H, hd)

@@ -1,0 +1,47 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+``use_pallas`` selects the execution path:
+  * True  — the Pallas TPU kernel (pass ``interpret=True`` on CPU for
+    validation; on TPU hardware leave it False).
+  * False — the pure-jnp reference (used by the CPU dry-run so lowering never
+    depends on Mosaic availability).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .decode_attention import decode_attention_pallas
+from .flash_attention import flash_attention_pallas
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "use_pallas",
+                                   "block_q", "block_k", "interpret"))
+def flash_attention(
+    q, k, v, *, causal: bool = True, window: int = 0,
+    use_pallas: bool = False, block_q: int = 256, block_k: int = 256,
+    interpret: bool = False,
+):
+    """q: (B, S, H, hd); k/v: (B, S, KV, hd) -> (B, S, H, hd)."""
+    if use_pallas:
+        return flash_attention_pallas(
+            q, k, v, causal=causal, window=window,
+            block_q=block_q, block_k=block_k, interpret=interpret,
+        )
+    return ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+
+
+@partial(jax.jit, static_argnames=("use_pallas", "block_s", "interpret"))
+def decode_attention(
+    q, k_cache, v_cache, lengths, *,
+    use_pallas: bool = False, block_s: int = 512, interpret: bool = False,
+):
+    """q: (B, H, hd); caches: (B, S, KV, hd); lengths: (B,) -> (B, H, hd)."""
+    if use_pallas:
+        return decode_attention_pallas(
+            q, k_cache, v_cache, lengths, block_s=block_s, interpret=interpret,
+        )
+    return ref.decode_attention_ref(q, k_cache, v_cache, lengths)

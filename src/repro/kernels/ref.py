@@ -1,0 +1,60 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Deliberately written as direct, unchunked softmax attention so the kernels
+are validated against an independent formulation (tests sweep shapes/dtypes
+and assert allclose)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(
+    q: jnp.ndarray,              # (B, S, H, hd)
+    k: jnp.ndarray,              # (B, S, KV, hd)
+    v: jnp.ndarray,              # (B, S, KV, hd)
+    causal: bool = True,
+    window: int = 0,
+) -> jnp.ndarray:
+    B, Sq, H, hd = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    kk = jnp.repeat(k, G, axis=2)        # (B, Sk, H, hd)
+    vv = jnp.repeat(v, G, axis=2)
+    s = jnp.einsum("bqhd,bshd->bhqs", q.astype(jnp.float32), kk.astype(jnp.float32))
+    s = s / math.sqrt(hd)
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqs,bshd->bqhd", p, vv.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def decode_attention_ref(
+    q: jnp.ndarray,              # (B, H, hd)
+    k_cache: jnp.ndarray,        # (B, S, KV, hd)
+    v_cache: jnp.ndarray,        # (B, S, KV, hd)
+    lengths: jnp.ndarray,        # (B,)
+) -> jnp.ndarray:
+    B, H, hd = q.shape
+    S, KV = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    kk = jnp.repeat(k_cache, G, axis=2)
+    vv = jnp.repeat(v_cache, G, axis=2)
+    s = jnp.einsum("bhd,bshd->bhs", q.astype(jnp.float32), kk.astype(jnp.float32))
+    s = s / math.sqrt(hd)
+    valid = jnp.arange(S)[None, :] < lengths[:, None]
+    s = jnp.where(valid[:, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhs,bshd->bhd", p, vv.astype(jnp.float32))
+    return out.astype(q.dtype)

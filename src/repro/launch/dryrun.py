@@ -1,0 +1,342 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell:
+  * full config, scan-over-layers, sharded per repro.distributed.sharding;
+    .lower().compile() on the single-pod 16x16 mesh AND the 2x16x16 multi-pod
+    mesh; memory_analysis() recorded (per-device bytes — proves fit),
+    collective bytes parsed trip-count-aware from the compiled HLO.
+  * single-pod only: truncated-unrolled variants (scan_layers=False, 1-4
+    layers) whose cost_analysis() solves per-layer-kind FLOPs/bytes exactly;
+    extrapolated to full depth -> roofline terms (analysis.roofline).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun [--arch a,b] [--shape s]
+      [--mesh single|multi|both] [--out results/dryrun]
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis import hlo_parse, roofline
+from repro.configs import ARCHS, ASSIGNED, SHAPES, get, supports_shape
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed.annotate import logical_sharding, rules_for
+from repro.distributed.sharding import (
+    ShardingContext,
+    batch_shardings,
+    cache_shardings,
+    opt_shardings,
+    params_shardings,
+)
+from repro.launch.mesh import make_production_mesh
+from repro.models import Model
+from repro.models.transformer import stages
+from repro.training import TrainConfig, make_train_step
+from repro.training.train_loop import init_opt_state
+
+HBM_PER_CHIP = 16 * 1024 ** 3      # v5e
+
+
+# ---------------------------------------------------------------------------
+# Cell configuration policy (production defaults; §Perf iterates on these)
+# ---------------------------------------------------------------------------
+
+TRAIN_KEYS = ("grad_accum", "optimizer_name", "accum_dtype")
+
+
+def cell_config(arch: str, shape: ShapeConfig, overrides: Optional[dict] = None
+                ) -> ModelConfig:
+    cfg = get(arch)
+    overrides = {k: v for k, v in (overrides or {}).items() if k not in TRAIN_KEYS}
+    changes: dict = {}
+    if shape.kind == "train":
+        # Full remat: save only the per-layer carry.  ("dots" would suffice
+        # at the JAX level, but host-XLA hoists f32 converts of the saved
+        # (L, B, S, d_ff) stacks out of the backward loop — GBs/device; see
+        # EXPERIMENTS.md §Perf for the measured remat ablation.)
+        changes["remat"] = "full"
+        # flash-style chunked attention at 4k too: the unchunked path holds
+        # (B, H, S, S) f32 score tensors (TBs across a scanned stack).
+        changes["attn_chunk_threshold"] = 4096
+        # layers_per_remat_block stays 1: grouping shrinks the carry stack
+        # but doubles the live recompute window — measured net-negative here
+        # (EXPERIMENTS.md §Perf).
+    if overrides:
+        changes.update(overrides)
+    return dataclasses.replace(cfg, **changes) if changes else cfg
+
+
+def train_config_for(arch: str, overrides: Optional[dict] = None) -> TrainConfig:
+    tcfg = _train_config_for(arch)
+    tov = {k: v for k, v in (overrides or {}).items() if k in TRAIN_KEYS}
+    return dataclasses.replace(tcfg, **tov) if tov else tcfg
+
+
+def _train_config_for(arch: str) -> TrainConfig:
+    # AdamW(bf16 moments) fits every arch except deepseek-v3-671b on a single
+    # 256-chip pod; Adafactor's factored second moment closes that gap.
+    # grad_accum = production microbatching: big-activation archs split the
+    # 256-sequence global batch so per-microbatch live sets fit 16 GB HBM.
+    if arch == "deepseek-v3-671b":
+        return TrainConfig(optimizer_name="adafactor", grad_accum=16,
+                           accum_dtype="bfloat16")
+    if arch == "dbrx-132b":
+        return TrainConfig(grad_accum=8)
+    if arch == "internvl2-76b":
+        return TrainConfig(grad_accum=4)
+    return TrainConfig()
+
+
+def truncated_variants(cfg: ModelConfig) -> List[ModelConfig]:
+    """1-4 layer unrolled variants spanning the layer-kind space."""
+    r = dataclasses.replace
+    base = dict(scan_layers=False)
+    if cfg.family == "ssm":
+        return [
+            r(cfg, num_layers=2, ssm=r(cfg.ssm, slstm_every=2), **base),
+            r(cfg, num_layers=3, ssm=r(cfg.ssm, slstm_every=3), **base),
+            r(cfg, num_layers=4, ssm=r(cfg.ssm, slstm_every=2), **base),
+        ]
+    if cfg.family == "hybrid":
+        return [
+            r(cfg, num_layers=2, global_attn_layers=(0,), **base),
+            r(cfg, num_layers=3, global_attn_layers=(0,), **base),
+            r(cfg, num_layers=4, global_attn_layers=(0, 3), **base),
+        ]
+    if cfg.moe is not None and cfg.moe.first_k_dense > 0:
+        return [
+            r(cfg, num_layers=2, moe=r(cfg.moe, first_k_dense=1), **base),
+            r(cfg, num_layers=3, moe=r(cfg.moe, first_k_dense=2), **base),
+            r(cfg, num_layers=4, moe=r(cfg.moe, first_k_dense=2), **base),
+        ]
+    return [r(cfg, num_layers=1, **base), r(cfg, num_layers=2, **base)]
+
+
+def kind_counts(cfg: ModelConfig) -> Dict[str, int]:
+    return {st.kind: sum(s.count for s in stages(cfg) if s.kind == st.kind)
+            for st in stages(cfg)}
+
+
+# ---------------------------------------------------------------------------
+# Lowering
+# ---------------------------------------------------------------------------
+
+def lower_cell(cfg: ModelConfig, shape: ShapeConfig, mesh, arch: str,
+               rule_overrides: Optional[dict] = None,
+               overrides: Optional[dict] = None):
+    """Build the jitted step for this cell and lower it with abstract args."""
+    model = Model(cfg)
+    mode = "train" if shape.kind == "train" else "serve"
+    ctx = ShardingContext(mesh, cfg, mode)
+    # Production default: sequence-parallel saved activations in training
+    # (Megatron-SP) — the L x (B, S, D) per-layer residual stacks shard over
+    # "model" instead of replicating (measured 16x activation-memory cut).
+    defaults = {"seq": "model"} if shape.kind == "train" else {}
+    defaults.update(rule_overrides or {})
+    rules = rules_for(mesh, **defaults)
+    params_spec = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    p_sh = params_shardings(ctx, params_spec)
+    batch_spec = model.input_specs(shape)
+    b_sh = batch_shardings(ctx, batch_spec)
+
+    if shape.kind == "train":
+        tcfg = train_config_for(arch, overrides)
+        opt_spec = jax.eval_shape(lambda p: init_opt_state(tcfg, p), params_spec)
+        o_sh = opt_shardings(ctx, params_spec, opt_spec)
+        step = make_train_step(model, tcfg)
+        jitted = jax.jit(step, in_shardings=(p_sh, o_sh, b_sh),
+                         out_shardings=(p_sh, o_sh, None),
+                         donate_argnums=(0, 1))
+        with mesh, logical_sharding(mesh, rules):
+            lowered = jitted.lower(params_spec, opt_spec, batch_spec)
+        return lowered
+
+    cache_spec = jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, shape.seq_len))
+    c_sh = cache_shardings(ctx, cache_spec)
+    if shape.kind == "prefill":
+        jitted = jax.jit(model.prefill, in_shardings=(p_sh, c_sh, b_sh),
+                         out_shardings=(None, c_sh), donate_argnums=(1,))
+        with mesh, logical_sharding(mesh, rules):
+            lowered = jitted.lower(params_spec, cache_spec, batch_spec)
+        return lowered
+    # decode
+    tok_sh = batch_shardings(ctx, batch_spec)
+    jitted = jax.jit(model.decode_step,
+                     in_shardings=(p_sh, c_sh, tok_sh["token"], tok_sh["lengths"]),
+                     out_shardings=(None, c_sh), donate_argnums=(1,))
+    with mesh, logical_sharding(mesh, rules):
+        lowered = jitted.lower(params_spec, cache_spec,
+                               batch_spec["token"], batch_spec["lengths"])
+    return lowered
+
+
+def compile_and_analyze(lowered, *, want_text: bool = True):
+    compiled = lowered.compile()
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    rec = {
+        "memory": {
+            "argument_bytes": int(mem.argument_size_in_bytes),
+            "output_bytes": int(mem.output_size_in_bytes),
+            "temp_bytes": int(mem.temp_size_in_bytes),
+            "alias_bytes": int(mem.alias_size_in_bytes),
+            "peak_bytes": int(mem.argument_size_in_bytes + mem.temp_size_in_bytes
+                              + mem.output_size_in_bytes - mem.alias_size_in_bytes),
+        },
+        "cost_raw": {
+            # raw cost_analysis (per-device, while bodies counted ONCE) —
+            # kept for cross-reference; the roofline uses the trip-count-
+            # aware parse below.
+            "flops_per_device": float(cost.get("flops", 0.0)),
+            "bytes_per_device": float(cost.get("bytes accessed", 0.0)),
+        },
+    }
+    rec["memory"]["fits_hbm"] = rec["memory"]["peak_bytes"] <= HBM_PER_CHIP
+    if want_text:
+        costs = hlo_parse.parse_costs(compiled.as_text())
+        rec["parsed"] = {
+            "flops_per_device": costs.flops,
+            "bytes_per_device": costs.bytes,
+        }
+        rec["collectives"] = {
+            "total_bytes": costs.collectives.total_bytes,
+            "by_op": costs.collectives.bytes_by_op,
+            "counts": costs.collectives.count_by_op,
+        }
+    return rec
+
+
+def roofline_for_cell(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                      info: dict) -> dict:
+    """Roofline terms from the cell's own compiled module (trip-count-aware
+    HLO parse: dot FLOPs, operand/output bytes, collective bytes)."""
+    chips = mesh.devices.size
+    terms = roofline.build_terms(
+        flops_total=info["parsed"]["flops_per_device"] * chips,
+        bytes_total=info["parsed"]["bytes_per_device"] * chips,
+        # the parsed module is the per-device program -> scale to totals
+        collective_bytes=info["collectives"]["total_bytes"] * chips,
+        chips=chips,
+        model_flops=roofline.model_flops_for(cfg, shape),
+    )
+    return {"terms": terms.as_dict()}
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
+
+def run_cell(arch: str, shape_name: str, meshes: Dict[str, object], out_dir: str,
+             do_roofline: bool = True, overrides: Optional[dict] = None,
+             tag: str = "", rule_overrides: Optional[dict] = None) -> dict:
+    shape = SHAPES[shape_name]
+    base_cfg = get(arch)
+    ok, reason = supports_shape(base_cfg, shape)
+    rec: dict = {"arch": arch, "shape": shape_name, "tag": tag}
+    if not ok:
+        rec["status"] = "skipped"
+        rec["reason"] = reason
+        return rec
+    cfg = cell_config(arch, shape, overrides)
+    rec["note"] = reason
+    for mesh_name, mesh in meshes.items():
+        t0 = time.time()
+        try:
+            lowered = lower_cell(cfg, shape, mesh, arch,
+                                 rule_overrides=rule_overrides,
+                                 overrides=overrides)
+            info = compile_and_analyze(lowered)
+            info["lower_compile_s"] = round(time.time() - t0, 2)
+            rec[mesh_name] = info
+            if do_roofline and mesh_name == "single":
+                rec["roofline"] = roofline_for_cell(cfg, shape, mesh, info)
+            rec.setdefault("status", "ok")
+        except Exception as e:  # noqa: BLE001 — record and continue the sweep
+            rec[mesh_name] = {"error": f"{type(e).__name__}: {e}",
+                              "traceback": traceback.format_exc()[-2000:]}
+            rec["status"] = "failed"
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=",".join(ASSIGNED))
+    ap.add_argument("--shape", default=",".join(SHAPES))
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--no-roofline", action="store_true")
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--override", default="",
+                    help="comma k=v ModelConfig overrides (e.g. remat=none)")
+    ap.add_argument("--rules", default="",
+                    help="comma k=v logical-sharding rule overrides "
+                         "(e.g. attn_layout=heads, seq=None)")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    meshes = {}
+    if args.mesh in ("single", "both"):
+        meshes["single"] = make_production_mesh(multi_pod=False)
+    if args.mesh in ("multi", "both"):
+        meshes["multi"] = make_production_mesh(multi_pod=True)
+
+    overrides: dict = {}
+    for kv in filter(None, args.override.split(",")):
+        k, v = kv.split("=")
+        if v in ("True", "False"):
+            v = v == "True"
+        elif v.isdigit():
+            v = int(v)
+        overrides[k] = v
+    rule_overrides: dict = {}
+    for kv in filter(None, args.rules.split(",")):
+        k, v = kv.split("=")
+        rule_overrides[k] = None if v == "None" else v
+
+    summary = []
+    for arch in args.arch.split(","):
+        for shape_name in args.shape.split(","):
+            t0 = time.time()
+            rec = run_cell(arch, shape_name, meshes, args.out,
+                           do_roofline=not args.no_roofline,
+                           overrides=overrides or None, tag=args.tag,
+                           rule_overrides=rule_overrides or None)
+            fname = f"{arch}__{shape_name}__{args.tag}.json"
+            with open(os.path.join(args.out, fname), "w") as f:
+                json.dump(rec, f, indent=1)
+            status = rec.get("status")
+            extra = ""
+            if status == "ok" and "roofline" in rec:
+                t = rec["roofline"]["terms"]
+                extra = (f" dom={t['dominant']} frac={t['roofline_fraction']:.3f}"
+                         f" ratio={t['flops_ratio']:.2f}")
+            if status == "skipped":
+                extra = f" ({rec['reason'][:60]})"
+            if status == "failed":
+                for m in meshes:
+                    if isinstance(rec.get(m), dict) and "error" in rec[m]:
+                        extra = " " + rec[m]["error"][:120]
+                        break
+            print(f"[{status:7s}] {arch:18s} {shape_name:12s}"
+                  f" {time.time()-t0:6.1f}s{extra}", flush=True)
+            summary.append({"arch": arch, "shape": shape_name, "status": status})
+    n_ok = sum(1 for s in summary if s["status"] == "ok")
+    n_skip = sum(1 for s in summary if s["status"] == "skipped")
+    n_fail = sum(1 for s in summary if s["status"] == "failed")
+    print(f"\n{n_ok} ok / {n_skip} skipped / {n_fail} failed")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

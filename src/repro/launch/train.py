@@ -1,0 +1,91 @@
+"""End-to-end training driver.
+
+Small-scale (CPU / single host):
+  PYTHONPATH=src python -m repro.launch.train --arch stablelm-1.6b --reduced \
+      --steps 200 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+
+On a real cluster the same driver runs under the production mesh (--mesh
+single|multi) with the full config; per-shard data streams come from
+repro.training.data (seeded by host id), and checkpoint/restart is automatic
+(restores LATEST if present — kill and relaunch to test fault tolerance).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get
+from repro.models import Model
+from repro.training import TrainConfig, checkpoint, data, make_train_step
+from repro.training.optimizer import AdamWConfig
+from repro.training.train_loop import init_opt_state
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="stablelm-1.6b")
+    ap.add_argument("--reduced", action="store_true",
+                    help="use the smoke-scale config (CPU-friendly)")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    model = Model(cfg)
+    tcfg = TrainConfig(
+        optimizer=AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 20, 1),
+                              total_steps=args.steps, state_dtype="float32"),
+        grad_accum=args.grad_accum,
+    )
+    params = model.init(jax.random.PRNGKey(args.seed))
+    opt = init_opt_state(tcfg, params)
+    start_step = 0
+    if args.ckpt_dir:
+        restored = checkpoint.restore_latest(args.ckpt_dir, {"params": params, "opt": opt})
+        if restored is not None:
+            tree, manifest = restored
+            params, opt = tree["params"], tree["opt"]
+            start_step = manifest["step"]
+            print(f"restored checkpoint at step {start_step}")
+
+    step_fn = jax.jit(make_train_step(model, tcfg))
+    stream = data.batches(cfg, args.batch, args.seq + 1, seed=args.seed)
+    n_params = sum(np.prod(p.shape) for p in jax.tree.leaves(params))
+    print(f"arch={cfg.name} params={n_params/1e6:.1f}M steps={args.steps}")
+
+    t0 = time.time()
+    tokens_done = 0
+    for step in range(start_step, args.steps):
+        batch = {k: jnp.asarray(v) for k, v in next(stream).items()}
+        params, opt, metrics = step_fn(params, opt, batch)
+        tokens_done += args.batch * args.seq
+        if (step + 1) % args.log_every == 0:
+            dt = time.time() - t0
+            print(f"step {step+1:5d}  loss {float(metrics['loss']):.4f}  "
+                  f"gnorm {float(metrics['grad_norm']):.3f}  "
+                  f"lr {float(metrics['lr']):.2e}  "
+                  f"tok/s {tokens_done/dt:,.0f}", flush=True)
+        if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
+            checkpoint.save_async(args.ckpt_dir, step + 1,
+                                  {"params": params, "opt": opt})
+    if args.ckpt_dir:
+        checkpoint.save(args.ckpt_dir, args.steps, {"params": params, "opt": opt})
+    print(f"done in {time.time()-t0:.1f}s; final loss "
+          f"{float(metrics['loss']):.4f}")
+
+
+if __name__ == "__main__":
+    main()

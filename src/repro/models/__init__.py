@@ -1,0 +1,4 @@
+from .model import Model
+from .transformer import stages, layer_kind
+
+__all__ = ["Model", "stages", "layer_kind"]

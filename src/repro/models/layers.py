@@ -1,0 +1,517 @@
+"""Neural building blocks (pure JAX, GSPMD-friendly).
+
+Conventions:
+  * activations: (B, S, D); attention heads materialized as (B, S, H, hd).
+  * GQA: H query heads grouped over KV heads via reshape (B, S, KV, G, hd).
+  * params are nested dicts; leaf names drive the sharding rules in
+    repro.distributed.sharding.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import MLAConfig, ModelConfig, MoEConfig
+from repro.distributed.annotate import constrain
+
+Params = Dict[str, jnp.ndarray]
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Norms / positional
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    # Variance via an f32-accumulating dot: never materializes an f32 copy of
+    # x (XLA hoists such converts out of backward loops, turning the saved
+    # bf16 carry stack into a second, f32 one — GBs/device at depth 60+).
+    var = jnp.einsum("...d,...d->...", x, x,
+                     preferred_element_type=jnp.float32) / x.shape[-1]
+    scale = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return x * scale[..., None] * w
+
+
+def rope_freqs(hd: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, H, hd), positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs   # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]                 # (..., S, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (jnp reference paths; the Pallas kernels mirror these — see
+# repro.kernels.ref which reuses the chunked formulation as its oracle)
+# ---------------------------------------------------------------------------
+
+def _gqa_scores(q: jnp.ndarray, k: jnp.ndarray) -> jnp.ndarray:
+    """q: (B, Sq, KV, G, hd), k: (B, Sk, KV, hd) -> (B, KV, G, Sq, Sk)."""
+    return jnp.einsum("bqkgd,bskd->bkgqs", q, k)
+
+
+def attention_full(
+    q: jnp.ndarray,              # (B, Sq, H, hd)
+    k: jnp.ndarray,              # (B, Sk, KV, hd)
+    v: jnp.ndarray,              # (B, Sk, KV, hd)
+    causal: bool = True,
+    window: int = 0,
+    q_offset: int = 0,
+) -> jnp.ndarray:
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    vd = v.shape[3]
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, hd)
+    scale = 1.0 / math.sqrt(hd)
+    scores = _gqa_scores(qg, k).astype(jnp.float32) * scale     # (B,KV,G,Sq,Sk)
+    qpos = jnp.arange(Sq) + q_offset
+    kpos = jnp.arange(k.shape[1])
+    mask = jnp.ones((Sq, k.shape[1]), dtype=bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v)
+    return out.reshape(B, Sq, H, vd)
+
+
+def attention_chunked(
+    q: jnp.ndarray,              # (B, Sq, H, hd)
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    q_chunk: int = 1024,
+    k_chunk: int = 1024,
+    causal: bool = True,
+    window: int = 0,
+) -> jnp.ndarray:
+    """Flash-style online-softmax attention with bounded memory: iterate KV
+    chunks with a running (max, sum, acc) per query chunk.  This is the
+    jnp reference of the Pallas flash kernel (same tiling scheme)."""
+    B, Sq, H, hd = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    vd = v.shape[3]
+    G = H // KV
+    assert Sq % q_chunk == 0 and Sk % k_chunk == 0, (Sq, q_chunk, Sk, k_chunk)
+    nq, nk = Sq // q_chunk, Sk // k_chunk
+    scale = 1.0 / math.sqrt(hd)
+
+    qg = q.reshape(B, nq, q_chunk, KV, G, hd)
+    kc = k.reshape(B, nk, k_chunk, KV, hd)
+    vc = v.reshape(B, nk, k_chunk, KV, vd)
+
+    def one_q_chunk(iq, q_blk):
+        # q_blk: (B, q_chunk, KV, G, hd)
+        m0 = jnp.full((B, KV, G, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, KV, G, q_chunk, vd), jnp.float32)
+
+        def kv_step(carry, ik):
+            m, l, acc = carry
+            kb = jax.lax.dynamic_index_in_dim(kc, ik, 1, keepdims=False)
+            vb = jax.lax.dynamic_index_in_dim(vc, ik, 1, keepdims=False)
+            s = jnp.einsum("bqkgd,bskd->bkgqs", q_blk, kb).astype(jnp.float32) * scale
+            qpos = iq * q_chunk + jnp.arange(q_chunk)
+            kpos = ik * k_chunk + jnp.arange(k_chunk)
+            mask = jnp.ones((q_chunk, k_chunk), bool)
+            if causal:
+                mask &= kpos[None, :] <= qpos[:, None]
+            if window:
+                mask &= kpos[None, :] > qpos[:, None] - window
+            s = jnp.where(mask, s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + p.sum(axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bkgqs,bskd->bkgqd", p.astype(vb.dtype), vb
+            ).astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        # checkpoint: flash semantics — score/prob tiles are recomputed in
+        # backward instead of being stacked across the KV sweep.
+        (m, l, acc), _ = jax.lax.scan(jax.checkpoint(kv_step), (m0, l0, a0),
+                                      jnp.arange(nk))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        # (B, KV, G, q_chunk, hd) -> (B, q_chunk, KV, G, hd)
+        return jnp.transpose(out, (0, 3, 1, 2, 4))
+
+    outs = jax.lax.map(lambda args: one_q_chunk(*args),
+                       (jnp.arange(nq), jnp.moveaxis(qg, 1, 0)))
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, Sq, KV, G, vd).astype(q.dtype)
+    return out.reshape(B, Sq, H, vd)
+
+
+def mla_attention_chunked(
+    q: jnp.ndarray,              # (B, S, H, dn+dr) — rope already applied
+    ckv: jnp.ndarray,            # (B, S, r) compressed latent
+    k_rope: jnp.ndarray,         # (B, S, dr) shared rope key
+    w_ukv: jnp.ndarray,          # (r, H*(dn+dv))
+    nope_dim: int,
+    v_dim: int,
+    q_chunk: int = 1024,
+    k_chunk: int = 1024,
+) -> jnp.ndarray:
+    """Flash-style MLA attention that decompresses K/V per KV-chunk inside
+    the online-softmax sweep.  Materializing the full decompressed (B, S, H,
+    dn+dv) tensors costs TBs at production shapes (68 TB for deepseek-v3
+    train_4k); per-chunk decompression keeps the live set to one tile."""
+    B, Sq, H, qh = q.shape
+    dn, dr, dv = nope_dim, qh - nope_dim, v_dim
+    r = ckv.shape[-1]
+    assert Sq % q_chunk == 0 and Sq % k_chunk == 0
+    nq, nk = Sq // q_chunk, Sq // k_chunk
+    scale = 1.0 / math.sqrt(qh)
+    w = w_ukv.reshape(r, H, dn + dv)
+
+    qg = q.reshape(B, nq, q_chunk, H, qh)
+    ckv_c = ckv.reshape(B, nk, k_chunk, r)
+    kr_c = k_rope.reshape(B, nk, k_chunk, dr)
+
+    from repro.distributed.annotate import rule
+
+    h_ax = "heads" if rule("attn_layout", "seq") == "heads" else None
+
+    def one_q_chunk(iq, q_blk):
+        q_blk = constrain(q_blk, "batch", None, h_ax, None)
+        m0 = constrain(jnp.full((B, H, q_chunk), NEG_INF, jnp.float32),
+                       "batch", h_ax, None)
+        l0 = constrain(jnp.zeros((B, H, q_chunk), jnp.float32),
+                       "batch", h_ax, None)
+        a0 = constrain(jnp.zeros((B, H, q_chunk, dv), jnp.float32),
+                       "batch", h_ax, None, None)
+
+        def kv_step(carry, ik):
+            m, l, acc = carry
+            cb = jax.lax.dynamic_index_in_dim(ckv_c, ik, 1, keepdims=False)
+            rb = jax.lax.dynamic_index_in_dim(kr_c, ik, 1, keepdims=False)
+            kv = jnp.einsum("bsr,rhd->bshd", cb, w)           # (B,kc,H,dn+dv)
+            k_n, v = kv[..., :dn], kv[..., dn:]
+            kb = jnp.concatenate(
+                [k_n, jnp.broadcast_to(rb[:, :, None, :], (B, k_chunk, H, dr))],
+                axis=-1)
+            s = jnp.einsum("bqhd,bshd->bhqs", q_blk, kb).astype(jnp.float32) * scale
+            qpos = iq * q_chunk + jnp.arange(q_chunk)
+            kpos = ik * k_chunk + jnp.arange(k_chunk)
+            mask = kpos[None, :] <= qpos[:, None]
+            s = jnp.where(mask, s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            pr = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + pr.sum(axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bhqs,bshd->bhqd", pr.astype(v.dtype), v).astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        # checkpoint: the per-chunk decompressed K/V (a batch-dim-free dot)
+        # would otherwise be saved for every (q-chunk, k-chunk) pair.
+        (m, l, acc), _ = jax.lax.scan(jax.checkpoint(kv_step), (m0, l0, a0),
+                                      jnp.arange(nk))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return jnp.transpose(out, (0, 2, 1, 3))               # (B,qc,H,dv)
+
+    outs = jax.lax.map(lambda args: one_q_chunk(*args),
+                       (jnp.arange(nq), jnp.moveaxis(qg, 1, 0)))
+    outs = constrain(outs, None, "batch", None, None, None)
+    return jnp.moveaxis(outs, 0, 1).reshape(B, Sq, H, dv).astype(q.dtype)
+
+
+def attention_decode(
+    q: jnp.ndarray,              # (B, H, hd) — one new token per sequence
+    k_cache: jnp.ndarray,        # (B, Smax, KV, hd)
+    v_cache: jnp.ndarray,        # (B, Smax, KV, hd)
+    length: jnp.ndarray,         # (B,) or scalar — valid cache entries
+) -> jnp.ndarray:
+    B, H, hd = q.shape
+    KV = k_cache.shape[2]
+    vd = v_cache.shape[3]
+    G = H // KV
+    scale = 1.0 / math.sqrt(hd)
+    qg = q.reshape(B, KV, G, hd)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache).astype(jnp.float32) * scale
+    valid = jnp.arange(k_cache.shape[1])[None, :] < jnp.reshape(length, (-1, 1))
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(v_cache.dtype)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, v_cache)
+    return out.reshape(B, H, vd)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def mlp_apply(x: jnp.ndarray, p: Params, mlp_type: str) -> jnp.ndarray:
+    if mlp_type == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+        return h @ p["w_down"]
+    if mlp_type == "squared_relu":
+        h = jnp.square(jax.nn.relu(x @ p["w_up"]))
+        return h @ p["w_down"]
+    if mlp_type == "gelu":
+        h = jax.nn.gelu(x @ p["w_up"], approximate=True)
+        return h @ p["w_down"]
+    raise ValueError(mlp_type)
+
+
+def mlp_init(key, cfg_d: int, d_ff: int, mlp_type: str, dtype) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    scale_in = 1.0 / math.sqrt(cfg_d)
+    scale_out = 1.0 / math.sqrt(d_ff)
+    p = {
+        "w_up": (jax.random.normal(k1, (cfg_d, d_ff)) * scale_in).astype(dtype),
+        "w_down": (jax.random.normal(k2, (d_ff, cfg_d)) * scale_out).astype(dtype),
+    }
+    if mlp_type == "swiglu":
+        p["w_gate"] = (jax.random.normal(k3, (cfg_d, d_ff)) * scale_in).astype(dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts — capacity-based gather/scatter dispatch (GShard-style
+# grouping, but with indexed scatter instead of the one-hot einsum so HLO
+# FLOPs stay honest).  Tokens are grouped by batch row; experts shard over the
+# "model" mesh axis, groups over "data".
+# ---------------------------------------------------------------------------
+
+def moe_capacity(tokens_per_group: int, moe: MoEConfig) -> int:
+    c = math.ceil(tokens_per_group * moe.top_k / moe.num_experts * moe.capacity_factor)
+    return max(int(c), 1)
+
+
+def moe_init(key, d: int, d_ff: int, moe: MoEConfig, mlp_type: str, dtype) -> Params:
+    keys = jax.random.split(key, 4)
+    E = moe.num_experts
+    scale_in = 1.0 / math.sqrt(d)
+    scale_out = 1.0 / math.sqrt(d_ff)
+    p: Params = {
+        "router": (jax.random.normal(keys[0], (d, E)) * scale_in).astype(jnp.float32),
+        "w_up_e": (jax.random.normal(keys[1], (E, d, d_ff)) * scale_in).astype(dtype),
+        "w_down_e": (jax.random.normal(keys[2], (E, d_ff, d)) * scale_out).astype(dtype),
+    }
+    if mlp_type == "swiglu":
+        p["w_gate_e"] = (jax.random.normal(keys[3], (E, d, d_ff)) * scale_in).astype(dtype)
+    if moe.num_shared_experts:
+        p["shared"] = mlp_init(
+            jax.random.fold_in(key, 7), d, d_ff * moe.num_shared_experts, mlp_type, dtype
+        )
+    return p
+
+
+def moe_apply(x: jnp.ndarray, p: Params, moe: MoEConfig, mlp_type: str) -> jnp.ndarray:
+    """x: (G, T, D) — G token groups dispatch independently (GShard grouping).
+
+    Returns (G, T, D).  Capacity overflow tokens are dropped (their combine
+    weight is zero), underflow slots compute on zeros — standard static-shape
+    TPU MoE.
+
+    Under a logical-sharding context (multi-device lowering) dispatch runs in
+    an explicit shard_map (`_moe_apply_shardmap`): GSPMD replicates the
+    backward scatters of sharded gathers, so index ops must stay local."""
+    from repro.distributed.annotate import current
+
+    ctx = current()
+    if ctx is not None:
+        mesh, rules = ctx
+        dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        dp_size = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+        model_size = mesh.shape.get("model", 1)
+        G, T, _ = x.shape
+        # decode-scale token counts: EP over EVERY axis with tokens
+        # replicated — all-gathering a few MB of tokens beats re-gathering
+        # GBs of expert weights across "data" each step.
+        if ("model" in mesh.axis_names and G * T <= 4096
+                and moe.num_experts % (dp_size * model_size) == 0):
+            return _moe_apply_shardmap(mesh, dp, x, p, moe, mlp_type, ep_all=True)
+        if ("model" in mesh.axis_names and G % max(dp_size, 1) == 0
+                and moe.num_experts % model_size == 0):
+            return _moe_apply_shardmap(mesh, dp, x, p, moe, mlp_type)
+    return _moe_apply_local(x, p, moe, mlp_type)
+
+
+def _moe_apply_local(x: jnp.ndarray, p: Params, moe: MoEConfig, mlp_type: str) -> jnp.ndarray:
+    G, T, D = x.shape
+    E, K = moe.num_experts, moe.top_k
+    C = moe_capacity(T, moe)
+    # EP dispatch shuffles tokens across the sequence — unshard seq here (the
+    # all-gather is inherent to expert parallelism), keep the batch sharding.
+    x = constrain(x, "batch", None, None)
+
+    router_logits = x.astype(jnp.float32) @ p["router"]          # (G, T, E)
+    probs = jax.nn.softmax(router_logits, axis=-1)
+    gate_w, gate_i = jax.lax.top_k(probs, K)                      # (G, T, K)
+    gate_w = gate_w / jnp.maximum(gate_w.sum(-1, keepdims=True), 1e-9)
+
+    # Position of each (token, choice) within its expert's capacity buffer,
+    # via a stable sort by expert id: pos = rank_in_sorted - group_offset.
+    # (One-hot-cumsum would materialize (G, T*K, E) — TBs at E=256 — and
+    # scatter-based dispatch makes GSPMD replicate (G, T*K, D)-sized index
+    # tensors; everything below is gathers, which partition cleanly.)
+    gidx = jnp.arange(G)[:, None]
+    eid_flat = gate_i.reshape(G, T * K)
+    order = jnp.argsort(eid_flat, axis=1, stable=True)            # (G, T*K)
+    ranks = jnp.argsort(order, axis=1, stable=True)               # inverse perm
+    counts = jnp.zeros((G, E), jnp.int32).at[gidx, eid_flat].add(1)
+    offsets = jnp.cumsum(counts, axis=1) - counts                 # (G, E)
+    pos = (ranks - offsets[gidx, eid_flat]).reshape(G, T, K)
+    keep = pos < C                                                # overflow -> drop
+    gate_w = gate_w * keep
+
+    # Gather-based dispatch: slot (e, c) reads sorted entry offsets[e] + c;
+    # its source token is order // K (order indexes (token, choice) pairs).
+    slot_src = offsets[:, :, None] + jnp.arange(C)[None, None, :]   # (G, E, C)
+    slot_valid = jnp.arange(C)[None, None, :] < counts[:, :, None]
+    slot_src = jnp.clip(slot_src, 0, T * K - 1).reshape(G, E * C)
+    tok_src = jnp.take_along_axis(order, slot_src, axis=1) // K     # (G, E*C)
+    buf = jnp.take_along_axis(x, tok_src[..., None], axis=1)        # (G, E*C, D)
+    buf = jnp.where(slot_valid.reshape(G, E * C, 1), buf, 0)
+    buf = constrain(buf, "batch", "experts", None)
+    buf = buf.reshape(G, E, C, D)
+
+    # Expert FFN (batched over G x E; experts shard over the model axis).
+    if mlp_type == "swiglu":
+        h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", buf, p["w_gate_e"])) * jnp.einsum(
+            "gecd,edf->gecf", buf, p["w_up_e"]
+        )
+    elif mlp_type == "squared_relu":
+        h = jnp.square(jax.nn.relu(jnp.einsum("gecd,edf->gecf", buf, p["w_up_e"])))
+    else:
+        h = jax.nn.gelu(jnp.einsum("gecd,edf->gecf", buf, p["w_up_e"]), approximate=True)
+    expert_out = jnp.einsum("gecf,efd->gecd", h, p["w_down_e"])    # (G, E, C, D)
+    # Un-shard the expert dim at a defined point (the EP "combine" exchange),
+    # so the per-token combine gather below is local.
+    out_flat = constrain(expert_out.reshape(G, E * C, D), "batch", None, None)
+
+    # Combine: token (t, k) reads slot eid*C + pos (clipped; dropped tokens
+    # carry zero gate weight).
+    comb_idx = eid_flat * C + jnp.clip(pos.reshape(G, T * K), 0, C - 1)
+    gathered = jnp.take_along_axis(out_flat, comb_idx[..., None], axis=1)
+    out = (gathered.reshape(G, T, K, D)
+           * gate_w.reshape(G, T, K, 1).astype(gathered.dtype)).sum(2)
+
+    if moe.num_shared_experts:
+        out = out + mlp_apply(x, p["shared"], mlp_type)
+    return out
+
+
+def _expert_ffn(buf: jnp.ndarray, p_up, p_gate, p_down, mlp_type: str) -> jnp.ndarray:
+    """buf: (G, E, C, D) -> (G, E, C, D), batched expert FFN."""
+    if mlp_type == "swiglu":
+        h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", buf, p_gate)) * jnp.einsum(
+            "gecd,edf->gecf", buf, p_up)
+    elif mlp_type == "squared_relu":
+        h = jnp.square(jax.nn.relu(jnp.einsum("gecd,edf->gecf", buf, p_up)))
+    else:
+        h = jax.nn.gelu(jnp.einsum("gecd,edf->gecf", buf, p_up), approximate=True)
+    return jnp.einsum("gecf,efd->gecd", h, p_down)
+
+
+def _moe_apply_shardmap(mesh, dp, x: jnp.ndarray, p: Params, moe: MoEConfig,
+                        mlp_type: str, ep_all: bool = False) -> jnp.ndarray:
+    """Expert-parallel MoE with device-local dispatch.
+
+    Layout per device (data-shard g, model-shard m): the full x rows of its
+    data shard (tokens replicated along "model"), and E/|model| experts.
+    Each device gathers ITS experts' tokens locally, runs the expert FFN, and
+    scatter-adds its contributions; one psum over "model" combines.  All
+    index ops are local, so nothing forces GSPMD's replicating scatter path.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    E, K = moe.num_experts, moe.top_k
+    G, T, D = x.shape
+    C = moe_capacity(T, moe)
+    model_size = mesh.shape["model"]
+    dp_size = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+    ep_axes = (*dp, "model") if ep_all else ("model",)
+    E_loc = E // (model_size * (dp_size if ep_all else 1))
+
+    def kernel(x_loc, router, w_up, w_gate, w_down):
+        Gl = x_loc.shape[0]
+        gidx = jnp.arange(Gl)[:, None]
+        logits = x_loc.astype(jnp.float32) @ router              # (Gl,T,E)
+        probs = jax.nn.softmax(logits, axis=-1)
+        gate_w, gate_i = jax.lax.top_k(probs, K)
+        gate_w = gate_w / jnp.maximum(gate_w.sum(-1, keepdims=True), 1e-9)
+        eid = gate_i.reshape(Gl, T * K)
+        order = jnp.argsort(eid, axis=1, stable=True)
+        ranks = jnp.argsort(order, axis=1, stable=True)
+        counts = jnp.zeros((Gl, E), jnp.int32).at[gidx, eid].add(1)
+        offsets = jnp.cumsum(counts, axis=1) - counts
+        pos = ranks - jnp.take_along_axis(offsets, eid, axis=1)
+        keep = pos < C
+        gw_flat = gate_w.reshape(Gl, T * K) * keep               # (Gl, TK)
+
+        e0 = jax.lax.axis_index(ep_axes) * E_loc if len(ep_axes) > 1 \
+            else jax.lax.axis_index("model") * E_loc
+        off_loc = jax.lax.dynamic_slice_in_dim(offsets, e0, E_loc, axis=1)
+        cnt_loc = jax.lax.dynamic_slice_in_dim(counts, e0, E_loc, axis=1)
+        slot_src = off_loc[:, :, None] + jnp.arange(C)[None, None, :]
+        slot_valid = jnp.arange(C)[None, None, :] < jnp.minimum(cnt_loc, C)[..., None]
+        flat = jnp.clip(slot_src, 0, T * K - 1).reshape(Gl, E_loc * C)
+        entry = jnp.take_along_axis(order, flat, axis=1)          # (Gl, El*C)
+        tok = entry // K
+        buf = jnp.take_along_axis(x_loc, tok[..., None], axis=1)  # (Gl, El*C, D)
+        buf = jnp.where(slot_valid.reshape(Gl, E_loc * C, 1), buf, 0)
+        outs = _expert_ffn(buf.reshape(Gl, E_loc, C, D), w_up, w_gate, w_down,
+                           mlp_type).reshape(Gl, E_loc * C, D)
+        w_slot = jnp.take_along_axis(gw_flat, entry, axis=1) \
+            * slot_valid.reshape(Gl, E_loc * C)
+        contrib = outs.astype(jnp.float32) * w_slot[..., None]
+        out = jnp.zeros((Gl, T, D), jnp.float32)
+        out = out.at[gidx, tok].add(contrib)
+        return jax.lax.psum(out, ep_axes).astype(x_loc.dtype)
+
+    w_gate = p.get("w_gate_e", p["w_up_e"])     # placeholder when not swiglu
+    x_spec = P(None, None, None) if ep_all else P(dp, None, None)
+    w_spec = P(ep_axes, None, None) if ep_all else P("model", None, None)
+    fn = jax.shard_map(
+        kernel, mesh=mesh,
+        in_specs=(x_spec, P(None, None), w_spec, w_spec, w_spec),
+        out_specs=x_spec,
+    )
+    out = fn(x, p["router"], p["w_up_e"], w_gate, p["w_down_e"])
+    if moe.num_shared_experts:
+        out = out + mlp_apply(x, p["shared"], mlp_type)
+    return out
+
+
+def moe_apply_dense_ref(x: jnp.ndarray, p: Params, moe: MoEConfig, mlp_type: str) -> jnp.ndarray:
+    """Oracle: run every expert densely and combine by gate weights (no
+    capacity drops).  Used by tests; must match moe_apply when nothing
+    overflows."""
+    G, T, D = x.shape
+    E, K = moe.num_experts, moe.top_k
+    router_logits = x.astype(jnp.float32) @ p["router"]
+    probs = jax.nn.softmax(router_logits, axis=-1)
+    gate_w, gate_i = jax.lax.top_k(probs, K)
+    gate_w = gate_w / jnp.maximum(gate_w.sum(-1, keepdims=True), 1e-9)
+    dense_w = jnp.zeros((G, T, E), jnp.float32)
+    gi = jnp.arange(G)[:, None, None]
+    ti = jnp.arange(T)[None, :, None]
+    dense_w = dense_w.at[gi, ti, gate_i].add(gate_w)
+    outs = []
+    for e in range(E):
+        pe = {k.replace("_e", ""): v[e] for k, v in p.items() if k.endswith("_e")}
+        outs.append(mlp_apply(x, pe, mlp_type))
+    stack = jnp.stack(outs, axis=2)                               # (G, T, E, D)
+    out = (stack * dense_w[..., None].astype(stack.dtype)).sum(2)
+    if moe.num_shared_experts:
+        out = out + mlp_apply(x, p["shared"], mlp_type)
+    return out

@@ -1,0 +1,254 @@
+"""Model facade: init / forward / prefill / decode over the stage stack.
+
+All methods are pure functions of (params, inputs) suitable for jax.jit /
+.lower(); the class only holds the static config.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed.annotate import constrain
+from .layers import rms_norm
+from .transformer import (
+    Cache,
+    Params,
+    Stage,
+    block_decode,
+    block_seq,
+    init_block,
+    init_layer_cache,
+    stages,
+)
+
+
+def _maybe_remat(fn, remat: str):
+    if remat == "full":
+        return jax.checkpoint(fn)
+    if remat == "dots":
+        # Save weight-matmul outputs only; attention scores / MoE expert
+        # GEMMs carry batch dims and are recomputed in backward (saving the
+        # (B,H,S,S) scores per scanned layer costs ~L x GBs per device).
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    return fn
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.stages = stages(cfg)
+
+    # -- parameters -----------------------------------------------------------
+    def init(self, key) -> Params:
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        k_embed, k_head, *k_stages = jax.random.split(key, 2 + len(self.stages))
+        params: Params = {
+            "embed": (jax.random.normal(k_embed, (cfg.vocab_size, cfg.d_model))
+                      * 0.02).astype(dt),
+            "final_norm": jnp.ones((cfg.d_model,), dt),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = (
+                jax.random.normal(k_head, (cfg.d_model, cfg.vocab_size))
+                / math.sqrt(cfg.d_model)).astype(dt)
+        stage_params = []
+        for st, ks in zip(self.stages, k_stages):
+            keys = jax.random.split(ks, st.count)
+            stage_params.append(jax.vmap(lambda k: init_block(cfg, st.kind, k))(keys))
+        params["stages"] = stage_params
+        return params
+
+    # -- embedding / head ------------------------------------------------------
+    def embed_inputs(self, params: Params, batch: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+        cfg = self.cfg
+        parts = []
+        if "patch_embeds" in batch:
+            parts.append(batch["patch_embeds"].astype(jnp.dtype(cfg.dtype)))
+        if "embeds" in batch:
+            parts.append(batch["embeds"].astype(jnp.dtype(cfg.dtype)))
+        if "tokens" in batch:
+            parts.append(jnp.take(params["embed"], batch["tokens"], axis=0))
+        x = jnp.concatenate(parts, axis=1) if len(parts) > 1 else parts[0]
+        return constrain(x, "batch", "seq", None)
+
+    def logits(self, params: Params, x: jnp.ndarray) -> jnp.ndarray:
+        x = rms_norm(x, params["final_norm"])
+        head = params["embed"].T if self.cfg.tie_embeddings else params["lm_head"]
+        out = x @ head
+        if out.ndim == 3:
+            # vocab-sharded (not seq-sharded) logits: the loss reduces over
+            # vocab with a psum and never materializes a replicated (B,S,V).
+            return constrain(out, "batch", None, "vocab")
+        return constrain(out, "batch", "vocab")
+
+    # -- sequence forward (train / prefill) ------------------------------------
+    def _run_stages_seq(self, params: Params, x: jnp.ndarray,
+                        cache: Optional[list]) -> Tuple[jnp.ndarray, Optional[list]]:
+        cfg = self.cfg
+        positions = jnp.arange(x.shape[1])[None, :]
+        new_caches = [] if cache is not None else None
+        for si, st in enumerate(self.stages):
+            sp = params["stages"][si]
+
+            if cache is None:
+                grp = cfg.layers_per_remat_block
+                if grp <= 1 or st.count % grp or not cfg.scan_layers:
+                    grp = 1
+
+                def body(h, lp, _kind=st.kind, _g=grp):
+                    for j in range(_g):
+                        lp_j = jax.tree.map(lambda a: a[j], lp) if _g > 1 else lp
+                        h, _ = block_seq(cfg, _kind, lp_j, h, positions, None)
+                        h = constrain(h, "batch", "seq", None)
+                    return h, None
+                body = _maybe_remat(body, cfg.remat)
+                if cfg.scan_layers and st.count > 1:
+                    sp_g = sp if grp == 1 else jax.tree.map(
+                        lambda a: a.reshape(st.count // grp, grp, *a.shape[1:]), sp)
+                    x, _ = jax.lax.scan(body, x, sp_g)
+                else:
+                    for l in range(st.count):
+                        lp = jax.tree.map(lambda a: a[l], sp)
+                        x, _ = body(x, lp)
+            else:
+                def body_c(h, args, _kind=st.kind):
+                    lp, lc = args
+                    h, nc = block_seq(cfg, _kind, lp, h, positions, lc)
+                    return h, nc
+                if cfg.scan_layers and st.count > 1:
+                    x, nc = jax.lax.scan(body_c, x, (sp, cache[si]))
+                else:
+                    ncs = []
+                    for l in range(st.count):
+                        lp = jax.tree.map(lambda a: a[l], sp)
+                        lc = jax.tree.map(lambda a: a[l], cache[si])
+                        x, nc_l = body_c(x, (lp, lc))
+                        ncs.append(nc_l)
+                    nc = jax.tree.map(lambda *a: jnp.stack(a), *ncs)
+                new_caches.append(nc)
+        return x, new_caches
+
+    def forward_train(self, params: Params, batch: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+        x = self.embed_inputs(params, batch)
+        x, _ = self._run_stages_seq(params, x, None)
+        return self.logits(params, x)
+
+    def loss(self, params: Params, batch: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+        cfg = self.cfg
+        x = self.embed_inputs(params, batch)
+        x, _ = self._run_stages_seq(params, x, None)
+        x = rms_norm(x, params["final_norm"])
+        head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+        labels = batch["labels"]
+        S_text = labels.shape[1]
+        x = x[:, -S_text:, :]
+        # Chunked cross-entropy: the (B, S, V) logits are never materialized
+        # — each S-chunk computes its own logits + softmax stats and is
+        # rematerialized in backward (Liger-style fused CE).  gold logit via
+        # one-hot contraction: reduces over the vocab-sharded dim with a
+        # psum; take_along_axis would gather on a sharded dim and replicate.
+        cs = max((d for d in range(1, 513) if S_text % d == 0), default=S_text)
+        nc = S_text // cs if S_text > cs else 1
+        if nc == 1:
+            cs = S_text
+
+        def chunk_loss(x_c, y_c):
+            logits = (x_c @ head).astype(jnp.float32)
+            logits = constrain(logits, "batch", None, "vocab")
+            logz = jax.nn.logsumexp(logits, axis=-1)
+            onehot = jax.nn.one_hot(y_c, logits.shape[-1], dtype=logits.dtype)
+            gold = jnp.einsum("bsv,bsv->bs", logits, onehot)
+            return jnp.sum(logz - gold)
+
+        if nc == 1:
+            total = chunk_loss(x, labels)
+        else:
+            xc = jnp.moveaxis(x.reshape(x.shape[0], nc, cs, -1), 1, 0)
+            yc = jnp.moveaxis(labels.reshape(labels.shape[0], nc, cs), 1, 0)
+
+            def body(acc, args):
+                return acc + jax.checkpoint(chunk_loss)(*args), None
+
+            total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (xc, yc))
+        return total / (labels.shape[0] * S_text)
+
+    # -- prefill ----------------------------------------------------------------
+    def init_cache(self, batch: int, max_seq: int) -> list:
+        cfg = self.cfg
+        caches = []
+        for st in self.stages:
+            one = init_layer_cache(cfg, st.kind, batch, max_seq)
+            caches.append(jax.tree.map(
+                lambda a: jnp.broadcast_to(a[None], (st.count, *a.shape)), one))
+        return caches
+
+    def prefill(self, params: Params, cache: list,
+                batch: Dict[str, jnp.ndarray]) -> Tuple[jnp.ndarray, list]:
+        """Run the prompt, write caches, return last-position logits."""
+        x = self.embed_inputs(params, batch)
+        x, new_cache = self._run_stages_seq(params, x, cache)
+        return self.logits(params, x[:, -1]), new_cache
+
+    # -- decode -------------------------------------------------------------------
+    def decode_step(self, params: Params, cache: list, token: jnp.ndarray,
+                    lengths: jnp.ndarray) -> Tuple[jnp.ndarray, list]:
+        """token: (B,) int32 ids; lengths: (B,) current context lengths."""
+        cfg = self.cfg
+        x = jnp.take(params["embed"], token, axis=0)
+        new_caches = []
+        for si, st in enumerate(self.stages):
+            sp = params["stages"][si]
+
+            def body(h, args, _kind=st.kind):
+                lp, lc = args
+                h, nc = block_decode(cfg, _kind, lp, h, lengths, lc)
+                return h, nc
+
+            if cfg.scan_layers and st.count > 1:
+                x, nc = jax.lax.scan(body, x, (sp, cache[si]))
+            else:
+                ncs = []
+                for l in range(st.count):
+                    lp = jax.tree.map(lambda a: a[l], sp)
+                    lc = jax.tree.map(lambda a: a[l], cache[si])
+                    x, nc_l = body(x, (lp, lc))
+                    ncs.append(nc_l)
+                nc = jax.tree.map(lambda *a: jnp.stack(a), *ncs)
+            new_caches.append(nc)
+        return self.logits(params, x), new_caches
+
+    # -- shape specs (dry-run stand-ins; no allocation) ---------------------------
+    def input_specs(self, shape: ShapeConfig) -> Dict[str, Any]:
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        dt = jnp.dtype(cfg.dtype)
+        i32 = jnp.int32
+        sds = jax.ShapeDtypeStruct
+        if shape.kind == "decode":
+            return {"token": sds((B,), i32), "lengths": sds((B,), i32)}
+        specs: Dict[str, Any] = {}
+        if cfg.family == "vlm":
+            P = cfg.num_prefix_embeds
+            specs["patch_embeds"] = sds((B, P, cfg.d_model), dt)
+            specs["tokens"] = sds((B, S - P), i32)
+            if shape.kind == "train":
+                specs["labels"] = sds((B, S - P), i32)
+        elif cfg.family == "audio":
+            specs["embeds"] = sds((B, S, cfg.d_model), dt)
+            if shape.kind == "train":
+                specs["labels"] = sds((B, S), i32)
+        else:
+            specs["tokens"] = sds((B, S), i32)
+            if shape.kind == "train":
+                specs["labels"] = sds((B, S), i32)
+        return specs
+
+    def cache_specs(self, batch: int, max_seq: int):
+        return jax.eval_shape(lambda: self.init_cache(batch, max_seq))

@@ -1,0 +1,323 @@
+"""Recurrent sequence mixers: mLSTM / sLSTM (xLSTM) and a Mamba-style
+selective SSM (hymba's parallel-SSM heads).
+
+Each mixer exposes:
+  * ``*_init(key, ...)``      — parameters
+  * ``*_parallel(params, x)`` — full-sequence form (train / prefill); returns
+    (y, final_state) so prefill can seed decode.
+  * ``*_step(params, state, x_t)`` — one decode step; returns (y_t, state).
+
+Numerics: gates are computed in float32; the mLSTM input gate is soft-capped
+to [-8, 8] so the un-stabilized log-space chunked form stays in f32 range
+(reproduction note in DESIGN.md).  Tests assert parallel == step-by-step.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, jnp.ndarray]
+
+GATE_CAP = 8.0
+
+
+def _norm_init(key, shape, scale, dtype):
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (matrix-memory LSTM) — chunked-parallel linear attention with
+# per-step scalar gates.  State per head: C (d, d), n (d,).
+# ---------------------------------------------------------------------------
+
+def mlstm_init(key, d_model: int, num_heads: int, head_dim: int, dtype) -> Params:
+    ks = jax.random.split(key, 6)
+    Hd = num_heads * head_dim
+    s = 1.0 / math.sqrt(d_model)
+    return {
+        "w_q": _norm_init(ks[0], (d_model, Hd), s, dtype),
+        "w_k": _norm_init(ks[1], (d_model, Hd), s, dtype),
+        "w_v": _norm_init(ks[2], (d_model, Hd), s, dtype),
+        "w_gates": _norm_init(ks[3], (d_model, 3 * num_heads), s, jnp.float32),
+        "b_gates": jnp.concatenate(
+            [jnp.zeros((num_heads,)), 3.0 * jnp.ones((num_heads,)), jnp.zeros((num_heads,))]
+        ).astype(jnp.float32),                      # forget bias -> long memory
+        "w_out": _norm_init(ks[4], (Hd, d_model), 1.0 / math.sqrt(Hd), dtype),
+    }
+
+
+def _mlstm_gates(p: Params, x: jnp.ndarray, H: int):
+    g = x.astype(jnp.float32) @ p["w_gates"] + p["b_gates"]
+    i_raw, f_raw, o_raw = jnp.split(g, 3, axis=-1)           # (..., H)
+    log_i = jnp.clip(i_raw, -GATE_CAP, GATE_CAP)             # exp input gate, capped
+    log_f = jax.nn.log_sigmoid(f_raw)                        # sigmoid forget gate
+    o = jax.nn.sigmoid(o_raw)
+    return log_i, log_f, o
+
+
+def mlstm_zero_state(batch: int, num_heads: int, head_dim: int) -> Params:
+    return {
+        "C": jnp.zeros((batch, num_heads, head_dim, head_dim), jnp.float32),
+        "n": jnp.zeros((batch, num_heads, head_dim), jnp.float32),
+    }
+
+
+def mlstm_parallel(
+    p: Params, x: jnp.ndarray, chunk: int = 64,
+    state: Params = None,
+) -> Tuple[jnp.ndarray, Params]:
+    """x: (B, S, D) -> (B, S, D), final state.  S must divide by ``chunk``."""
+    B, S, D = x.shape
+    H = p["w_gates"].shape[1] // 3
+    hd = p["w_q"].shape[1] // H
+    if S % chunk:
+        raise ValueError(f"seq {S} not divisible by chunk {chunk}")
+    W = chunk
+    nC = S // W
+    q = (x @ p["w_q"]).reshape(B, nC, W, H, hd).astype(jnp.float32)
+    k = (x @ p["w_k"]).reshape(B, nC, W, H, hd).astype(jnp.float32)
+    v = (x @ p["w_v"]).reshape(B, nC, W, H, hd).astype(jnp.float32)
+    log_i, log_f, o = _mlstm_gates(p, x, H)
+    log_i = log_i.reshape(B, nC, W, H)
+    log_f = log_f.reshape(B, nC, W, H)
+    scale = 1.0 / math.sqrt(hd)
+
+    if state is None:
+        state = mlstm_zero_state(B, H, hd)
+
+    def chunk_step(carry, inp):
+        C_prev, n_prev = carry                               # (B,H,d,d), (B,H,d)
+        qc, kc, vc, lic, lfc = inp                           # (B,W,H,*)
+        b = jnp.cumsum(lfc, axis=1)                          # (B,W,H) inclusive
+        # intra-chunk weights: w_ij = exp(b_i - b_j + log_i_j) (j <= i)
+        dec = b[:, :, None, :] - b[:, None, :, :] + lic[:, None, :, :]   # (B,i,j,H)
+        mask = jnp.tril(jnp.ones((W, W), bool))
+        wdec = jnp.where(mask[None, :, :, None], jnp.exp(dec), 0.0)
+        s = jnp.einsum("bihd,bjhd->bijh", qc, kc) * scale    # (B,i,j,H)
+        sw = s * wdec
+        num_intra = jnp.einsum("bijh,bjhd->bihd", sw, vc)
+        den_intra = jnp.einsum("bijh,bjhd->bihd", wdec, kc)  # sum w k
+        # inter-chunk: decay from chunk start
+        eb = jnp.exp(b)                                      # (B,W,H)
+        num_inter = jnp.einsum("bihd,bhde->bihe", qc * eb[..., None], C_prev) * scale
+        den_inter = eb[..., None] * n_prev[:, None]          # (B,W,H,d)
+        num = num_intra + num_inter
+        nvec = den_intra + den_inter
+        den = jnp.abs(jnp.einsum("bihd,bihd->bih", qc, nvec)) * scale
+        h = num / jnp.maximum(den, 1.0)[..., None]           # (B,W,H,d)
+        # state update to end of chunk
+        btot = b[:, -1]                                      # (B,H)
+        wj = jnp.exp(btot[:, None] - b + lic)                # (B,W,H)
+        C_new = jnp.exp(btot)[..., None, None] * C_prev + jnp.einsum(
+            "bjh,bjhd,bjhe->bhde", wj, kc, vc
+        )
+        n_new = jnp.exp(btot)[..., None] * n_prev + jnp.einsum("bjh,bjhd->bhd", wj, kc)
+        return (C_new, n_new), h
+
+    inputs = tuple(jnp.moveaxis(t, 1, 0) for t in (q, k, v, log_i, log_f))
+    # checkpoint: bound backward residuals to one chunk's (B,W,W,H) tile.
+    chunk_step = jax.checkpoint(chunk_step)
+    (C, n), hs = jax.lax.scan(chunk_step, (state["C"], state["n"]), inputs)
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, S, H, hd)          # (B,S,H,d)
+    h = h * o.reshape(B, S, H)[..., None]
+    y = h.reshape(B, S, H * hd).astype(x.dtype) @ p["w_out"]
+    return y, {"C": C, "n": n}
+
+
+def mlstm_step(p: Params, state: Params, x_t: jnp.ndarray) -> Tuple[jnp.ndarray, Params]:
+    """x_t: (B, D) one token."""
+    B, D = x_t.shape
+    H = p["w_gates"].shape[1] // 3
+    hd = p["w_q"].shape[1] // H
+    q = (x_t @ p["w_q"]).reshape(B, H, hd).astype(jnp.float32)
+    k = (x_t @ p["w_k"]).reshape(B, H, hd).astype(jnp.float32)
+    v = (x_t @ p["w_v"]).reshape(B, H, hd).astype(jnp.float32)
+    log_i, log_f, o = _mlstm_gates(p, x_t, H)                # (B,H)
+    f = jnp.exp(log_f)[..., None]
+    i = jnp.exp(log_i)[..., None]
+    C = f[..., None] * state["C"] + i[..., None] * (k[..., :, None] * v[..., None, :])
+    n = f * state["n"] + i * k
+    scale = 1.0 / math.sqrt(hd)
+    num = jnp.einsum("bhd,bhde->bhe", q, C) * scale
+    den = jnp.abs(jnp.einsum("bhd,bhd->bh", q, n)) * scale
+    h = num / jnp.maximum(den, 1.0)[..., None] * o[..., None]
+    y = h.reshape(B, H * hd).astype(x_t.dtype) @ p["w_out"]
+    return y, {"C": C, "n": n}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM — scalar memory, exponential gating, block-diagonal recurrence.
+# Strictly sequential (nonlinear recurrence); state per head-dim scalar.
+# ---------------------------------------------------------------------------
+
+def slstm_init(key, d_model: int, num_heads: int, dtype) -> Params:
+    ks = jax.random.split(key, 3)
+    hd = d_model // num_heads
+    s = 1.0 / math.sqrt(d_model)
+    return {
+        "w_in": _norm_init(ks[0], (d_model, 4 * d_model), s, jnp.float32),
+        "r_blk": _norm_init(ks[1], (num_heads, hd, 4 * hd), 1.0 / math.sqrt(hd), jnp.float32),
+        "b": jnp.concatenate([
+            jnp.zeros((d_model,)), jnp.zeros((d_model,)),
+            3.0 * jnp.ones((d_model,)), jnp.zeros((d_model,)),
+        ]).astype(jnp.float32),
+        "w_out": _norm_init(ks[2], (d_model, d_model), s, dtype),
+    }
+
+
+def slstm_zero_state(batch: int, d_model: int) -> Params:
+    z = jnp.zeros((batch, d_model), jnp.float32)
+    return {"c": z, "n": z, "h": z, "m": jnp.full((batch, d_model), -1e30, jnp.float32)}
+
+
+def _slstm_cell(p: Params, state: Params, x_t: jnp.ndarray, H: int):
+    B, D = x_t.shape
+    hd = D // H
+    hprev = state["h"].reshape(B, H, hd)
+    rec = jnp.einsum("bhd,hde->bhe", hprev, p["r_blk"]).reshape(B, 4 * D)
+    zifo = x_t.astype(jnp.float32) @ p["w_in"] + rec + p["b"]
+    z_r, i_r, f_r, o_r = jnp.split(zifo, 4, axis=-1)
+    z = jnp.tanh(z_r)
+    o = jax.nn.sigmoid(o_r)
+    log_f = jax.nn.log_sigmoid(f_r)
+    m_new = jnp.maximum(log_f + state["m"], i_r)             # stabilizer
+    i_s = jnp.exp(i_r - m_new)
+    f_s = jnp.exp(log_f + state["m"] - m_new)
+    c = f_s * state["c"] + i_s * z
+    n = f_s * state["n"] + i_s
+    h = o * c / jnp.maximum(n, 1e-6)
+    return {"c": c, "n": n, "h": h, "m": m_new}
+
+
+def slstm_parallel(p: Params, x: jnp.ndarray, state: Params = None) -> Tuple[jnp.ndarray, Params]:
+    B, S, D = x.shape
+    H = p["r_blk"].shape[0]
+    if state is None:
+        state = slstm_zero_state(B, D)
+
+    def step(carry, x_t):
+        new = _slstm_cell(p, carry, x_t, H)
+        return new, new["h"]
+
+    state, hs = jax.lax.scan(step, state, jnp.moveaxis(x, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1).astype(x.dtype) @ p["w_out"]
+    return y, state
+
+
+def slstm_step(p: Params, state: Params, x_t: jnp.ndarray) -> Tuple[jnp.ndarray, Params]:
+    H = p["r_blk"].shape[0]
+    new = _slstm_cell(p, state, x_t, H)
+    return new["h"].astype(x_t.dtype) @ p["w_out"], new
+
+
+# ---------------------------------------------------------------------------
+# Mamba-style selective SSM branch (hymba).  Diagonal state-space with input-
+# dependent (Delta, B, C); causal depthwise conv stem.
+# ---------------------------------------------------------------------------
+
+def ssm_init(key, d_model: int, d_inner: int, state_dim: int, conv_width: int, dtype) -> Params:
+    ks = jax.random.split(key, 7)
+    s = 1.0 / math.sqrt(d_model)
+    return {
+        "w_in": _norm_init(ks[0], (d_model, d_inner), s, dtype),
+        "conv": _norm_init(ks[1], (conv_width, d_inner), 0.5, jnp.float32),
+        "w_bc": _norm_init(ks[2], (d_inner, 2 * state_dim), 1.0 / math.sqrt(d_inner), jnp.float32),
+        "w_dt": _norm_init(ks[3], (d_inner, 1), 1.0 / math.sqrt(d_inner), jnp.float32),
+        "b_dt": jnp.full((d_inner,), -2.0, jnp.float32),     # softplus -> small dt
+        "log_a": jnp.log(jnp.linspace(1.0, float(state_dim), state_dim))[None, :].repeat(d_inner, 0),
+        "d_skip": jnp.ones((d_inner,), jnp.float32),
+        "w_out": _norm_init(ks[4], (d_inner, d_model), 1.0 / math.sqrt(d_inner), dtype),
+    }
+
+
+def ssm_zero_state(batch: int, d_inner: int, state_dim: int, conv_width: int) -> Params:
+    return {
+        "h": jnp.zeros((batch, d_inner, state_dim), jnp.float32),
+        "conv_buf": jnp.zeros((batch, conv_width - 1, d_inner), jnp.float32),
+    }
+
+
+def _ssm_core(p: Params, u: jnp.ndarray, h0: jnp.ndarray, chunk: int):
+    """u: (B, S, d_inner) post-conv activations; returns (y, h_final).
+
+    The (B, W, d_inner, N) decay/input tensors are built INSIDE the per-chunk
+    scan body so only one chunk's worth is ever live (materializing the full
+    (B, S, d_inner, N) would be TBs at production shapes)."""
+    B, S, Din = u.shape
+    N = p["log_a"].shape[1]
+    A = -jnp.exp(p["log_a"])                                 # (Din,N) negative
+    nCh = S // chunk
+    u_c = jnp.moveaxis(u.reshape(B, nCh, chunk, Din), 1, 0)  # (nCh,B,W,Din)
+
+    def chunk_step(h, uc):
+        dt = jax.nn.softplus(uc @ p["w_dt"] + p["b_dt"])     # (B,W,Din)
+        bc_ = uc @ p["w_bc"]                                 # (B,W,2N)
+        Bm, Cm = jnp.split(bc_, 2, axis=-1)                  # (B,W,N)
+        a = jnp.exp(dt[..., None] * A)                       # (B,W,Din,N)
+        b = (dt * uc)[..., None] * Bm[:, :, None, :]         # (B,W,Din,N)
+
+        def combine(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a1 * a2, a2 * b1 + b2
+
+        aa, bb = jax.lax.associative_scan(combine, (a, b), axis=1)
+        hs = aa * h[:, None] + bb                            # (B,W,Din,N)
+        y = jnp.einsum("bwdn,bwn->bwd", hs, Cm) + p["d_skip"] * uc
+        return hs[:, -1], y
+
+    # checkpoint: backward recomputes each chunk, so only one chunk's
+    # (B, W, d_inner, N) tensors are live at a time instead of all S/W.
+    chunk_step = jax.checkpoint(chunk_step)
+    h_final, ys = jax.lax.scan(chunk_step, h0, u_c)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, Din)
+    return y, h_final
+
+
+def _causal_conv(p: Params, x: jnp.ndarray, buf: jnp.ndarray):
+    """x: (B,S,Din) f32; buf: (B,W-1,Din) history.  Returns conv output and
+    the new history buffer."""
+    W = p["conv"].shape[0]
+    xp = jnp.concatenate([buf, x], axis=1)                   # (B, S+W-1, Din)
+    out = sum(xp[:, i : i + x.shape[1]] * p["conv"][i] for i in range(W))
+    new_buf = xp[:, -(W - 1):] if W > 1 else buf
+    return out, new_buf
+
+
+def ssm_parallel(p: Params, x: jnp.ndarray, state: Params = None, chunk: int = 256
+                 ) -> Tuple[jnp.ndarray, Params]:
+    B, S, D = x.shape
+    Din = p["w_in"].shape[1]
+    N = p["log_a"].shape[1]
+    Wc = p["conv"].shape[0]
+    if state is None:
+        state = ssm_zero_state(B, Din, N, Wc)
+    if S % chunk:
+        chunk = S                                            # small inputs: one chunk
+    u0 = (x @ p["w_in"]).astype(jnp.float32)
+    u_conv, conv_buf = _causal_conv(p, u0, state["conv_buf"])
+    u = jax.nn.silu(u_conv)
+    y, h = _ssm_core(p, u, state["h"], chunk)
+    out = (y.astype(x.dtype)) @ p["w_out"]
+    return out, {"h": h, "conv_buf": conv_buf}
+
+
+def ssm_step(p: Params, state: Params, x_t: jnp.ndarray) -> Tuple[jnp.ndarray, Params]:
+    B, D = x_t.shape
+    u0 = (x_t @ p["w_in"]).astype(jnp.float32)[:, None]      # (B,1,Din)
+    u_conv, conv_buf = _causal_conv(p, u0, state["conv_buf"])
+    u = jax.nn.silu(u_conv)[:, 0]                            # (B,Din)
+    N = p["log_a"].shape[1]
+    dt = jax.nn.softplus(u @ p["w_dt"] + p["b_dt"])
+    bc = u @ p["w_bc"]
+    Bm, Cm = jnp.split(bc, 2, axis=-1)
+    A = -jnp.exp(p["log_a"])
+    a = jnp.exp(dt[..., None] * A)
+    b = (dt * u)[..., None] * Bm[:, None, :]
+    h = a * state["h"] + b
+    y = jnp.einsum("bdn,bn->bd", h, Cm) + p["d_skip"] * u
+    out = y.astype(x_t.dtype) @ p["w_out"]
+    return out, {"h": h, "conv_buf": conv_buf}

@@ -1,0 +1,466 @@
+"""Composable decoder stack covering all ten assigned architectures.
+
+The stack is a sequence of *stages*: maximal runs of identically-structured
+layers.  Homogeneous stacks are one stage (scanned over stacked params);
+heterogeneous archs (deepseek first-k-dense, hymba global-attn layers, xlstm
+sLSTM blocks) become several stages, preserving layer order.  Stage kinds:
+
+  dense          attention (full/swa/mla) + dense FFN
+  moe            attention + mixture-of-experts FFN
+  mlstm          mLSTM mixer (no FFN)
+  slstm          sLSTM mixer (no FFN)
+  hybrid_swa     parallel attention(SWA) + SSM heads, then FFN
+  hybrid_global  parallel attention(full) + SSM heads, then FFN
+
+Every kind implements a sequence form (train / prefill, optionally writing a
+cache) and a decode form (one token, reading/updating the cache).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed.annotate import constrain
+from . import recurrent
+from .layers import (
+    apply_rope,
+    attention_chunked,
+    attention_decode,
+    attention_full,
+    mla_attention_chunked,
+    mlp_apply,
+    mlp_init,
+    moe_apply,
+    moe_init,
+    rms_norm,
+)
+
+Params = Dict[str, Any]
+Cache = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Stage structure
+# ---------------------------------------------------------------------------
+
+def layer_kind(cfg: ModelConfig, l: int) -> str:
+    if cfg.family == "ssm":
+        every = cfg.ssm.slstm_every or 0
+        return "slstm" if (every and l % every == 0) else "mlstm"
+    if cfg.family == "hybrid":
+        return "hybrid_global" if l in cfg.global_attn_layers else "hybrid_swa"
+    if cfg.is_moe_layer(l):
+        return "moe"
+    return "dense"
+
+
+@dataclasses.dataclass(frozen=True)
+class Stage:
+    kind: str
+    count: int
+    first_layer: int
+
+
+def stages(cfg: ModelConfig) -> List[Stage]:
+    out: List[Stage] = []
+    for l in range(cfg.num_layers):
+        k = layer_kind(cfg, l)
+        if out and out[-1].kind == k:
+            out[-1] = Stage(k, out[-1].count + 1, out[-1].first_layer)
+        else:
+            out.append(Stage(k, 1, l))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Block parameter init
+# ---------------------------------------------------------------------------
+
+def _dense_attn_init(cfg: ModelConfig, key) -> Params:
+    ks = jax.random.split(key, 6)
+    D, H, KV, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    s = 1.0 / math.sqrt(D)
+    dt = jnp.dtype(cfg.dtype)
+    p: Params = {
+        "ln1": jnp.ones((D,), dt),
+        "wq": (jax.random.normal(ks[0], (D, H * hd)) * s).astype(dt),
+        "wk": (jax.random.normal(ks[1], (D, KV * hd)) * s).astype(dt),
+        "wv": (jax.random.normal(ks[2], (D, KV * hd)) * s).astype(dt),
+        "wo": (jax.random.normal(ks[3], (H * hd, D)) / math.sqrt(H * hd)).astype(dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), dt)
+        p["bk"] = jnp.zeros((KV * hd,), dt)
+        p["bv"] = jnp.zeros((KV * hd,), dt)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dt)
+        p["k_norm"] = jnp.ones((hd,), dt)
+    return p
+
+
+def _mla_attn_init(cfg: ModelConfig, key) -> Params:
+    m = cfg.mla
+    ks = jax.random.split(key, 8)
+    D, H = cfg.d_model, cfg.num_heads
+    qh = m.nope_head_dim + m.rope_head_dim
+    dt = jnp.dtype(cfg.dtype)
+    s = 1.0 / math.sqrt(D)
+    return {
+        "ln1": jnp.ones((D,), dt),
+        "w_dq": (jax.random.normal(ks[0], (D, m.q_lora_rank)) * s).astype(dt),
+        "ln_q": jnp.ones((m.q_lora_rank,), dt),
+        "w_uq": (jax.random.normal(ks[1], (m.q_lora_rank, H * qh))
+                 / math.sqrt(m.q_lora_rank)).astype(dt),
+        "w_dkv": (jax.random.normal(ks[2], (D, m.kv_lora_rank)) * s).astype(dt),
+        "ln_kv": jnp.ones((m.kv_lora_rank,), dt),
+        "w_kr": (jax.random.normal(ks[3], (D, m.rope_head_dim)) * s).astype(dt),
+        "w_ukv": (jax.random.normal(
+            ks[4], (m.kv_lora_rank, H * (m.nope_head_dim + m.v_head_dim)))
+            / math.sqrt(m.kv_lora_rank)).astype(dt),
+        "wo": (jax.random.normal(ks[5], (H * m.v_head_dim, D))
+               / math.sqrt(H * m.v_head_dim)).astype(dt),
+    }
+
+
+def init_block(cfg: ModelConfig, kind: str, key) -> Params:
+    dt = jnp.dtype(cfg.dtype)
+    D = cfg.d_model
+    k_attn, k_ffn, k_extra = jax.random.split(key, 3)
+    if kind == "mlstm":
+        return {"ln1": jnp.ones((D,), dt),
+                "mlstm": recurrent.mlstm_init(k_attn, D, cfg.num_heads, cfg.hd, dt)}
+    if kind == "slstm":
+        return {"ln1": jnp.ones((D,), dt),
+                "slstm": recurrent.slstm_init(k_attn, D, cfg.num_heads, dt)}
+    p = (_mla_attn_init(cfg, k_attn) if cfg.attn_type == "mla"
+         else _dense_attn_init(cfg, k_attn))
+    p["ln2"] = jnp.ones((D,), dt)
+    if kind == "moe":
+        p["moe"] = moe_init(k_ffn, D, cfg.d_ff, cfg.moe, cfg.mlp_type, dt)
+    elif cfg.d_ff > 0:
+        p["mlp"] = mlp_init(k_ffn, D, cfg.d_ff, cfg.mlp_type, dt)
+    if kind.startswith("hybrid"):
+        d_inner = cfg.ssm.expand * D
+        p["ssm"] = recurrent.ssm_init(
+            k_extra, D, d_inner, cfg.ssm.state_dim, cfg.ssm.conv_width, dt)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Caches
+# ---------------------------------------------------------------------------
+
+def init_layer_cache(cfg: ModelConfig, kind: str, batch: int, max_seq: int) -> Cache:
+    dt = jnp.dtype(cfg.dtype)
+    KV, hd = cfg.num_kv_heads, cfg.hd
+    if kind == "mlstm":
+        return recurrent.mlstm_zero_state(batch, cfg.num_heads, cfg.hd)
+    if kind == "slstm":
+        return recurrent.slstm_zero_state(batch, cfg.d_model)
+    cache: Cache = {}
+    if cfg.attn_type == "mla":
+        m = cfg.mla
+        cache["latent"] = jnp.zeros(
+            (batch, max_seq, m.kv_lora_rank + m.rope_head_dim), dt)
+    elif kind == "hybrid_swa" or (cfg.attn_type == "swa" and kind == "dense"):
+        W = min(cfg.window, max_seq)
+        cache["k"] = jnp.zeros((batch, W, KV, hd), dt)
+        cache["v"] = jnp.zeros((batch, W, KV, hd), dt)
+    else:
+        cache["k"] = jnp.zeros((batch, max_seq, KV, hd), dt)
+        cache["v"] = jnp.zeros((batch, max_seq, KV, hd), dt)
+    if kind.startswith("hybrid"):
+        d_inner = cfg.ssm.expand * cfg.d_model
+        cache["ssm"] = recurrent.ssm_zero_state(
+            batch, d_inner, cfg.ssm.state_dim, cfg.ssm.conv_width)
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# Sequence (train / prefill) block application
+# ---------------------------------------------------------------------------
+
+def _attention_seq(cfg: ModelConfig, q, k, v, window: int):
+    S = q.shape[1]
+    chunked = S >= cfg.attn_chunk_threshold
+    # SWA: the (S, S) score matrix is ~all masked; chunked tiles bound memory.
+    if window and S >= 2 * window:
+        chunked = True
+    if chunked and S % cfg.attn_q_chunk == 0 and S % cfg.attn_k_chunk == 0:
+        return attention_chunked(
+            q, k, v, q_chunk=cfg.attn_q_chunk, k_chunk=cfg.attn_k_chunk,
+            causal=True, window=window)
+    return attention_full(q, k, v, causal=True, window=window)
+
+
+def _swa_prefill_cache(cache_k, k, W: int):
+    """Write the last min(S, W) keys into the ring buffer."""
+    S = k.shape[1]
+    take = min(S, W)
+    tail = k[:, S - take:]
+    idx = (jnp.arange(take) + (S - take)) % W
+    return cache_k.at[:, idx].set(tail)
+
+
+def dense_block_seq(cfg: ModelConfig, kind: str, p: Params, x, positions,
+                    cache: Optional[Cache], window: int) -> Tuple[jnp.ndarray, Optional[Cache]]:
+    B, S, D = x.shape
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    xn = rms_norm(x, p["ln1"])
+    q = xn @ p["wq"]
+    k = xn @ p["wk"]
+    v = xn @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    from repro.distributed.annotate import axis_fits, rule
+
+    if rule("attn_layout", "seq") == "heads" and axis_fits("heads", H):
+        # head-parallel attention: q sharded over heads, small K/V gathered
+        # ONCE per layer — keeps the flash KV sweep collective-free (the
+        # seq-sharded layout reshards every tile; see EXPERIMENTS.md §Perf).
+        q = constrain(q.reshape(B, S, H, hd), "batch", None, "heads", None)
+        k = constrain(k.reshape(B, S, KV, hd), "batch", None, None, None)
+        v = constrain(v.reshape(B, S, KV, hd), "batch", None, None, None)
+    else:
+        # seq-sharded layout: head counts (28, 25, 4 KV...) rarely divide the
+        # model axis; sharding the (pointwise) projections over seq avoids
+        # GSPMD replicating on the (B,S,KV*hd)->(B,S,KV,hd) reshape.
+        q = constrain(q.reshape(B, S, H, hd), "batch", "seq", None, None)
+        k = constrain(k.reshape(B, S, KV, hd), "batch", "seq", None, None)
+        v = constrain(v.reshape(B, S, KV, hd), "batch", "seq", None, None)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    new_cache = None
+    if cache is not None:
+        new_cache = dict(cache)
+        if "ssm" in cache:
+            new_cache["ssm"] = cache["ssm"]
+        if cache["k"].shape[1] < S or (window and cache["k"].shape[1] == window):
+            W = cache["k"].shape[1]
+            new_cache["k"] = _swa_prefill_cache(cache["k"], k, W)
+            new_cache["v"] = _swa_prefill_cache(cache["v"], v, W)
+        else:
+            new_cache["k"] = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, 0, 1)
+            new_cache["v"] = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, 0, 1)
+    attn = _attention_seq(cfg, q, k, v, window)
+    out = attn.reshape(B, S, H * hd) @ p["wo"]
+    # Megatron-SP: the row-parallel psum becomes a reduce-scatter over seq,
+    # and every per-layer saved activation is S/model-size per device.
+    return constrain(out, "batch", "seq", None), new_cache
+
+
+def mla_block_seq(cfg: ModelConfig, p: Params, x, positions,
+                  cache: Optional[Cache]) -> Tuple[jnp.ndarray, Optional[Cache]]:
+    m = cfg.mla
+    B, S, D = x.shape
+    H = cfg.num_heads
+    dn, dr, dv = m.nope_head_dim, m.rope_head_dim, m.v_head_dim
+    xn = rms_norm(x, p["ln1"])
+    cq = rms_norm(xn @ p["w_dq"], p["ln_q"])
+    q = (cq @ p["w_uq"]).reshape(B, S, H, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    ckv = rms_norm(xn @ p["w_dkv"], p["ln_kv"])               # (B,S,r)
+    k_rope = apply_rope((xn @ p["w_kr"]).reshape(B, S, 1, dr), positions, cfg.rope_theta)
+    new_cache = None
+    if cache is not None:
+        latent = jnp.concatenate([ckv, k_rope[:, :, 0]], axis=-1)
+        new_cache = dict(cache)
+        new_cache["latent"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["latent"], latent, 0, 1)
+    from repro.distributed.annotate import axis_fits, rule
+
+    if rule("attn_layout", "seq") == "heads" and axis_fits("heads", H):
+        q_full = constrain(jnp.concatenate([q_nope, q_rope], axis=-1),
+                           "batch", None, "heads", None)
+        ckv = constrain(ckv, "batch", None, None)
+    else:
+        q_full = constrain(jnp.concatenate([q_nope, q_rope], axis=-1),
+                           "batch", "seq", None, None)
+        ckv = constrain(ckv, "batch", "seq", None)
+    qc = cfg.attn_q_chunk
+    if S >= 2 * qc and S % qc == 0:
+        # per-chunk decompression: never materialize full K/V for all heads
+        attn = mla_attention_chunked(
+            q_full, ckv, k_rope[:, :, 0], p["w_ukv"], dn, dv,
+            q_chunk=qc, k_chunk=cfg.attn_k_chunk)
+    else:
+        kv = (ckv @ p["w_ukv"]).reshape(B, S, H, dn + dv)
+        k_nope, v = kv[..., :dn], kv[..., dn:]
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope, (B, S, H, dr))], axis=-1)
+        attn = _attention_seq(cfg, q_full, k, v, window=0)
+    out = attn.reshape(B, S, H * dv) @ p["wo"]
+    return constrain(out, "batch", "seq", None), new_cache
+
+
+def block_seq(cfg: ModelConfig, kind: str, p: Params, x, positions,
+              cache: Optional[Cache]) -> Tuple[jnp.ndarray, Optional[Cache]]:
+    if kind == "mlstm":
+        state = None if cache is None else cache
+        chunk = 64 if x.shape[1] % 64 == 0 else x.shape[1]
+        y, new_state = recurrent.mlstm_parallel(p["mlstm"], rms_norm(x, p["ln1"]),
+                                                chunk=chunk, state=state)
+        return x + y, new_state
+    if kind == "slstm":
+        y, new_state = recurrent.slstm_parallel(p["slstm"], rms_norm(x, p["ln1"]),
+                                                state=cache)
+        return x + y, new_state
+
+    window = 0
+    if cfg.attn_type == "swa" and kind != "hybrid_global":
+        window = cfg.window
+    if cfg.attn_type == "mla":
+        attn_out, new_cache = mla_block_seq(cfg, p, x, positions, cache)
+    else:
+        attn_out, new_cache = dense_block_seq(cfg, kind, p, x, positions, cache, window)
+    if kind.startswith("hybrid"):
+        ssm_state = None if cache is None else cache["ssm"]
+        ssm_out, new_ssm = recurrent.ssm_parallel(p["ssm"], rms_norm(x, p["ln1"]),
+                                                  state=ssm_state)
+        attn_out = 0.5 * (attn_out + ssm_out)
+        if new_cache is not None:
+            new_cache["ssm"] = new_ssm
+    x = x + attn_out
+    if "moe" in p:
+        h = rms_norm(x, p["ln2"])
+        delta = moe_apply(h, p["moe"], cfg.moe, cfg.mlp_type)
+        x = x + constrain(delta, "batch", "seq", None)
+    elif "mlp" in p:
+        delta = mlp_apply(rms_norm(x, p["ln2"]), p["mlp"], cfg.mlp_type)
+        x = x + constrain(delta, "batch", "seq", None)
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Decode block application (one token, cache read/update)
+# ---------------------------------------------------------------------------
+
+def dense_block_decode(cfg: ModelConfig, kind: str, p: Params, x_t, lengths,
+                       cache: Cache, window: int) -> Tuple[jnp.ndarray, Cache]:
+    B, D = x_t.shape
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    xn = rms_norm(x_t, p["ln1"])
+    q = xn @ p["wq"]
+    k = xn @ p["wk"]
+    v = xn @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, H, hd)
+    k = k.reshape(B, KV, hd)
+    v = v.reshape(B, KV, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    pos = jnp.reshape(lengths, (B, 1))
+    q = apply_rope(q[:, None], pos, cfg.rope_theta)[:, 0]
+    k = apply_rope(k[:, None], pos, cfg.rope_theta)[:, 0]
+    new_cache = dict(cache)
+    bidx = jnp.arange(B)
+    Smax = cache["k"].shape[1]
+    if window and Smax == min(window, Smax):
+        slot = jnp.reshape(lengths, (B,)) % Smax
+        new_cache["k"] = cache["k"].at[bidx, slot].set(k)
+        new_cache["v"] = cache["v"].at[bidx, slot].set(v)
+        # absolute position held by each ring slot after the write
+        s = jnp.arange(Smax)[None, :]
+        cur = jnp.reshape(lengths, (B, 1))
+        slot_pos = cur - ((cur - s) % Smax)
+        valid = (slot_pos >= 0) & (slot_pos > cur - Smax) & (slot_pos <= cur)
+        out = _masked_decode(q, new_cache["k"], new_cache["v"], valid)
+    else:
+        slot = jnp.reshape(lengths, (B,))
+        new_cache["k"] = cache["k"].at[bidx, slot].set(k)
+        new_cache["v"] = cache["v"].at[bidx, slot].set(v)
+        out = attention_decode(q, new_cache["k"], new_cache["v"],
+                               jnp.reshape(lengths, (B,)) + 1)
+    return out.reshape(B, H * hd) @ p["wo"], new_cache
+
+
+def _masked_decode(q, k_cache, v_cache, valid):
+    """attention_decode with an explicit (B, S) validity mask."""
+    from .layers import NEG_INF
+
+    B, H, hd = q.shape
+    KV = k_cache.shape[2]
+    G = H // KV
+    scale = 1.0 / math.sqrt(hd)
+    qg = q.reshape(B, KV, G, hd)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache).astype(jnp.float32) * scale
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    pr = jax.nn.softmax(s, axis=-1).astype(v_cache.dtype)
+    out = jnp.einsum("bkgs,bskd->bkgd", pr, v_cache)
+    return out.reshape(B, H, hd)
+
+
+def mla_block_decode(cfg: ModelConfig, p: Params, x_t, lengths,
+                     cache: Cache) -> Tuple[jnp.ndarray, Cache]:
+    """Absorbed-matmul MLA decode: scores against the latent cache directly."""
+    m = cfg.mla
+    B, D = x_t.shape
+    H = cfg.num_heads
+    dn, dr, dv = m.nope_head_dim, m.rope_head_dim, m.v_head_dim
+    r = m.kv_lora_rank
+    xn = rms_norm(x_t, p["ln1"])
+    cq = rms_norm(xn @ p["w_dq"], p["ln_q"])
+    q = (cq @ p["w_uq"]).reshape(B, H, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    pos = jnp.reshape(lengths, (B, 1))
+    q_rope = apply_rope(q_rope[:, None], pos, cfg.rope_theta)[:, 0]
+    ckv = rms_norm(xn @ p["w_dkv"], p["ln_kv"])               # (B,r)
+    k_rope = apply_rope((xn @ p["w_kr"]).reshape(B, 1, 1, dr), pos, cfg.rope_theta)[:, 0, 0]
+    latent_t = jnp.concatenate([ckv, k_rope], axis=-1)        # (B, r+dr)
+    bidx = jnp.arange(B)
+    new_cache = dict(cache)
+    new_cache["latent"] = cache["latent"].at[bidx, jnp.reshape(lengths, (B,))].set(latent_t)
+    lat = new_cache["latent"]                                 # (B,S,r+dr)
+    w_ukv = p["w_ukv"].reshape(r, H, dn + dv)
+    w_uk, w_uv = w_ukv[..., :dn], w_ukv[..., dn:]
+    q_eff = jnp.einsum("bhd,rhd->bhr", q_nope, w_uk)          # (B,H,r)
+    scale = 1.0 / math.sqrt(dn + dr)
+    scores = (jnp.einsum("bhr,bsr->bhs", q_eff, lat[..., :r])
+              + jnp.einsum("bhd,bsd->bhs", q_rope, lat[..., r:])).astype(jnp.float32) * scale
+    valid = jnp.arange(lat.shape[1])[None, :] < (jnp.reshape(lengths, (B, 1)) + 1)
+    from .layers import NEG_INF
+    scores = jnp.where(valid[:, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(lat.dtype)
+    ctx = jnp.einsum("bhs,bsr->bhr", probs, lat[..., :r])
+    out = jnp.einsum("bhr,rhv->bhv", ctx, w_uv)
+    return out.reshape(B, H * dv) @ p["wo"], new_cache
+
+
+def block_decode(cfg: ModelConfig, kind: str, p: Params, x_t, lengths,
+                 cache: Cache) -> Tuple[jnp.ndarray, Cache]:
+    if kind == "mlstm":
+        y, state = recurrent.mlstm_step(p["mlstm"], cache, rms_norm(x_t, p["ln1"]))
+        return x_t + y, state
+    if kind == "slstm":
+        y, state = recurrent.slstm_step(p["slstm"], cache, rms_norm(x_t, p["ln1"]))
+        return x_t + y, state
+    window = 0
+    if cfg.attn_type == "swa" and kind != "hybrid_global":
+        window = cfg.window
+    if cfg.attn_type == "mla":
+        attn_out, new_cache = mla_block_decode(cfg, p, x_t, lengths, cache)
+    else:
+        attn_out, new_cache = dense_block_decode(cfg, kind, p, x_t, lengths, cache, window)
+    if kind.startswith("hybrid"):
+        ssm_out, new_ssm = recurrent.ssm_step(p["ssm"], cache["ssm"], rms_norm(x_t, p["ln1"]))
+        attn_out = 0.5 * (attn_out + ssm_out)
+        new_cache["ssm"] = new_ssm
+    x_t = x_t + attn_out
+    if "moe" in p:
+        h = rms_norm(x_t, p["ln2"])[:, None]                   # (B,1,D): groups=B,T=1
+        x_t = x_t + moe_apply(h, p["moe"], cfg.moe, cfg.mlp_type)[:, 0]
+    elif "mlp" in p:
+        x_t = x_t + mlp_apply(rms_norm(x_t, p["ln2"]), p["mlp"], cfg.mlp_type)
+    return x_t, new_cache

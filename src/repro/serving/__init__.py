@@ -1,0 +1,9 @@
+from .engine import ChainEngine
+from .kv_cache import SlotCache, service_spec_for, tau_estimates
+from .orchestrator import Orchestrator, OrchestratorConfig
+from .request import Request, State
+
+__all__ = [
+    "ChainEngine", "SlotCache", "service_spec_for", "tau_estimates",
+    "Orchestrator", "OrchestratorConfig", "Request", "State",
+]

@@ -1,0 +1,143 @@
+"""Chain engine: the data plane of one composed server chain.
+
+On a TPU deployment each engine's stage programs run on the chain's TP
+groups with activation handoff between hops; here (CPU container, 1 device)
+the whole model executes in-process while the chain structure — capacity,
+per-hop block counts, service-time accounting — is preserved, so the
+control-plane behaviour (the paper's contribution) is exercised end to end.
+
+Prefill lengths are bucketed to powers of two (bounded jit cache); decode
+runs one batched step over all capacity slots, masking idle ones.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.chains import Chain
+from repro.models import Model
+from .kv_cache import SlotCache
+from .request import Request, State
+
+
+def _bucket(n: int) -> int:
+    return max(16, 1 << (n - 1).bit_length())
+
+
+class ChainEngine:
+    def __init__(self, model: Model, params, chain: Chain, capacity: int,
+                 max_seq: int):
+        self.model = model
+        self.params = params
+        self.chain = chain
+        self.capacity = capacity
+        self.max_seq = max_seq
+        self.slots = SlotCache(model, capacity, max_seq)
+        self.requests: Dict[int, Request] = {}      # slot -> request
+        self._prefill_jit = jax.jit(model.prefill)
+        self._decode_jit = jax.jit(model.decode_step)
+
+    # -- admission --------------------------------------------------------------
+    @property
+    def has_free_slot(self) -> bool:
+        return bool(self.slots.free)
+
+    @property
+    def num_active(self) -> int:
+        return self.capacity - len(self.slots.free)
+
+    def admit(self, req: Request, now: float = 0.0) -> bool:
+        slot = self.slots.acquire()
+        if slot is None:
+            return False
+        tokens = req.context_tokens
+        true_len = len(tokens)
+        # Right-pad to a power-of-two bucket (bounded jit cache); positions
+        # beyond true_len hold garbage keys but decode masks by length, and
+        # each future decode overwrites its slot before attending.
+        pad_to = min(_bucket(true_len), self.max_seq)
+        padded = np.zeros((1, pad_to), np.int32)
+        padded[0, :true_len] = tokens
+        cache_one = self.model.init_cache(1, self.max_seq)
+        logits, cache_one = self._prefill_jit(self.params, cache_one,
+                                              {"tokens": jnp.asarray(padded)})
+        self.slots.write_prefill(slot, cache_one, true_len)
+        req.slot = slot
+        req.state = State.RUNNING
+        if req.start_time is None:
+            req.start_time = now
+        self.requests[slot] = req
+        if true_len == pad_to:
+            next_tok = int(jnp.argmax(logits[0]))
+        else:
+            # Prefill's last-position logits sit at a padded position; re-feed
+            # the true last token at its own position (identical k/v rewritten)
+            # to get the correct boundary distribution.
+            last = jnp.asarray([int(tokens[-1])], jnp.int32)
+            lengths = jnp.asarray([true_len - 1], jnp.int32)
+            d_logits, _ = self._decode_single(slot, last, lengths)
+            next_tok = int(jnp.argmax(d_logits[0]))
+        req.output.append(next_tok)
+        if req.done:                                  # e.g. max_new_tokens == 1
+            req.state = State.DONE
+            req.finish_time = now
+            del self.requests[slot]
+            self.slots.release(slot)
+        return True
+
+    def _decode_single(self, slot, token, length):
+        """Decode one slot in isolation (used to fix up bucketed prefill)."""
+        one = jax.tree.map(lambda a: a[:, slot][:, None], self.slots.cache)
+        logits, new_one = self._decode_jit(self.params, one, token, length)
+        self.slots.cache = jax.tree.map(
+            lambda full, o: full.at[:, slot].set(o[:, 0]), self.slots.cache, new_one)
+        return logits, new_one
+
+    # -- decode ----------------------------------------------------------------
+    def step(self, now: float = 0.0) -> List[Request]:
+        """One batched decode step; returns requests that completed."""
+        if not self.requests:
+            return []
+        tokens = np.zeros((self.capacity,), np.int32)
+        lengths = np.zeros((self.capacity,), np.int32)
+        for slot, req in self.requests.items():
+            tokens[slot] = req.output[-1]
+            # slots.lengths[slot] == number of positions already in the cache;
+            # this step writes the pending token there and advances it.
+            lengths[slot] = self.slots.lengths[slot]
+        logits, self.slots.cache = self._decode_jit(
+            self.params, self.slots.cache,
+            jnp.asarray(tokens), jnp.asarray(lengths))
+        for slot in self.requests:
+            self.slots.lengths[slot] += 1
+        next_tokens = np.asarray(jnp.argmax(logits, axis=-1))
+        finished = []
+        for slot, req in list(self.requests.items()):
+            req.output.append(int(next_tokens[slot]))
+            if req.done:
+                req.state = State.DONE
+                req.finish_time = now
+                finished.append(req)
+                del self.requests[slot]
+                self.slots.release(slot)
+        return finished
+
+    # -- failover ----------------------------------------------------------------
+    def evict_all(self) -> List[Request]:
+        """Return all in-flight requests (for re-queue) and clear state."""
+        out = []
+        for slot, req in list(self.requests.items()):
+            req.state = State.QUEUED
+            req.slot = None
+            req.chain_idx = None
+            req.retries += 1
+            out.append(req)
+            self.slots.release(slot)
+        self.requests.clear()
+        return out

@@ -1,0 +1,116 @@
+"""Bridge between model configs and the paper's (s_m, s_c) service spec, plus
+the slotted batched KV cache used by chain engines.
+
+The paper's memory model:  server memory = s_m * (#blocks) + s_c * (cache
+slots in use).  For a transformer served at max sequence length S_max with
+TP degree t:  s_m = per-layer weight bytes / t;  s_c = per-layer KV bytes per
+token * S_max / t (static allocation, Section 2.1.2).  For recurrent layers
+(xLSTM / SSM) the "KV" is the recurrent state: size independent of S_max —
+the chain-composition algorithms are unchanged (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.servers import Server, ServiceSpec
+from repro.models import Model
+from repro.models.transformer import stages
+
+
+GIB = 1024.0 ** 3
+
+
+def recurrent_state_bytes(cfg: ModelConfig, bytes_per_el: int = 4) -> float:
+    """Per-request per-layer recurrent-state bytes (mLSTM/sLSTM/SSM)."""
+    if cfg.family == "ssm":
+        H, hd = cfg.num_heads, cfg.hd
+        mlstm = (H * hd * hd + H * hd) * bytes_per_el
+        slstm = 4 * cfg.d_model * bytes_per_el
+        return max(mlstm, slstm)
+    if cfg.family == "hybrid":
+        d_inner = cfg.ssm.expand * cfg.d_model
+        return d_inner * cfg.ssm.state_dim * bytes_per_el
+    return 0.0
+
+
+def service_spec_for(
+    cfg: ModelConfig, max_seq: int, tp_degree: int = 1, bytes_per_el: int = 2,
+) -> ServiceSpec:
+    """The paper's (L, s_m, s_c) for serving ``cfg`` at ``max_seq``."""
+    s_m = cfg.block_bytes(bytes_per_el) / tp_degree / GIB
+    kv = cfg.kv_bytes_per_token_per_layer(bytes_per_el) * max_seq
+    if cfg.family == "hybrid":
+        # SWA layers cache only the window; global layers the full context.
+        n_glob = len(cfg.global_attn_layers)
+        frac = (n_glob + (cfg.num_layers - n_glob)
+                * min(cfg.window, max_seq) / max_seq) / cfg.num_layers
+        kv = kv * frac
+    if cfg.family == "ssm":
+        kv = 0.0
+    kv += recurrent_state_bytes(cfg)
+    s_c = max(kv, 1.0) / tp_degree / GIB
+    return ServiceSpec(num_blocks=cfg.num_layers, block_size_gb=s_m,
+                       cache_size_gb=max(s_c, 1e-9))
+
+
+def tau_estimates(
+    cfg: ModelConfig,
+    mean_in_tokens: float,
+    mean_out_tokens: float,
+    tflops: float = 197.0,
+    hbm_gb_per_ms: float = 0.819,
+    chips: int = 16,
+    overhead_ms: float = 1.0,
+) -> float:
+    """tau_j^p per the paper's footnote 11: prefill is compute-bound
+    (t_I = FLOPs-per-block-per-token / peak), decode memory-bound
+    (t_O = block bytes / HBM bandwidth).  Returns seconds per block per job."""
+    n_active = cfg.active_layer_param_count()
+    flops_per_tok = 2 * n_active
+    t_in = flops_per_tok / (tflops * 1e9) / chips            # ms per token
+    t_out = cfg.block_bytes() / 1e6 / hbm_gb_per_ms / 1e3 / chips   # ms
+    tau_ms = overhead_ms + t_in * mean_in_tokens + t_out * max(mean_out_tokens - 1, 0)
+    return tau_ms / 1e3
+
+
+# ---------------------------------------------------------------------------
+# Slotted batched cache
+# ---------------------------------------------------------------------------
+
+class SlotCache:
+    """Capacity-``c`` batched cache for one chain engine.  Slot i of every
+    cache leaf (axis 1, after the per-stage layer axis) belongs to request i.
+    """
+
+    def __init__(self, model: Model, capacity: int, max_seq: int):
+        self.model = model
+        self.capacity = capacity
+        self.max_seq = max_seq
+        self.cache = model.init_cache(capacity, max_seq)
+        self.free: List[int] = list(range(capacity))
+        self.lengths = np.zeros((capacity,), np.int32)
+
+    def acquire(self) -> Optional[int]:
+        if not self.free:
+            return None
+        return self.free.pop()
+
+    def release(self, slot: int) -> None:
+        self.lengths[slot] = 0
+        self.free.append(slot)
+
+    def write_prefill(self, slot: int, cache_one: Any, prompt_len: int) -> None:
+        """Insert a batch-1 prefilled cache into slot ``slot``."""
+        self.cache = jax.tree.map(
+            lambda full, one: full.at[:, slot].set(one[:, 0]), self.cache, cache_one)
+        self.lengths[slot] = prompt_len
+
+    @property
+    def active_slots(self) -> List[int]:
+        return [i for i in range(self.capacity) if i not in self.free]

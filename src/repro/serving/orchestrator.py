@@ -1,0 +1,224 @@
+"""Serving orchestrator: the paper's control plane running a live system.
+
+Two time scales, exactly as in Section 2.2:
+  * offline (seconds, on composition events): tune c (Thm 3.7 lower bound),
+    GBP-CR placement, GCA cache allocation -> chain engines;
+  * online (per request): JFFC dispatch (Alg. 3) with a central FIFO queue.
+
+Fault tolerance / elasticity (DESIGN.md §7):
+  * ``fail_server``   — retire chains traversing the dead server, re-queue
+    their in-flight requests (context preserved — prompt + generated tokens
+    re-prefill on the new chain), recompose on survivors.
+  * ``add_server``    — recompose including the newcomer.
+  * ``report_tau``    — per-server EWMA latency feedback; when drift exceeds
+    a threshold the next recomposition demotes stragglers (the paper's
+    "fast with fast" principle applied online).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from collections import deque
+from typing import Deque, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import (
+    Allocation,
+    Server,
+    ServiceSpec,
+    compose,
+    gbp_cr,
+    gca,
+)
+from repro.models import Model
+from .engine import ChainEngine
+from .request import Request, State
+
+
+@dataclasses.dataclass
+class OrchestratorConfig:
+    rho_bar: float = 0.7
+    tuner: str = "bound-lower"
+    max_seq: int = 256
+    ewma_alpha: float = 0.2
+    straggler_threshold: float = 1.5     # tau drift ratio triggering recompose
+    max_retries: int = 3
+
+
+class Orchestrator:
+    def __init__(
+        self,
+        servers: Sequence[Server],
+        spec: ServiceSpec,
+        model: Model,
+        params,
+        arrival_rate: float,
+        config: OrchestratorConfig = OrchestratorConfig(),
+    ):
+        self.spec = spec
+        self.model = model
+        self.params = params
+        self.lam = arrival_rate
+        self.cfg = config
+        self.servers: Dict[str, Server] = {s.sid: s for s in servers}
+        self.tau_scale: Dict[str, float] = {s.sid: 1.0 for s in servers}
+        self.queue: Deque[Request] = deque()
+        self.finished: List[Request] = []
+        self.failed: List[Request] = []
+        self.engines: List[ChainEngine] = []
+        self.allocation: Optional[Allocation] = None
+        self.c_star: int = 1
+        self.recompositions = 0
+        self._compose()
+
+    # -- composition (offline time scale) ---------------------------------------
+    def _effective_servers(self) -> List[Server]:
+        out = []
+        for sid, s in self.servers.items():
+            scale = self.tau_scale[sid]
+            out.append(Server(sid, s.memory_gb, s.tau_c * scale, s.tau_p * scale))
+        return out
+
+    def _compose(self) -> None:
+        servers = self._effective_servers()
+        if not servers:
+            self.engines = []
+            self.allocation = None
+            return
+        self.c_star, placement, alloc = compose(
+            servers, self.spec, self.lam, self.cfg.rho_bar, tuner=self.cfg.tuner)
+        self.allocation = alloc
+        pairs = alloc.sorted_by_rate()
+        self.engines = [
+            ChainEngine(self.model, self.params, chain, cap, self.cfg.max_seq)
+            for chain, cap in pairs
+        ]
+        self.recompositions += 1
+
+    # -- dispatch (online time scale; Alg. 3) -------------------------------------
+    def submit(self, req: Request, now: float = 0.0) -> None:
+        if not self._dispatch(req, now):
+            self.queue.append(req)
+
+    def _dispatch(self, req: Request, now: float) -> bool:
+        # engines are sorted fastest-first; JFFC = first with a free slot.
+        for idx, eng in enumerate(self.engines):
+            if eng.has_free_slot:
+                ok = eng.admit(req, now)
+                if ok:
+                    req.chain_idx = idx
+                    if req.state == State.DONE:
+                        self.finished.append(req)
+                    return True
+        return False
+
+    def step(self, now: float = 0.0) -> List[Request]:
+        """One decode round across all engines + queue pulls (Alg. 3 line 6)."""
+        done: List[Request] = []
+        for eng in self.engines:
+            for req in eng.step(now):
+                done.append(req)
+                # a completion frees a slot on THIS chain; pull the queue head
+                if self.queue:
+                    nxt = self.queue.popleft()
+                    if eng.admit(nxt, now):
+                        if nxt.state == State.DONE:
+                            done.append(nxt)
+                    else:   # capacity race: put it back
+                        self.queue.appendleft(nxt)
+        self.finished.extend(done)
+        return done
+
+    def drain(self, now_fn=None, max_rounds: int = 100_000) -> None:
+        """Run decode rounds until queue + engines are empty."""
+        rounds = 0
+        t = 0.0
+        while (self.queue or any(e.requests for e in self.engines)) \
+                and rounds < max_rounds:
+            t = now_fn() if now_fn else t + 1.0
+            self.step(t)
+            # JFFC also admits from the queue whenever capacity is free
+            while self.queue:
+                req = self.queue[0]
+                if not self._dispatch(req, t):
+                    break
+                self.queue.popleft()
+            rounds += 1
+
+    # -- fault tolerance / elasticity ---------------------------------------------
+    def fail_server(self, sid: str, now: float = 0.0) -> int:
+        """Remove a dead server; re-queue affected in-flight requests."""
+        if sid not in self.servers:
+            raise KeyError(sid)
+        del self.servers[sid]
+        del self.tau_scale[sid]
+        requeued = 0
+        survivors: List[Request] = []
+        for eng in self.engines:
+            if sid in eng.chain.servers:
+                for req in eng.evict_all():
+                    if req.retries > self.cfg.max_retries:
+                        req.state = State.FAILED
+                        self.failed.append(req)
+                    else:
+                        survivors.append(req)
+                        requeued += 1
+        # Recompose on the surviving set, preserving untouched engines' caches
+        # is possible when their chains survive verbatim; for simplicity and
+        # correctness we re-admit only evicted requests and rebuild engines
+        # whose chains changed.
+        self._recompose_preserving(now)
+        for req in survivors:
+            self.submit(req, now)
+        return requeued
+
+    def add_server(self, server: Server, now: float = 0.0) -> None:
+        self.servers[server.sid] = server
+        self.tau_scale[server.sid] = 1.0
+        self._recompose_preserving(now)
+
+    def _recompose_preserving(self, now: float) -> None:
+        """Recompose; engines whose (chain, capacity) survive keep their KV
+        caches and in-flight requests, others evict to the queue."""
+        old = {tuple(e.chain.servers): e for e in self.engines}
+        evicted: List[Request] = []
+        self._compose()
+        new_engines: List[ChainEngine] = []
+        for eng in self.engines:
+            key = tuple(eng.chain.servers)
+            prev = old.pop(key, None)
+            if prev is not None and prev.capacity == eng.capacity:
+                new_engines.append(prev)     # cache + requests preserved
+            else:
+                new_engines.append(eng)
+                if prev is not None:
+                    evicted.extend(prev.evict_all())
+        for leftover in old.values():
+            evicted.extend(leftover.evict_all())
+        self.engines = new_engines
+        for req in evicted:
+            self.submit(req, now)
+
+    def report_tau(self, sid: str, observed_scale: float, now: float = 0.0) -> None:
+        """EWMA straggler feedback: observed_scale = measured/nominal time."""
+        if sid not in self.tau_scale:
+            return
+        a = self.cfg.ewma_alpha
+        self.tau_scale[sid] = (1 - a) * self.tau_scale[sid] + a * observed_scale
+        if self.tau_scale[sid] > self.cfg.straggler_threshold:
+            self._recompose_preserving(now)
+
+    # -- introspection ---------------------------------------------------------------
+    def stats(self) -> dict:
+        rts = [r.response_time() for r in self.finished if r.response_time() is not None]
+        return {
+            "finished": len(self.finished),
+            "failed": len(self.failed),
+            "queued": len(self.queue),
+            "active": sum(e.num_active for e in self.engines),
+            "chains": [(list(e.chain.servers), e.capacity) for e in self.engines],
+            "c_star": self.c_star,
+            "recompositions": self.recompositions,
+            "mean_response": float(np.mean(rts)) if rts else math.nan,
+        }

@@ -1,0 +1,9 @@
+from .optimizer import AdamWConfig, adamw_init, adamw_update, global_norm, schedule
+from .train_loop import TrainConfig, init_train_state, make_train_step
+from . import checkpoint, data
+
+__all__ = [
+    "AdamWConfig", "adamw_init", "adamw_update", "global_norm", "schedule",
+    "TrainConfig", "init_train_state", "make_train_step",
+    "checkpoint", "data",
+]

@@ -1,0 +1,89 @@
+"""Adafactor (factored second moment, momentum-free) — the memory-lean
+optimizer used for the largest train cells (deepseek-v3-671b on 256 v5e chips
+cannot hold AdamW moments; Adafactor's factored v is ~(rows+cols) instead of
+rows*cols).  Follows Shazeer & Stern (arXiv:1804.04235) with update clipping.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdafactorConfig:
+    lr: float = 1e-2
+    decay_rate: float = 0.8      # beta2_t = 1 - t^{-decay}
+    eps1: float = 1e-30
+    eps2: float = 1e-3
+    clip_threshold: float = 1.0
+    weight_decay: float = 0.0
+    warmup_steps: int = 100
+
+
+def adafactor_init(cfg: AdafactorConfig, params: Any) -> Dict[str, Any]:
+    def factored(p):
+        if p.ndim >= 2:
+            return {
+                "v_row": jnp.zeros(p.shape[:-1], jnp.float32),
+                "v_col": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+            }
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+    return {
+        "v": jax.tree.map(factored, params,
+                          is_leaf=lambda x: isinstance(x, jnp.ndarray)),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def _rms(x):
+    return jnp.sqrt(jnp.mean(jnp.square(x)) + 1e-30)
+
+
+def adafactor_update(
+    cfg: AdafactorConfig, params: Any, grads: Any, state: Dict[str, Any],
+) -> Tuple[Any, Dict[str, Any], Dict[str, jnp.ndarray]]:
+    step = state["step"] + 1
+    t = step.astype(jnp.float32)
+    beta2 = 1.0 - t ** (-cfg.decay_rate)
+    lr = cfg.lr * jnp.minimum(1.0, t / cfg.warmup_steps)
+
+    def upd(p, g, v):
+        g32 = g.astype(jnp.float32)
+        g2 = jnp.square(g32) + cfg.eps1
+        if p.ndim >= 2:
+            v_row = beta2 * v["v_row"] + (1 - beta2) * jnp.mean(g2, axis=-1)
+            v_col = beta2 * v["v_col"] + (1 - beta2) * jnp.mean(g2, axis=-2)
+            row_mean = jnp.mean(v_row, axis=-1, keepdims=True)
+            vhat = (v_row / jnp.maximum(row_mean, cfg.eps1))[..., None] * v_col[..., None, :]
+            new_v = {"v_row": v_row, "v_col": v_col}
+        else:
+            vhat = beta2 * v["v"] + (1 - beta2) * g2
+            new_v = {"v": vhat}
+        u = g32 / jnp.sqrt(jnp.maximum(vhat, cfg.eps1))
+        u = u / jnp.maximum(1.0, _rms(u) / cfg.clip_threshold)
+        scale = jnp.maximum(_rms(p.astype(jnp.float32)), cfg.eps2)
+        delta = lr * scale * u
+        if cfg.weight_decay and p.ndim >= 2:
+            delta = delta + lr * cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - delta).astype(p.dtype), new_v
+
+    # state["v"] holds a small dict per param leaf; pair leaves explicitly.
+    is_state_leaf = lambda x: isinstance(x, dict) and ("v" in x or "v_row" in x)
+    treedef = jax.tree_util.tree_structure(params)
+    p_leaves = jax.tree_util.tree_leaves(params)
+    g_leaves = jax.tree_util.tree_leaves(grads)
+    v_leaves = jax.tree_util.tree_leaves(state["v"], is_leaf=is_state_leaf)
+    new_params_leaves, new_v_leaves = [], []
+    for p, g, v in zip(p_leaves, g_leaves, v_leaves):
+        np_, nv = upd(p, g, v)
+        new_params_leaves.append(np_)
+        new_v_leaves.append(nv)
+    new_params = jax.tree_util.tree_unflatten(treedef, new_params_leaves)
+    new_v = jax.tree_util.tree_unflatten(treedef, new_v_leaves)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in g_leaves))
+    return new_params, {"v": new_v, "step": step}, {"grad_norm": gnorm, "lr": lr}

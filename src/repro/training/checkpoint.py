@@ -1,0 +1,131 @@
+"""Fault-tolerant checkpointing: tensor-chunked, zstd-compressed, atomic.
+
+Layout:  <dir>/step_<N>/
+            manifest.json       (tree structure, dtypes, shapes, metadata)
+            data.bin.zst        (concatenated raw tensor bytes)
+         <dir>/LATEST           (atomic pointer file)
+
+Writes go to a temp dir + atomic rename, so a crash mid-save never corrupts
+the latest checkpoint — the restart path (``restore_latest``) always sees a
+complete step.  ``save_async`` snapshots to host memory synchronously and
+writes on a background thread (training continues).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+import threading
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+import zstandard
+
+_SEP = "/"
+
+
+def _flatten(tree: Any) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save(ckpt_dir: str, step: int, tree: Any, metadata: Optional[dict] = None) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    flat = _flatten(jax.device_get(tree))
+    treedef = jax.tree_util.tree_structure(tree)
+    entries = []
+    cctx = zstandard.ZstdCompressor(level=3)
+    tmp = tempfile.mkdtemp(dir=ckpt_dir, prefix=".tmp_")
+    try:
+        with open(os.path.join(tmp, "data.bin.zst"), "wb") as f:
+            with cctx.stream_writer(f) as w:
+                off = 0
+                for name in sorted(flat):
+                    arr = flat[name]
+                    raw = np.ascontiguousarray(arr).tobytes()
+                    entries.append({
+                        "name": name, "dtype": str(arr.dtype),
+                        "shape": list(arr.shape), "offset": off, "nbytes": len(raw),
+                    })
+                    w.write(raw)
+                    off += len(raw)
+        manifest = {
+            "step": step,
+            "entries": entries,
+            "treedef": str(treedef),
+            "metadata": metadata or {},
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        final = os.path.join(ckpt_dir, f"step_{step:08d}")
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    # atomic LATEST pointer
+    ptr_tmp = os.path.join(ckpt_dir, ".LATEST.tmp")
+    with open(ptr_tmp, "w") as f:
+        f.write(f"step_{step:08d}")
+    os.replace(ptr_tmp, os.path.join(ckpt_dir, "LATEST"))
+    return final
+
+
+def save_async(ckpt_dir: str, step: int, tree: Any,
+               metadata: Optional[dict] = None) -> threading.Thread:
+    """Snapshot to host now; write in the background."""
+    host_tree = jax.device_get(tree)
+    t = threading.Thread(target=save, args=(ckpt_dir, step, host_tree, metadata))
+    t.start()
+    return t
+
+
+def restore(path: str, like: Any) -> Tuple[Any, dict]:
+    """Restore into the structure of ``like`` (shape/dtype validated)."""
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    dctx = zstandard.ZstdDecompressor()
+    with open(os.path.join(path, "data.bin.zst"), "rb") as f:
+        raw = dctx.stream_reader(f).read()
+    flat = {}
+    for e in manifest["entries"]:
+        buf = raw[e["offset"]: e["offset"] + e["nbytes"]]
+        flat[e["name"]] = np.frombuffer(buf, dtype=e["dtype"]).reshape(e["shape"])
+    like_flat = _flatten(like)
+    if set(like_flat) != set(flat):
+        missing = set(like_flat) ^ set(flat)
+        raise ValueError(f"checkpoint/tree structure mismatch: {sorted(missing)[:5]}")
+    leaves_with_path, treedef = jax.tree_util.tree_flatten_with_path(like)
+    out_leaves = []
+    for path_k, leaf in leaves_with_path:
+        key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path_k)
+        arr = flat[key]
+        if tuple(arr.shape) != tuple(np.shape(leaf)):
+            raise ValueError(f"shape mismatch at {key}: {arr.shape} vs {np.shape(leaf)}")
+        out_leaves.append(arr.astype(np.asarray(leaf).dtype))
+    return jax.tree_util.tree_unflatten(treedef, out_leaves), manifest
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    ptr = os.path.join(ckpt_dir, "LATEST")
+    if not os.path.exists(ptr):
+        return None
+    with open(ptr) as f:
+        name = f.read().strip()
+    if not os.path.isdir(os.path.join(ckpt_dir, name)):
+        return None
+    return int(name.split("_")[1])
+
+
+def restore_latest(ckpt_dir: str, like: Any) -> Optional[Tuple[Any, dict]]:
+    step = latest_step(ckpt_dir)
+    if step is None:
+        return None
+    return restore(os.path.join(ckpt_dir, f"step_{step:08d}"), like)

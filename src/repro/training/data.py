@@ -1,0 +1,73 @@
+"""Synthetic data pipeline: deterministic, seeded, shard-aware.
+
+Produces next-token-prediction batches (tokens, labels) — labels are tokens
+shifted by one inside a contiguous stream, mimicking a packed-document
+pipeline.  For frontend-stub archs (vlm / audio) it synthesizes the embedding
+inputs too.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterator
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+
+class SyntheticTokenStream:
+    """Zipfian token stream with document boundaries (more realistic than
+    uniform random for loss curves)."""
+
+    def __init__(self, vocab_size: int, seed: int = 0, zipf_a: float = 1.2,
+                 mean_doc_len: int = 512, bos: int = 0):
+        self.vocab = vocab_size
+        self.rng = np.random.default_rng(seed)
+        self.zipf_a = zipf_a
+        self.mean_doc = mean_doc_len
+        self.bos = bos
+        self._buf = np.empty((0,), np.int32)
+
+    def _fill(self, n: int) -> None:
+        chunks = [self._buf]
+        total = len(self._buf)
+        while total < n:
+            dl = max(int(self.rng.exponential(self.mean_doc)), 8)
+            doc = self.rng.zipf(self.zipf_a, size=dl).astype(np.int64)
+            doc = (doc % (self.vocab - 1)) + 1          # keep 0 as BOS
+            doc[0] = self.bos
+            chunks.append(doc.astype(np.int32))
+            total += dl
+        self._buf = np.concatenate(chunks)
+
+    def take(self, n: int) -> np.ndarray:
+        self._fill(n + 1)
+        out = self._buf[: n + 1].copy()
+        self._buf = self._buf[n:]
+        return out
+
+
+def batches(cfg: ModelConfig, batch_size: int, seq_len: int,
+            seed: int = 0, shard: int = 0, num_shards: int = 1,
+            ) -> Iterator[Dict[str, np.ndarray]]:
+    """Yields {tokens, labels(, patch_embeds | embeds)} batches forever.
+
+    ``shard``/``num_shards`` give disjoint streams for data parallelism and
+    deterministic restart (the stream is a pure function of (seed, shard))."""
+    stream = SyntheticTokenStream(cfg.vocab_size, seed=seed * 1000 + shard)
+    rng = np.random.default_rng(seed * 7777 + shard)
+    P = cfg.num_prefix_embeds if cfg.family == "vlm" else 0
+    text_len = seq_len - P
+    while True:
+        toks = np.stack([stream.take(text_len) for _ in range(batch_size)])
+        batch: Dict[str, np.ndarray] = {
+            "tokens": toks[:, :-1].astype(np.int32),
+            "labels": toks[:, 1:].astype(np.int32),
+        }
+        if cfg.family == "vlm":
+            batch["patch_embeds"] = rng.standard_normal(
+                (batch_size, P, cfg.d_model), dtype=np.float32)
+        elif cfg.family == "audio":
+            batch["embeds"] = rng.standard_normal(
+                (batch_size, text_len - 1, cfg.d_model), dtype=np.float32)
+            del batch["tokens"]
+        yield batch

@@ -1,0 +1,75 @@
+"""Training step factory: loss -> grad -> clip -> AdamW, with optional
+gradient accumulation over microbatches (scan, so HLO stays compact)."""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import Model
+from .adafactor import AdafactorConfig, adafactor_init, adafactor_update
+from .optimizer import AdamWConfig, adamw_init, adamw_update
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optimizer: AdamWConfig = AdamWConfig()
+    adafactor: AdafactorConfig = AdafactorConfig()
+    optimizer_name: str = "adamw"   # adamw | adafactor (memory-lean; huge models)
+    grad_accum: int = 1             # microbatches per step
+    accum_dtype: str = "float32"    # grad accumulator ("bfloat16" at 671B scale)
+
+
+def make_train_step(model: Model, tcfg: TrainConfig) -> Callable:
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    ``batch`` leaves have leading dim global_batch; with grad_accum > 1 they
+    are split into (A, B/A, ...) microbatches accumulated via lax.scan.
+    """
+
+    def loss_fn(params, batch):
+        return model.loss(params, batch)
+
+    def train_step(params, opt_state, batch):
+        A = tcfg.grad_accum
+        if A == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            micro = jax.tree.map(
+                lambda x: x.reshape(A, x.shape[0] // A, *x.shape[1:]), batch)
+
+            acc_dt = jnp.dtype(tcfg.accum_dtype)
+
+            def acc_step(carry, mb):
+                loss_a, g_a = carry
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                return (loss_a + l / A,
+                        jax.tree.map(lambda a, b: (a + (b / A).astype(acc_dt)),
+                                     g_a, g)), None
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, acc_dt), params)
+            (loss, grads), _ = jax.lax.scan(acc_step, (jnp.zeros((), jnp.float32), zeros), micro)
+        if tcfg.optimizer_name == "adafactor":
+            params, opt_state, metrics = adafactor_update(
+                tcfg.adafactor, params, grads, opt_state)
+        else:
+            params, opt_state, metrics = adamw_update(
+                tcfg.optimizer, params, grads, opt_state)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def init_opt_state(tcfg: TrainConfig, params) -> Any:
+    if tcfg.optimizer_name == "adafactor":
+        return adafactor_init(tcfg.adafactor, params)
+    return adamw_init(tcfg.optimizer, params)
+
+
+def init_train_state(model: Model, tcfg: TrainConfig, key) -> Tuple[Any, Any]:
+    params = model.init(key)
+    return params, init_opt_state(tcfg, params)

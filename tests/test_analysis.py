@@ -1,0 +1,113 @@
+"""HLO cost parser + roofline unit tests (the dry-run's measurement layer)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis.hlo_parse import parse_costs, _shape_bytes
+from repro.analysis.roofline import RooflineTerms, build_terms, model_flops_for
+from repro.configs import SHAPES, get
+
+
+def test_shape_bytes_parsing():
+    assert _shape_bytes("bf16[4,8]") == 64
+    assert _shape_bytes("f32[10]") == 40
+    assert _shape_bytes("(f32[2,2], bf16[4])") == 24   # tuples sum
+    assert _shape_bytes("pred[]") == 1
+    assert _shape_bytes("%foo") == 0
+
+
+def test_parse_costs_scan_trip_counts():
+    """dot FLOPs inside a scanned body must be multiplied by the trip count."""
+    L, B, D = 5, 4, 16
+
+    def model(ws, x):
+        def body(c, w):
+            return jnp.tanh(c @ w), None
+        out, _ = jax.lax.scan(body, x, ws)
+        return out.sum()
+
+    ws = jnp.ones((L, D, D))
+    x = jnp.ones((B, D))
+    txt = jax.jit(model).lower(ws, x).compile().as_text()
+    costs = parse_costs(txt)
+    analytic = 2 * B * D * D * L
+    assert costs.flops == pytest.approx(analytic, rel=0.05), (
+        f"parsed {costs.flops} vs analytic {analytic}")
+
+
+def test_parse_costs_grad_counts_backward():
+    B, D = 8, 32
+
+    def loss(w, x):
+        return jnp.sum((x @ w) ** 2)
+
+    w = jnp.ones((D, D))
+    x = jnp.ones((B, D))
+    txt = jax.jit(jax.grad(loss)).lower(w, x).compile().as_text()
+    costs = parse_costs(txt)
+    fwd = 2 * B * D * D
+    # grad wrt w only: fwd + dw = 2 matmuls (dx is never materialized)
+    assert 1.5 * fwd <= costs.flops <= 2.5 * fwd
+    assert costs.bytes > 0
+
+
+def test_roofline_terms_and_dominance():
+    t = build_terms(flops_total=197e12 * 256, bytes_total=819e9,
+                    collective_bytes=1.0, chips=256, model_flops=197e12 * 256)
+    assert t.compute_s == pytest.approx(1.0)
+    assert t.dominant == "compute"
+    assert t.roofline_fraction == pytest.approx(1.0)
+    t2 = build_terms(flops_total=1.0, bytes_total=819e9 * 256 * 2,
+                     collective_bytes=1.0, chips=256, model_flops=1.0)
+    assert t2.dominant == "memory" and t2.memory_s == pytest.approx(2.0)
+
+
+def test_model_flops_scaling():
+    cfg = get("qwen3-8b")
+    tr = model_flops_for(cfg, SHAPES["train_4k"])
+    pf = model_flops_for(cfg, SHAPES["prefill_32k"])
+    dc = model_flops_for(cfg, SHAPES["decode_32k"])
+    # train is 3x inference per token; decode is per-token tiny
+    tokens_tr = 256 * 4096
+    tokens_pf = 32 * 32768
+    # per-token: train = 3x inference on weights, but prefill_32k carries 8x
+    # the attention context -> net ratio lands between 1.5 and 3
+    assert 1.5 < (tr / tokens_tr) / (pf / tokens_pf) < 3.0
+    assert dc < pf / 100
+    # MoE active params < total
+    ds = get("deepseek-v3-671b")
+    assert ds.active_param_count() < 0.1 * ds.total_param_count()
+    assert model_flops_for(ds, SHAPES["train_4k"]) < 6 * ds.total_param_count() * tokens_tr
+
+
+def test_constrain_noop_without_context():
+    from repro.distributed.annotate import constrain
+
+    x = jnp.ones((4, 4))
+    assert constrain(x, "batch", None) is x
+
+
+def test_constrain_divisibility_and_duplicates():
+    from repro.distributed.annotate import constrain, logical_sharding, rules_for
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    with logical_sharding(mesh, rules_for(mesh, seq="model")):
+        # same mesh axis requested twice -> second occurrence dropped, no error
+        out = jax.jit(lambda x: constrain(x, "seq", "vocab"))(jnp.ones((4, 4)))
+        np.testing.assert_array_equal(np.asarray(out), np.ones((4, 4)))
+
+
+def test_sharding_rules_divisibility_guard():
+    from repro.configs import get
+    from repro.distributed.sharding import ShardingContext, param_pspec
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    ctx = ShardingContext(mesh, get("hymba-1.5b"), "serve")
+    # hymba vocab 32001 doesn't divide any axis size > 1; with axis size 1
+    # everything "fits" — just exercise the path on realistic leaves:
+    class Leaf:
+        def __init__(self, shape):
+            self.shape = shape
+    spec = param_pspec(ctx, (), Leaf((32001, 1600)))
+    assert spec is not None

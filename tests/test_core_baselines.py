@@ -1,0 +1,109 @@
+"""Baselines (PETALS / BPRR / JFFC-only) and the Fig. 8 / Table 1 ordering."""
+import random
+
+import pytest
+
+from repro.core import POLICIES, ServiceSpec, Server, compose, simulate
+from repro.core.baselines import (
+    BPRRRouter,
+    PetalsRouter,
+    bprr_placement,
+    jffc_only_allocation,
+    petals_placement,
+    simulate_dynamic,
+)
+from repro.core.simulator import poisson_arrivals
+from repro.core.load_balance import JFFC
+
+
+def _cluster(seed=0, n=12, frac_hi=0.25):
+    rng = random.Random(seed)
+    servers = []
+    for i in range(n):
+        hi = rng.random() < frac_hi
+        servers.append(
+            Server(
+                f"s{i}",
+                40.0 if hi else 20.0,
+                rng.uniform(0.05, 0.25),
+                0.109 if hi else 0.175,
+            )
+        )
+    spec = ServiceSpec(num_blocks=24, block_size_gb=1.32, cache_size_gb=0.11)
+    return servers, spec
+
+
+def test_petals_placement_covers_all_blocks():
+    servers, spec = _cluster()
+    pl = petals_placement(servers, spec, seed=1)
+    cover = [0] * (spec.num_blocks + 1)
+    for sid, (a, m) in pl.assignment.items():
+        for b in range(a, a + m):
+            cover[b] += 1
+    assert all(c >= 1 for c in cover[1:]), "every block must be hosted somewhere"
+
+
+def test_dynamic_routers_complete_jobs():
+    servers, spec = _cluster(seed=2)
+    lam = 0.2
+    arrivals = poisson_arrivals(lam, 3000, random.Random(5))
+    for Router, Pl in (
+        (PetalsRouter, petals_placement(servers, spec, seed=3)),
+        (BPRRRouter, bprr_placement(servers, spec, lam, 0.7)),
+    ):
+        res = simulate_dynamic(Router(servers, Pl, seed=4), arrivals)
+        assert res.n_completed == 3000 - 300
+        assert res.mean_response > 0
+
+
+def test_slot_accounting_never_negative():
+    servers, spec = _cluster(seed=6)
+    pl = petals_placement(servers, spec, seed=6)
+    router = PetalsRouter(servers, pl, seed=6)
+    arrivals = poisson_arrivals(0.3, 2000, random.Random(6))
+    simulate_dynamic(router, arrivals)
+    # all jobs completed -> slots restored to initial
+    from repro.core import initial_slots
+
+    assert router.slots == initial_slots(servers, spec, pl)
+    assert all(v == 0 for v in router.active.values())
+
+
+def test_overall_ordering_proposed_beats_baselines():
+    """Fig. 8 / Table 1: Proposed (GBP-CR + GCA + JFFC) < BPRR < PETALS in
+    mean response time, on a moderately loaded heterogeneous cluster."""
+    servers, spec = _cluster(seed=9, n=14, frac_hi=0.3)
+    lam = 0.35
+    arrivals = poisson_arrivals(lam, 12_000, random.Random(11))
+
+    _, placement, alloc = compose(servers, spec, lam, rho_bar=0.7)
+    pairs = alloc.sorted_by_rate()
+    pol = JFFC([c.rate for c, _ in pairs], [cap for _, cap in pairs])
+    proposed = simulate(pol, arrivals).mean_response
+
+    petals = simulate_dynamic(
+        PetalsRouter(servers, petals_placement(servers, spec, seed=12), seed=12),
+        arrivals,
+    ).mean_response
+    bprr = simulate_dynamic(
+        BPRRRouter(servers, bprr_placement(servers, spec, lam, 0.7), seed=13),
+        arrivals,
+    ).mean_response
+
+    assert proposed < bprr * 1.02, f"proposed={proposed:.2f} bprr={bprr:.2f}"
+    assert proposed < petals, f"proposed={proposed:.2f} petals={petals:.2f}"
+
+
+def test_jffc_only_when_model_fits():
+    servers, spec = _cluster(seed=3)
+    out = jffc_only_allocation(servers, spec)
+    if out is None:
+        pytest.skip("model does not fit in any single server for this draw")
+    pl, alloc = out
+    assert all(len(ch.servers) == 1 for ch in alloc.chains)
+
+
+def test_jffc_only_none_when_too_big():
+    servers = [Server("a", 10.0, 0.1, 0.1)]
+    spec = ServiceSpec(num_blocks=64, block_size_gb=1.0, cache_size_gb=0.1)
+    assert jffc_only_allocation(servers, spec) is None

@@ -1,0 +1,107 @@
+"""Hardness reduction sanity (Thm 3.1 / Lemma 3.3) + tuning (Eq. 14, §3.2.3)."""
+import itertools
+import random
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import Server, ServiceSpec, compose, gca, tune_bound, tune_surrogate
+from repro.core.hardness import (
+    CacheAllocInstance,
+    MKPInstance,
+    mkp_to_cache_alloc,
+    partition_brute_force,
+    partition_to_placement,
+    two_chain_feasible,
+)
+from repro.core.servers import max_blocks, service_time
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    k=st.integers(1, 4),
+    d=st.integers(1, 3),
+    seed=st.integers(0, 9999),
+)
+def test_thm31_reduction_preserves_optimum(k, d, seed):
+    """The MKP optimum equals the max total rate of the constructed
+    cache-allocation instance (Theorem 3.1's equivalence)."""
+    rng = random.Random(seed)
+    inst = MKPInstance(
+        values=[rng.randint(1, 9) for _ in range(k)],
+        sizes=[[rng.randint(0, 5) for _ in range(k)] for _ in range(d)],
+        capacities=[rng.randint(1, 8) for _ in range(d)],
+    )
+    cache_inst = mkp_to_cache_alloc(inst)
+    assert cache_inst.brute_force_max_rate() == pytest.approx(inst.brute_force())
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 9999), n=st.integers(2, 6))
+def test_lemma33_reduction(seed, n):
+    """Partition feasible <=> two disjoint chains achieve scaled rate 2/L."""
+    rng = random.Random(seed)
+    xs = [rng.randint(1, 12) for _ in range(n)]
+    if sum(xs) % 2:
+        xs[0] += 1
+    servers, spec, req = partition_to_placement(xs)
+    # construction sanity: m_j(1) == x_j and t_j(1) == x_j
+    for srv, x in zip(servers, xs):
+        assert max_blocks(srv, spec, 1) == min(x, spec.num_blocks)
+        if x <= spec.num_blocks:
+            assert service_time(srv, spec, 1) == pytest.approx(x)
+    assert partition_brute_force(xs) == two_chain_feasible(xs)
+
+
+def _cluster(seed=0, n=10):
+    rng = random.Random(seed)
+    servers = []
+    for i in range(n):
+        hi = rng.random() < 0.3
+        servers.append(
+            Server(
+                f"s{i}",
+                40.0 if hi else 20.0,
+                rng.uniform(0.02, 0.2),
+                0.109 if hi else 0.175,
+            )
+        )
+    spec = ServiceSpec(num_blocks=24, block_size_gb=1.32, cache_size_gb=0.11)
+    return servers, spec
+
+
+def test_tune_surrogate_finds_feasible_c():
+    servers, spec = _cluster()
+    res = tune_surrogate(servers, spec, lam=0.2, rho_bar=0.7)
+    assert res.c_star >= 1
+    assert all(obj > 0 for _, obj in res.per_c)
+    # objective is c * K(c), integral
+    cs = dict(res.per_c)
+    assert cs[res.c_star] == res.objective
+
+
+def test_tune_bound_prefers_more_cache_at_high_load():
+    """Fig. 7: optimal c* grows with the arrival rate."""
+    servers, spec = _cluster(seed=3, n=12)
+    low = tune_bound(servers, spec, lam=0.05, rho_bar=0.7, which="lower")
+    high = tune_bound(servers, spec, lam=1.2, rho_bar=0.7, which="lower")
+    assert high.c_star >= low.c_star
+
+
+def test_compose_end_to_end():
+    servers, spec = _cluster(seed=5)
+    c_star, placement, alloc = compose(servers, spec, lam=0.2, rho_bar=0.7)
+    assert alloc.total_rate >= 0.2 / 0.7 - 1e-9
+    # chains cover all blocks
+    for ch in alloc.chains:
+        assert sum(ch.blocks) == spec.num_blocks
+    # composed system is stable at lambda
+    from repro.core import is_stable
+
+    assert is_stable(alloc.job_servers(), 0.2)
+
+
+def test_infeasible_demand_raises():
+    servers, spec = _cluster(seed=1, n=3)
+    with pytest.raises(ValueError):
+        tune_surrogate(servers, spec, lam=1e9, rho_bar=0.7)

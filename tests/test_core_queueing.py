@@ -1,0 +1,98 @@
+"""Theorem 3.7 bounds, exact K=2 CTMC (App. A.3), simulation agreement."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    exact_occupancy_ctmc,
+    exact_occupancy_k2,
+    is_stable,
+    occupancy_lower_bound,
+    occupancy_upper_bound,
+    response_time_bounds,
+    simulate_policy_name,
+    total_rate,
+)
+
+
+def test_mm1_special_case():
+    """Single chain, capacity 1 -> M/M/1: E[N] = rho/(1-rho); both bounds tight."""
+    mu, lam = 2.0, 1.0
+    js = [(mu, 1)]
+    expect = (lam / mu) / (1 - lam / mu)
+    assert occupancy_lower_bound(js, lam) == pytest.approx(expect, rel=1e-9)
+    assert occupancy_upper_bound(js, lam) == pytest.approx(expect, rel=1e-9)
+
+
+def test_mmc_special_case_vs_ctmc():
+    """Single chain, capacity c -> M/M/c: bounds coincide and match the
+    truncated-CTMC ground truth."""
+    js = [(1.0, 4)]
+    lam = 2.5
+    lo = occupancy_lower_bound(js, lam)
+    hi = occupancy_upper_bound(js, lam)
+    exact = exact_occupancy_ctmc(js, lam, queue_cap=800)
+    assert lo == pytest.approx(hi, rel=1e-9)
+    assert lo == pytest.approx(exact, rel=1e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    mu1=st.floats(1.1, 4.0),
+    mu2=st.floats(0.2, 1.0),
+    c1=st.integers(1, 3),
+    c2=st.integers(1, 3),
+    rho=st.floats(0.2, 0.85),
+)
+def test_k2_exact_within_bounds_and_matches_ctmc(mu1, mu2, c1, c2, rho):
+    js = [(mu1, c1), (mu2, c2)]
+    lam = rho * total_rate(js)
+    exact = exact_occupancy_k2(mu1, c1, mu2, c2, lam)
+    ctmc = exact_occupancy_ctmc(js, lam, queue_cap=2000)
+    assert exact == pytest.approx(ctmc, rel=2e-2), "A.3 recursion vs numeric CTMC"
+    lo = occupancy_lower_bound(js, lam)
+    hi = occupancy_upper_bound(js, lam)
+    assert lo - 1e-6 <= exact <= hi + 1e-6
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    seed=st.integers(0, 100),
+    rho=st.floats(0.3, 0.7),
+)
+def test_simulation_within_bounds(seed, rho):
+    """JFFC simulation mean occupancy must land within the Thm 3.7 bounds
+    (up to Monte-Carlo noise)."""
+    import random
+
+    rng = random.Random(seed)
+    K = rng.randint(2, 4)
+    mus = sorted((rng.uniform(0.3, 3.0) for _ in range(K)), reverse=True)
+    js = [(m, rng.randint(1, 4)) for m in mus]
+    lam = rho * total_rate(js)
+    lo, hi = response_time_bounds(js, lam)
+    res = simulate_policy_name("jffc", js, lam, n_jobs=40_000, seed=seed)
+    mean_rt = res.mean_response
+    assert lo * 0.9 - 0.05 <= mean_rt <= hi * 1.12 + 0.05, (
+        f"sim {mean_rt:.3f} outside [{lo:.3f}, {hi:.3f}]"
+    )
+
+
+def test_instability_detection():
+    js = [(1.0, 2)]
+    assert is_stable(js, 1.9)
+    assert not is_stable(js, 2.0)
+    assert occupancy_lower_bound(js, 2.5) == math.inf
+
+
+def test_bounds_monotone_in_lambda():
+    js = [(2.0, 2), (1.0, 3)]
+    nus = total_rate(js)
+    prev_lo = prev_hi = 0.0
+    for rho in (0.1, 0.3, 0.5, 0.7, 0.9):
+        lo = occupancy_lower_bound(js, rho * nus)
+        hi = occupancy_upper_bound(js, rho * nus)
+        assert lo >= prev_lo and hi >= prev_hi
+        assert lo <= hi + 1e-12
+        prev_lo, prev_hi = lo, hi

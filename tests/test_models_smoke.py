@@ -1,0 +1,150 @@
+"""Per-architecture smoke tests: reduced config, one forward + one decode on
+CPU, asserting shapes and finiteness.  Full configs are exercised only via
+the dry-run (ShapeDtypeStruct, no allocation)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, ASSIGNED, get
+from repro.models import Model
+
+B, S = 2, 64
+
+
+def make_batch(cfg, key, seq=S, with_labels=True):
+    kt, kl, ke = jax.random.split(key, 3)
+    batch = {}
+    if cfg.family == "vlm":
+        P = cfg.num_prefix_embeds
+        batch["patch_embeds"] = jax.random.normal(ke, (B, P, cfg.d_model)).astype(cfg.dtype)
+        batch["tokens"] = jax.random.randint(kt, (B, seq - P), 0, cfg.vocab_size)
+        if with_labels:
+            batch["labels"] = jax.random.randint(kl, (B, seq - P), 0, cfg.vocab_size)
+    elif cfg.family == "audio":
+        batch["embeds"] = jax.random.normal(ke, (B, seq, cfg.d_model)).astype(cfg.dtype)
+        if with_labels:
+            batch["labels"] = jax.random.randint(kl, (B, seq), 0, cfg.vocab_size)
+    else:
+        batch["tokens"] = jax.random.randint(kt, (B, seq), 0, cfg.vocab_size)
+        if with_labels:
+            batch["labels"] = jax.random.randint(kl, (B, seq), 0, cfg.vocab_size)
+    return batch
+
+
+def reduced(name):
+    cfg = get(name).reduced()
+    if cfg.family == "vlm":
+        cfg = cfg.__class__(**{**cfg.__dict__, "num_prefix_embeds": 16})
+    return cfg
+
+
+@pytest.mark.parametrize("name", ASSIGNED + ["bloom-176b"])
+def test_forward_and_loss(name):
+    cfg = reduced(name)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg, jax.random.PRNGKey(1))
+    logits = jax.jit(model.forward_train)(params, batch)
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all()), f"{name}: NaN in logits"
+    loss = jax.jit(model.loss)(params, batch)
+    assert np.isfinite(float(loss))
+    # loss should be near log(V) at random init
+    assert float(loss) < 2.0 * np.log(cfg.vocab_size) + 1.0
+
+
+@pytest.mark.parametrize("name", ASSIGNED)
+def test_grad_step_reduces_loss(name):
+    cfg = reduced(name)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg, jax.random.PRNGKey(1))
+
+    @jax.jit
+    def step(p):
+        loss, g = jax.value_and_grad(model.loss)(p, batch)
+        p2 = jax.tree.map(lambda w, gw: (w.astype(jnp.float32)
+                                         - 0.1 * gw.astype(jnp.float32)).astype(w.dtype), p, g)
+        return loss, p2
+
+    l0, params = step(params)
+    for _ in range(3):
+        l1, params = step(params)
+    assert np.isfinite(float(l1))
+    assert float(l1) < float(l0), f"{name}: loss did not decrease ({l0} -> {l1})"
+
+
+@pytest.mark.parametrize("name", ASSIGNED)
+def test_prefill_decode_matches_forward(name):
+    """Prefill + one decode step must agree with running the full sequence
+    through the train forward (teacher-forcing consistency)."""
+    cfg = reduced(name)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    seq = 32
+    batch = make_batch(cfg, jax.random.PRNGKey(1), seq=seq, with_labels=False)
+
+    max_seq = seq + 8
+    cache = model.init_cache(B, max_seq)
+    last_logits, cache = jax.jit(model.prefill)(params, cache, batch)
+    assert last_logits.shape == (B, cfg.vocab_size)
+    assert bool(jnp.isfinite(last_logits.astype(jnp.float32)).all())
+
+    # Forward-path logits at the last position must match prefill's output.
+    full_logits = jax.jit(model.forward_train)(params, batch)
+    np.testing.assert_allclose(
+        np.asarray(last_logits, np.float32),
+        np.asarray(full_logits[:, -1], np.float32),
+        rtol=2e-2, atol=2e-2,
+    )
+
+    # One decode step appends a token; logits must match extending the prompt.
+    next_tok = jnp.argmax(last_logits, axis=-1).astype(jnp.int32)
+    lengths = jnp.full((B,), seq, jnp.int32)
+    dec_logits, cache = jax.jit(model.decode_step)(params, cache, next_tok, lengths)
+    assert dec_logits.shape == (B, cfg.vocab_size)
+    assert bool(jnp.isfinite(dec_logits.astype(jnp.float32)).all())
+
+    if cfg.family in ("vlm", "audio"):
+        return  # extended prompt would need frontend embeds; consistency n/a
+    ext = {"tokens": jnp.concatenate([batch["tokens"], next_tok[:, None]], axis=1)}
+    ext_logits = jax.jit(model.forward_train)(params, ext)
+    np.testing.assert_allclose(
+        np.asarray(dec_logits, np.float32),
+        np.asarray(ext_logits[:, -1], np.float32),
+        rtol=6e-2, atol=6e-2,
+    )
+
+
+def test_stage_structure_examples():
+    from repro.models import layer_kind, stages
+
+    ds = get("deepseek-v3-671b")
+    st = stages(ds)
+    assert [(s.kind, s.count) for s in st] == [("dense", 3), ("moe", 58)]
+
+    hy = get("hymba-1.5b")
+    st = stages(hy)
+    kinds = [(s.kind, s.count) for s in st]
+    assert kinds == [
+        ("hybrid_global", 1), ("hybrid_swa", 14), ("hybrid_global", 1),
+        ("hybrid_swa", 15), ("hybrid_global", 1),
+    ]
+
+    xl = get("xlstm-350m")
+    assert layer_kind(xl, 0) == "slstm" and layer_kind(xl, 1) == "mlstm"
+    assert sum(s.count for s in stages(xl)) == 24
+
+
+def test_param_accounting_close_to_nameplate():
+    """total_param_count should be within ~20% of each model's nameplate size
+    (configs are from public literature; small deltas from impl choices)."""
+    expect = {
+        "qwen3-8b": 8.2e9, "qwen2-7b": 7.6e9, "stablelm-1.6b": 1.6e9,
+        "nemotron-4-15b": 15e9, "internvl2-76b": 76e9, "dbrx-132b": 132e9,
+        "deepseek-v3-671b": 671e9, "bloom-176b": 176e9,
+    }
+    for name, target in expect.items():
+        n = get(name).total_param_count()
+        assert 0.7 * target < n < 1.45 * target, f"{name}: {n:.3e} vs {target:.3e}"
