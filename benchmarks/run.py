@@ -21,6 +21,7 @@ from . import (
     bench_model_validation,
     bench_overall,
     bench_placement,
+    bench_simulator,
     bench_table1,
     bench_tuning,
 )
@@ -34,6 +35,7 @@ SUITES = {
     "table1_trace": bench_table1.run,
     "model_validation": bench_model_validation.run,
     "kernels": bench_kernels.run,
+    "simulator": bench_simulator.run,
 }
 
 FAST_OVERRIDES = {
@@ -43,11 +45,14 @@ FAST_OVERRIDES = {
                                                         n_jobs=10_000),
     "fig8_overall": lambda: bench_overall.run(seeds=range(2)),
     "table1_trace": lambda: bench_table1.run(n_requests=1200),
+    "simulator": lambda: bench_simulator.run(n_jobs=20_000, million=False),
 }
 
 
 def _headline(row: dict) -> str:
-    for key in ("reduction_vs_petals_pct", "proposed_improvement_vs_petals_pct",
+    for key in ("engine_speedup", "pipeline_speedup", "bit_identical",
+                "jobs_per_s", "completed_all",
+                "reduction_vs_petals_pct", "proposed_improvement_vs_petals_pct",
                 "gbp_beats_or_ties_best_random", "gca_within_1_of_ilp",
                 "jffc_within_bounds", "regret_lower_vs_sim",
                 "lower_bound_monotone_nondecreasing", "max_abs_err",

@@ -1,15 +1,19 @@
 """Fault tolerance demo: kill a server mid-decode, watch the orchestrator
 re-queue in-flight requests, recompose chains on the survivors, and finish
 every request with outputs IDENTICAL to the no-failure run.  Then scale back
-up and verify the composition absorbs the new server.
+up, verify the composition absorbs the new server, and replay a full
+scripted scenario (failure + straggler + burst + autoscale-in) through both
+the live orchestrator and the queueing-level scenario engine.
 
   PYTHONPATH=src python examples/elastic_failover.py
 """
+import random
+
 import jax
 import numpy as np
 
 from repro.configs import get
-from repro.core import Server
+from repro.core import Scenario, Server, ServiceSpec, run_scenario
 from repro.models import Model
 from repro.serving import Orchestrator, OrchestratorConfig, Request, State, service_spec_for
 
@@ -70,4 +74,45 @@ orch_b.add_server(Server("srv-new", spec.block_size_gb * cfg.num_layers
                          + spec.cache_size_gb * cfg.num_layers * 5, 0.01, 0.008))
 print(f"  total service rate {before:.2f} -> {orch_b.allocation.total_rate:.2f} req/s")
 assert orch_b.allocation.total_rate > before
+
+# ---------------------------------------------------------------------------
+# Scripted scenario on the LIVE orchestrator: a failure at round 2, a
+# straggler report at round 4, the lost server back at round 6.
+# ---------------------------------------------------------------------------
+print("\nscripted scenario on the live orchestrator:")
+cfg, model, params, orch_c = build()
+victim = orch_c.engines[0].chain.servers[0]
+victim_server = orch_c.servers[victim]
+scenario = (Scenario(horizon=10.0, description="fail + straggler + recover")
+            .fail(2.0, victim)
+            .slowdown(4.0, orch_c.engines[-1].chain.servers[0], 1.7)
+            .recover(6.0, victim_server))
+rng = np.random.default_rng(7)
+reqs_c = [Request(rid=i, prompt=rng.integers(1, 200, 10).astype(np.int32),
+                  max_new_tokens=6) for i in range(8)]
+summary = orch_c.run_scenario(scenario, reqs_c, dt=1.0)
+for ev in summary["events"]:
+    print(f"  t={ev['time']:.0f} {ev['kind']:9s} requeued={ev['requeued']} "
+          f"chains={ev['chains']}")
+print(f"  finished={summary['finished']} failed={summary['failed']} "
+      f"recompositions={summary['recompositions']}")
+assert all(r.state == State.DONE for r in reqs_c)
+
+# ---------------------------------------------------------------------------
+# The same kind of timeline at queueing scale: 8 servers, a mid-run failure,
+# a 6x burst, autoscale-in — thousands of jobs through the vectorized engine.
+# ---------------------------------------------------------------------------
+print("\nqueueing-scale scenario (vectorized engine):")
+prng = random.Random(1234)
+big_spec = ServiceSpec(num_blocks=10, block_size_gb=1.32, cache_size_gb=0.11)
+cluster = [Server(f"s{i}", prng.uniform(15, 40), prng.uniform(0.02, 0.2),
+                  prng.uniform(0.02, 0.2)) for i in range(8)]
+big = (Scenario(horizon=400.0)
+       .fail(100.0, "s3")
+       .burst(200.0, 40.0, 6.0)
+       .recover(260.0, cluster[3]))
+for pol in ("jffc", "random"):
+    res = run_scenario(cluster, big_spec, big, base_rate=2.0, policy=pol, seed=0)
+    print(f"  {pol:7s}: {res.n_jobs} jobs, completed_all={res.completed_all}, "
+          f"restarts={res.restarts}, p99={res.p99():.2f}s")
 print("done.")

@@ -38,6 +38,55 @@ _COLLECTIVES = (
 )
 
 
+def _split_operands(s: str) -> List[str]:
+    """Split an operand list at top-level commas (commas inside shape
+    brackets, layout braces, or tuple parens do not separate operands)."""
+    out: List[str] = []
+    depth = 0
+    cur: List[str] = []
+    for ch in s:
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        if ch == "," and depth == 0:
+            out.append("".join(cur).strip())
+            cur = []
+        else:
+            cur.append(ch)
+    tail = "".join(cur).strip()
+    if tail:
+        out.append(tail)
+    return out
+
+
+def _operand_name(op: str) -> str:
+    """Operand name: modern HLO prints ``f32[5,4]{1,0} %name``, older text
+    just ``%name`` — either way the name is the last whitespace token."""
+    parts = op.split()
+    return parts[-1].lstrip("%") if parts else ""
+
+
+def _call_parts(stripped: str) -> Optional[Tuple[str, str, str]]:
+    """(output_type, op_name, operand_string) of an instruction line, with
+    the operand string scanned to the MATCHING close paren (operands may be
+    tuple-typed and contain nested parens)."""
+    mm = re.match(r"(?:ROOT\s+)?%?[\w\.\-]+ = ([^=]*?) ([a-z][\w\-]*)\(", stripped)
+    if not mm:
+        return None
+    start = mm.end() - 1
+    depth = 0
+    for i in range(start, len(stripped)):
+        c = stripped[i]
+        if c == "(":
+            depth += 1
+        elif c == ")":
+            depth -= 1
+            if depth == 0:
+                return mm.group(1), mm.group(2), stripped[start + 1:i]
+    return mm.group(1), mm.group(2), stripped[start + 1:]
+
+
 def _shape_bytes(type_str: str) -> int:
     """Sum bytes over every `dtype[dims]` occurring in a type string
     (handles tuples)."""
@@ -117,13 +166,13 @@ def parse_costs(hlo_text: str) -> ModuleCosts:
         sliced: Dict[int, int] = {}
         direct: set = set()
         for ln in lines:
-            mm = re.match(r"(?:ROOT\s+)?%?[\w\.\-]+ = ([^=]*?) ([a-z][\w\-]*)\(([^)]*)\)", ln)
-            if not mm:
+            parts = _call_parts(ln)
+            if parts is None:
                 continue
-            opname = mm.group(2)
-            out_b = _shape_bytes(mm.group(1))
-            for operand in mm.group(3).split(","):
-                oname = operand.strip().lstrip("%").split(" ")[0]
+            out_type, opname, operand_str = parts
+            out_b = _shape_bytes(out_type)
+            for operand in _split_operands(operand_str):
+                oname = _operand_name(operand)
                 if oname not in pidx:
                     continue
                 if opname in ("dynamic-slice", "gather", "slice"):
@@ -159,8 +208,12 @@ def parse_costs(hlo_text: str) -> ModuleCosts:
             if dm:
                 out_type = dm.group(2)
                 out_elems = _shape_elems(out_type)
-                lhs_name = dm.group(3).split(",")[0].strip().lstrip("%")
-                lhs_dims = _dims_of(shapes.get(lhs_name, ""))
+                operands = _split_operands(dm.group(3))
+                lhs = operands[0] if operands else ""
+                # modern HLO inlines the operand type; fall back to the local
+                # definition for bare ``%name`` operands.
+                lhs_dims = _dims_of(lhs) or _dims_of(
+                    shapes.get(_operand_name(lhs), ""))
                 cdims = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", stripped)
                 k = 1
                 if cdims and lhs_dims:
@@ -171,17 +224,20 @@ def parse_costs(hlo_text: str) -> ModuleCosts:
                 flops += 2.0 * out_elems * k * m_c
             # --- bytes: top-level ops only ------------------------------------
             if name not in fusion_bodies:
-                mm = re.match(
-                    r"%?[\w\.\-]+ = ([^=]*?) ([a-z][\w\-]*)\(([^)]*)\)", stripped)
-                if mm and f"{mm.group(2)}(" not in _SKIP_BYTES_OPS:
-                    opname = mm.group(2)
-                    out_b = _shape_bytes(mm.group(1))
-                    operands = [o.strip().lstrip("%").split(" ")[0]
-                                for o in mm.group(3).split(",") if o.strip()]
-                    op_bytes = [
-                        _shape_bytes(shapes[o].split(" ", 1)[0] if " " in shapes[o]
-                                     else shapes[o])
-                        for o in operands if o in shapes]
+                parts = _call_parts(stripped)
+                if parts is not None and f"{parts[1]}(" not in _SKIP_BYTES_OPS:
+                    out_type, opname, operand_str = parts
+                    out_b = _shape_bytes(out_type)
+                    op_bytes = []
+                    for op in _split_operands(operand_str):
+                        sb = _shape_bytes(op)          # inline operand type
+                        if sb == 0:
+                            oname = _operand_name(op)
+                            if oname in shapes:
+                                rhs = shapes[oname]
+                                sb = _shape_bytes(
+                                    rhs.split(" ", 1)[0] if " " in rhs else rhs)
+                        op_bytes.append(sb)
                     if opname in ("dynamic-slice", "gather", "slice"):
                         b = 2.0 * out_b            # reads only the slice
                     elif opname in ("dynamic-update-slice", "scatter"):

@@ -10,7 +10,9 @@ from .servers import Server, ServiceSpec, max_blocks, service_time, amortized_ti
 from .placement import Placement, gbp_cr, random_placement, chains_needed_from_servers
 from .chains import Chain, ChainGraph, disjoint_chain_objects
 from .cache_alloc import Allocation, gca, reserved_allocation, optimal_ilp, rate_lower_bound, initial_slots
-from .load_balance import JFFC, JSQ, JIQ, SED, SAJSQ, POLICIES, Policy
+from .load_balance import (
+    JFFC, JFFS, JSQ, JIQ, SED, SAJSQ, RandomDispatch, POLICIES, Policy,
+)
 from .queueing import (
     response_time_bounds,
     occupancy_lower_bound,
@@ -20,19 +22,36 @@ from .queueing import (
     is_stable,
     total_rate,
 )
-from .simulator import Job, SimResult, simulate, simulate_policy_name, poisson_arrivals
+from .simulator import (
+    Job, SimResult, VectorSimulator, VECTORIZED_POLICIES,
+    simulate, simulate_policy_name, simulate_vectorized, poisson_arrivals,
+)
 from .tuning import TuningResult, tune_surrogate, tune_bound, compose
-from .workload import poisson_exponential, azure_like_trace, AZURE_STATS, interarrival_std_ratio
+from .scenarios import (
+    Scenario, ScenarioEvent, ScenarioResult, ScenarioLogEntry,
+    compose_or_degrade, run_scenario,
+)
+from .workload import (
+    poisson_exponential, poisson_exponential_np, azure_like_trace,
+    azure_like_trace_np, phased_poisson, AZURE_STATS, interarrival_std_ratio,
+)
 
 __all__ = [
     "Server", "ServiceSpec", "max_blocks", "service_time", "amortized_time", "cache_slots",
     "Placement", "gbp_cr", "random_placement", "chains_needed_from_servers",
     "Chain", "ChainGraph", "disjoint_chain_objects",
     "Allocation", "gca", "reserved_allocation", "optimal_ilp", "rate_lower_bound", "initial_slots",
-    "JFFC", "JSQ", "JIQ", "SED", "SAJSQ", "POLICIES", "Policy",
+    "JFFC", "JFFS", "JSQ", "JIQ", "SED", "SAJSQ", "RandomDispatch",
+    "POLICIES", "Policy",
     "response_time_bounds", "occupancy_lower_bound", "occupancy_upper_bound",
     "exact_occupancy_k2", "exact_occupancy_ctmc", "is_stable", "total_rate",
-    "Job", "SimResult", "simulate", "simulate_policy_name", "poisson_arrivals",
+    "Job", "SimResult", "VectorSimulator", "VECTORIZED_POLICIES",
+    "simulate", "simulate_policy_name", "simulate_vectorized",
+    "poisson_arrivals",
     "TuningResult", "tune_surrogate", "tune_bound", "compose",
-    "poisson_exponential", "azure_like_trace", "AZURE_STATS", "interarrival_std_ratio",
+    "Scenario", "ScenarioEvent", "ScenarioResult", "ScenarioLogEntry",
+    "compose_or_degrade", "run_scenario",
+    "poisson_exponential", "poisson_exponential_np", "azure_like_trace",
+    "azure_like_trace_np", "phased_poisson", "AZURE_STATS",
+    "interarrival_std_ratio",
 ]

@@ -159,4 +159,28 @@ class JIQ(_DedicatedQueuePolicy):
         return self.rng.randrange(len(self.caps))
 
 
-POLICIES = {cls.name: cls for cls in (JFFC, JSQ, SAJSQ, SED, JIQ)}
+class JFFS(_DedicatedQueuePolicy):
+    """Join-the-Fastest-Free-Server dispatch (Theorem 3.5 narrative) extended
+    with dedicated queues: an arrival joins the fastest free chain; when none
+    is free it waits at the fastest chain overall.  Fully deterministic."""
+
+    name = "jffs"
+
+    def choose(self, job):
+        free = self.free_chains()
+        if free:
+            return max(free, key=lambda k: self.rates[k])
+        return max(range(len(self.caps)), key=lambda k: self.rates[k])
+
+
+class RandomDispatch(_DedicatedQueuePolicy):
+    """Uniform random chain per arrival, dedicated FIFO queues — the naive
+    baseline the scenario regression tests compare JFFC against."""
+
+    name = "random"
+
+    def choose(self, job):
+        return self.rng.randrange(len(self.caps))
+
+
+POLICIES = {cls.name: cls for cls in (JFFC, JSQ, SAJSQ, SED, JIQ, JFFS, RandomDispatch)}

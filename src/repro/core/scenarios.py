@@ -1,0 +1,258 @@
+"""Scenario engine: scripted dynamic-cluster events over a simulated system.
+
+The paper's Section 4 experiments are static — fixed cluster, stationary
+Poisson arrivals.  Serverless-scale serving is not: DeepServe
+(arXiv:2501.14417) stresses bursty scale-out phases and FailSafe
+(arXiv:2511.14116) mid-flight server failures as the regimes where
+composition policies actually differentiate.  This module scripts those
+regimes on top of the control-plane algorithms:
+
+* a :class:`Scenario` is a timeline of :class:`ScenarioEvent`'s over a
+  cluster — server **failure**, **add** (recovery / autoscale-in),
+  **slowdown** (straggler drift, a tau multiplier), and **burst** phases
+  (arrival-rate multipliers over a window);
+* :func:`run_scenario` drives the vectorized simulator
+  (:class:`repro.core.simulator.VectorSimulator`) between events, recomposing
+  the cluster with the paper's full offline pipeline (tuned c -> GBP-CR ->
+  GCA) at every cluster event and carrying queue + in-flight state across the
+  reconfiguration;
+* the serving layer exposes the same timeline to a live
+  ``repro.serving.Orchestrator`` via ``Orchestrator.run_scenario`` (decode
+  rounds instead of queueing-theoretic service times).
+
+Burst phases affect workload generation (piecewise-constant-rate Poisson via
+:func:`repro.core.workload.phased_poisson`); cluster events trigger
+recomposition.  When a failure leaves the cluster infeasible for the target
+load, composition degrades gracefully (``c = 1``, every server used) instead
+of raising — an overloaded system keeps serving, slowly, like the real one.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .cache_alloc import gca
+from .placement import gbp_cr
+from .servers import Server, ServiceSpec
+from .simulator import SimResult, VectorSimulator
+from .tuning import compose
+from .workload import phased_poisson
+
+EVENT_KINDS = ("fail", "add", "slowdown", "burst")
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioEvent:
+    """One timed event.  ``scale`` is the tau multiplier for ``slowdown``
+    (absolute, relative to nominal) and the rate multiplier for ``burst``;
+    ``duration`` is only meaningful for ``burst``."""
+    time: float
+    kind: str
+    sid: str = ""
+    server: Optional[Server] = None
+    scale: float = 1.0
+    duration: float = 0.0
+
+    def __post_init__(self):
+        if self.kind not in EVENT_KINDS:
+            raise ValueError(f"unknown event kind {self.kind!r}")
+        if self.kind == "add" and self.server is None:
+            raise ValueError("add event needs a server")
+        if self.kind in ("fail", "slowdown") and not self.sid:
+            raise ValueError(f"{self.kind} event needs a server id")
+
+
+@dataclasses.dataclass
+class Scenario:
+    """A timeline of cluster + workload events over ``[0, horizon)``."""
+    horizon: float
+    events: List[ScenarioEvent] = dataclasses.field(default_factory=list)
+    description: str = ""
+
+    # -- chainable builders ---------------------------------------------------
+    def fail(self, time: float, sid: str) -> "Scenario":
+        self.events.append(ScenarioEvent(time, "fail", sid=sid))
+        return self
+
+    def add(self, time: float, server: Server) -> "Scenario":
+        self.events.append(ScenarioEvent(time, "add", server=server))
+        return self
+
+    # recovery is adding the same server back
+    recover = add
+
+    def slowdown(self, time: float, sid: str, scale: float) -> "Scenario":
+        self.events.append(ScenarioEvent(time, "slowdown", sid=sid, scale=scale))
+        return self
+
+    def burst(self, time: float, duration: float, scale: float) -> "Scenario":
+        self.events.append(
+            ScenarioEvent(time, "burst", scale=scale, duration=duration))
+        return self
+
+    # -- views ------------------------------------------------------------------
+    def cluster_events(self) -> List[ScenarioEvent]:
+        """fail/add/slowdown events, time-sorted (stable)."""
+        evs = [e for e in self.events if e.kind != "burst"]
+        return sorted(evs, key=lambda e: e.time)
+
+    def arrival_phases(self, base_rate: float) -> List[Tuple[float, float, float]]:
+        """Piecewise-constant arrival rate over [0, horizon): the base rate
+        times the product of every burst multiplier active in the segment."""
+        bursts = [e for e in self.events if e.kind == "burst"]
+        points = {0.0, self.horizon}
+        for b in bursts:
+            points.add(min(b.time, self.horizon))
+            points.add(min(b.time + b.duration, self.horizon))
+        cuts = sorted(p for p in points if 0.0 <= p <= self.horizon)
+        phases = []
+        for a, b in zip(cuts[:-1], cuts[1:]):
+            rate = base_rate
+            for ev in bursts:
+                if ev.time <= a and a < ev.time + ev.duration:
+                    rate *= ev.scale
+            if b > a:
+                phases.append((a, b, rate))
+        return phases
+
+    def generate_arrivals(
+        self, base_rate: float, seed: int = 0
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """(times, works) over the horizon, bursts applied."""
+        return phased_poisson(self.arrival_phases(base_rate), seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# Queueing-level scenario runner
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ScenarioLogEntry:
+    time: float
+    kind: str
+    sid: str
+    requeued: int           # in-flight/queued jobs re-dispatched
+    n_chains: int
+    total_rate: float       # nu of the new composition
+    degraded: bool          # composition fell back to the c=1 everything-chain
+
+
+@dataclasses.dataclass
+class ScenarioResult:
+    result: SimResult
+    log: List[ScenarioLogEntry]
+    n_jobs: int
+    completed_all: bool
+    reconfigurations: int
+    restarts: int
+
+    def p99(self) -> float:
+        rt = self.result.response_times
+        return float(np.percentile(rt, 99)) if len(rt) else math.nan
+
+
+def compose_or_degrade(
+    servers: Sequence[Server],
+    spec: ServiceSpec,
+    lam: float,
+    rho_bar: float,
+    tuner: str = "bound-lower",
+) -> Tuple[List[float], List[int], List[Tuple], bool]:
+    """(rates, caps, keys, degraded) of the best composition for the cluster.
+
+    Runs the paper's tuned pipeline; if the demand is infeasible for the
+    (possibly shrunken) cluster, falls back to ``c = 1`` over every server —
+    the system is overloaded but keeps serving with whatever chains exist.
+    Returns empty lists when not a single complete chain can be formed.
+    ``keys`` are the chains' physical identities (server-id + block tuples),
+    used by ``VectorSimulator.reconfigure`` to decide which chains truly
+    survive a recomposition.
+    """
+    try:
+        _, _, alloc = compose(servers, spec, lam, rho_bar, tuner=tuner)
+        degraded = False
+    except ValueError:
+        pl = gbp_cr(servers, spec, 1, lam, rho_bar, use_all_servers=True)
+        alloc = gca(servers, pl)
+        degraded = True
+    pairs = alloc.sorted_by_rate()
+    rates = [ch.rate for ch, _ in pairs]
+    caps = [c for _, c in pairs]
+    keys = [ch.key() for ch, _ in pairs]
+    return rates, caps, keys, degraded
+
+
+def _effective(cluster: Dict[str, Server], tau: Dict[str, float]) -> List[Server]:
+    return [
+        Server(s.sid, s.memory_gb, s.tau_c * tau[s.sid], s.tau_p * tau[s.sid])
+        for s in cluster.values()
+    ]
+
+
+def run_scenario(
+    servers: Sequence[Server],
+    spec: ServiceSpec,
+    scenario: Scenario,
+    base_rate: float,
+    policy: str = "jffc",
+    rho_bar: float = 0.7,
+    tuner: str = "bound-lower",
+    seed: int = 0,
+    warmup_fraction: float = 0.0,
+    arrivals: Optional[Tuple[np.ndarray, np.ndarray]] = None,
+) -> ScenarioResult:
+    """Simulate the scenario end to end at the queueing level.
+
+    The cluster starts as ``servers``; at each cluster event the composition
+    is re-tuned on the survivors (with straggler tau multipliers applied) and
+    the simulator reconfigures in place — in-flight jobs on retired chains
+    restart (re-prefill), queue and completed statistics carry over.  All
+    arrivals are generated up front from the scenario's burst phases unless
+    an explicit ``(times, works)`` pair is passed (e.g. to compare policies
+    on the identical trace).
+    """
+    cluster: Dict[str, Server] = {s.sid: s for s in servers}
+    tau: Dict[str, float] = {s.sid: 1.0 for s in servers}
+    if arrivals is None:
+        times, works = scenario.generate_arrivals(base_rate, seed=seed)
+    else:
+        times, works = arrivals
+    rates, caps, keys, degraded = compose_or_degrade(
+        _effective(cluster, tau), spec, base_rate, rho_bar, tuner)
+    sim = VectorSimulator(rates, caps, policy=policy, seed=seed + 1, keys=keys)
+    sim.add_arrivals(times, works)
+    log: List[ScenarioLogEntry] = []
+    for ev in scenario.cluster_events():
+        sim.run_until(ev.time)
+        if ev.kind == "fail":
+            cluster.pop(ev.sid, None)
+            tau.pop(ev.sid, None)
+        elif ev.kind == "add":
+            cluster[ev.server.sid] = ev.server
+            tau[ev.server.sid] = 1.0
+        elif ev.kind == "slowdown":
+            if ev.sid in tau:
+                tau[ev.sid] = ev.scale
+        rates, caps, keys, degraded = compose_or_degrade(
+            _effective(cluster, tau), spec, base_rate, rho_bar, tuner)
+        requeued = sim.reconfigure(rates, caps, at_time=ev.time, keys=keys)
+        log.append(ScenarioLogEntry(
+            time=ev.time, kind=ev.kind, sid=ev.sid or
+            (ev.server.sid if ev.server else ""),
+            requeued=requeued, n_chains=len(rates),
+            total_rate=float(sum(m * c for m, c in zip(rates, caps))),
+            degraded=degraded))
+    sim.run_to_completion()
+    res = sim.result(warmup_fraction)
+    return ScenarioResult(
+        result=res,
+        log=log,
+        n_jobs=len(times),
+        completed_all=(sim.queue_len() == 0 and sim.in_flight == 0
+                       and len(sim.comp) == len(times)),
+        reconfigurations=sim.reconfigurations,
+        restarts=sim.restarts,
+    )

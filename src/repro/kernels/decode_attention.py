@@ -22,6 +22,11 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax renamed CompilerParams -> TPUCompilerParams (and back, in newer
+# releases); resolve whichever this version provides.
+_CompilerParams = getattr(pltpu, 'CompilerParams', None) or \
+    getattr(pltpu, 'TPUCompilerParams')
+
 NEG_INF = -1e30
 
 
@@ -107,7 +112,7 @@ def decode_attention_pallas(
             pltpu.VMEM((G, 1), jnp.float32),
             pltpu.VMEM((G, hd), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -23,6 +23,11 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax renamed CompilerParams -> TPUCompilerParams (and back, in newer
+# releases); resolve whichever this version provides.
+_CompilerParams = getattr(pltpu, 'CompilerParams', None) or \
+    getattr(pltpu, 'TPUCompilerParams')
+
 NEG_INF = -1e30
 
 
@@ -134,7 +139,7 @@ def flash_attention_pallas(
             pltpu.VMEM((block_q, 1), jnp.float32),
             pltpu.VMEM((block_q, hd), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -209,6 +209,69 @@ class Orchestrator:
         if self.tau_scale[sid] > self.cfg.straggler_threshold:
             self._recompose_preserving(now)
 
+    # -- scenario hooks (repro.core.scenarios timelines on a live system) ----------
+    def apply_scenario_event(self, ev, now: float = 0.0) -> dict:
+        """Apply one ``repro.core.scenarios.ScenarioEvent`` to the live
+        system: ``fail`` -> :meth:`fail_server`, ``add`` ->
+        :meth:`add_server`, ``slowdown`` -> :meth:`report_tau` (the scale is
+        fed as the observed straggler ratio).  ``burst`` events shape the
+        request arrival process, not the cluster, and are a no-op here."""
+        out = {"time": ev.time, "kind": ev.kind, "requeued": 0}
+        if ev.kind == "fail":
+            if ev.sid in self.servers:
+                out["requeued"] = self.fail_server(ev.sid, now)
+        elif ev.kind == "add":
+            self.add_server(ev.server, now)
+        elif ev.kind == "slowdown":
+            self.report_tau(ev.sid, ev.scale, now)
+        out["chains"] = len(self.engines)
+        return out
+
+    def run_scenario(
+        self,
+        scenario,
+        requests: Sequence,
+        dt: float = 1.0,
+        max_rounds: int = 100_000,
+    ) -> dict:
+        """Drive decode rounds while firing the scenario's cluster events.
+
+        ``requests`` is a list of ``Request`` (all submitted at t=0) or of
+        ``(time, Request)`` pairs.  Each round advances time by ``dt``,
+        applies due events, submits due requests, steps every engine, and
+        re-admits from the queue.  Returns a summary with the applied-event
+        log merged into :meth:`stats`.
+        """
+        timed: List[Tuple[float, Request]] = []
+        for item in requests:
+            if isinstance(item, Request):
+                timed.append((0.0, item))
+            else:
+                timed.append((float(item[0]), item[1]))
+        timed.sort(key=lambda p: p[0])
+        pending = deque(scenario.cluster_events())
+        applied: List[dict] = []
+        next_req = 0
+        rounds = 0
+        t = 0.0
+        while rounds < max_rounds:
+            t = rounds * dt
+            while pending and pending[0].time <= t:
+                applied.append(self.apply_scenario_event(pending.popleft(), t))
+            while next_req < len(timed) and timed[next_req][0] <= t:
+                self.submit(timed[next_req][1], t)
+                next_req += 1
+            self.step(t)
+            while self.queue:                    # admit whenever capacity frees
+                if not self._dispatch(self.queue[0], t):
+                    break
+                self.queue.popleft()
+            rounds += 1
+            if (next_req >= len(timed) and not pending and not self.queue
+                    and not any(e.requests for e in self.engines)):
+                break
+        return {"rounds": rounds, "events": applied, **self.stats()}
+
     # -- introspection ---------------------------------------------------------------
     def stats(self) -> dict:
         rts = [r.response_time() for r in self.finished if r.response_time() is not None]

@@ -21,9 +21,30 @@ from typing import Any, Dict, Optional, Tuple
 
 import jax
 import numpy as np
-import zstandard
+
+try:
+    import zstandard
+except ImportError:          # optional: fall back to uncompressed checkpoints
+    zstandard = None
 
 _SEP = "/"
+
+
+def _codec() -> str:
+    return "zstd" if zstandard is not None else "raw"
+
+
+class _RawWriter:
+    """stream_writer-compatible passthrough when zstandard is unavailable."""
+
+    def __init__(self, f):
+        self._f = f
+
+    def __enter__(self):
+        return self._f
+
+    def __exit__(self, *exc):
+        return False
 
 
 def _flatten(tree: Any) -> Dict[str, np.ndarray]:
@@ -40,11 +61,12 @@ def save(ckpt_dir: str, step: int, tree: Any, metadata: Optional[dict] = None) -
     flat = _flatten(jax.device_get(tree))
     treedef = jax.tree_util.tree_structure(tree)
     entries = []
-    cctx = zstandard.ZstdCompressor(level=3)
     tmp = tempfile.mkdtemp(dir=ckpt_dir, prefix=".tmp_")
     try:
         with open(os.path.join(tmp, "data.bin.zst"), "wb") as f:
-            with cctx.stream_writer(f) as w:
+            writer = (zstandard.ZstdCompressor(level=3).stream_writer(f)
+                      if zstandard is not None else _RawWriter(f))
+            with writer as w:
                 off = 0
                 for name in sorted(flat):
                     arr = flat[name]
@@ -59,6 +81,7 @@ def save(ckpt_dir: str, step: int, tree: Any, metadata: Optional[dict] = None) -
             "step": step,
             "entries": entries,
             "treedef": str(treedef),
+            "codec": _codec(),
             "metadata": metadata or {},
         }
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
@@ -91,9 +114,16 @@ def restore(path: str, like: Any) -> Tuple[Any, dict]:
     """Restore into the structure of ``like`` (shape/dtype validated)."""
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)
-    dctx = zstandard.ZstdDecompressor()
+    codec = manifest.get("codec", "zstd")   # pre-codec checkpoints were zstd
     with open(os.path.join(path, "data.bin.zst"), "rb") as f:
-        raw = dctx.stream_reader(f).read()
+        if codec == "zstd":
+            if zstandard is None:
+                raise ImportError(
+                    "checkpoint was written with zstd compression but "
+                    "zstandard is not installed")
+            raw = zstandard.ZstdDecompressor().stream_reader(f).read()
+        else:
+            raw = f.read()
     flat = {}
     for e in manifest["entries"]:
         buf = raw[e["offset"]: e["offset"] + e["nbytes"]]

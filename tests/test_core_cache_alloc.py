@@ -90,6 +90,41 @@ def test_gca_memory_conservation(seed, c):
         assert used.get(sid, 0) + r == init[sid]
 
 
+def _assert_gca_conservation(servers, spec, pl, alloc):
+    """Granted capacities never exceed the residual slots they consumed, and
+    residuals stay non-negative: used + residual == initial, per server."""
+    used = {sid: 0 for sid in alloc.residual_slots}
+    for ch, cap in zip(alloc.chains, alloc.capacities):
+        assert cap >= 1
+        for sid, m_ij in ch.hops():
+            used[sid] = used.get(sid, 0) + m_ij * cap
+    init = initial_slots(servers, spec, pl)
+    for sid, r in alloc.residual_slots.items():
+        assert r >= 0, f"{sid} oversubscribed"
+        assert used.get(sid, 0) + r == init[sid]
+
+
+def test_gca_conservation_deterministic():
+    """Seeded sweep of GCA memory conservation (runs without hypothesis)."""
+    for seed in range(30):
+        rng = random.Random(seed * 7 + 1)
+        servers = [
+            Server(f"s{i}", rng.uniform(8, 40), rng.uniform(0.01, 0.5),
+                   rng.uniform(0.01, 0.3))
+            for i in range(rng.randint(3, 10))
+        ]
+        spec = ServiceSpec(num_blocks=rng.randint(3, 12),
+                           block_size_gb=1.32, cache_size_gb=0.11)
+        c = rng.randint(1, 5)
+        pl = gbp_cr(servers, spec, c, 0.01, 0.7, use_all_servers=True)
+        if not pl.assignment:
+            continue
+        alloc = gca(servers, pl)
+        _assert_gca_conservation(servers, spec, pl, alloc)
+        # capacities were bounded by the residuals available when granted
+        assert all(cap >= 1 for cap in alloc.capacities)
+
+
 @settings(max_examples=20, deadline=None)
 @given(seed=st.integers(0, 10_000))
 def test_gca_beats_reserved_allocation(seed):

@@ -117,6 +117,62 @@ def test_theorem_3_4_homogeneous_optimality(n, c, seed):
             assert k_star <= k_rand
 
 
+def _random_servers(rng, n, mem_lo=10.0, mem_hi=45.0):
+    return [
+        Server(f"s{i}", rng.uniform(mem_lo, mem_hi), rng.uniform(0.0, 0.4),
+               rng.uniform(0.01, 0.3))
+        for i in range(n)
+    ]
+
+
+def _assert_placement_invariants(pl, spec):
+    """Chains are disjoint, each covers blocks 1..L in order, and
+    ``Placement.covered`` agrees with the chain lists."""
+    flat = [sid for chain in pl.chains for sid in chain]
+    assert len(flat) == len(set(flat)), "chains share a server"
+    for chain in pl.chains:
+        assert chain, "empty chain"
+        assert pl.covered(chain), f"chain {chain} does not cover 1..L"
+        # coverage is order-sensitive: a proper suffix misses block 1 unless
+        # its head was independently placed at a = 1
+        tail = chain[1:]
+        if tail and pl.assignment[tail[0]][0] != 1:
+            assert not pl.covered(tail)
+    assert not pl.covered([])
+    # every placed server respects block bounds
+    for sid, (a, m) in pl.assignment.items():
+        assert 1 <= a and a + m - 1 <= spec.num_blocks
+
+
+def test_gbp_cr_chains_disjoint_and_cover_deterministic():
+    """Seeded sweep of the placement invariants (runs without hypothesis)."""
+    for seed in range(40):
+        rng = random.Random(seed)
+        servers = _random_servers(rng, rng.randint(3, 14))
+        spec = ServiceSpec(num_blocks=rng.randint(4, 16),
+                           block_size_gb=1.0, cache_size_gb=0.15)
+        c = rng.randint(1, 6)
+        pl = gbp_cr(servers, spec, c, arrival_rate=0.05, rho_bar=0.7,
+                    use_all_servers=True)
+        _assert_placement_invariants(pl, spec)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    n=st.integers(2, 14),
+    L=st.integers(2, 20),
+    c=st.integers(1, 6),
+    seed=st.integers(0, 100_000),
+)
+def test_gbp_cr_chains_disjoint_and_cover_property(n, L, c, seed):
+    rng = random.Random(seed)
+    servers = _random_servers(rng, n)
+    spec = ServiceSpec(num_blocks=L, block_size_gb=1.0, cache_size_gb=0.15)
+    pl = gbp_cr(servers, spec, c, arrival_rate=0.05, rho_bar=0.7,
+                use_all_servers=True)
+    _assert_placement_invariants(pl, spec)
+
+
 @settings(max_examples=25, deadline=None)
 @given(
     n=st.integers(2, 10),

@@ -1,0 +1,168 @@
+"""Scenario engine regressions: scripted failures lose no requests, bursts
+degrade JFFC's p99 far less than random dispatch, and the orchestrator
+replays the same timelines on a live system."""
+import random
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    Scenario,
+    ScenarioEvent,
+    Server,
+    ServiceSpec,
+    compose_or_degrade,
+    run_scenario,
+)
+
+SPEC = ServiceSpec(num_blocks=10, block_size_gb=1.32, cache_size_gb=0.11)
+
+
+def cluster(n=8, seed=1234):
+    """Same construction as the shared ``small_cluster`` fixture, with the
+    size adjustable for the degraded/blackout cases."""
+    rng = random.Random(seed)
+    return [
+        Server(f"s{i}", rng.uniform(15, 40), rng.uniform(0.02, 0.2),
+               rng.uniform(0.02, 0.2))
+        for i in range(n)
+    ]
+
+
+# ---------------------------------------------------------------------------
+# Scenario description mechanics
+# ---------------------------------------------------------------------------
+
+def test_event_validation():
+    with pytest.raises(ValueError):
+        ScenarioEvent(1.0, "explode")
+    with pytest.raises(ValueError):
+        ScenarioEvent(1.0, "fail")            # needs sid
+    with pytest.raises(ValueError):
+        ScenarioEvent(1.0, "add")             # needs server
+
+
+def test_arrival_phases_overlay():
+    sc = Scenario(horizon=100.0).burst(20.0, 10.0, 4.0).burst(60.0, 20.0, 2.0)
+    phases = sc.arrival_phases(1.0)
+    assert phases == [(0.0, 20.0, 1.0), (20.0, 30.0, 4.0), (30.0, 60.0, 1.0),
+                      (60.0, 80.0, 2.0), (80.0, 100.0, 1.0)]
+
+
+def test_burst_raises_local_arrival_rate():
+    sc = Scenario(horizon=300.0).burst(100.0, 50.0, 8.0)
+    times, works = sc.generate_arrivals(2.0, seed=3)
+    assert len(times) == len(works)
+    in_burst = np.sum((times >= 100.0) & (times < 150.0))
+    # expected 8*2*50 = 800 burst arrivals vs 2*250 = 500 elsewhere
+    assert in_burst > 600
+    base = np.sum(times < 100.0)
+    assert 120 < base < 300                   # ~200 expected
+
+
+# ---------------------------------------------------------------------------
+# Failure / recovery regressions (the FailSafe regime)
+# ---------------------------------------------------------------------------
+
+def test_fixtures_match_module_constants(small_cluster, small_spec):
+    """The shared conftest fixtures and this module's helpers describe the
+    same canonical cluster, so results are comparable across test modules."""
+    assert small_spec == SPEC
+    local = cluster()
+    assert len(small_cluster) == len(local)
+    assert [s.sid for s in small_cluster] == [s.sid for s in local]
+    assert all(a == b for a, b in zip(small_cluster, local))
+
+
+def test_failure_mid_run_loses_no_requests(small_cluster, small_spec):
+    servers = small_cluster
+    sc = Scenario(horizon=200.0).fail(60.0, "s3").fail(90.0, "s1")
+    res = run_scenario(servers, small_spec, sc, base_rate=3.0, seed=0)
+    assert res.completed_all
+    assert res.result.n_completed == res.n_jobs
+    assert res.reconfigurations == 2
+    assert np.all(res.result.waiting_times >= 0)
+    # response times of restarted jobs include the failure penalty but stay
+    # finite
+    assert np.isfinite(res.result.response_times).all()
+
+
+def test_failure_under_load_restarts_in_flight_jobs(small_cluster, small_spec):
+    servers = small_cluster
+    sc = Scenario(horizon=10.0).fail(5.0, "s0")
+    res = run_scenario(servers, small_spec, sc, base_rate=60.0, seed=0)
+    assert res.completed_all
+    assert res.restarts > 0                   # slots were busy at the failure
+    assert res.log[0].requeued == res.restarts
+
+
+def test_recovery_restores_service_rate(small_cluster, small_spec):
+    servers = small_cluster
+    sc = (Scenario(horizon=100.0)
+          .fail(30.0, "s2")
+          .recover(60.0, servers[2]))
+    res = run_scenario(servers, small_spec, sc, base_rate=3.0, seed=1)
+    assert res.completed_all
+    fail_entry, add_entry = res.log
+    assert fail_entry.kind == "fail" and add_entry.kind == "add"
+    assert add_entry.total_rate > fail_entry.total_rate
+
+
+def test_infeasible_demand_degrades_but_serves():
+    # two small servers cannot meet rho_bar-scaled demand -> degraded c=1
+    servers = cluster(n=4)
+    sc = Scenario(horizon=6.0).fail(3.0, "s0").fail(3.0, "s1")
+    res = run_scenario(servers, SPEC, sc, base_rate=40.0, seed=2)
+    assert res.completed_all                  # arrivals stop; backlog drains
+    assert any(e.degraded for e in res.log)
+
+
+def test_slowdown_triggers_recomposition(small_cluster, small_spec):
+    servers = small_cluster
+    sc = Scenario(horizon=50.0).slowdown(25.0, "s5", 3.0)
+    res = run_scenario(servers, small_spec, sc, base_rate=3.0, seed=3)
+    assert res.completed_all
+    assert res.log[0].kind == "slowdown"
+    assert res.reconfigurations == 1
+
+
+# ---------------------------------------------------------------------------
+# Burst regression (the DeepServe regime): JFFC beats random dispatch on p99
+# ---------------------------------------------------------------------------
+
+def test_burst_p99_jffc_beats_random_dispatch(small_cluster, small_spec):
+    servers = small_cluster
+    sc = Scenario(horizon=400.0).burst(200.0, 40.0, 6.0)
+    arr = sc.generate_arrivals(2.0, seed=7)   # identical trace for both
+    p99 = {}
+    for policy in ("jffc", "random"):
+        res = run_scenario(servers, small_spec, sc, base_rate=2.0,
+                           policy=policy, seed=0, arrivals=arr)
+        assert res.completed_all
+        p99[policy] = res.p99()
+    assert p99["jffc"] < p99["random"], p99
+
+
+def test_compose_or_degrade_empty_cluster():
+    rates, caps, keys, degraded = compose_or_degrade([], SPEC, 1.0, 0.7)
+    assert rates == [] and caps == [] and keys == []
+    assert degraded
+
+
+@pytest.mark.parametrize("policy", ("jffc", "jffs", "random"))
+def test_total_blackout_and_recovery(policy):
+    """Every server dies mid-run, then the whole cluster returns: arrivals
+    park during the outage and every job still completes — for every
+    vectorized policy, not just the central-queue one."""
+    servers = cluster(n=4)
+    sc = Scenario(horizon=40.0)
+    for s in servers:
+        sc.fail(10.0, s.sid)
+    for s in servers:
+        sc.recover(20.0, s)
+    res = run_scenario(servers, SPEC, sc, base_rate=5.0, policy=policy, seed=0)
+    assert res.completed_all
+    assert res.result.n_completed == res.n_jobs
+    assert res.log[len(servers) - 1].n_chains == 0      # true blackout
+    # jobs that arrived during the outage waited for the recovery
+    assert float(np.max(res.result.waiting_times)) > 5.0

@@ -160,6 +160,30 @@ def test_straggler_feedback_triggers_recompose(tiny):
     assert orch.recompositions > n0
 
 
+def test_orchestrator_runs_scripted_scenario(tiny):
+    """A core.scenarios timeline (failure -> straggler -> recovery) driven
+    through the live orchestrator completes every request."""
+    from repro.core import Scenario
+
+    orch = _orchestrator(tiny, n_servers=4)
+    victim = orch.engines[0].chain.servers[0]
+    victim_server = orch.servers[victim]
+    straggler = orch.engines[-1].chain.servers[0]
+    scenario = (Scenario(horizon=10.0)
+                .fail(2.0, victim)
+                .slowdown(4.0, straggler, 1.6)
+                .recover(6.0, victim_server))
+    reqs = [_mk_request(i, 8, 4) for i in range(6)]
+    summary = orch.run_scenario(scenario, reqs, dt=1.0)
+    assert all(r.state == State.DONE for r in reqs)
+    assert summary["finished"] == 6 and summary["failed"] == 0
+    kinds = [e["kind"] for e in summary["events"]]
+    assert kinds == ["fail", "slowdown", "add"]
+    assert summary["recompositions"] >= 2     # fail + add at minimum
+    # the failed server really left and came back
+    assert victim in orch.servers
+
+
 def test_service_spec_and_tau_estimates():
     cfg = get("qwen3-8b")
     spec = service_spec_for(cfg, max_seq=32768, tp_degree=16)

@@ -1,0 +1,152 @@
+"""Vectorized engine vs. the scalar oracle: bit-identical traces, segmented
+runs, no-op reconfigurations, and agreement with the Section 3.2 queueing
+predictions (Thm 3.7 bounds, exact CTMC)."""
+import random
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    POLICIES,
+    VectorSimulator,
+    VECTORIZED_POLICIES,
+    exact_occupancy_ctmc,
+    occupancy_lower_bound,
+    occupancy_upper_bound,
+    simulate,
+    simulate_vectorized,
+)
+from repro.core.simulator import poisson_arrivals
+
+SERVERS = [(1.0, 2), (0.8, 2), (0.5, 4)]   # nu = 5.6
+RATES = [m for m, _ in SERVERS]
+CAPS = [c for _, c in SERVERS]
+
+
+def _scalar(policy, arrivals, seed):
+    pol = POLICIES[policy](RATES, CAPS, random.Random(seed + 1))
+    return simulate(pol, arrivals)
+
+
+def _identical(a, b):
+    assert a.n_completed == b.n_completed
+    assert np.array_equal(a.response_times, b.response_times)
+    assert np.array_equal(a.waiting_times, b.waiting_times)
+    assert np.array_equal(a.service_times, b.service_times)
+    assert a.sim_time == b.sim_time
+
+
+@pytest.mark.parametrize("policy", VECTORIZED_POLICIES)
+@pytest.mark.parametrize("lam", [2.0, 4.5, 5.4])      # light / heavy / near-sat
+@pytest.mark.parametrize("seed", [0, 3])
+def test_bit_identical_response_times(policy, lam, seed):
+    arrivals = poisson_arrivals(lam, 8_000, random.Random(seed))
+    _identical(_scalar(policy, arrivals, seed),
+               simulate_vectorized(policy, SERVERS, arrivals, seed=seed))
+
+
+def test_bit_identical_zero_warmup_and_full_trace():
+    arrivals = poisson_arrivals(4.5, 5_000, random.Random(11))
+    sc = simulate(POLICIES["jffc"](RATES, CAPS, random.Random(12)), arrivals,
+                  warmup_fraction=0.0)
+    vec = simulate_vectorized("jffc", SERVERS, arrivals, seed=11,
+                              warmup_fraction=0.0)
+    _identical(sc, vec)
+    assert vec.n_completed == len(arrivals)
+    # every job obeys arrival <= start <= finish
+    assert np.all(vec.waiting_times >= 0)
+    assert np.all(vec.service_times > 0)
+
+
+def test_segmented_run_equals_one_shot():
+    """run_until pauses must not perturb the trajectory."""
+    arrivals = poisson_arrivals(4.5, 6_000, random.Random(5))
+    one = simulate_vectorized("jffc", SERVERS, arrivals, seed=5)
+    sim = VectorSimulator(RATES, CAPS, policy="jffc", seed=6)
+    sim.add_arrivals(arrivals)
+    horizon = arrivals[-1][0]
+    for frac in (0.1, 0.25, 0.5, 0.9):
+        sim.run_until(frac * horizon)
+    sim.run_to_completion()
+    _identical(one, sim.result())
+
+
+def test_noop_reconfigure_preserves_trajectory():
+    """Reconfiguring to the identical chain set (same identities) must keep
+    every in-flight job and not change a single response time."""
+    arrivals = poisson_arrivals(4.5, 6_000, random.Random(9))
+    one = simulate_vectorized("jffc", SERVERS, arrivals, seed=9)
+    keys = [f"chain{k}" for k in range(len(RATES))]
+    sim = VectorSimulator(RATES, CAPS, policy="jffc", seed=10, keys=keys)
+    sim.add_arrivals(arrivals)
+    horizon = arrivals[-1][0]
+    for frac in (0.3, 0.6):
+        sim.run_until(frac * horizon)
+        requeued = sim.reconfigure(RATES, CAPS, at_time=frac * horizon,
+                                   keys=keys)
+        assert requeued == 0
+    sim.run_to_completion()
+    _identical(one, sim.result())
+
+
+def test_reconfigure_restarts_lose_no_jobs():
+    """Dropping to a smaller chain set mid-run re-dispatches in-flight work;
+    everything still completes exactly once."""
+    arrivals = poisson_arrivals(4.5, 4_000, random.Random(21))
+    sim = VectorSimulator(RATES, CAPS, policy="jffc", seed=22,
+                          keys=["a", "b", "c"])
+    sim.add_arrivals(arrivals)
+    t_half = arrivals[2000][0]
+    sim.run_until(t_half)
+    requeued = sim.reconfigure([1.0, 0.5], [2, 4], at_time=t_half,
+                               keys=["a", "c"])   # chain "b" retired
+    assert requeued >= 0
+    sim.run_to_completion()
+    res = sim.result(warmup_fraction=0.0)
+    assert res.n_completed == len(arrivals)
+    assert sim.queue_len() == 0 and sim.in_flight == 0
+    assert np.all(res.waiting_times >= 0)
+    # completions are unique (exactly-once)
+    assert len(set(sim.comp)) == len(sim.comp) == len(arrivals)
+
+
+def test_mean_occupancy_within_thm37_bounds():
+    """Little's-law occupancy of a long JFFC run sits inside the Theorem 3.7
+    birth-death bounds (5% slack for finite-run noise)."""
+    lam = 4.5
+    res = simulate_vectorized(
+        "jffc", SERVERS, poisson_arrivals(lam, 60_000, random.Random(1)),
+        seed=1, warmup_fraction=0.2)
+    occ = lam * res.mean_response       # PASTA + Little
+    lo = occupancy_lower_bound(SERVERS, lam)
+    hi = occupancy_upper_bound(SERVERS, lam)
+    assert lo * 0.95 <= occ <= hi * 1.05, (lo, occ, hi)
+
+
+def test_mean_occupancy_matches_exact_ctmc():
+    """Small system: simulated occupancy matches the truncated-CTMC ground
+    truth within 8%."""
+    servers = [(1.0, 2), (0.6, 1)]
+    lam = 2.0
+    exact = exact_occupancy_ctmc(servers, lam, queue_cap=400)
+    res = simulate_vectorized(
+        "jffc", servers, poisson_arrivals(lam, 80_000, random.Random(2)),
+        seed=2, warmup_fraction=0.2)
+    occ = lam * res.mean_response
+    assert occ == pytest.approx(exact, rel=0.08)
+
+
+def test_dedicated_policy_conservation():
+    """jffs / random: all jobs complete, waits non-negative, service times
+    consistent with some chain's rate."""
+    arrivals = poisson_arrivals(4.0, 5_000, random.Random(3))
+    for policy in ("jffs", "random"):
+        res = simulate_vectorized(policy, SERVERS, arrivals, seed=3,
+                                  warmup_fraction=0.0)
+        assert res.n_completed == len(arrivals)
+        assert np.all(res.waiting_times >= -1e-12)
+
+
+def test_vectorized_rejects_unsupported_policy():
+    with pytest.raises(ValueError):
+        VectorSimulator(RATES, CAPS, policy="jsq")
