@@ -15,6 +15,7 @@ import sys
 import time
 
 from . import (
+    bench_autoscale,
     bench_cache_alloc,
     bench_kernels,
     bench_load_balance,
@@ -36,6 +37,7 @@ SUITES = {
     "model_validation": bench_model_validation.run,
     "kernels": bench_kernels.run,
     "simulator": bench_simulator.run,
+    "autoscale": bench_autoscale.run,
 }
 
 FAST_OVERRIDES = {
@@ -46,11 +48,13 @@ FAST_OVERRIDES = {
     "fig8_overall": lambda: bench_overall.run(seeds=range(2)),
     "table1_trace": lambda: bench_table1.run(n_requests=1200),
     "simulator": lambda: bench_simulator.run(n_jobs=20_000, million=False),
+    "autoscale": lambda: bench_autoscale.run(horizon=300.0),
 }
 
 
 def _headline(row: dict) -> str:
     for key in ("engine_speedup", "pipeline_speedup", "bit_identical",
+                "predictive_dominates_static", "all_policies_complete",
                 "jobs_per_s", "completed_all",
                 "reduction_vs_petals_pct", "proposed_improvement_vs_petals_pct",
                 "gbp_beats_or_ties_best_random", "gca_within_1_of_ilp",

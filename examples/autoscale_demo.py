@@ -1,0 +1,136 @@
+"""Closed-loop autoscaling demo: serve a day/night curve you did not script.
+
+Two legs, mirroring the two execution planes:
+
+1. **Queueing plane** — a diurnal trace (trough 1.2 jobs/s, peak ~15 jobs/s)
+   hits a cluster that starts as ONE small server.  The controller watches
+   the telemetry window, the predictive policy forecasts the ramp, sizes the
+   fleet through the paper's own composition pipeline, and servers join
+   after a provisioning warm-up lag.  Compare against the peak-provisioned
+   static cluster: same tail latency, fewer server-seconds.
+
+2. **Live plane** — the same control loop bound to a (mock-model)
+   ``Orchestrator``: decisions actuate through ``add_server`` (with warm-up)
+   and ``retire_servers`` (graceful drain) between decode rounds.
+
+Run:  PYTHONPATH=src python examples/autoscale_demo.py
+"""
+import numpy as np
+
+from repro.core import (
+    Scenario,
+    Server,
+    ServiceSpec,
+    diurnal_phases,
+    diurnal_poisson,
+    run_scenario,
+)
+from repro.autoscale import (
+    AutoscaleController,
+    ControllerConfig,
+    PredictivePolicy,
+    TargetUtilizationPolicy,
+    Telemetry,
+    TelemetryConfig,
+    servers_needed,
+    static_baseline_cost,
+)
+from repro.serving import Request, mock_orchestrator
+
+SPEC = ServiceSpec(num_blocks=10, block_size_gb=1.32, cache_size_gb=0.11)
+TEMPLATE = Server("template", 16.0, 0.05, 0.08)
+
+
+def mk(sid: str) -> Server:
+    return Server(sid, TEMPLATE.memory_gb, TEMPLATE.tau_c, TEMPLATE.tau_p)
+
+
+def controller(policy) -> AutoscaleController:
+    return AutoscaleController(
+        policy, TEMPLATE,
+        ControllerConfig(interval=5.0, cooldown=20.0, warmup_lag=10.0,
+                         min_servers=1, max_servers=40,
+                         slo_response_time=3.0),
+        telemetry=Telemetry(TelemetryConfig(window=20.0)))
+
+
+def queueing_plane() -> None:
+    print("=" * 72)
+    print("Queueing plane: diurnal trace, 600 s, trough 1.2/s -> peak 14.8/s")
+    print("=" * 72)
+    horizon, base_rate, amplitude = 600.0, 8.0, 0.85
+    arrivals = diurnal_poisson(base_rate, horizon, amplitude=amplitude,
+                               seed=3)
+    scenario = Scenario(horizon=horizon)
+
+    peak = base_rate * (1 + amplitude)
+    n_static = servers_needed([], TEMPLATE, SPEC, peak, 0.7, max_extra=60)
+    static = [mk(f"st{i}") for i in range(n_static)]
+    res = run_scenario(static, SPEC, scenario, base_rate=base_rate,
+                       arrivals=arrivals, seed=0)
+    srep = static_baseline_cost(n_static, res.result.sim_time,
+                                res.result.response_times, 3.0)
+    print(f"static x{n_static} (peak-provisioned): p99 {res.p99():.2f} s, "
+          f"{srep.server_seconds:.0f} server-s, "
+          f"{srep.slo_violations} SLO violations")
+
+    for policy in (PredictivePolicy(TEMPLATE, lead=30.0, margin=1.2),
+                   TargetUtilizationPolicy()):
+        ctl = controller(policy)
+        res = run_scenario([mk("base0")], SPEC, scenario,
+                           base_rate=base_rate, arrivals=arrivals,
+                           controller=ctl, seed=0)
+        rep = ctl.report(res.result.response_times, 0)
+        print(f"{policy.name:>12}: p99 {res.p99():.2f} s, "
+              f"{rep.server_seconds:.0f} server-s, "
+              f"{rep.slo_violations} SLO violations, "
+              f"{rep.n_actions} actions, peak {rep.peak_servers} servers")
+        for rec in ctl.records[:6]:
+            print(f"     t={rec.time:6.1f}  {rec.action:6s} x{rec.count}  "
+                  f"({rec.reason})")
+        if len(ctl.records) > 6:
+            print(f"     ... {len(ctl.records) - 6} more actions")
+
+
+def live_plane() -> None:
+    print()
+    print("=" * 72)
+    print("Live plane: mock-model Orchestrator + bound controller")
+    print("=" * 72)
+    rng = np.random.default_rng(7)
+    horizon = 200.0
+    times = []
+    for (a, b, rate) in diurnal_phases(2.0, horizon, amplitude=0.8,
+                                       n_segments=16):
+        n = rng.poisson(rate * (b - a) * 0.6)
+        times.extend(np.sort(rng.uniform(a, b, n)).tolist())
+    times.sort()
+    reqs = [(t, Request(rid=i, prompt=np.ones(4, np.int32),
+                        max_new_tokens=6, arrival_time=t))
+            for i, t in enumerate(times)]
+
+    orch = mock_orchestrator([mk("b0")], SPEC, arrival_rate=1.0)
+    ctl = AutoscaleController(
+        PredictivePolicy(TEMPLATE, lead=20.0, margin=1.2), TEMPLATE,
+        ControllerConfig(interval=5.0, cooldown=10.0, warmup_lag=8.0,
+                         min_servers=1, max_servers=12,
+                         slo_response_time=60.0),
+        telemetry=Telemetry(TelemetryConfig(window=20.0)))
+    ctl.bind_orchestrator(orch)
+    summary = orch.run_scenario(Scenario(horizon=horizon), reqs, dt=0.5)
+    ctl.bill(summary["rounds"] * 0.5, len(orch.servers))
+    ctl.finalize(summary["rounds"] * 0.5)
+    print(f"requests: {summary['finished']}/{len(reqs)} finished, "
+          f"{summary['failed']} failed, "
+          f"{summary['recompositions']} recompositions")
+    print(f"controller: {len(ctl.records)} actions, "
+          f"peak {ctl.peak_servers} servers, "
+          f"{ctl.server_seconds:.0f} server-s")
+    for rec in ctl.records:
+        print(f"   t={rec.time:6.1f}  {rec.action:6s} x{rec.count}  "
+              f"({rec.reason})")
+
+
+if __name__ == "__main__":
+    queueing_plane()
+    live_plane()

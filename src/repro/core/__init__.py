@@ -26,7 +26,9 @@ from .simulator import (
     Job, SimResult, VectorSimulator, VECTORIZED_POLICIES,
     simulate, simulate_policy_name, simulate_vectorized, poisson_arrivals,
 )
-from .tuning import TuningResult, tune_surrogate, tune_bound, compose
+from .tuning import (
+    TuningResult, tune_surrogate, tune_bound, compose, compose_best_effort,
+)
 from .scenarios import (
     Scenario, ScenarioEvent, ScenarioResult, ScenarioLogEntry,
     compose_or_degrade, run_scenario,
@@ -34,6 +36,7 @@ from .scenarios import (
 from .workload import (
     poisson_exponential, poisson_exponential_np, azure_like_trace,
     azure_like_trace_np, phased_poisson, AZURE_STATS, interarrival_std_ratio,
+    diurnal_phases, diurnal_poisson, trace_replay_phases, token_work,
 )
 
 __all__ = [
@@ -49,9 +52,11 @@ __all__ = [
     "simulate", "simulate_policy_name", "simulate_vectorized",
     "poisson_arrivals",
     "TuningResult", "tune_surrogate", "tune_bound", "compose",
+    "compose_best_effort",
     "Scenario", "ScenarioEvent", "ScenarioResult", "ScenarioLogEntry",
     "compose_or_degrade", "run_scenario",
     "poisson_exponential", "poisson_exponential_np", "azure_like_trace",
     "azure_like_trace_np", "phased_poisson", "AZURE_STATS",
     "interarrival_std_ratio",
+    "diurnal_phases", "diurnal_poisson", "trace_replay_phases", "token_work",
 ]

@@ -25,36 +25,51 @@ Burst phases affect workload generation (piecewise-constant-rate Poisson via
 recomposition.  When a failure leaves the cluster infeasible for the target
 load, composition degrades gracefully (``c = 1``, every server used) instead
 of raising — an overloaded system keeps serving, slowly, like the real one.
+
+Beyond scripted timelines, :func:`run_scenario` accepts a *closed-loop*
+``controller=`` (:class:`repro.autoscale.AutoscaleController`): at every
+control interval the paused simulator feeds the controller's telemetry
+window, and the controller's policy answers with *synthesized* add/fail
+events that flow through the very same recomposition path — the repo's jump
+from "replay scripted scenarios" to "serve unpredicted load".
+
+Trace-driven mode: pass ``arrivals`` as the 4-tuple produced by
+:func:`repro.core.workload.azure_like_trace_np` with
+``service_model="tokens"`` and per-job service demand is derived from the
+trace's (in_tokens, out_tokens) via :func:`repro.core.workload.token_work`
+(prefill compute-bound, decode bandwidth-bound) instead of the abstract
+Exp(1) work.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
+from collections import deque
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .cache_alloc import gca
-from .placement import gbp_cr
 from .servers import Server, ServiceSpec
 from .simulator import SimResult, VectorSimulator
-from .tuning import compose
-from .workload import phased_poisson
+from .tuning import compose_best_effort
+from .workload import AZURE_STATS, phased_poisson, token_work
 
-EVENT_KINDS = ("fail", "add", "slowdown", "burst")
+EVENT_KINDS = ("fail", "add", "slowdown", "burst", "fail_group")
 
 
 @dataclasses.dataclass(frozen=True)
 class ScenarioEvent:
     """One timed event.  ``scale`` is the tau multiplier for ``slowdown``
     (absolute, relative to nominal) and the rate multiplier for ``burst``;
-    ``duration`` is only meaningful for ``burst``."""
+    ``duration`` is only meaningful for ``burst``; ``sids`` names the member
+    set of a correlated ``fail_group`` (a rack, a power domain)."""
     time: float
     kind: str
     sid: str = ""
     server: Optional[Server] = None
     scale: float = 1.0
     duration: float = 0.0
+    sids: Tuple[str, ...] = ()
 
     def __post_init__(self):
         if self.kind not in EVENT_KINDS:
@@ -63,6 +78,8 @@ class ScenarioEvent:
             raise ValueError("add event needs a server")
         if self.kind in ("fail", "slowdown") and not self.sid:
             raise ValueError(f"{self.kind} event needs a server id")
+        if self.kind == "fail_group" and not self.sids:
+            raise ValueError("fail_group event needs a non-empty sid set")
 
 
 @dataclasses.dataclass
@@ -83,6 +100,13 @@ class Scenario:
 
     # recovery is adding the same server back
     recover = add
+
+    def fail_group(self, time: float, sids: Sequence[str]) -> "Scenario":
+        """Correlated failure: one event takes down a named server set
+        (e.g. a rack sharing a switch or power domain)."""
+        self.events.append(
+            ScenarioEvent(time, "fail_group", sids=tuple(sids)))
+        return self
 
     def slowdown(self, time: float, sid: str, scale: float) -> "Scenario":
         self.events.append(ScenarioEvent(time, "slowdown", sid=sid, scale=scale))
@@ -137,7 +161,10 @@ class ScenarioLogEntry:
     requeued: int           # in-flight/queued jobs re-dispatched
     n_chains: int
     total_rate: float       # nu of the new composition
-    degraded: bool          # composition fell back to the c=1 everything-chain
+    degraded: bool          # demand infeasible: composed for the largest
+    #                         feasible load instead
+    drained: int = 0        # in-flight jobs drained out-of-band (voluntary
+    #                         recompositions only)
 
 
 @dataclasses.dataclass
@@ -164,20 +191,20 @@ def compose_or_degrade(
     """(rates, caps, keys, degraded) of the best composition for the cluster.
 
     Runs the paper's tuned pipeline; if the demand is infeasible for the
-    (possibly shrunken) cluster, falls back to ``c = 1`` over every server —
-    the system is overloaded but keeps serving with whatever chains exist.
-    Returns empty lists when not a single complete chain can be formed.
-    ``keys`` are the chains' physical identities (server-id + block tuples),
-    used by ``VectorSimulator.reconfigure`` to decide which chains truly
-    survive a recomposition.
+    (possibly shrunken) cluster, degrades to the *largest feasible load*:
+    bisect the biggest fraction of ``lam`` the cluster still composes for
+    and serve with that chain set — an overloaded system keeps serving at
+    its actual capacity instead of collapsing to a throughput-pessimal
+    composition.  (The old fallback — ``c = 1`` over every server — starved
+    cache concurrency exactly when the queue was longest; it remains the
+    last resort when even a vanishing load is infeasible.)  Returns empty
+    lists when not a single complete chain can be formed.  ``keys`` are the
+    chains' physical identities (server-id + block tuples), used by
+    ``VectorSimulator.reconfigure`` to decide which chains truly survive a
+    recomposition.
     """
-    try:
-        _, _, alloc = compose(servers, spec, lam, rho_bar, tuner=tuner)
-        degraded = False
-    except ValueError:
-        pl = gbp_cr(servers, spec, 1, lam, rho_bar, use_all_servers=True)
-        alloc = gca(servers, pl)
-        degraded = True
+    _, alloc, degraded = compose_best_effort(servers, spec, lam, rho_bar,
+                                             tuner=tuner)
     pairs = alloc.sorted_by_rate()
     rates = [ch.rate for ch, _ in pairs]
     caps = [c for _, c in pairs]
@@ -192,6 +219,57 @@ def _effective(cluster: Dict[str, Server], tau: Dict[str, float]) -> List[Server
     ]
 
 
+def _apply_membership(cluster: Dict[str, Server], tau: Dict[str, float],
+                      ev: ScenarioEvent) -> str:
+    """Mutate the cluster/straggler view for one event; returns the display
+    sid (comma-joined for correlated groups)."""
+    if ev.kind == "fail":
+        cluster.pop(ev.sid, None)
+        tau.pop(ev.sid, None)
+        return ev.sid
+    if ev.kind == "fail_group":
+        for sid in ev.sids:
+            cluster.pop(sid, None)
+            tau.pop(sid, None)
+        return ",".join(ev.sids)
+    if ev.kind == "add":
+        cluster[ev.server.sid] = ev.server
+        tau[ev.server.sid] = 1.0
+        return ev.server.sid
+    if ev.kind == "slowdown":
+        if ev.sid in tau:
+            tau[ev.sid] = ev.scale
+        return ev.sid
+    raise ValueError(f"not a cluster event: {ev.kind!r}")
+
+
+def _resolve_arrivals(
+    scenario: Scenario,
+    base_rate: float,
+    seed: int,
+    arrivals,
+    service_model: str,
+    trace_stats,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """(times, works) for the run; in ``tokens`` mode the works are derived
+    from the trace's per-job (in_tokens, out_tokens) via ``token_work``."""
+    if service_model not in ("work", "tokens"):
+        raise ValueError("service_model must be 'work' or 'tokens'")
+    if service_model == "tokens":
+        if arrivals is None or len(arrivals) != 4:
+            raise ValueError(
+                "service_model='tokens' needs arrivals=(times, works, "
+                "in_tokens, out_tokens), e.g. from azure_like_trace_np")
+        times, _, tin, tout = arrivals
+        return np.asarray(times, dtype=np.float64), \
+            token_work(tin, tout, stats=trace_stats)
+    if arrivals is None:
+        return scenario.generate_arrivals(base_rate, seed=seed)
+    if len(arrivals) == 4:            # token-count trace, work mode: use works
+        return arrivals[0], arrivals[1]
+    return arrivals
+
+
 def run_scenario(
     servers: Sequence[Server],
     spec: ServiceSpec,
@@ -202,7 +280,10 @@ def run_scenario(
     tuner: str = "bound-lower",
     seed: int = 0,
     warmup_fraction: float = 0.0,
-    arrivals: Optional[Tuple[np.ndarray, np.ndarray]] = None,
+    arrivals: Optional[Tuple[np.ndarray, ...]] = None,
+    service_model: str = "work",
+    trace_stats=AZURE_STATS,
+    controller=None,
 ) -> ScenarioResult:
     """Simulate the scenario end to end at the queueing level.
 
@@ -211,41 +292,117 @@ def run_scenario(
     the simulator reconfigures in place — in-flight jobs on retired chains
     restart (re-prefill), queue and completed statistics carry over.  All
     arrivals are generated up front from the scenario's burst phases unless
-    an explicit ``(times, works)`` pair is passed (e.g. to compare policies
-    on the identical trace).
+    an explicit ``(times, works)`` pair — or, with
+    ``service_model="tokens"``, an ``azure_like_trace_np``-style
+    ``(times, works, in_tokens, out_tokens)`` tuple — is passed (e.g. to
+    compare policies on the identical trace).
+
+    With a ``controller`` (:class:`repro.autoscale.AutoscaleController`),
+    the simulator additionally pauses every ``controller.cfg.interval``
+    seconds: the paused state feeds the controller's telemetry window and
+    the controller's synthesized add/fail events are applied through the
+    same recompose-and-reconfigure path as scripted events (logged with an
+    ``auto-`` kind prefix).  Composition at controller ticks targets the
+    *estimated* arrival rate, not ``base_rate`` — the whole point of the
+    loop is that the true rate is unknown.  Control ticks continue through
+    the post-horizon drain (so scale-in can release servers) and billing
+    runs to the last completion.
     """
     cluster: Dict[str, Server] = {s.sid: s for s in servers}
     tau: Dict[str, float] = {s.sid: 1.0 for s in servers}
-    if arrivals is None:
-        times, works = scenario.generate_arrivals(base_rate, seed=seed)
-    else:
-        times, works = arrivals
+    times, works = _resolve_arrivals(scenario, base_rate, seed, arrivals,
+                                     service_model, trace_stats)
     rates, caps, keys, degraded = compose_or_degrade(
         _effective(cluster, tau), spec, base_rate, rho_bar, tuner)
     sim = VectorSimulator(rates, caps, policy=policy, seed=seed + 1, keys=keys)
     sim.add_arrivals(times, works)
     log: List[ScenarioLogEntry] = []
-    for ev in scenario.cluster_events():
-        sim.run_until(ev.time)
-        if ev.kind == "fail":
-            cluster.pop(ev.sid, None)
-            tau.pop(ev.sid, None)
-        elif ev.kind == "add":
-            cluster[ev.server.sid] = ev.server
-            tau[ev.server.sid] = 1.0
-        elif ev.kind == "slowdown":
-            if ev.sid in tau:
-                tau[ev.sid] = ev.scale
+    composed_lam = base_rate          # load the current chain set targets
+
+    def recompose(at: float, kind: str, sid_str: str, requeue_lam: float,
+                  mode: str = "restart") -> None:
+        nonlocal rates, caps, keys, degraded, composed_lam
         rates, caps, keys, degraded = compose_or_degrade(
-            _effective(cluster, tau), spec, base_rate, rho_bar, tuner)
-        requeued = sim.reconfigure(rates, caps, at_time=ev.time, keys=keys)
+            _effective(cluster, tau), spec, requeue_lam, rho_bar, tuner)
+        composed_lam = requeue_lam
+        drains_before = sim.drains
+        requeued = sim.reconfigure(rates, caps, at_time=at, keys=keys,
+                                   mode=mode)
         log.append(ScenarioLogEntry(
-            time=ev.time, kind=ev.kind, sid=ev.sid or
-            (ev.server.sid if ev.server else ""),
-            requeued=requeued, n_chains=len(rates),
+            time=at, kind=kind, sid=sid_str, requeued=requeued,
+            n_chains=len(rates),
             total_rate=float(sum(m * c for m, c in zip(rates, caps))),
-            degraded=degraded))
-    sim.run_to_completion()
+            degraded=degraded, drained=sim.drains - drains_before))
+
+    def scripted_mode(ev: ScenarioEvent) -> str:
+        # involuntary events (failures, straggler drift — a slowdown's
+        # displaced jobs must not finish on their old full-speed schedule)
+        # lose the in-flight work; voluntary adds drain
+        return "restart" if ev.kind in ("fail", "fail_group", "slowdown") \
+            else "drain"
+
+    scripted = deque(scenario.cluster_events())
+    if controller is None:
+        while scripted:
+            ev = scripted.popleft()
+            sim.run_until(ev.time)
+            sid_str = _apply_membership(cluster, tau, ev)
+            recompose(ev.time, ev.kind, sid_str, base_rate,
+                      mode=scripted_mode(ev))
+        sim.run_to_completion()
+    else:
+        from repro.autoscale import ClusterView
+        from repro.autoscale.telemetry import sample_simulator
+
+        interval = controller.cfg.interval
+        tick = interval
+        max_t = scenario.horizon * 3.0 + interval   # drain-phase safety cap
+        tel_cursor = (0, 0.0)
+        controller.bill(0.0, len(cluster) + len(controller.pending))
+        while True:
+            t_scripted = scripted[0].time if scripted else math.inf
+            t_next = min(t_scripted, tick)
+            if t_next == math.inf:
+                break
+            sim.run_until(t_next)
+            if t_scripted <= tick:
+                ev = scripted.popleft()
+                sid_str = _apply_membership(cluster, tau, ev)
+                recompose(ev.time, ev.kind, sid_str,
+                          controller.compose_rate(base_rate),
+                          mode=scripted_mode(ev))
+                controller.bill(ev.time,
+                                len(cluster) + len(controller.pending))
+                continue
+            # ---- control tick: observe -> decide -> act
+            tel_cursor = sample_simulator(controller.telemetry, sim, tick,
+                                          len(cluster), tel_cursor)
+            view = ClusterView(
+                servers=_effective(cluster, tau),
+                pending=[s for _, s in controller.pending],
+                spec=spec, rho_bar=rho_bar,
+                total_rate=float(sum(m * c for m, c in zip(rates, caps))))
+            events = controller.control_tick(view, tick, list(cluster))
+            if events:
+                # controller-synthesized actions are voluntary — drain, never
+                # restart (a scale-in is a graceful retirement, not a crash)
+                sids = [_apply_membership(cluster, tau, ev) for ev in events]
+                lam = controller.compose_rate(base_rate)
+                recompose(tick, "auto-" + "+".join(e.kind for e in events),
+                          ",".join(sids), lam, mode="drain")
+            elif controller.needs_retune(composed_lam, base_rate):
+                # same servers, different load: the tuned-c pipeline targets
+                # a specific lambda — re-run it when the estimate drifts
+                recompose(tick, "auto-retune", "",
+                          controller.compose_rate(base_rate), mode="drain")
+            controller.bill(tick, len(cluster) + len(controller.pending))
+            tick += interval
+            drained = len(sim.comp) == sim.n
+            if tick > max_t or (drained and tick > scenario.horizon
+                                and not scripted):
+                tick = math.inf
+        sim.run_to_completion()
+        controller.finalize(sim.now)
     res = sim.result(warmup_fraction)
     return ScenarioResult(
         result=res,

@@ -263,6 +263,13 @@ class VectorSimulator:
         self.now = 0.0
         self.reconfigurations = 0
         self.restarts = 0                # jobs re-dispatched by reconfigure()
+        self.drains = 0                  # jobs drained out-of-band (mode=drain)
+        self._drain_horizon = 0.0        # latest out-of-band completion
+        # committed jobs draining out-of-band: (scheduled finish, jid) heap,
+        # merged into the completion list when the clock passes their finish
+        # (at run_until pause boundaries), so ``comp`` stays time-ordered at
+        # tick granularity and telemetry never sees a future completion
+        self._drain_pending: List[Tuple[float, int]] = []
         self._times_np: Optional[np.ndarray] = None
 
     # -- chain bookkeeping ---------------------------------------------------
@@ -280,11 +287,37 @@ class VectorSimulator:
     def in_flight(self) -> int:
         return len(self.heap)
 
-    def queue_len(self) -> int:
+    # -- telemetry taps (autoscale control plane) ------------------------------
+    # ``run_until`` pauses the engine at a control-tick boundary; these
+    # read-only views let :class:`repro.autoscale.Telemetry` sample the paused
+    # state without touching engine internals.
+
+    @property
+    def total_capacity(self) -> int:
+        """Concurrent service slots across all composed chains."""
+        return sum(self.caps)
+
+    def completions_since(self, cursor: int) -> Tuple[int, List[int]]:
+        """Jids completed since a previous cursor; returns (new_cursor, jids).
+
+        ``cursor`` is an index into the completion-order list — pass 0 the
+        first time and the returned cursor thereafter.
+        """
+        jids = self.comp[cursor:]
+        return len(self.comp), jids
+
+    def response_time_of(self, jid: int) -> float:
+        return self.fin[jid] - self.times[jid]
+
+    def queue_len(self, at: Optional[float] = None) -> int:
+        """Queued (arrived, unstarted) jobs; ``at`` overrides the frontier
+        time — pass the pause boundary after ``run_until(t)`` so arrivals
+        between the last processed event and ``t`` count as queued."""
+        t = self.now if at is None else max(self.now, at)
         central = len(self.queue) - self.qh
         if self.policy == "jffc":
             # arrived-but-unstarted jobs of the virtual queue (see _run_jffc)
-            central += max(0, bisect.bisect_right(self.times, self.now) - self.i)
+            central += max(0, bisect.bisect_right(self.times, t) - self.i)
         dedicated = sum(len(q) - h for q, h in zip(self.dq, self.dqh))
         return central + dedicated
 
@@ -355,6 +388,11 @@ class VectorSimulator:
             self._run_jffc(until)
         else:
             self._run_dedicated(until)
+        if self._drain_pending:
+            # surface out-of-band drain completions the clock has passed
+            dp = self._drain_pending
+            while dp and dp[0][0] < until:
+                self.comp.append(heapq.heappop(dp)[1])
         return self
 
     def run_to_completion(self) -> "VectorSimulator":
@@ -537,18 +575,39 @@ class VectorSimulator:
         caps: Sequence[int],
         at_time: Optional[float] = None,
         keys: Optional[Sequence] = None,
+        mode: str = "restart",
     ) -> int:
         """Swap the composed chain set mid-run; returns #jobs re-dispatched.
 
         Chains in the new composition that match an old chain keep their
-        in-flight jobs (committed service finishes as scheduled) and, for
-        dedicated policies, their FIFO queue; jobs on retired chains restart
-        from scratch — their original arrival time is preserved, so the
-        failure penalty shows up in their response time.  Matching uses
-        ``(key, capacity)`` when physical identities were provided on both
-        the old and new side (server-id tuples, as the orchestrator matches
-        engines), else ``(rate, capacity)``.
+        in-flight jobs (committed service finishes as scheduled — the
+        physical servers complete the pass even if the chain's nominal rate
+        was retuned) and, for dedicated policies, their FIFO queue.
+        Matching uses physical identity (``keys``: server-id + block tuples,
+        as the orchestrator matches engines) when provided on both sides,
+        else the chain rate.  Capacity deliberately does **not** participate
+        in matching: a recomposition that merely re-tunes a surviving
+        chain's concurrency must not restart its in-flight work — only jobs
+        beyond the shrunken capacity spill (latest-finishing first, the ones
+        with the most service left).
+
+        ``mode`` governs unmatched/spilled in-flight work:
+
+        * ``"restart"`` (failures): the work is lost — jobs re-dispatch from
+          scratch with their original arrival time preserved, so the failure
+          penalty shows up in their response time;
+        * ``"drain"`` (voluntary recompositions: retune, scale-out,
+          graceful scale-in): retired chains stop accepting work but their
+          committed jobs finish at the already-scheduled time, exactly like
+          an orchestrator draining an engine before tearing it down.  The
+          drain window briefly overlaps old and new compositions (~one
+          service time), the cost a real system pays during a rollout.
+
+        Queued-but-unstarted jobs re-dispatch in both modes (no service has
+        been invested, so nothing is lost).
         """
+        if mode not in ("restart", "drain"):
+            raise ValueError("mode must be 'restart' or 'drain'")
         t0 = self.now if at_time is None else float(at_time)
         new_rates = [float(r) for r in rates]
         new_caps = [int(c) for c in caps]
@@ -562,12 +621,8 @@ class VectorSimulator:
             self.i = frontier
         # greedy identity matching old chain -> new chain index
         use_keys = self.keys is not None and new_keys is not None
-        if use_keys:
-            old_ids = [(self.keys[k], self.caps[k]) for k in range(self.K)]
-            new_ids = list(zip(new_keys, new_caps))
-        else:
-            old_ids = [(self.rates[k], self.caps[k]) for k in range(self.K)]
-            new_ids = list(zip(new_rates, new_caps))
+        old_ids = list(self.keys) if use_keys else list(self.rates)
+        new_ids = list(new_keys) if use_keys else list(new_rates)
         pool: dict = {}
         for nk, key in enumerate(new_ids):
             pool.setdefault(key, []).append(nk)
@@ -575,14 +630,33 @@ class VectorSimulator:
         for ok in range(self.K):
             if pool.get(old_ids[ok]):
                 remap[ok] = pool[old_ids[ok]].pop(0)
-        # split in-flight jobs into survivors and evictions
-        kept: List[Tuple[float, int, int, int]] = []
-        evicted: List[int] = []
+        # split in-flight jobs into survivors and displaced; enforce the new
+        # capacities by spilling the latest-finishing overflow
+        per_new: dict = {}
+        displaced: List[Tuple[float, int]] = []      # (scheduled finish, jid)
         for (t, s, jid, ok) in self.heap:
             if ok in remap:
-                kept.append((t, s, jid, remap[ok]))
+                per_new.setdefault(remap[ok], []).append((t, s, jid))
             else:
-                evicted.append(jid)
+                displaced.append((t, jid))
+        kept: List[Tuple[float, int, int, int]] = []
+        for nk, entries in per_new.items():
+            entries.sort()
+            cap = new_caps[nk]
+            kept.extend((t, s, jid, nk) for (t, s, jid) in entries[:cap])
+            displaced.extend((t, jid) for (t, _, jid) in entries[cap:])
+        evicted: List[int] = []
+        if mode == "drain":
+            # committed service completes as scheduled, out of band — these
+            # jobs never rejoin the queues or the departure heap; their
+            # completions surface once the clock reaches them
+            for (t, jid) in displaced:
+                self.fin[jid] = t
+                heapq.heappush(self._drain_pending, (t, jid))
+                self._drain_horizon = max(self._drain_horizon, t)
+            self.drains += len(displaced)
+        else:
+            evicted.extend(jid for (_, jid) in displaced)
         old_dq, old_dqh, old_remap = self.dq, self.dqh, remap
         # queued jobs on retired dedicated queues are re-dispatched too
         for ok in range(self.K):
@@ -641,6 +715,9 @@ class VectorSimulator:
     # -- results ----------------------------------------------------------------
     def result(self, warmup_fraction: float = 0.1) -> SimResult:
         """SimResult over completions so far (same trimming as the oracle)."""
+        dp = self._drain_pending
+        while dp and dp[0][0] <= self.now:
+            self.comp.append(heapq.heappop(dp)[1])
         comp = np.asarray(self.comp, dtype=np.int64)
         skip = int(len(comp) * warmup_fraction)
         kept = comp[skip:]
@@ -655,7 +732,8 @@ class VectorSimulator:
             serv = fin[kept] - st[kept]
         else:
             resp = wait = serv = np.empty(0, dtype=np.float64)
-        return SimResult(resp, wait, serv, len(kept), self.now)
+        return SimResult(resp, wait, serv, len(kept),
+                         max(self.now, self._drain_horizon))
 
 
 def simulate_vectorized(

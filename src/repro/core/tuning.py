@@ -110,3 +110,42 @@ def compose(
     res = tune_bound(servers, spec, lam, rho_bar, which=which)
     assert res.placement is not None and res.allocation is not None
     return res.c_star, res.placement, res.allocation
+
+
+def compose_best_effort(
+    servers: Sequence[Server],
+    spec: ServiceSpec,
+    lam: float,
+    rho_bar: float = 0.7,
+    tuner: str = "bound-lower",
+) -> Tuple[int, Allocation, bool]:
+    """``compose`` that degrades instead of raising on infeasible demand.
+
+    When ``lam`` exceeds what the cluster can compose for, bisect the
+    largest feasible fraction of it and serve at actual capacity — an
+    overloaded system keeps serving instead of collapsing to a
+    throughput-pessimal chain set.  The last resort (not even a vanishing
+    load composes, e.g. no complete chain exists) is ``c = 1`` over every
+    server.  Returns ``(c_star, allocation, degraded)``.  Both execution
+    planes — the scenario engine and the live orchestrator — degrade
+    through this one helper so overload behaviour stays identical.
+    """
+    try:
+        c, _, alloc = compose(servers, spec, lam, rho_bar, tuner=tuner)
+        return c, alloc, False
+    except ValueError:
+        pass
+    best: Optional[Tuple[int, Allocation]] = None
+    lo, hi = 0.0, 1.0                  # feasible / infeasible lam fractions
+    for _ in range(12):
+        mid = 0.5 * (lo + hi)
+        try:
+            c, _, cand = compose(servers, spec, mid * lam, rho_bar,
+                                 tuner=tuner)
+            best, lo = (c, cand), mid
+        except ValueError:
+            hi = mid
+    if best is not None:
+        return best[0], best[1], True
+    pl = gbp_cr(servers, spec, 1, lam, rho_bar, use_all_servers=True)
+    return 1, gca(servers, pl), True

@@ -18,13 +18,27 @@ million-job traces:
   * ``phased_poisson`` — piecewise-constant-rate Poisson arrivals for the
     scenario engine's burst phases (exact: the process is memoryless, so
     per-phase generation composes).
+
+Rate profiles for the autoscaling control plane (:mod:`repro.autoscale`):
+  * ``diurnal_phases`` / ``diurnal_poisson`` — a sinusoidal day/night load
+    curve discretized to piecewise-constant phases, the canonical workload an
+    autoscaler must track (provision the peak, release the trough);
+  * ``trace_replay_phases`` — an empirical rate profile estimated from any
+    arrival-time array (e.g. ``azure_like_trace_np`` times), replayable at a
+    different scale through :func:`phased_poisson`.
+
+``token_work`` converts per-job (in_tokens, out_tokens) into an effective
+service-work multiplier (prefill compute-bound, decode bandwidth-bound, as
+in the paper's footnote 11), normalized to mean ~1 so composed chain rates
+keep their jobs/sec meaning — the bridge that lets the simulators consume
+trace token counts directly.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
 import random
-from typing import List, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -162,6 +176,111 @@ def phased_poisson(
     times = np.concatenate(chunks)
     works = rng.exponential(1.0, size=len(times))
     return times, works
+
+
+def diurnal_phases(
+    base_rate: float,
+    horizon: float,
+    period: Optional[float] = None,
+    amplitude: float = 0.6,
+    n_segments: int = 48,
+    phase_shift: float = -0.5 * math.pi,
+) -> List[Tuple[float, float, float]]:
+    """Piecewise-constant discretization of a sinusoidal day/night rate curve
+
+        rate(t) = base_rate * (1 + amplitude * sin(2 pi t / period + shift))
+
+    over ``[0, horizon)``; by default one full period spans the horizon and
+    the shift starts the curve at the trough (night), so an autoscaler sees a
+    ramp up to the midday peak and back down.  The segment rate is the curve
+    evaluated at the segment midpoint.
+    """
+    if not 0.0 <= amplitude < 1.0:
+        raise ValueError("amplitude must be in [0, 1)")
+    period = horizon if period is None else period
+    edges = np.linspace(0.0, horizon, n_segments + 1)
+    phases = []
+    for a, b in zip(edges[:-1], edges[1:]):
+        mid = 0.5 * (a + b)
+        rate = base_rate * (1.0 + amplitude
+                            * math.sin(2.0 * math.pi * mid / period + phase_shift))
+        phases.append((float(a), float(b), float(rate)))
+    return phases
+
+
+def diurnal_poisson(
+    base_rate: float,
+    horizon: float,
+    period: Optional[float] = None,
+    amplitude: float = 0.6,
+    n_segments: int = 48,
+    seed: int = 0,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """(times, works) of a diurnal-rate Poisson process with Exp(1) works."""
+    return phased_poisson(
+        diurnal_phases(base_rate, horizon, period, amplitude, n_segments),
+        seed=seed)
+
+
+def trace_replay_phases(
+    times: np.ndarray,
+    bin_width: float,
+    rate_scale: float = 1.0,
+    min_rate: float = 0.0,
+) -> List[Tuple[float, float, float]]:
+    """Empirical piecewise-constant rate profile of an arrival-time array.
+
+    Bins the trace at ``bin_width`` and returns ``(t0, t1, rate)`` phases
+    re-based to start at 0, scaled by ``rate_scale`` — replay any recorded
+    trace's load shape (e.g. ``azure_like_trace_np``) at a chosen scale via
+    :func:`phased_poisson`, or feed it to the scenario engine as the ground
+    truth an autoscaling policy must chase.
+    """
+    ts = np.asarray(times, dtype=np.float64)
+    if len(ts) == 0:
+        return []
+    if bin_width <= 0:
+        raise ValueError("bin_width must be positive")
+    t0 = float(ts[0])
+    span = float(ts[-1]) - t0
+    n_bins = max(1, int(math.ceil(span / bin_width)) or 1)
+    counts, edges = np.histogram(ts - t0, bins=n_bins,
+                                 range=(0.0, n_bins * bin_width))
+    phases = []
+    for a, b, c in zip(edges[:-1], edges[1:], counts):
+        # the trace may end mid-bin: rate over the covered span, not the
+        # nominal bin width, or the closing rate reads ~2x too low
+        b_eff = min(float(b), span) if span > a else float(b)
+        width = b_eff - float(a)
+        if width <= 0:
+            continue
+        phases.append((float(a), b_eff,
+                       max(min_rate, rate_scale * c / width)))
+    return phases
+
+
+def token_work(
+    in_tokens: np.ndarray,
+    out_tokens: np.ndarray,
+    stats: TraceStats = AZURE_STATS,
+    prefill_weight: float = 0.5,
+) -> np.ndarray:
+    """Effective service work of each job from its token counts.
+
+    Prefill cost scales with input length (compute-bound) and decode cost
+    with output length (bandwidth-bound, one pass per generated token); the
+    two are blended by ``prefill_weight`` (the prefill share of the *mean*
+    job's service time) and normalized by the trace means, so a job with mean
+    token counts has work 1.0 and composed chain rates keep their calibrated
+    jobs/sec meaning.  This is Eq. (2)'s per-job service time with the
+    token-dependent terms made explicit.
+    """
+    if not 0.0 <= prefill_weight <= 1.0:
+        raise ValueError("prefill_weight must be in [0, 1]")
+    tin = np.asarray(in_tokens, dtype=np.float64)
+    tout = np.asarray(out_tokens, dtype=np.float64)
+    return (prefill_weight * tin / stats.mean_in_tokens
+            + (1.0 - prefill_weight) * tout / stats.mean_out_tokens)
 
 
 def interarrival_std_ratio(arrivals: List[Arrival]) -> float:

@@ -1,9 +1,35 @@
-from .engine import ChainEngine
-from .kv_cache import SlotCache, service_spec_for, tau_estimates
+"""Serving layer: live orchestrator (numpy-only) + jax data plane.
+
+The control-plane names — ``Orchestrator``, ``Request``, ``MockEngine`` —
+import without jax, so the autoscaling loop runs in the minimal-dependency
+environment.  The data-plane names (``ChainEngine``, ``SlotCache``,
+``service_spec_for``, ``tau_estimates``) pull in jax and are resolved
+lazily on first attribute access (PEP 562).
+"""
+from .mock import MockEngine, mock_orchestrator
 from .orchestrator import Orchestrator, OrchestratorConfig
 from .request import Request, State
+
+_LAZY = {
+    "ChainEngine": "engine",
+    "SlotCache": "kv_cache",
+    "service_spec_for": "kv_cache",
+    "tau_estimates": "kv_cache",
+}
 
 __all__ = [
     "ChainEngine", "SlotCache", "service_spec_for", "tau_estimates",
     "Orchestrator", "OrchestratorConfig", "Request", "State",
+    "MockEngine", "mock_orchestrator",
 ]
+
+
+def __getattr__(name: str):
+    if name in _LAZY:
+        import importlib
+
+        mod = importlib.import_module(f".{_LAZY[name]}", __name__)
+        value = getattr(mod, name)
+        globals()[name] = value
+        return value
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -9,17 +9,29 @@ Fault tolerance / elasticity (DESIGN.md §7):
   * ``fail_server``   — retire chains traversing the dead server, re-queue
     their in-flight requests (context preserved — prompt + generated tokens
     re-prefill on the new chain), recompose on survivors.
-  * ``add_server``    — recompose including the newcomer.
+  * ``fail_servers``  — correlated group failure (a rack): one eviction +
+    recomposition pass for the whole set.
+  * ``add_server``    — recompose including the newcomer; with a
+    ``warmup_until`` deadline the server is *placed* (tracked, billed) but
+    excluded from the composition — no dispatches — until it is warm.
   * ``report_tau``    — per-server EWMA latency feedback; when drift exceeds
     a threshold the next recomposition demotes stragglers (the paper's
     "fast with fast" principle applied online).
+
+Autoscaling (``repro.autoscale``) observes and actuates through hooks:
+``submit_hooks`` fire on every request submission (arrival telemetry),
+``step_hooks`` after every decode round (state sampling + control ticks).
+The module is importable without jax — the default ``ChainEngine`` data
+plane is imported lazily; ``OrchestratorConfig.engine_factory`` swaps in a
+numpy-only mock (``repro.serving.mock.MockEngine``) for control-plane tests
+and benchmarks in minimal environments.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
 from collections import deque
-from typing import Deque, Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -27,12 +39,8 @@ from repro.core import (
     Allocation,
     Server,
     ServiceSpec,
-    compose,
-    gbp_cr,
-    gca,
+    compose_best_effort,
 )
-from repro.models import Model
-from .engine import ChainEngine
 from .request import Request, State
 
 
@@ -44,6 +52,9 @@ class OrchestratorConfig:
     ewma_alpha: float = 0.2
     straggler_threshold: float = 1.5     # tau drift ratio triggering recompose
     max_retries: int = 3
+    # data-plane constructor (model, params, chain, capacity, max_seq) ->
+    # engine; None = the jax ChainEngine (imported lazily)
+    engine_factory: Optional[Callable] = None
 
 
 class Orchestrator:
@@ -51,7 +62,7 @@ class Orchestrator:
         self,
         servers: Sequence[Server],
         spec: ServiceSpec,
-        model: Model,
+        model,
         params,
         arrival_rate: float,
         config: OrchestratorConfig = OrchestratorConfig(),
@@ -63,19 +74,34 @@ class Orchestrator:
         self.cfg = config
         self.servers: Dict[str, Server] = {s.sid: s for s in servers}
         self.tau_scale: Dict[str, float] = {s.sid: 1.0 for s in servers}
+        self.warming: Dict[str, float] = {}   # sid -> warm-at deadline
         self.queue: Deque[Request] = deque()
         self.finished: List[Request] = []
         self.failed: List[Request] = []
-        self.engines: List[ChainEngine] = []
+        self.engines: List = []
+        self.draining: List = []   # retired engines finishing committed work
         self.allocation: Optional[Allocation] = None
         self.c_star: int = 1
         self.recompositions = 0
+        self.degraded = False                # last composition fell back to c=1
+        # autoscale observation points: (req, now) on submit, (self, now)
+        # after every decode round
+        self.submit_hooks: List[Callable] = []
+        self.step_hooks: List[Callable] = []
         self._compose()
 
     # -- composition (offline time scale) ---------------------------------------
+    def _engine_factory(self) -> Callable:
+        if self.cfg.engine_factory is not None:
+            return self.cfg.engine_factory
+        from .engine import ChainEngine   # lazy: pulls in jax
+        return ChainEngine
+
     def _effective_servers(self) -> List[Server]:
         out = []
         for sid, s in self.servers.items():
+            if sid in self.warming:        # placed, not serving yet
+                continue
             scale = self.tau_scale[sid]
             out.append(Server(sid, s.memory_gb, s.tau_c * scale, s.tau_p * scale))
         return out
@@ -86,18 +112,32 @@ class Orchestrator:
             self.engines = []
             self.allocation = None
             return
-        self.c_star, placement, alloc = compose(
-            servers, self.spec, self.lam, self.cfg.rho_bar, tuner=self.cfg.tuner)
+        # both planes degrade through the same helper: largest feasible
+        # load under overload, c=1 everything-chain as the last resort
+        self.c_star, alloc, self.degraded = compose_best_effort(
+            servers, self.spec, self.lam, self.cfg.rho_bar,
+            tuner=self.cfg.tuner)
         self.allocation = alloc
+        factory = self._engine_factory()
         pairs = alloc.sorted_by_rate()
         self.engines = [
-            ChainEngine(self.model, self.params, chain, cap, self.cfg.max_seq)
+            factory(self.model, self.params, chain, cap, self.cfg.max_seq)
             for chain, cap in pairs
         ]
         self.recompositions += 1
 
     # -- dispatch (online time scale; Alg. 3) -------------------------------------
     def submit(self, req: Request, now: float = 0.0) -> None:
+        for hook in self.submit_hooks:
+            hook(req, now)
+        if not self._dispatch(req, now):
+            self.queue.append(req)
+
+    def _resubmit(self, req: Request, now: float) -> None:
+        """Re-dispatch an evicted/requeued request WITHOUT firing the submit
+        hooks — a requeue is not a new arrival, and counting it as one would
+        feed phantom load into the autoscaler's rate estimate right when the
+        cluster is already recomposing."""
         if not self._dispatch(req, now):
             self.queue.append(req)
 
@@ -115,6 +155,7 @@ class Orchestrator:
 
     def step(self, now: float = 0.0) -> List[Request]:
         """One decode round across all engines + queue pulls (Alg. 3 line 6)."""
+        self._expire_warming(now)
         done: List[Request] = []
         for eng in self.engines:
             for req in eng.step(now):
@@ -127,14 +168,22 @@ class Orchestrator:
                             done.append(nxt)
                     else:   # capacity race: put it back
                         self.queue.appendleft(nxt)
+        # retired engines finish their committed requests (no new admits)
+        for eng in list(self.draining):
+            done.extend(eng.step(now))
+            if not eng.requests:
+                self.draining.remove(eng)
         self.finished.extend(done)
+        for hook in self.step_hooks:
+            hook(self, now)
         return done
 
     def drain(self, now_fn=None, max_rounds: int = 100_000) -> None:
         """Run decode rounds until queue + engines are empty."""
         rounds = 0
         t = 0.0
-        while (self.queue or any(e.requests for e in self.engines)) \
+        while (self.queue or self.draining
+               or any(e.requests for e in self.engines)) \
                 and rounds < max_rounds:
             t = now_fn() if now_fn else t + 1.0
             self.step(t)
@@ -149,14 +198,30 @@ class Orchestrator:
     # -- fault tolerance / elasticity ---------------------------------------------
     def fail_server(self, sid: str, now: float = 0.0) -> int:
         """Remove a dead server; re-queue affected in-flight requests."""
-        if sid not in self.servers:
-            raise KeyError(sid)
-        del self.servers[sid]
-        del self.tau_scale[sid]
+        return self.fail_servers([sid], now)
+
+    def fail_servers(self, sids: Sequence[str], now: float = 0.0) -> int:
+        """Correlated failure (a rack, a power domain): remove the whole set
+        with a single eviction + recomposition pass."""
+        dead = set(sids)
+        missing = dead - set(self.servers)
+        if missing:
+            raise KeyError(sorted(missing)[0])
+        for sid in dead:
+            del self.servers[sid]
+            del self.tau_scale[sid]
+            self.warming.pop(sid, None)
         requeued = 0
         survivors: List[Request] = []
-        for eng in self.engines:
-            if sid in eng.chain.servers:
+        # draining engines die with their hardware too — a retired chain
+        # that was gracefully finishing its work loses it when a server it
+        # traverses actually fails
+        doomed_draining = [e for e in self.draining
+                           if dead & set(e.chain.servers)]
+        for eng in doomed_draining:
+            self.draining.remove(eng)
+        for eng in list(self.engines) + doomed_draining:
+            if dead & set(eng.chain.servers):
                 for req in eng.evict_all():
                     if req.retries > self.cfg.max_retries:
                         req.state = State.FAILED
@@ -164,27 +229,61 @@ class Orchestrator:
                     else:
                         survivors.append(req)
                         requeued += 1
-        # Recompose on the surviving set, preserving untouched engines' caches
-        # is possible when their chains survive verbatim; for simplicity and
-        # correctness we re-admit only evicted requests and rebuild engines
-        # whose chains changed.
-        self._recompose_preserving(now)
+        # Recompose on the surviving set.  Engines whose chains survive
+        # verbatim keep caches + requests; engines displaced only by the new
+        # composition (their servers are alive) drain gracefully — only the
+        # dead servers' requests pay the re-prefill penalty.
+        self._recompose_preserving(now, drain=True)
         for req in survivors:
-            self.submit(req, now)
+            self._resubmit(req, now)
         return requeued
 
-    def add_server(self, server: Server, now: float = 0.0) -> None:
+    def add_server(self, server: Server, now: float = 0.0,
+                   warmup_until: Optional[float] = None) -> None:
+        """Add a server; with ``warmup_until`` in the future it is *placed*
+        (visible in ``servers``, billed by the autoscaler) but kept out of
+        the composition — zero dispatches touch it — until the deadline
+        passes (checked at each decode round)."""
         self.servers[server.sid] = server
         self.tau_scale[server.sid] = 1.0
-        self._recompose_preserving(now)
+        if warmup_until is not None and warmup_until > now:
+            self.warming[server.sid] = float(warmup_until)
+            return
+        self._recompose_preserving(now, drain=True)
 
-    def _recompose_preserving(self, now: float) -> None:
+    def retire_servers(self, sids: Sequence[str], now: float = 0.0) -> int:
+        """Graceful scale-in: the opposite of :meth:`fail_servers` — the
+        servers leave the cluster but engines traversing them finish their
+        committed requests before shutting down.  Returns the number of
+        requests left draining."""
+        gone = set(sids) & set(self.servers)
+        for sid in gone:
+            del self.servers[sid]
+            del self.tau_scale[sid]
+            self.warming.pop(sid, None)
+        before = sum(len(e.requests) for e in self.draining)
+        self._recompose_preserving(now, drain=True)
+        return sum(len(e.requests) for e in self.draining) - before
+
+    def _expire_warming(self, now: float) -> None:
+        due = [sid for sid, t in self.warming.items() if t <= now]
+        if due:
+            for sid in due:
+                del self.warming[sid]
+            self._recompose_preserving(now, drain=True)
+
+    def _recompose_preserving(self, now: float, drain: bool = False) -> None:
         """Recompose; engines whose (chain, capacity) survive keep their KV
-        caches and in-flight requests, others evict to the queue."""
+        caches and in-flight requests.  Displaced engines either evict their
+        requests to the queue (``drain=False`` — involuntary change, the
+        requests re-prefill elsewhere) or keep serving them to completion
+        without accepting new work (``drain=True`` — voluntary change:
+        retune, scale-out, graceful scale-in; the old and new chain sets
+        briefly coexist, as in a real engine rollout)."""
         old = {tuple(e.chain.servers): e for e in self.engines}
         evicted: List[Request] = []
         self._compose()
-        new_engines: List[ChainEngine] = []
+        new_engines: List = []
         for eng in self.engines:
             key = tuple(eng.chain.servers)
             prev = old.pop(key, None)
@@ -193,12 +292,18 @@ class Orchestrator:
             else:
                 new_engines.append(eng)
                 if prev is not None:
-                    evicted.extend(prev.evict_all())
+                    if drain and prev.requests:
+                        self.draining.append(prev)
+                    else:
+                        evicted.extend(prev.evict_all())
         for leftover in old.values():
-            evicted.extend(leftover.evict_all())
+            if drain and leftover.requests:
+                self.draining.append(leftover)
+            else:
+                evicted.extend(leftover.evict_all())
         self.engines = new_engines
         for req in evicted:
-            self.submit(req, now)
+            self._resubmit(req, now)
 
     def report_tau(self, sid: str, observed_scale: float, now: float = 0.0) -> None:
         """EWMA straggler feedback: observed_scale = measured/nominal time."""
@@ -207,19 +312,24 @@ class Orchestrator:
         a = self.cfg.ewma_alpha
         self.tau_scale[sid] = (1 - a) * self.tau_scale[sid] + a * observed_scale
         if self.tau_scale[sid] > self.cfg.straggler_threshold:
-            self._recompose_preserving(now)
+            self._recompose_preserving(now, drain=True)
 
     # -- scenario hooks (repro.core.scenarios timelines on a live system) ----------
     def apply_scenario_event(self, ev, now: float = 0.0) -> dict:
         """Apply one ``repro.core.scenarios.ScenarioEvent`` to the live
-        system: ``fail`` -> :meth:`fail_server`, ``add`` ->
-        :meth:`add_server`, ``slowdown`` -> :meth:`report_tau` (the scale is
-        fed as the observed straggler ratio).  ``burst`` events shape the
-        request arrival process, not the cluster, and are a no-op here."""
+        system: ``fail`` -> :meth:`fail_server`, ``fail_group`` ->
+        :meth:`fail_servers`, ``add`` -> :meth:`add_server`, ``slowdown`` ->
+        :meth:`report_tau` (the scale is fed as the observed straggler
+        ratio).  ``burst`` events shape the request arrival process, not the
+        cluster, and are a no-op here."""
         out = {"time": ev.time, "kind": ev.kind, "requeued": 0}
         if ev.kind == "fail":
             if ev.sid in self.servers:
                 out["requeued"] = self.fail_server(ev.sid, now)
+        elif ev.kind == "fail_group":
+            present = [sid for sid in ev.sids if sid in self.servers]
+            if present:
+                out["requeued"] = self.fail_servers(present, now)
         elif ev.kind == "add":
             self.add_server(ev.server, now)
         elif ev.kind == "slowdown":
@@ -268,6 +378,7 @@ class Orchestrator:
                 self.queue.popleft()
             rounds += 1
             if (next_req >= len(timed) and not pending and not self.queue
+                    and not self.draining
                     and not any(e.requests for e in self.engines)):
                 break
         return {"rounds": rounds, "events": applied, **self.stats()}
@@ -280,7 +391,9 @@ class Orchestrator:
             "failed": len(self.failed),
             "queued": len(self.queue),
             "active": sum(e.num_active for e in self.engines),
+            "draining": sum(len(e.requests) for e in self.draining),
             "chains": [(list(e.chain.servers), e.capacity) for e in self.engines],
+            "warming": sorted(self.warming),
             "c_star": self.c_star,
             "recompositions": self.recompositions,
             "mean_response": float(np.mean(rts)) if rts else math.nan,

@@ -1,0 +1,524 @@
+"""Autoscaling control plane: telemetry estimators, policy decisions,
+controller invariants (cooldown, warm-up, cost accounting), closed-loop
+runs on both execution planes, and the new scenario-engine features that
+ride along (correlated fail_group, token-based service times).
+
+Everything here is numpy-only — no jax — so the whole module runs in the
+minimal-dependency environment.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    Scenario,
+    ScenarioEvent,
+    Server,
+    ServiceSpec,
+    azure_like_trace_np,
+    diurnal_phases,
+    diurnal_poisson,
+    run_scenario,
+    token_work,
+    trace_replay_phases,
+)
+from repro.autoscale import (
+    AutoscaleAction,
+    AutoscaleController,
+    AutoscalePolicy,
+    ClusterView,
+    ControllerConfig,
+    PredictivePolicy,
+    QueueGradientPolicy,
+    TargetUtilizationPolicy,
+    Telemetry,
+    TelemetryConfig,
+    composition_feasible,
+    servers_needed,
+    static_baseline_cost,
+)
+from repro.serving import Request, State, mock_orchestrator
+
+SPEC = ServiceSpec(num_blocks=10, block_size_gb=1.32, cache_size_gb=0.11)
+
+
+def mk(sid, mem=16.0, tc=0.05, tp=0.08):
+    return Server(sid, mem, tc, tp)
+
+
+TEMPLATE = mk("template")
+
+
+def make_controller(policy, *, interval=5.0, cooldown=20.0, warmup_lag=10.0,
+                    min_servers=1, max_servers=40, slo=3.0, window=20.0):
+    return AutoscaleController(
+        policy, TEMPLATE,
+        ControllerConfig(interval=interval, cooldown=cooldown,
+                         warmup_lag=warmup_lag, min_servers=min_servers,
+                         max_servers=max_servers, slo_response_time=slo),
+        telemetry=Telemetry(TelemetryConfig(window=window)))
+
+
+# ---------------------------------------------------------------------------
+# Telemetry estimators
+# ---------------------------------------------------------------------------
+
+def test_telemetry_window_rate_and_ewma():
+    tel = Telemetry(TelemetryConfig(window=10.0, ewma_alpha=0.5))
+    tel.record_arrivals(np.arange(0.0, 10.0, 0.5))      # 2 jobs/s
+    tel.record_sample(10.0, queue_depth=0, in_flight=1, capacity=4,
+                      n_servers=1)
+    assert tel.arrival_rate_window() == pytest.approx(2.0, rel=0.1)
+    assert tel.arrival_rate() == pytest.approx(2.0, rel=0.1)
+    assert tel.utilization() == pytest.approx(0.25)
+
+
+def test_telemetry_window_slides():
+    tel = Telemetry(TelemetryConfig(window=5.0))
+    tel.record_arrivals(np.linspace(0.0, 4.9, 50))      # 10/s burst
+    tel.record_sample(5.0, 0, 0, 4, 1)
+    burst = tel.arrival_rate_window()
+    tel.record_arrival(12.0)                            # quiet period
+    tel.record_sample(12.0, 0, 0, 4, 1)
+    assert tel.arrival_rate_window() < burst / 5
+
+
+def test_telemetry_trend_and_forecast():
+    tel = Telemetry(TelemetryConfig(window=20.0))
+    # steadily rising rate, sampled every 2 s as a controller would: the
+    # trend must be positive and the forecast above the current estimate
+    t, rate, next_sample = 0.0, 2.0, 2.0
+    while t < 40.0:
+        t += 1.0 / rate
+        tel.record_arrival(t)
+        rate += 0.05
+        if t >= next_sample:
+            tel.record_sample(t, 0, 0, 4, 1)
+            next_sample += 2.0
+    assert tel.rate_trend() > 0
+    assert tel.forecast_rate(20.0) > tel.arrival_rate()
+
+
+def test_telemetry_queue_gradient_sign():
+    tel = Telemetry(TelemetryConfig(window=30.0))
+    for i, q in enumerate((0, 2, 5, 9, 14)):
+        tel.record_sample(5.0 * (i + 1), queue_depth=q, in_flight=4,
+                          capacity=4, n_servers=2)
+    assert tel.queue_gradient() > 0
+    assert tel.queue_depth() == 14
+
+
+def test_telemetry_response_quantiles():
+    tel = Telemetry()
+    for i in range(100):
+        tel.record_completion(1.0 + 0.01 * i, response_time=float(i))
+    assert tel.response_quantile(50) == pytest.approx(49.5, abs=1.0)
+    assert math.isnan(Telemetry().response_quantile(99))
+
+
+# ---------------------------------------------------------------------------
+# Sizing oracle + policies
+# ---------------------------------------------------------------------------
+
+def test_servers_needed_monotone_in_rate():
+    needs = [servers_needed([], TEMPLATE, SPEC, rate, 0.7, max_extra=40)
+             for rate in (1.0, 5.0, 10.0, 15.0)]
+    assert all(n is not None for n in needs)
+    assert needs == sorted(needs)
+    assert needs[0] >= 1 and needs[-1] > needs[0]
+
+
+def test_composition_feasible_boundaries():
+    assert not composition_feasible([], SPEC, 1.0, 0.7)
+    assert composition_feasible([mk("a"), mk("b")], SPEC, 1.0, 0.7)
+    assert not composition_feasible([mk("a")], SPEC, 1e6, 0.7)
+
+
+def _view(servers, pending=(), total_rate=10.0):
+    return ClusterView(servers=list(servers), pending=list(pending),
+                       spec=SPEC, rho_bar=0.7, total_rate=total_rate)
+
+
+def test_target_util_policy_thresholds():
+    pol = TargetUtilizationPolicy(high=0.8, low=0.3)
+    tel = Telemetry()
+    tel.record_sample(1.0, queue_depth=0, in_flight=9, capacity=10,
+                      n_servers=3)
+    act = pol.decide(tel, _view([mk("a"), mk("b"), mk("c")]), 1.0)
+    assert act.add >= 1 and act.remove == 0
+    tel2 = Telemetry()
+    tel2.record_sample(1.0, queue_depth=0, in_flight=1, capacity=10,
+                       n_servers=3)
+    act = pol.decide(tel2, _view([mk("a"), mk("b"), mk("c")]), 1.0)
+    assert act.remove == 1 and act.add == 0
+    tel3 = Telemetry()
+    tel3.record_sample(1.0, queue_depth=0, in_flight=5, capacity=10,
+                       n_servers=3)
+    assert pol.decide(tel3, _view([mk("a"), mk("b"), mk("c")]), 1.0).is_noop
+
+
+def test_queue_gradient_policy_reacts_to_growth():
+    pol = QueueGradientPolicy(depth_threshold=3)
+    tel = Telemetry(TelemetryConfig(window=30.0))
+    for i, q in enumerate((0, 4, 9, 15, 22)):
+        tel.record_sample(5.0 * (i + 1), queue_depth=q, in_flight=8,
+                          capacity=8, n_servers=2)
+    act = pol.decide(tel, _view([mk("a"), mk("b")]), 25.0)
+    assert act.add >= 1
+
+
+def test_predictive_policy_sizes_through_oracle():
+    pol = PredictivePolicy(TEMPLATE, lead=20.0, margin=1.2)
+    tel = Telemetry(TelemetryConfig(window=40.0))
+    t, rate = 0.0, 4.0
+    while t < 40.0:
+        t += 1.0 / rate
+        tel.record_arrival(t)
+        rate += 0.02
+    for s in np.arange(20.0, 41.0, 5.0):
+        tel.record_sample(s, 0, 4, 4, 1)
+    act = pol.decide(tel, _view([mk("a")]), 40.0)
+    assert act.add >= 1                      # one server cannot hold ~6/s
+
+
+# ---------------------------------------------------------------------------
+# Controller invariants
+# ---------------------------------------------------------------------------
+
+class AlwaysAdd(AutoscalePolicy):
+    name = "always-add"
+
+    def decide(self, tel, view, now):
+        return AutoscaleAction(add=1, reason="test")
+
+
+def test_cooldown_respected_no_churn():
+    """No two scaling actions within the cooldown window, ever."""
+    ctl = make_controller(AlwaysAdd(), interval=5.0, cooldown=22.0)
+    arrivals = diurnal_poisson(6.0, 300.0, amplitude=0.5, seed=1)
+    run_scenario([mk("b0")], SPEC, Scenario(horizon=300.0), base_rate=6.0,
+                 arrivals=arrivals, controller=ctl, seed=0)
+    times = [rec.time for rec in ctl.records]
+    assert len(times) >= 2                   # the greedy policy acted often
+    gaps = np.diff(times)
+    assert np.all(gaps >= 22.0 - 1e-9), gaps
+
+
+def test_warmup_lag_delays_joining():
+    """A provisioned server joins the composition exactly one warm-up lag
+    after the add decision — never earlier."""
+    ctl = make_controller(AlwaysAdd(), interval=5.0, cooldown=30.0,
+                          warmup_lag=12.0)
+    arrivals = diurnal_poisson(6.0, 200.0, amplitude=0.5, seed=1)
+    run_scenario([mk("b0")], SPEC, Scenario(horizon=200.0), base_rate=6.0,
+                 arrivals=arrivals, controller=ctl, seed=0)
+    decisions = {rec.sids[0]: rec.time for rec in ctl.records
+                 if rec.action == "add"}
+    assert decisions
+    # pending servers that never became ready are still pending — fine; the
+    # ones that joined did so >= lag after their decision (the join shows up
+    # as the 'auto-add' sid in the telemetry-driven log)
+    ctl2 = make_controller(AlwaysAdd(), interval=5.0, cooldown=30.0,
+                           warmup_lag=12.0)
+    res = run_scenario([mk("b0")], SPEC, Scenario(horizon=200.0),
+                       base_rate=6.0, arrivals=arrivals, controller=ctl2,
+                       seed=0)
+    join_times = {}
+    for e in res.log:
+        if e.kind.startswith("auto-add"):
+            for sid in e.sid.split(","):
+                if sid:
+                    join_times.setdefault(sid, e.time)
+    decisions2 = {rec.sids[0]: rec.time for rec in ctl2.records
+                  if rec.action == "add"}
+    joined = set(join_times) & set(decisions2)
+    assert joined
+    for sid in joined:
+        assert join_times[sid] >= decisions2[sid] + 12.0 - 1e-9
+
+
+def test_min_max_bounds_enforced():
+    ctl = make_controller(AlwaysAdd(), interval=5.0, cooldown=0.0,
+                          max_servers=3)
+    arrivals = diurnal_poisson(6.0, 200.0, amplitude=0.5, seed=1)
+    run_scenario([mk("b0")], SPEC, Scenario(horizon=200.0), base_rate=6.0,
+                 arrivals=arrivals, controller=ctl, seed=0)
+    assert ctl.peak_servers <= 3
+
+
+def test_cost_accounting_is_exact_integral():
+    """server_seconds equals the hand-computed piecewise-constant integral
+    of the provisioned-server count over the billed span."""
+    ctl = make_controller(PredictivePolicy(TEMPLATE, lead=30.0, margin=1.2),
+                          interval=5.0, cooldown=20.0, warmup_lag=10.0)
+    # reconstruct the integral from the billing calls the controller makes
+    segments = []
+    orig_bill = ctl.bill
+
+    def spy_bill(now, n):
+        segments.append((now, n))
+        orig_bill(now, n)
+
+    ctl.bill = spy_bill
+    arrivals = diurnal_poisson(8.0, 400.0, amplitude=0.85, seed=3)
+    run_scenario([mk("b0")], SPEC, Scenario(horizon=400.0), base_rate=8.0,
+                 arrivals=arrivals, controller=ctl, seed=0)
+    # integral from the spy's own records (count in force from each point
+    # until the next)
+    expect = 0.0
+    for (t0, n0), (t1, _) in zip(segments[:-1], segments[1:]):
+        expect += n0 * max(0.0, t1 - t0)
+    # the final finalize() call is in the segment list too (same timestamp)
+    assert ctl.server_seconds == pytest.approx(expect, rel=1e-9)
+    assert ctl.server_seconds > 400.0        # at least one server always up
+
+
+def test_predictive_provisions_ahead_of_ramp():
+    """On a scripted ramp the predictive policy orders capacity before the
+    reactive target-utilization policy does."""
+    ramp = Scenario(horizon=300.0).burst(60.0, 240.0, 6.0)
+    arrivals = ramp.generate_arrivals(2.0, seed=5)
+
+    first_add = {}
+    for name, pol in (("pred", PredictivePolicy(TEMPLATE, lead=30.0,
+                                                margin=1.2)),
+                      ("util", TargetUtilizationPolicy())):
+        ctl = make_controller(pol, interval=5.0, cooldown=15.0,
+                              warmup_lag=10.0)
+        run_scenario([mk("b0"), mk("b1")], SPEC, ramp, base_rate=2.0,
+                     arrivals=arrivals, controller=ctl, seed=0)
+        adds = [rec.time for rec in ctl.records if rec.action == "add"]
+        first_add[name] = min(adds) if adds else math.inf
+    assert first_add["pred"] < math.inf
+    assert first_add["pred"] <= first_add["util"]
+
+
+def test_all_policies_close_the_loop_in_simulation():
+    arrivals = diurnal_poisson(8.0, 300.0, amplitude=0.85, seed=3)
+    for pol in (TargetUtilizationPolicy(), QueueGradientPolicy(),
+                PredictivePolicy(TEMPLATE, lead=30.0, margin=1.2)):
+        ctl = make_controller(pol)
+        res = run_scenario([mk("b0")], SPEC, Scenario(horizon=300.0),
+                           base_rate=8.0, arrivals=arrivals,
+                           controller=ctl, seed=0)
+        assert res.completed_all, pol.name
+        assert res.result.n_completed == res.n_jobs
+        assert ctl.peak_servers >= 2, pol.name   # the loop actually scaled
+
+
+def test_predictive_dominates_static_on_diurnal():
+    """The benchmark's headline claim, in miniature: fewer server-seconds at
+    equal-or-better p99 than the peak-provisioned static cluster."""
+    arrivals = diurnal_poisson(8.0, 300.0, amplitude=0.85, seed=3)
+    scenario = Scenario(horizon=300.0)
+    peak = 8.0 * 1.85
+    n_static = servers_needed([], TEMPLATE, SPEC, peak, 0.7, max_extra=40)
+    static = [mk(f"st{i}") for i in range(n_static)]
+    rs = run_scenario(static, SPEC, scenario, base_rate=8.0,
+                      arrivals=arrivals, seed=0)
+    srep = static_baseline_cost(n_static, rs.result.sim_time,
+                                rs.result.response_times, 3.0)
+    ctl = make_controller(PredictivePolicy(TEMPLATE, lead=30.0, margin=1.2))
+    ra = run_scenario([mk("b0")], SPEC, scenario, base_rate=8.0,
+                      arrivals=arrivals, controller=ctl, seed=0)
+    arep = ctl.report(ra.result.response_times, 0)
+    assert ra.p99() <= rs.p99() + 1e-9
+    assert arep.server_seconds < srep.server_seconds
+
+
+# ---------------------------------------------------------------------------
+# Live (mock-model) orchestrator plane
+# ---------------------------------------------------------------------------
+
+def _timed_requests(horizon=120.0, base=2.0, seed=0):
+    rng = np.random.default_rng(seed)
+    times = []
+    for (a, b, rate) in diurnal_phases(base, horizon, amplitude=0.8,
+                                       n_segments=12):
+        n = rng.poisson(rate * (b - a) * 0.6)
+        times.extend(np.sort(rng.uniform(a, b, n)).tolist())
+    times.sort()
+    return [(t, Request(rid=i, prompt=np.ones(4, np.int32),
+                        max_new_tokens=5, arrival_time=t))
+            for i, t in enumerate(times)]
+
+
+def test_orchestrator_warming_server_gets_no_dispatches():
+    orch = mock_orchestrator([mk("b0"), mk("b1")], SPEC, arrival_rate=1.0)
+    orch.add_server(mk("warm1"), now=0.0, warmup_until=5.0)
+    assert "warm1" in orch.servers and "warm1" in orch.warming
+    reqs = [Request(rid=i, prompt=np.ones(4, np.int32), max_new_tokens=3)
+            for i in range(8)]
+    for t in (1.0, 2.0, 3.0, 4.0):
+        orch.submit(reqs[int(t) - 1], t)
+        orch.step(t)
+        chain_servers = {s for e in orch.engines for s in e.chain.servers}
+        assert "warm1" not in chain_servers, f"dispatched during warm-up at {t}"
+    orch.step(5.0)                            # deadline passes -> joins
+    assert "warm1" not in orch.warming
+    chain_servers = {s for e in orch.engines for s in e.chain.servers}
+    assert "warm1" in chain_servers
+
+
+def test_orchestrator_retire_drains_without_request_loss():
+    orch = mock_orchestrator([mk("b0"), mk("b1"), mk("b2")], SPEC,
+                             arrival_rate=1.0)
+    reqs = [Request(rid=i, prompt=np.ones(4, np.int32), max_new_tokens=6)
+            for i in range(6)]
+    for r in reqs:
+        orch.submit(r, 0.0)
+    orch.step(1.0)
+    victim = orch.engines[0].chain.servers[0]
+    orch.retire_servers([victim], 2.0)
+    assert victim not in orch.servers
+    orch.drain()
+    assert all(r.state == State.DONE for r in reqs)
+    assert not orch.failed
+    # retired requests completed without a retry (graceful, not a crash)
+    assert all(r.retries == 0 for r in reqs)
+
+
+def test_draining_engine_dies_with_its_hardware():
+    """A gracefully-retiring chain loses its in-flight work if a server it
+    traverses actually fails mid-drain — drained work is not immortal."""
+    small = [Server(s, 12.0, 0.05, 0.08) for s in "abcd"]
+    orch = mock_orchestrator(small, SPEC, arrival_rate=1.0)
+    reqs = [Request(rid=i, prompt=np.ones(4, np.int32), max_new_tokens=50)
+            for i in range(8)]
+    for r in reqs:
+        orch.submit(r, 0.0)
+    orch.step(1.0)
+    multi = next(e for e in orch.engines
+                 if len(e.chain.servers) > 1 and e.requests)
+    s_retire, s_fail = multi.chain.servers[0], multi.chain.servers[1]
+    orch.retire_servers([s_retire], 2.0)
+    assert orch.draining
+    orch.fail_servers([s_fail], 3.0)
+    assert not any(s_fail in e.chain.servers for e in orch.draining)
+    orch.drain()
+    assert all(r.state == State.DONE for r in reqs)
+    assert any(r.retries > 0 for r in reqs)
+
+
+def test_fail_group_on_orchestrator():
+    orch = mock_orchestrator([mk(f"b{i}") for i in range(4)], SPEC,
+                             arrival_rate=1.0)
+    reqs = [Request(rid=i, prompt=np.ones(4, np.int32), max_new_tokens=6)
+            for i in range(6)]
+    for r in reqs:
+        orch.submit(r, 0.0)
+    orch.step(1.0)
+    ev = ScenarioEvent(2.0, "fail_group", sids=("b0", "b1"))
+    out = orch.apply_scenario_event(ev, 2.0)
+    assert out["kind"] == "fail_group"
+    assert "b0" not in orch.servers and "b1" not in orch.servers
+    orch.drain()
+    assert all(r.state == State.DONE for r in reqs)
+
+
+def test_controller_closes_loop_on_orchestrator():
+    for pol in (TargetUtilizationPolicy(), QueueGradientPolicy(),
+                PredictivePolicy(TEMPLATE, lead=20.0, margin=1.2)):
+        orch = mock_orchestrator([mk("b0")], SPEC, arrival_rate=1.0)
+        ctl = AutoscaleController(
+            pol, TEMPLATE,
+            ControllerConfig(interval=5.0, cooldown=10.0, warmup_lag=8.0,
+                             min_servers=1, max_servers=12,
+                             slo_response_time=60.0),
+            telemetry=Telemetry(TelemetryConfig(window=20.0)))
+        ctl.bind_orchestrator(orch)
+        reqs = _timed_requests()
+        summary = orch.run_scenario(Scenario(horizon=120.0), reqs, dt=0.5)
+        assert summary["finished"] == len(reqs), pol.name
+        assert summary["failed"] == 0, pol.name
+        assert ctl.server_seconds > 0
+
+
+# ---------------------------------------------------------------------------
+# Scenario-engine satellites: fail_group + token-based service times
+# ---------------------------------------------------------------------------
+
+def test_fail_group_loses_no_requests():
+    """A correlated (rack) failure mid-run: recomposition still completes
+    every request, and the one event removes the whole set."""
+    import random
+
+    rng = random.Random(1234)
+    servers = [Server(f"s{i}", rng.uniform(15, 40), rng.uniform(0.02, 0.2),
+                      rng.uniform(0.02, 0.2)) for i in range(8)]
+    spec = ServiceSpec(num_blocks=10, block_size_gb=1.32,
+                       cache_size_gb=0.11)
+    sc = Scenario(horizon=120.0).fail_group(40.0, ["s1", "s3", "s5"])
+    res = run_scenario(servers, spec, sc, base_rate=5.0, seed=0)
+    assert res.completed_all
+    assert res.result.n_completed == res.n_jobs
+    assert res.reconfigurations == 1          # one event, one recompose
+    entry = res.log[0]
+    assert entry.kind == "fail_group"
+    assert set(entry.sid.split(",")) == {"s1", "s3", "s5"}
+    assert np.isfinite(res.result.response_times).all()
+
+
+def test_fail_group_event_validation():
+    with pytest.raises(ValueError):
+        ScenarioEvent(1.0, "fail_group")      # needs sids
+
+
+def test_token_service_mode_uses_trace_tokens():
+    """Token-based service times: the per-job service demand is exactly the
+    token blend, and the run completes on the real azure-like trace."""
+    # one fat server -> a single chain, so every job sees the same rate and
+    # the sorted service times must be proportional to the sorted works
+    servers = [Server("s0", 40.0, 0.02, 0.02)]
+    arr = azure_like_trace_np(1500, seed=1)
+    horizon = float(arr[0][-1]) + 1.0
+    res = run_scenario(servers, SPEC, Scenario(horizon=horizon),
+                       base_rate=2.57, arrivals=arr,
+                       service_model="tokens", seed=0)
+    assert res.completed_all
+    works = token_work(arr[2], arr[3])
+    assert res.n_jobs == len(works)
+    ratio = np.sort(res.result.service_times) / np.sort(works)
+    assert ratio.std() / ratio.mean() < 1e-9   # single mu: exact proportion
+    # mean ~1 normalization preserves the chain rates' calibration
+    assert 0.7 < works.mean() < 1.3
+    # heavier tokens really mean more work
+    assert token_work([4000], [60])[0] > token_work([500], [10])[0]
+
+
+def test_token_mode_requires_token_arrays():
+    with pytest.raises(ValueError):
+        run_scenario([mk("a"), mk("b")], SPEC, Scenario(horizon=10.0),
+                     base_rate=1.0, service_model="tokens")
+
+
+# ---------------------------------------------------------------------------
+# Workload additions
+# ---------------------------------------------------------------------------
+
+def test_diurnal_phases_shape():
+    phases = diurnal_phases(10.0, 600.0, amplitude=0.8, n_segments=24)
+    rates = [r for _, _, r in phases]
+    assert len(phases) == 24
+    assert min(rates) < 3.0 < 17.0 < max(rates)
+    assert phases[0][0] == 0.0 and phases[-1][1] == 600.0
+    # starts at the trough by default
+    assert rates[0] < rates[len(rates) // 2]
+
+
+def test_diurnal_poisson_tracks_profile():
+    times, works = diurnal_poisson(10.0, 600.0, amplitude=0.8, seed=0)
+    third = 600.0 / 3
+    early = np.sum(times < third)
+    mid = np.sum((times >= third) & (times < 2 * third))
+    assert mid > 2 * early                    # peak is busier than trough
+    assert len(times) == len(works)
+
+
+def test_trace_replay_phases_recovers_rate():
+    times, _ = diurnal_poisson(10.0, 300.0, amplitude=0.6, seed=2)
+    phases = trace_replay_phases(times, bin_width=30.0)
+    total = sum((b - a) * r for a, b, r in phases)
+    assert total == pytest.approx(len(times), rel=0.05)
+    assert max(r for _, _, r in phases) > 2 * min(r for _, _, r in phases)
