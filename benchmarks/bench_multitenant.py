@@ -1,0 +1,225 @@
+"""Multi-tenant SLO-class serving: priority scheduling + SLO admission.
+
+Headline records (written to ``BENCH_multitenant.json``):
+
+  * **overload mix** — a 70/30 interactive/batch Poisson mix offered at
+    1.05x the composed capacity, identical arrivals across three engines:
+    class-blind FIFO (jffc), priority scheduling, and priority + the
+    SLO admission gate (finite batch deadline).  Priority + admission must
+    cut the interactive p99 by >= 5x vs. the class-blind baseline while
+    batch goodput (completed batch jobs per second of run) stays within
+    10% of it — best-effort work yields, it is not sacrificed.
+  * **parity** — with a single default class the refactored engine is
+    bit-identical to the pre-refactor ``VectorSimulator`` on fixed seeds:
+    class labels do not perturb jffc, and the priority engine with one
+    tier-0 class reproduces jffc exactly.
+  * **closed loop** — a ``tenant_burst`` scenario (interactive traffic
+    x3 for 120 s) under an ``SLOAwareAdmissionPolicy``-wrapped predictive
+    scaler on a fixed server budget: the controller answers the SLO breach
+    by tightening the admission gate (defer/shed batch) instead of
+    ordering servers, sheds only the batch class, and re-opens after the
+    burst — no request is lost.
+
+Run directly:  PYTHONPATH=src python -m benchmarks.bench_multitenant \
+                   [--n-jobs 60000] [--smoke] [--out BENCH_multitenant.json]
+or via the suite driver: PYTHONPATH=src python -m benchmarks.run --only multitenant
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import random
+import time
+from typing import List
+
+import numpy as np
+
+from repro.autoscale import (
+    AutoscaleController,
+    ControllerConfig,
+    PredictivePolicy,
+    SLOAwareAdmissionPolicy,
+)
+from repro.core import (
+    RequestClass,
+    Scenario,
+    Server,
+    ServiceSpec,
+    VectorSimulator,
+    classed_poisson_mix,
+    run_scenario,
+    simulate_vectorized,
+)
+from repro.core.simulator import poisson_arrivals
+
+# Same composed system as bench_simulator: 3 job-server classes, 16 slots.
+JOB_SERVERS = [(1.0, 4), (0.8, 4), (0.5, 8)]
+RATES = [m for m, _ in JOB_SERVERS]
+CAPS = [c for _, c in JOB_SERVERS]
+NU = sum(m * c for m, c in JOB_SERVERS)
+
+OVERLOAD = 1.05          # offered load vs. composed capacity
+INTERACTIVE_SHARE = 0.7
+SLO_INTERACTIVE = 2.0
+
+
+def _mix_classes(batch_deadline: float) -> List[RequestClass]:
+    return [
+        RequestClass("interactive", "chat", 0, slo_target=SLO_INTERACTIVE),
+        RequestClass("batch", "offline", 1, deadline=batch_deadline),
+    ]
+
+
+def overload_mix_record(n_target: int = 60_000, seed: int = 42) -> dict:
+    """70/30 interactive/batch at 1.05x capacity: FIFO vs. priority vs.
+    priority + admission on the identical arrival trace."""
+    lam = OVERLOAD * NU
+    horizon = n_target / lam
+    lam_int = INTERACTIVE_SHARE * lam
+    lam_bat = (1.0 - INTERACTIVE_SHARE) * lam
+    batch_deadline = 0.03 * horizon        # generous: sheds only the excess
+    t, w, c = classed_poisson_mix([lam_int, lam_bat], horizon, seed=seed)
+
+    def leg(policy: str, classes: List[RequestClass],
+            aging: float = 0.0) -> dict:
+        sim = VectorSimulator(RATES, CAPS, policy=policy, seed=seed + 1,
+                              classes=classes, aging_rate=aging)
+        sim.add_arrivals(t, w, c)
+        t0 = time.perf_counter()
+        sim.run_to_completion()
+        dt = time.perf_counter() - t0
+        res = sim.result(warmup_fraction=0.0)
+        pc = res.per_class()
+        return {
+            "engine_seconds": dt,
+            "sim_time": res.sim_time,
+            "n_rejected": res.n_rejected,
+            "interactive_p99": pc[0]["response"]["p99"],
+            "interactive_mean": pc[0]["response"]["mean"],
+            "batch_p99": pc[1]["response"]["p99"],
+            "batch_completed": pc[1]["n"],
+            "batch_goodput": pc[1]["n"] / res.sim_time,
+        }
+
+    fifo = leg("jffc", _mix_classes(float("inf")))
+    prio = leg("priority", _mix_classes(float("inf")), aging=0.001)
+    adm = leg("priority", _mix_classes(batch_deadline), aging=0.001)
+    p99_cut = fifo["interactive_p99"] / adm["interactive_p99"]
+    goodput_ratio = adm["batch_goodput"] / fifo["batch_goodput"]
+    return {
+        "name": "multitenant_overload_mix",
+        "n_jobs": len(t),
+        "offered_load": OVERLOAD,
+        "interactive_share": INTERACTIVE_SHARE,
+        "batch_deadline": batch_deadline,
+        "fifo": fifo,
+        "priority": prio,
+        "priority_admission": adm,
+        "interactive_p99_cut": p99_cut,
+        "batch_goodput_ratio": goodput_ratio,
+        # the acceptance gates the CI smoke asserts on
+        "p99_cut_ok": bool(p99_cut >= 5.0),
+        "goodput_ok": bool(goodput_ratio >= 0.9),
+    }
+
+
+def parity_record(n: int = 20_000, seed: int = 17) -> dict:
+    """Single-default-class runs are bit-identical to the pre-refactor
+    engine: labels do not perturb jffc; priority with one tier-0 class IS
+    jffc."""
+    arrivals = poisson_arrivals(0.85 * NU, n, random.Random(seed))
+    base = simulate_vectorized("jffc", JOB_SERVERS, arrivals, seed=seed)
+    tt = np.array([a[0] for a in arrivals])
+    ww = np.array([a[1] for a in arrivals])
+    labeled = simulate_vectorized(
+        "jffc", JOB_SERVERS, (tt, ww, np.zeros(n, dtype=np.int64)), seed=seed)
+    prio = simulate_vectorized("priority", JOB_SERVERS, arrivals, seed=seed)
+    same = all(
+        np.array_equal(base.response_times, other.response_times)
+        and np.array_equal(base.waiting_times, other.waiting_times)
+        and base.sim_time == other.sim_time
+        for other in (labeled, prio))
+    return {"name": "multitenant_single_class_parity",
+            "bit_identical": bool(same and prio.n_rejected == 0),
+            "n_jobs": n}
+
+
+def closed_loop_record(seed: int = 0) -> dict:
+    """Tenant burst under the SLO-aware admission controller on a fixed
+    server budget: the gate tightens instead of scaling out, sheds only
+    batch, and loses nothing."""
+    rng = random.Random(1234)
+    spec = ServiceSpec(num_blocks=10, block_size_gb=1.32, cache_size_gb=2.5)
+    servers = [Server(f"s{i}", rng.uniform(15, 40), rng.uniform(0.02, 0.2),
+                      rng.uniform(0.02, 0.2)) for i in range(4)]
+    template = Server("tmpl", 30.0, 0.05, 0.05)
+    base_total = 2.0
+    class_rates = [0.65 * base_total, 0.35 * base_total]
+    classes = [RequestClass("interactive", "chat", 0, slo_target=4.0),
+               RequestClass("batch", "offline", 1, deadline=10.0)]
+    sc = Scenario(horizon=300.0).tenant_burst(90.0, 120.0, 3.0, cls=0)
+    policy = SLOAwareAdmissionPolicy(
+        PredictivePolicy(template, lead=25.0), slo=4.0)
+    ctrl = AutoscaleController(
+        policy, template,
+        ControllerConfig(interval=6.0, cooldown=12.0, warmup_lag=10.0,
+                         max_servers=len(servers)))   # fixed budget: no adds
+    t0 = time.perf_counter()
+    res = run_scenario(servers, spec, sc, policy="priority",
+                       classes=classes, class_rates=class_rates,
+                       aging_rate=0.001, seed=seed, controller=ctrl)
+    dt = time.perf_counter() - t0
+    baseline = run_scenario(servers, spec, sc, policy="jffc",
+                            classes=classes, class_rates=class_rates,
+                            seed=seed)
+    pc = res.per_class()
+    adm = [r for r in ctrl.records if r.action == "admission"]
+    adds = [r for r in ctrl.records if r.action == "add"]
+    rejected_classes = set(res.result.rejected_class_ids.tolist())
+    return {
+        "name": "multitenant_closed_loop",
+        "seconds": dt,
+        "n_jobs": res.n_jobs,
+        "completed_all": res.completed_all,
+        "n_rejected": res.n_rejected,
+        "shed_only_batch": bool(rejected_classes <= {1}),
+        "admission_actions": len(adm),
+        "scaleout_actions": len(adds),
+        "interactive_p99": pc[0]["response"]["p99"],
+        "fifo_interactive_p99": baseline.per_class()[0]["response"]["p99"],
+        "admission_fired_no_scaleout": bool(adm and not adds
+                                            and res.n_rejected > 0),
+    }
+
+
+def run(n_jobs: int = 60_000) -> List[dict]:
+    return [
+        overload_mix_record(n_jobs),
+        parity_record(min(n_jobs, 20_000)),
+        closed_loop_record(),
+    ]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n-jobs", type=int, default=60_000)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run (~30k jobs, < 30 s)")
+    ap.add_argument("--out", default="BENCH_multitenant.json")
+    args = ap.parse_args()
+    rows = run(30_000 if args.smoke else args.n_jobs)
+    for row in rows:
+        keys = [k for k in ("interactive_p99_cut", "batch_goodput_ratio",
+                            "p99_cut_ok", "goodput_ok", "bit_identical",
+                            "admission_fired_no_scaleout", "completed_all")
+                if k in row]
+        print(row["name"] + ": "
+              + ", ".join(f"{k}={row[k]:.2f}" if isinstance(row[k], float)
+                          else f"{k}={row[k]}" for k in keys))
+    with open(args.out, "w") as f:
+        json.dump(rows, f, indent=1, default=float)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

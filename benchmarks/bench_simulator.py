@@ -16,7 +16,6 @@ or via the suite driver: PYTHONPATH=src python -m benchmarks.run --only simulato
 from __future__ import annotations
 
 import argparse
-import gc
 import json
 import random
 import time
@@ -29,6 +28,7 @@ from repro.core import (
     Scenario,
     Server,
     ServiceSpec,
+    VECTORIZED_POLICIES,
     VectorSimulator,
     poisson_exponential,
     poisson_exponential_np,
@@ -38,6 +38,8 @@ from repro.core import (
 )
 from repro.core.simulator import poisson_arrivals
 
+from .common import timed_pair
+
 # A composed system representative of the paper's GCA outputs: 3 job-server
 # classes, 16 concurrent slots, nu = 11.2.
 JOB_SERVERS = [(1.0, 4), (0.8, 4), (0.5, 8)]
@@ -46,50 +48,24 @@ CAPS = [c for _, c in JOB_SERVERS]
 NU = sum(m * c for m, c in JOB_SERVERS)
 
 
-def _best(fn, repeats: int) -> float:
-    best = float("inf")
-    for _ in range(repeats):
-        t0 = time.perf_counter()
-        fn()
-        best = min(best, time.perf_counter() - t0)
-    return best
-
-
-def _best_pair(fa, fb, repeats: int):
-    """Interleaved best-of-N for a fair A/B under frequency scaling; one
-    untimed warmup pair first (cold caches + allocator ramp-up), a short
-    pause before each timed trial (cgroup quota refill on shared hosts)."""
-    fa()
-    fb()
-    ba = bb = float("inf")
-    for _ in range(repeats):
-        gc.collect()
-        time.sleep(0.2)
-        t0 = time.perf_counter()
-        fa()
-        ba = min(ba, time.perf_counter() - t0)
-        gc.collect()
-        time.sleep(0.2)
-        t0 = time.perf_counter()
-        fb()
-        bb = min(bb, time.perf_counter() - t0)
-    return ba, bb
-
-
 def parity_record(n: int = 20_000) -> dict:
     """Bit-identical response times across every vectorized policy."""
     ok = True
-    for policy in ("jffc", "jffs", "random"):
+    for policy in VECTORIZED_POLICIES:
         for lam in (0.5 * NU, 0.85 * NU):
             arrivals = poisson_arrivals(lam, n, random.Random(0))
             sc = simulate(POLICIES[policy](RATES, CAPS, random.Random(1)),
                           arrivals)
             vec = simulate_vectorized(policy, JOB_SERVERS, arrivals, seed=0)
             ok &= bool(np.array_equal(sc.response_times, vec.response_times))
-    return {"name": "simulator_parity", "bit_identical": ok, "n_jobs": n}
+    return {"name": "simulator_parity", "bit_identical": ok, "n_jobs": n,
+            "policies": list(VECTORIZED_POLICIES)}
 
 
-def throughput_records(n: int, repeats: int = 7) -> List[dict]:
+def throughput_records(n: int, repeats: int = 5) -> List[dict]:
+    """Scalar vs. vectorized engine and pipeline, timed with the shared
+    median-of-N ``process_time`` helper (headline speedups are medians;
+    best-of-N rides along for comparison with older records)."""
     rows = []
     for rho in (0.7, 0.9, 0.95):
         lam = rho * NU
@@ -104,8 +80,7 @@ def throughput_records(n: int, repeats: int = 7) -> List[dict]:
             sim.add_arrivals(tt, ww)
             sim.run_to_completion()
 
-        t_scalar_engine, t_vec_engine = _best_pair(scalar_engine, vec_engine,
-                                                   repeats)
+        s_eng, v_eng = timed_pair(scalar_engine, vec_engine, repeats)
 
         def scalar_pipeline():
             arr = poisson_exponential(lam, n, seed=0)
@@ -118,17 +93,25 @@ def throughput_records(n: int, repeats: int = 7) -> List[dict]:
             sim.run_to_completion()
             sim.result()
 
-        t_scalar_pipe, t_vec_pipe = _best_pair(scalar_pipeline, vec_pipeline,
-                                               repeats)
+        s_pipe, v_pipe = timed_pair(scalar_pipeline, vec_pipeline, repeats)
+
+        def safe(x: float) -> float:
+            # tiny smoke runs can land below process_time's tick granularity
+            return max(x, 1e-9)
+
         rows.append({
             "name": f"simulator_throughput_rho{rho}",
             "n_jobs": n,
-            "scalar_engine_jobs_per_s": n / t_scalar_engine,
-            "vector_engine_jobs_per_s": n / t_vec_engine,
-            "engine_speedup": t_scalar_engine / t_vec_engine,
-            "scalar_pipeline_jobs_per_s": n / t_scalar_pipe,
-            "vector_pipeline_jobs_per_s": n / t_vec_pipe,
-            "pipeline_speedup": t_scalar_pipe / t_vec_pipe,
+            "timer": "process_time",
+            "repeats": repeats,
+            "scalar_engine_jobs_per_s": n / safe(s_eng["median"]),
+            "vector_engine_jobs_per_s": n / safe(v_eng["median"]),
+            "engine_speedup": s_eng["median"] / safe(v_eng["median"]),
+            "engine_speedup_best": s_eng["best"] / safe(v_eng["best"]),
+            "scalar_pipeline_jobs_per_s": n / safe(s_pipe["median"]),
+            "vector_pipeline_jobs_per_s": n / safe(v_pipe["median"]),
+            "pipeline_speedup": s_pipe["median"] / safe(v_pipe["median"]),
+            "pipeline_speedup_best": s_pipe["best"] / safe(v_pipe["best"]),
         })
     return rows
 

@@ -1,16 +1,80 @@
-"""Shared benchmark scaffolding: the paper's simulation setting (§4.1.1).
+"""Shared benchmark scaffolding: the paper's simulation setting (§4.1.1)
+and host-clock-robust timing helpers.
 
 BLOOM-176B: L=70, s_m=1.32 GB (NF4), s_c=0.11 GB (KV @ 2048 ctx);
 high-perf GPU:  M=40 GB, tau_p = 109 ms;  low-perf: M=20 GB, tau_p = 175 ms.
 tau_c: RIPE-Atlas-like RTTs (lognormal around tens of ms) + 18 ms overhead.
 Defaults: J=20, eta=0.2 (high-perf fraction), lambda=0.2 req/s, rho=0.7.
+
+Timing: shared-container hosts show 6-12x wall-clock variance from
+frequency scaling and noisy neighbors.  :func:`timed` / :func:`timed_pair`
+measure with ``time.process_time`` (CPU seconds of this process — immune to
+other tenants and to the scheduler parking the process) and report the
+**median** of N trials (robust to one slow trial) next to the best; A/B
+comparisons interleave the two sides so both see the same thermal/quota
+envelope.
 """
 from __future__ import annotations
 
+import gc
 import random
-from typing import List, Tuple
+import time
+from typing import Callable, Dict, List, Tuple
 
 from repro.core import Server, ServiceSpec
+
+
+def _timing_stats(ts: List[float]) -> Dict[str, float]:
+    s = sorted(ts)
+    n = len(s)
+    med = s[n // 2] if n % 2 else 0.5 * (s[n // 2 - 1] + s[n // 2])
+    return {"median": med, "best": s[0], "mean": sum(s) / n, "n": float(n)}
+
+
+def timed(
+    fn: Callable[[], object],
+    repeats: int = 5,
+    warmup: int = 1,
+    timer: Callable[[], float] = time.process_time,
+) -> Dict[str, float]:
+    """Median-of-N timing of ``fn()``: returns ``{median, best, mean, n}``
+    in timer seconds (default ``time.process_time`` — CPU time, immune to
+    host-clock frequency scaling and co-tenant noise)."""
+    for _ in range(warmup):
+        fn()
+    times = []
+    for _ in range(repeats):
+        gc.collect()
+        t0 = timer()
+        fn()
+        times.append(timer() - t0)
+    return _timing_stats(times)
+
+
+def timed_pair(
+    fa: Callable[[], object],
+    fb: Callable[[], object],
+    repeats: int = 5,
+    warmup: int = 1,
+    timer: Callable[[], float] = time.process_time,
+) -> Tuple[Dict[str, float], Dict[str, float]]:
+    """Interleaved median-of-N A/B timing: alternating trials put both
+    sides under the same thermal / cgroup-quota envelope, so their ratio is
+    meaningful even when absolute speed drifts mid-benchmark."""
+    for _ in range(warmup):
+        fa()
+        fb()
+    ta, tb = [], []
+    for _ in range(repeats):
+        gc.collect()
+        t0 = timer()
+        fa()
+        ta.append(timer() - t0)
+        gc.collect()
+        t0 = timer()
+        fb()
+        tb.append(timer() - t0)
+    return _timing_stats(ta), _timing_stats(tb)
 
 BLOOM_SPEC = ServiceSpec(num_blocks=70, block_size_gb=1.32, cache_size_gb=0.11)
 

@@ -20,6 +20,7 @@ from . import (
     bench_kernels,
     bench_load_balance,
     bench_model_validation,
+    bench_multitenant,
     bench_overall,
     bench_placement,
     bench_simulator,
@@ -38,6 +39,7 @@ SUITES = {
     "kernels": bench_kernels.run,
     "simulator": bench_simulator.run,
     "autoscale": bench_autoscale.run,
+    "multitenant": bench_multitenant.run,
 }
 
 FAST_OVERRIDES = {
@@ -49,11 +51,13 @@ FAST_OVERRIDES = {
     "table1_trace": lambda: bench_table1.run(n_requests=1200),
     "simulator": lambda: bench_simulator.run(n_jobs=20_000, million=False),
     "autoscale": lambda: bench_autoscale.run(horizon=300.0),
+    "multitenant": lambda: bench_multitenant.run(n_jobs=20_000),
 }
 
 
 def _headline(row: dict) -> str:
     for key in ("engine_speedup", "pipeline_speedup", "bit_identical",
+                "interactive_p99_cut", "admission_fired_no_scaleout",
                 "predictive_dominates_static", "all_policies_complete",
                 "jobs_per_s", "completed_all",
                 "reduction_vs_petals_pct", "proposed_improvement_vs_petals_pct",

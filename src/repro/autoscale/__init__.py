@@ -31,6 +31,7 @@ from .policies import (
     ClusterView,
     PredictivePolicy,
     QueueGradientPolicy,
+    SLOAwareAdmissionPolicy,
     TargetUtilizationPolicy,
     composition_feasible,
     servers_needed,
@@ -48,7 +49,8 @@ __all__ = [
     "StateSample", "Telemetry", "TelemetryConfig",
     "sample_orchestrator", "sample_simulator",
     "AutoscaleAction", "AutoscalePolicy", "ClusterView",
-    "PredictivePolicy", "QueueGradientPolicy", "TargetUtilizationPolicy",
+    "PredictivePolicy", "QueueGradientPolicy", "SLOAwareAdmissionPolicy",
+    "TargetUtilizationPolicy",
     "composition_feasible", "servers_needed",
     "AutoscaleController", "ControllerConfig", "CostReport", "ScalingRecord",
     "slo_violations", "static_baseline_cost",

@@ -112,6 +112,9 @@ class AutoscaleController:
         self._minted = 0
         self.last_action_time = -math.inf
         self.records: List[ScalingRecord] = []
+        # SLO-aware admission throttle last actuated (1.0 = gate open); the
+        # execution plane (run_scenario / orchestrator) applies it
+        self.admission_level = 1.0
         # cost accounting: exact piecewise-constant integral
         self.server_seconds = 0.0
         self._bill_t = 0.0
@@ -184,8 +187,19 @@ class AutoscaleController:
 
     # -- the decision core -------------------------------------------------------
     def decide(self, view: ClusterView, now: float) -> AutoscaleAction:
-        """Run the policy and clamp with cooldown / min / max bounds."""
+        """Run the policy and clamp with cooldown / min / max bounds.
+
+        Cooldown gates *scaling* actions only: an admission retune is free
+        and instantly reversible, so it passes through — the gate can keep
+        tightening every tick during an active SLO breach while the
+        expensive add/remove machinery stays rate-limited.
+        """
         if now - self.last_action_time < self.cfg.cooldown:
+            action = self.policy.decide(self.telemetry, view, now)
+            if action.admission_level is not None \
+                    and action.admission_level != view.admission_level:
+                return AutoscaleAction(admission_level=action.admission_level,
+                                       reason=action.reason)
             return AutoscaleAction(reason="cooldown")
         action = self.policy.decide(self.telemetry, view, now)
         if action.is_noop:
@@ -196,8 +210,15 @@ class AutoscaleController:
                      max(0, provisioned - self.cfg.min_servers))
         add, remove = max(0, add), max(0, remove)
         if add == 0 and remove == 0:
+            if action.admission_level is not None:
+                # admission retune survives the scaling clamp untouched
+                return AutoscaleAction(
+                    admission_level=action.admission_level,
+                    reason=action.reason)
             return AutoscaleAction(reason=f"{action.reason} (clamped)")
-        return AutoscaleAction(add=add, remove=remove, reason=action.reason)
+        return AutoscaleAction(add=add, remove=remove,
+                               admission_level=action.admission_level,
+                               reason=action.reason)
 
     # -- simulated plane (run_scenario hook) ---------------------------------------
     def control_tick(self, view: ClusterView, now: float,
@@ -216,6 +237,12 @@ class AutoscaleController:
         for srv in self.take_ready(now):
             events.append(ScenarioEvent(now, "add", server=srv))
         action = self.decide(view, now)
+        if action.admission_level is not None \
+                and action.admission_level != self.admission_level:
+            # free and reversible: does not start the scaling cooldown
+            self.admission_level = action.admission_level
+            self.records.append(ScalingRecord(now, "admission", 0, [],
+                                              action.reason))
         if action.add:
             sids = []
             for _ in range(action.add):
@@ -245,6 +272,9 @@ class AutoscaleController:
         until the deadline passes."""
         self._orch_next_tick = 0.0
         self._orch_fin_cursor = 0
+        # track the gate we actuate (the orchestrator may have been
+        # configured with a non-default level before binding)
+        self.admission_level = getattr(orch, "admission_level", 1.0)
         # the rate the *active* chain set was composed for — tracked apart
         # from o.lam, which we retarget ahead of warm-joins (a pending
         # server composes at the new rate only when its warm-up elapses)
@@ -275,8 +305,18 @@ class AutoscaleController:
                 rho_bar=o.cfg.rho_bar,
                 total_rate=(o.allocation.total_rate
                             if o.allocation is not None else 0.0),
+                admission_level=getattr(o, "admission_level", 1.0),
             )
             action = self.decide(view, now)
+            if action.admission_level is not None \
+                    and action.admission_level != self.admission_level:
+                # actuate the admission gate on the live plane: deferred
+                # best-effort work yields before any server is ordered —
+                # free and reversible, so no scaling cooldown starts
+                self.admission_level = action.admission_level
+                o.set_admission_level(action.admission_level)
+                self.records.append(ScalingRecord(now, "admission", 0, [],
+                                                  action.reason))
             if action.add:
                 # retarget o.lam so the warm-join recompose sizes for the
                 # new load; the active set retunes on a later tick (the

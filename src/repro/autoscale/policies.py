@@ -23,6 +23,13 @@ Three families, in increasing sophistication:
     c -> GBP-CR -> GCA composition is feasible for the forecast load.
     Provisioning *ahead* of the ramp hides the warm-up lag that the reactive
     policies eat as queueing delay.
+
+:class:`SLOAwareAdmissionPolicy` composes with any of them for multi-tenant
+fleets: it watches the *protected* class's windowed p99 and, on an SLO
+breach, first tightens the admission gate (defer/shed best-effort work —
+free and instantly reversible) and only delegates to the wrapped scaling
+policy once admission is exhausted — the "shed before you spend" rule of
+serverless LLM serving.
 """
 from __future__ import annotations
 
@@ -44,6 +51,7 @@ class ClusterView:
     spec: ServiceSpec
     rho_bar: float
     total_rate: float              # nu of the current composition
+    admission_level: float = 1.0   # current best-effort throttle (1 = open)
 
     @property
     def n_provisioned(self) -> int:
@@ -55,10 +63,14 @@ class AutoscaleAction:
     add: int = 0
     remove: int = 0
     reason: str = ""
+    # target admission throttle (None = leave unchanged); the controller
+    # actuates it on the engine/orchestrator admission gate
+    admission_level: Optional[float] = None
 
     @property
     def is_noop(self) -> bool:
-        return self.add == 0 and self.remove == 0
+        return self.add == 0 and self.remove == 0 \
+            and self.admission_level is None
 
 
 class AutoscalePolicy:
@@ -248,3 +260,69 @@ class PredictivePolicy(AutoscalePolicy):
                 return AutoscaleAction(
                     remove=1, reason=f"forecast {forecast:.2f}/s fits n-1")
         return AutoscaleAction(reason=f"forecast {forecast:.2f}/s fits")
+
+
+class SLOAwareAdmissionPolicy(AutoscalePolicy):
+    """Shed/defer best-effort work before paying for scale-out.
+
+    Wraps any scaling policy.  Watches the *protected* class's windowed p99
+    (class index ``protected_cls``, SLO ``slo`` seconds):
+
+      * p99 over SLO and the admission gate not yet fully closed — tighten
+        the gate (halve the level; below ``floor_snap`` snap to 0, deferring
+        all best-effort work that would queue).  No servers are ordered:
+        admission is free and reverses at the next tick, a scale-out bills
+        for its whole lifetime.
+      * p99 over SLO with the gate already closed — best-effort shedding is
+        exhausted; the *protected* load alone is too much.  Delegate to the
+        wrapped policy (scale out).
+      * p99 comfortably under SLO (below ``relax_guard * slo``) with the
+        gate partially closed and no queue — re-open it gradually (double),
+        then let the wrapped policy consider scale-in.
+
+    With a single class (or no SLO) it is transparent: every decision is
+    the wrapped policy's.
+    """
+
+    name = "slo-admission"
+
+    def __init__(self, inner: AutoscalePolicy, slo: float,
+                 protected_cls: int = 0, min_level: float = 0.0,
+                 tighten: float = 0.5, relax: float = 2.0,
+                 relax_guard: float = 0.5, floor_snap: float = 0.05):
+        if slo <= 0:
+            raise ValueError("slo must be positive")
+        self.inner = inner
+        self.slo = float(slo)
+        self.protected_cls = protected_cls
+        self.min_level = float(min_level)
+        self.tighten = float(tighten)
+        self.relax = float(relax)
+        self.relax_guard = float(relax_guard)
+        self.floor_snap = float(floor_snap)
+
+    def sizing_rate(self, tel: Telemetry, lag: float) -> float:
+        return self.inner.sizing_rate(tel, lag)
+
+    def decide(self, tel: Telemetry, view: ClusterView,
+               now: float) -> AutoscaleAction:
+        p99 = tel.response_quantile(99.0, cls=self.protected_cls)
+        lvl = view.admission_level
+        if not math.isnan(p99) and p99 > self.slo:
+            if lvl > self.min_level + 1e-9:
+                new = lvl * self.tighten
+                if new < self.floor_snap:
+                    new = self.min_level
+                return AutoscaleAction(
+                    admission_level=new,
+                    reason=f"p99 {p99:.2f} > slo {self.slo:g}: "
+                           f"admission {lvl:g} -> {new:g}")
+            return self.inner.decide(tel, view, now)   # shedding exhausted
+        if lvl < 1.0 and tel.queue_depth() == 0 \
+                and (math.isnan(p99) or p99 < self.relax_guard * self.slo):
+            new = min(1.0, max(lvl * self.relax, self.floor_snap))
+            return AutoscaleAction(
+                admission_level=new,
+                reason=f"p99 {p99:.2f} under slo: "
+                       f"admission {lvl:g} -> {new:g}")
+        return self.inner.decide(tel, view, now)

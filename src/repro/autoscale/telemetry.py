@@ -57,7 +57,8 @@ class Telemetry:
     def __init__(self, config: TelemetryConfig = TelemetryConfig()):
         self.cfg = config
         self._arrivals: Deque[float] = deque()
-        self._completions: Deque[Tuple[float, float]] = deque()  # (t, resp)
+        # (t, resp, cls) — class 0 unless the feeder reports SLO classes
+        self._completions: Deque[Tuple[float, float, int]] = deque()
         self._samples: Deque[StateSample] = deque()
         self._rates: Deque[Tuple[float, float]] = deque()        # (t, window rate)
         self.rate_ewma: float = 0.0
@@ -96,10 +97,11 @@ class Telemetry:
         self._arrivals.extend(float(t) for t in times)
         self._advance(float(times[-1]))
 
-    def record_completion(self, t: float, response_time: float) -> None:
+    def record_completion(self, t: float, response_time: float,
+                          cls: int = 0) -> None:
         self.n_completions += 1
         if len(self._completions) < self.cfg.max_completions:
-            self._completions.append((t, response_time))
+            self._completions.append((t, response_time, cls))
         self._advance(t)
 
     def record_sample(
@@ -175,14 +177,20 @@ class Telemetry:
             return 0.0
         return s.in_flight / s.capacity if s.capacity else 1.0
 
-    def response_quantile(self, q: float) -> float:
-        """q-th percentile (0..100) of windowed response times (nan if none)."""
-        if not self._completions:
+    def response_quantile(self, q: float, cls: Optional[int] = None) -> float:
+        """q-th percentile (0..100) of windowed response times (nan if
+        none); ``cls`` restricts to one SLO class — the per-class p99 the
+        SLO-aware admission policy watches."""
+        rts = [r for _, r, c in self._completions
+               if cls is None or c == cls]
+        if not rts:
             return math.nan
-        return float(np.percentile([r for _, r in self._completions], q))
+        return float(np.percentile(rts, q))
 
-    def completions_in_window(self) -> int:
-        return len(self._completions)
+    def completions_in_window(self, cls: Optional[int] = None) -> int:
+        if cls is None:
+            return len(self._completions)
+        return sum(1 for _, _, c in self._completions if c == cls)
 
 
 # ---------------------------------------------------------------------------
@@ -207,7 +215,8 @@ def sample_simulator(tel: Telemetry, sim, t: float, n_servers: int,
         tel.record_arrivals(np.asarray(sim.times[lo:hi]))
     comp_cursor, jids = sim.completions_since(comp_cursor)
     for jid in jids:
-        tel.record_completion(min(t, sim.fin[jid]), sim.response_time_of(jid))
+        tel.record_completion(min(t, sim.fin[jid]), sim.response_time_of(jid),
+                              cls=sim.cls[jid])
     tel.record_sample(t, queue_depth=sim.queue_len(at=t),
                       in_flight=sim.in_flight,
                       capacity=sim.total_capacity, n_servers=n_servers)
@@ -225,7 +234,8 @@ def sample_orchestrator(tel: Telemetry, orch, t: float,
     fin: List = orch.finished
     for req in fin[finished_cursor:]:
         rt = req.response_time()
-        tel.record_completion(t, rt if rt is not None else 0.0)
+        tel.record_completion(t, rt if rt is not None else 0.0,
+                              cls=getattr(req, "cls", 0))
     capacity = sum(e.capacity for e in orch.engines)
     in_flight = sum(e.num_active for e in orch.engines)
     tel.record_sample(t, queue_depth=len(orch.queue), in_flight=in_flight,

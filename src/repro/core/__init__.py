@@ -11,7 +11,8 @@ from .placement import Placement, gbp_cr, random_placement, chains_needed_from_s
 from .chains import Chain, ChainGraph, disjoint_chain_objects
 from .cache_alloc import Allocation, gca, reserved_allocation, optimal_ilp, rate_lower_bound, initial_slots
 from .load_balance import (
-    JFFC, JFFS, JSQ, JIQ, SED, SAJSQ, RandomDispatch, POLICIES, Policy,
+    JFFC, JFFS, JSQ, JIQ, SED, SAJSQ, PriorityJFFC, RandomDispatch,
+    POLICIES, Policy,
 )
 from .queueing import (
     response_time_bounds,
@@ -37,6 +38,8 @@ from .workload import (
     poisson_exponential, poisson_exponential_np, azure_like_trace,
     azure_like_trace_np, phased_poisson, AZURE_STATS, interarrival_std_ratio,
     diurnal_phases, diurnal_poisson, trace_replay_phases, token_work,
+    RequestClass, DEFAULT_CLASS, interactive_batch_mix, classed_poisson_mix,
+    classed_phased_poisson, classed_azure_trace_np, label_classes,
 )
 
 __all__ = [
@@ -44,8 +47,8 @@ __all__ = [
     "Placement", "gbp_cr", "random_placement", "chains_needed_from_servers",
     "Chain", "ChainGraph", "disjoint_chain_objects",
     "Allocation", "gca", "reserved_allocation", "optimal_ilp", "rate_lower_bound", "initial_slots",
-    "JFFC", "JFFS", "JSQ", "JIQ", "SED", "SAJSQ", "RandomDispatch",
-    "POLICIES", "Policy",
+    "JFFC", "JFFS", "JSQ", "JIQ", "SED", "SAJSQ", "PriorityJFFC",
+    "RandomDispatch", "POLICIES", "Policy",
     "response_time_bounds", "occupancy_lower_bound", "occupancy_upper_bound",
     "exact_occupancy_k2", "exact_occupancy_ctmc", "is_stable", "total_rate",
     "Job", "SimResult", "VectorSimulator", "VECTORIZED_POLICIES",
@@ -59,4 +62,7 @@ __all__ = [
     "azure_like_trace_np", "phased_poisson", "AZURE_STATS",
     "interarrival_std_ratio",
     "diurnal_phases", "diurnal_poisson", "trace_replay_phases", "token_work",
+    "RequestClass", "DEFAULT_CLASS", "interactive_batch_mix",
+    "classed_poisson_mix", "classed_phased_poisson", "classed_azure_trace_np",
+    "label_classes",
 ]

@@ -7,12 +7,23 @@ the fastest free chain).
 
 The benchmark policies (JSQ / JIQ / SED / SA-JSQ) use dedicated per-chain
 queues, extended to parallel chains exactly as in Section 4.1.2.
+
+Multi-tenant serving adds :class:`PriorityJFFC`: Algorithm 3's central
+queue ordered by SLO class instead of FIFO — strict priority tiers with
+optional linear aging so best-effort work cannot starve.  The aged
+priority ``tier - aging_rate * (now - arrival)`` is order-equivalent to
+the *static* key ``tier + aging_rate * arrival``, so one heap insertion
+per queued job suffices and the queue never needs re-keying as time
+passes.
 """
 from __future__ import annotations
 
+import heapq
 import random
 from collections import deque
 from typing import Deque, List, Optional, Sequence, Tuple
+
+from .workload import DEFAULT_CLASS, RequestClass
 
 
 class Policy:
@@ -75,6 +86,50 @@ class JFFC(Policy):
 
     def queue_len(self):
         return len(self.queue)
+
+
+class PriorityJFFC(Policy):
+    """JFFC with a priority central queue (multi-tenant SLO classes).
+
+    An arrival still joins the fastest free chain; when every slot is busy
+    it queues with key ``tier + aging_rate * arrival`` (see module
+    docstring), ties broken by arrival order.  A completion on chain k
+    pulls the *highest-priority* queued job onto chain k — Algorithm 3
+    with the FIFO pull replaced by a class-aware pull.  With a single
+    default class (tier 0) the key degenerates to arrival order and the
+    policy is exactly :class:`JFFC`.
+    """
+
+    name = "priority"
+
+    def __init__(self, rates, caps, rng=None,
+                 classes: Optional[Sequence[RequestClass]] = None,
+                 aging_rate: float = 0.0):
+        super().__init__(rates, caps, rng)
+        self.classes = list(classes) if classes else [DEFAULT_CLASS]
+        self.aging_rate = float(aging_rate)
+        self.pq: List[Tuple[float, int, object]] = []   # (kappa, jid, job)
+
+    def _kappa(self, job) -> float:
+        tier = self.classes[getattr(job, "cls", 0)].priority
+        return tier + self.aging_rate * job.arrival
+
+    def on_arrival(self, job):
+        free = self.free_chains()
+        if free:
+            return max(free, key=lambda i: self.rates[i])
+        heapq.heappush(self.pq, (self._kappa(job), job.jid, job))
+        return None
+
+    def on_departure(self, k):
+        if self.pq:
+            job = heapq.heappop(self.pq)[2]
+            job.assigned_chain = k
+            return job
+        return None
+
+    def queue_len(self):
+        return len(self.pq)
 
 
 class _DedicatedQueuePolicy(Policy):
@@ -183,4 +238,5 @@ class RandomDispatch(_DedicatedQueuePolicy):
         return self.rng.randrange(len(self.caps))
 
 
-POLICIES = {cls.name: cls for cls in (JFFC, JSQ, SAJSQ, SED, JIQ, JFFS, RandomDispatch)}
+POLICIES = {cls.name: cls for cls in (JFFC, PriorityJFFC, JSQ, SAJSQ, SED,
+                                      JIQ, JFFS, RandomDispatch)}

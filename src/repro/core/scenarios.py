@@ -52,17 +52,26 @@ import numpy as np
 from .servers import Server, ServiceSpec
 from .simulator import SimResult, VectorSimulator
 from .tuning import compose_best_effort
-from .workload import AZURE_STATS, phased_poisson, token_work
+from .workload import (
+    AZURE_STATS, RequestClass, classed_phased_poisson, phased_poisson,
+    token_work,
+)
 
-EVENT_KINDS = ("fail", "add", "slowdown", "burst", "fail_group")
+EVENT_KINDS = ("fail", "add", "slowdown", "burst", "fail_group",
+               "tenant_burst")
+
+#: event kinds that shape the arrival process rather than the cluster
+BURST_KINDS = ("burst", "tenant_burst")
 
 
 @dataclasses.dataclass(frozen=True)
 class ScenarioEvent:
     """One timed event.  ``scale`` is the tau multiplier for ``slowdown``
-    (absolute, relative to nominal) and the rate multiplier for ``burst``;
-    ``duration`` is only meaningful for ``burst``; ``sids`` names the member
-    set of a correlated ``fail_group`` (a rack, a power domain)."""
+    (absolute, relative to nominal) and the rate multiplier for ``burst`` /
+    ``tenant_burst``; ``duration`` is only meaningful for bursts; ``sids``
+    names the member set of a correlated ``fail_group`` (a rack, a power
+    domain); ``cls`` names the request class a ``tenant_burst`` multiplies
+    (one tenant's traffic spikes, the others' stays flat)."""
     time: float
     kind: str
     sid: str = ""
@@ -70,6 +79,7 @@ class ScenarioEvent:
     scale: float = 1.0
     duration: float = 0.0
     sids: Tuple[str, ...] = ()
+    cls: int = -1
 
     def __post_init__(self):
         if self.kind not in EVENT_KINDS:
@@ -80,6 +90,8 @@ class ScenarioEvent:
             raise ValueError(f"{self.kind} event needs a server id")
         if self.kind == "fail_group" and not self.sids:
             raise ValueError("fail_group event needs a non-empty sid set")
+        if self.kind == "tenant_burst" and self.cls < 0:
+            raise ValueError("tenant_burst event needs a class index")
 
 
 @dataclasses.dataclass
@@ -117,16 +129,26 @@ class Scenario:
             ScenarioEvent(time, "burst", scale=scale, duration=duration))
         return self
 
+    def tenant_burst(self, time: float, duration: float, scale: float,
+                     cls: int) -> "Scenario":
+        """One tenant class's arrival rate spikes (a product launch, a batch
+        backfill) while every other class's stays flat — the regime where
+        class-blind scheduling lets one tenant's burst destroy everyone
+        else's SLO."""
+        self.events.append(ScenarioEvent(time, "tenant_burst", scale=scale,
+                                         duration=duration, cls=cls))
+        return self
+
     # -- views ------------------------------------------------------------------
     def cluster_events(self) -> List[ScenarioEvent]:
         """fail/add/slowdown events, time-sorted (stable)."""
-        evs = [e for e in self.events if e.kind != "burst"]
+        evs = [e for e in self.events if e.kind not in BURST_KINDS]
         return sorted(evs, key=lambda e: e.time)
 
-    def arrival_phases(self, base_rate: float) -> List[Tuple[float, float, float]]:
-        """Piecewise-constant arrival rate over [0, horizon): the base rate
-        times the product of every burst multiplier active in the segment."""
-        bursts = [e for e in self.events if e.kind == "burst"]
+    def _overlay(self, base_rate: float,
+                 bursts: List[ScenarioEvent]) -> List[Tuple[float, float, float]]:
+        """Piecewise-constant rate over [0, horizon): base times the product
+        of every given burst multiplier active in the segment."""
         points = {0.0, self.horizon}
         for b in bursts:
             points.add(min(b.time, self.horizon))
@@ -142,11 +164,38 @@ class Scenario:
                 phases.append((a, b, rate))
         return phases
 
+    def arrival_phases(self, base_rate: float) -> List[Tuple[float, float, float]]:
+        """Class-blind rate profile: global ``burst`` multipliers only
+        (``tenant_burst`` events need the per-class view below)."""
+        return self._overlay(
+            base_rate, [e for e in self.events if e.kind == "burst"])
+
+    def class_arrival_phases(
+        self, class_rates: Sequence[float]
+    ) -> List[List[Tuple[float, float, float]]]:
+        """Per-class rate profiles: class ``c`` sees every global ``burst``
+        plus the ``tenant_burst`` events addressed to it."""
+        out = []
+        for c, base in enumerate(class_rates):
+            bursts = [e for e in self.events
+                      if e.kind == "burst"
+                      or (e.kind == "tenant_burst" and e.cls == c)]
+            out.append(self._overlay(base, bursts))
+        return out
+
     def generate_arrivals(
         self, base_rate: float, seed: int = 0
     ) -> Tuple[np.ndarray, np.ndarray]:
         """(times, works) over the horizon, bursts applied."""
         return phased_poisson(self.arrival_phases(base_rate), seed=seed)
+
+    def generate_classed_arrivals(
+        self, class_rates: Sequence[float], seed: int = 0
+    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Class-labeled ``(times, works, class_ids)`` over the horizon —
+        per-class base rates with global and tenant bursts applied."""
+        return classed_phased_poisson(
+            self.class_arrival_phases(class_rates), seed=seed)
 
 
 # ---------------------------------------------------------------------------
@@ -175,10 +224,15 @@ class ScenarioResult:
     completed_all: bool
     reconfigurations: int
     restarts: int
+    n_rejected: int = 0        # shed by the admission gate (never lost)
 
     def p99(self) -> float:
         rt = self.result.response_times
         return float(np.percentile(rt, 99)) if len(rt) else math.nan
+
+    def per_class(self) -> dict:
+        """Per-class response/waiting quantiles (empty for class-blind runs)."""
+        return self.result.per_class()
 
 
 def compose_or_degrade(
@@ -250,31 +304,44 @@ def _resolve_arrivals(
     arrivals,
     service_model: str,
     trace_stats,
-) -> Tuple[np.ndarray, np.ndarray]:
-    """(times, works) for the run; in ``tokens`` mode the works are derived
-    from the trace's per-job (in_tokens, out_tokens) via ``token_work``."""
+    class_rates: Optional[Sequence[float]] = None,
+) -> Tuple[np.ndarray, np.ndarray, Optional[np.ndarray]]:
+    """(times, works, class_ids) for the run; in ``tokens`` mode the works
+    are derived from the trace's per-job (in_tokens, out_tokens) via
+    ``token_work``.  ``class_ids`` is None for class-blind runs; explicit
+    arrivals may carry labels as a third column (work mode) or fifth column
+    (token mode, e.g. ``classed_azure_trace_np``)."""
     if service_model not in ("work", "tokens"):
         raise ValueError("service_model must be 'work' or 'tokens'")
     if service_model == "tokens":
-        if arrivals is None or len(arrivals) != 4:
+        if arrivals is None or len(arrivals) not in (4, 5):
             raise ValueError(
                 "service_model='tokens' needs arrivals=(times, works, "
-                "in_tokens, out_tokens), e.g. from azure_like_trace_np")
-        times, _, tin, tout = arrivals
+                "in_tokens, out_tokens[, class_ids]), e.g. from "
+                "azure_like_trace_np / classed_azure_trace_np")
+        times, tin, tout = arrivals[0], arrivals[2], arrivals[3]
+        cls = arrivals[4] if len(arrivals) == 5 else None
         return np.asarray(times, dtype=np.float64), \
-            token_work(tin, tout, stats=trace_stats)
+            token_work(tin, tout, stats=trace_stats), cls
     if arrivals is None:
-        return scenario.generate_arrivals(base_rate, seed=seed)
+        if class_rates is not None:
+            return scenario.generate_classed_arrivals(class_rates, seed=seed)
+        t, w = scenario.generate_arrivals(base_rate, seed=seed)
+        return t, w, None
+    if len(arrivals) == 5:            # class-labeled token trace, work mode
+        return arrivals[0], arrivals[1], arrivals[4]
     if len(arrivals) == 4:            # token-count trace, work mode: use works
-        return arrivals[0], arrivals[1]
-    return arrivals
+        return arrivals[0], arrivals[1], None
+    if len(arrivals) == 3:            # class-labeled (times, works, cls)
+        return arrivals[0], arrivals[1], arrivals[2]
+    return arrivals[0], arrivals[1], None
 
 
 def run_scenario(
     servers: Sequence[Server],
     spec: ServiceSpec,
     scenario: Scenario,
-    base_rate: float,
+    base_rate: Optional[float] = None,
     policy: str = "jffc",
     rho_bar: float = 0.7,
     tuner: str = "bound-lower",
@@ -284,6 +351,10 @@ def run_scenario(
     service_model: str = "work",
     trace_stats=AZURE_STATS,
     controller=None,
+    classes: Optional[Sequence[RequestClass]] = None,
+    class_rates: Optional[Sequence[float]] = None,
+    aging_rate: float = 0.0,
+    admission_level: float = 1.0,
 ) -> ScenarioResult:
     """Simulate the scenario end to end at the queueing level.
 
@@ -307,15 +378,32 @@ def run_scenario(
     loop is that the true rate is unknown.  Control ticks continue through
     the post-horizon drain (so scale-in can release servers) and billing
     runs to the last completion.
+
+    Multi-tenant runs: pass ``classes`` (the run's ``RequestClass`` list)
+    with either ``class_rates`` (per-class base rates — the scenario's
+    global *and* ``tenant_burst`` phases apply) or class-labeled explicit
+    ``arrivals``.  ``policy="priority"`` schedules by aged class tier
+    (``aging_rate``); sheddable classes (finite deadline) pass through the
+    admission gate at ``admission_level`` (a controller returning
+    admission actions retunes that level live — deferring best-effort work
+    before paying for scale-out).  ``base_rate`` defaults to
+    ``sum(class_rates)`` when omitted.
     """
+    if base_rate is None:
+        if class_rates is None:
+            raise ValueError("need base_rate or class_rates")
+        base_rate = float(sum(class_rates))
     cluster: Dict[str, Server] = {s.sid: s for s in servers}
     tau: Dict[str, float] = {s.sid: 1.0 for s in servers}
-    times, works = _resolve_arrivals(scenario, base_rate, seed, arrivals,
-                                     service_model, trace_stats)
+    times, works, cls_ids = _resolve_arrivals(
+        scenario, base_rate, seed, arrivals, service_model, trace_stats,
+        class_rates)
     rates, caps, keys, degraded = compose_or_degrade(
         _effective(cluster, tau), spec, base_rate, rho_bar, tuner)
-    sim = VectorSimulator(rates, caps, policy=policy, seed=seed + 1, keys=keys)
-    sim.add_arrivals(times, works)
+    sim = VectorSimulator(rates, caps, policy=policy, seed=seed + 1, keys=keys,
+                          classes=classes, aging_rate=aging_rate,
+                          admission_level=admission_level)
+    sim.add_arrivals(times, works, cls_ids)
     log: List[ScenarioLogEntry] = []
     composed_lam = base_rate          # load the current chain set targets
 
@@ -358,6 +446,10 @@ def run_scenario(
         tick = interval
         max_t = scenario.horizon * 3.0 + interval   # drain-phase safety cap
         tel_cursor = (0, 0.0)
+        # the controller's throttle tracks the gate it actuates — seed it
+        # with the run's configured level so the first tick's sync does not
+        # clobber a user-passed admission_level
+        controller.admission_level = sim.admission_level
         controller.bill(0.0, len(cluster) + len(controller.pending))
         while True:
             t_scripted = scripted[0].time if scripted else math.inf
@@ -381,8 +473,19 @@ def run_scenario(
                 servers=_effective(cluster, tau),
                 pending=[s for _, s in controller.pending],
                 spec=spec, rho_bar=rho_bar,
-                total_rate=float(sum(m * c for m, c in zip(rates, caps))))
+                total_rate=float(sum(m * c for m, c in zip(rates, caps))),
+                admission_level=sim.admission_level)
             events = controller.control_tick(view, tick, list(cluster))
+            lvl = getattr(controller, "admission_level", None)
+            if lvl is not None and lvl != sim.admission_level:
+                # SLO-aware admission: defer/shed best-effort work first —
+                # cheaper than a scale-out, reversible at the next tick
+                sim.set_admission_level(lvl)
+                log.append(ScenarioLogEntry(
+                    time=tick, kind="auto-admission", sid=f"{lvl:g}",
+                    requeued=0, n_chains=len(rates),
+                    total_rate=float(sum(m * c for m, c in zip(rates, caps))),
+                    degraded=degraded))
             if events:
                 # controller-synthesized actions are voluntary — drain, never
                 # restart (a scale-in is a graceful retirement, not a crash)
@@ -397,7 +500,7 @@ def run_scenario(
                           controller.compose_rate(base_rate), mode="drain")
             controller.bill(tick, len(cluster) + len(controller.pending))
             tick += interval
-            drained = len(sim.comp) == sim.n
+            drained = len(sim.comp) + sim.n_rejected == sim.n
             if tick > max_t or (drained and tick > scenario.horizon
                                 and not scripted):
                 tick = math.inf
@@ -409,7 +512,8 @@ def run_scenario(
         log=log,
         n_jobs=len(times),
         completed_all=(sim.queue_len() == 0 and sim.in_flight == 0
-                       and len(sim.comp) == len(times)),
+                       and len(sim.comp) + sim.n_rejected == len(times)),
         reconfigurations=sim.reconfigurations,
         restarts=sim.restarts,
+        n_rejected=sim.n_rejected,
     )

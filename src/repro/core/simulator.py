@@ -11,10 +11,11 @@ Two engines share the :class:`SimResult` API:
   arrays, in-flight jobs in a capacity-sized departure heap (never the
   O(n)-element event heap of the scalar loop), queues are index buffers with
   head pointers, and saturated stretches bulk-append arrivals.  It reproduces
-  the scalar engine bit-identically on fixed seeds for the ``jffc``,
-  ``jffs`` and ``random`` policies at >=10x the throughput, supports pausing
-  (``run_until``) and mid-run cluster reconfiguration (``reconfigure``) for
-  the scenario engine in :mod:`repro.core.scenarios`.
+  the scalar engine bit-identically on fixed seeds for every policy in
+  :data:`VECTORIZED_POLICIES` (jffc / jffs / random / jsq / sa-jsq / sed /
+  jiq / priority), supports pausing (``run_until``) and mid-run cluster
+  reconfiguration (``reconfigure``) for the scenario engine in
+  :mod:`repro.core.scenarios`.
 
 Jobs arrive (Poisson or trace), carry an exponential-mean-1 ``work`` (or
 token counts for trace mode), and are dispatched to composed job servers by a
@@ -22,6 +23,15 @@ policy.  Service time of a job of work ``r`` on chain ``k`` is ``r / mu_k``
 unless a custom ``service_time_fn`` is given to the scalar engine
 (trace-driven mode computes it from the paper's Eq. 2 with per-job token
 counts).
+
+Multi-tenant SLO classes: every job carries a class index into a
+``RequestClass`` list (:mod:`repro.core.workload`).  The ``priority``
+policy schedules the central queue by aged class tier, and its admission
+gate sheds best-effort arrivals whose estimated wait exceeds the class
+deadline (scaled by ``admission_level`` — the autoscaler's throttle knob).
+:class:`SimResult` reports per-class response/waiting quantiles and shed
+counts.  With a single default class everything degenerates to the
+class-blind engines bit for bit.
 """
 from __future__ import annotations
 
@@ -30,11 +40,12 @@ import dataclasses
 import heapq
 import math
 import random
-from typing import Callable, List, Optional, Sequence, Tuple, Union
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
 from .load_balance import Policy
+from .workload import DEFAULT_CLASS, RequestClass
 
 ARRIVAL, DEPARTURE = 0, 1
 
@@ -49,6 +60,20 @@ class Job:
     assigned_chain: Optional[int] = None
     start: Optional[float] = None
     finish: Optional[float] = None
+    cls: int = 0                    # index into the run's RequestClass list
+
+
+def _quantile_stats(x: np.ndarray) -> dict:
+    if len(x) == 0:
+        return {"mean": math.nan}
+    return {
+        "mean": float(np.mean(x)),
+        "median": float(np.median(x)),
+        "p95": float(np.percentile(x, 95)),
+        "p99": float(np.percentile(x, 99)),
+        "max": float(np.max(x)),
+        "min": float(np.min(x)),
+    }
 
 
 @dataclasses.dataclass
@@ -58,26 +83,40 @@ class SimResult:
     service_times: np.ndarray
     n_completed: int
     sim_time: float
+    # multi-tenant extensions (None / 0 for class-blind legacy constructions)
+    class_ids: Optional[np.ndarray] = None       # per completed job, aligned
+    n_rejected: int = 0                          # shed by the admission gate
+    rejected_class_ids: Optional[np.ndarray] = None
 
     def summary(self) -> dict:
-        def stats(x: np.ndarray) -> dict:
-            if len(x) == 0:
-                return {"mean": math.nan}
-            return {
-                "mean": float(np.mean(x)),
-                "median": float(np.median(x)),
-                "p95": float(np.percentile(x, 95)),
-                "p99": float(np.percentile(x, 99)),
-                "max": float(np.max(x)),
-                "min": float(np.min(x)),
-            }
-
-        return {
-            "response": stats(self.response_times),
-            "waiting": stats(self.waiting_times),
-            "service": stats(self.service_times),
+        out = {
+            "response": _quantile_stats(self.response_times),
+            "waiting": _quantile_stats(self.waiting_times),
+            "service": _quantile_stats(self.service_times),
             "n": self.n_completed,
         }
+        if self.n_rejected:
+            out["rejected"] = self.n_rejected
+        return out
+
+    def per_class(self) -> Dict[int, dict]:
+        """Per-class response/waiting quantiles + completion/shed counts."""
+        if self.class_ids is None:
+            return {}
+        rej = self.rejected_class_ids if self.rejected_class_ids is not None \
+            else np.empty(0, dtype=np.int64)
+        present = set(np.unique(self.class_ids).tolist()) \
+            | set(np.unique(rej).tolist())
+        out: Dict[int, dict] = {}
+        for c in sorted(present):
+            m = self.class_ids == c
+            out[int(c)] = {
+                "n": int(np.sum(m)),
+                "rejected": int(np.sum(rej == c)),
+                "response": _quantile_stats(self.response_times[m]),
+                "waiting": _quantile_stats(self.waiting_times[m]),
+            }
+        return out
 
     @property
     def mean_response(self) -> float:
@@ -100,7 +139,9 @@ def simulate(
 
     Args:
       policy: dispatch policy (owns the queues).
-      arrivals: list of (time, work, in_tokens, out_tokens).
+      arrivals: list of (time, work, in_tokens, out_tokens) tuples, each
+        optionally extended with a 5th element — the request-class index
+        consumed by class-aware policies such as ``PriorityJFFC``.
       service_time_fn: optional (job, chain) -> seconds; defaults to
         ``job.work / rates[chain]``.
       warmup_fraction: fraction of completed jobs discarded from the front.
@@ -111,8 +152,10 @@ def simulate(
 
     events: List[Tuple[float, int, int, object]] = []
     seq = 0
-    for i, (t, w, ti, to) in enumerate(arrivals):
-        job = Job(jid=i, arrival=t, work=w, in_tokens=ti, out_tokens=to)
+    for i, arr in enumerate(arrivals):
+        t, w, ti, to = arr[0], arr[1], arr[2], arr[3]
+        job = Job(jid=i, arrival=t, work=w, in_tokens=ti, out_tokens=to,
+                  cls=int(arr[4]) if len(arr) > 4 else 0)
         heapq.heappush(events, (t, seq, ARRIVAL, job))
         seq += 1
 
@@ -148,7 +191,8 @@ def simulate(
     resp = np.array([j.finish - j.arrival for j in kept])
     wait = np.array([j.start - j.arrival for j in kept])
     serv = np.array([j.finish - j.start for j in kept])
-    return SimResult(resp, wait, serv, len(kept), now)
+    cls = np.array([j.cls for j in kept], dtype=np.int64)
+    return SimResult(resp, wait, serv, len(kept), now, class_ids=cls)
 
 
 def poisson_arrivals(
@@ -187,8 +231,12 @@ def simulate_policy_name(
 _INF = math.inf
 
 #: policies the vectorized engine reproduces bit-identically vs. the scalar
-#: oracle (others fall back to :func:`simulate`).
-VECTORIZED_POLICIES = ("jffc", "jffs", "random")
+#: oracle on fixed seeds (every registered policy is now vectorized).
+VECTORIZED_POLICIES = ("jffc", "jffs", "random", "jsq", "sa-jsq", "sed",
+                       "jiq", "priority")
+
+#: dedicated-queue policies served by the generic per-event loop
+_DEDICATED_POLICIES = ("jffs", "random", "jsq", "sa-jsq", "sed", "jiq")
 
 
 class VectorSimulator:
@@ -228,6 +276,9 @@ class VectorSimulator:
         policy: str = "jffc",
         seed: int = 0,
         keys: Optional[Sequence] = None,
+        classes: Optional[Sequence[RequestClass]] = None,
+        aging_rate: float = 0.0,
+        admission_level: float = 1.0,
     ):
         if policy not in VECTORIZED_POLICIES:
             raise ValueError(
@@ -239,6 +290,12 @@ class VectorSimulator:
             raise ValueError("rates must be positive, caps non-negative")
         self.policy = policy
         self.rng = random.Random(seed)
+        # multi-tenant request classes (single default class = legacy path)
+        self.classes = list(classes) if classes else [DEFAULT_CLASS]
+        self._tiers = [c.priority for c in self.classes]
+        self._deadlines = [c.deadline for c in self.classes]
+        self.aging_rate = float(aging_rate)
+        self.admission_level = float(admission_level)
         self._set_chains([float(r) for r in rates], [int(c) for c in caps])
         # optional physical identities (e.g. server-id tuples) used by
         # reconfigure() to decide which chains survive a recomposition
@@ -246,18 +303,21 @@ class VectorSimulator:
         # arrival streams
         self.times: List[float] = []
         self.works: List[float] = []
+        self.cls: List[int] = []         # per-job class index (flat)
         self.n = 0
         self.i = 0                       # next-arrival cursor
         # per-job state (flat, indexed by jid)
         self.st: List[float] = []        # start (last dispatch) time
         self.fin: List[float] = []       # finish time
         self.comp: List[int] = []        # jids in completion order
+        self.rejected: List[int] = []    # jids shed by the admission gate
         # in-flight departures: (finish, seq, jid, chain) — the chain rides
         # in the tuple so the hot loops never touch a per-job chain array.
         self.heap: List[Tuple[float, int, int, int]] = []
         self.seq = 0
         self.queue: List[int] = []       # central FIFO (jffc)
         self.qh = 0
+        self.pq: List[Tuple[float, int]] = []   # (kappa, jid) priority queue
         self.dq: List[List[int]] = [[] for _ in caps]   # dedicated FIFOs
         self.dqh: List[int] = [0] * len(caps)
         self.now = 0.0
@@ -282,10 +342,28 @@ class VectorSimulator:
         self.chain_order = sorted(range(self.K), key=lambda k: (-rates[k], k))
         self.running = [0] * self.K
         self.total_free = sum(caps)
+        self._nu = sum(r * c for r, c in zip(rates, caps))
 
     @property
     def in_flight(self) -> int:
         return len(self.heap)
+
+    @property
+    def n_rejected(self) -> int:
+        return len(self.rejected)
+
+    # -- multi-tenant helpers --------------------------------------------------
+    def _kappa(self, jid: int) -> float:
+        """Static priority key of a queued job: ``tier + aging * arrival``
+        (order-equivalent to the aged priority ``tier - aging * waited``,
+        so the heap never needs re-keying as time passes)."""
+        return self._tiers[self.cls[jid]] + self.aging_rate * self.times[jid]
+
+    def set_admission_level(self, level: float) -> None:
+        """Autoscaler throttle: scales every sheddable class's deadline.
+        ``1.0`` = nominal admission, ``0.0`` = defer/shed all best-effort
+        work that would have to queue."""
+        self.admission_level = max(0.0, float(level))
 
     # -- telemetry taps (autoscale control plane) ------------------------------
     # ``run_until`` pauses the engine at a control-tick boundary; these
@@ -314,9 +392,10 @@ class VectorSimulator:
         time — pass the pause boundary after ``run_until(t)`` so arrivals
         between the last processed event and ``t`` count as queued."""
         t = self.now if at is None else max(self.now, at)
-        central = len(self.queue) - self.qh
-        if self.policy == "jffc":
+        central = len(self.queue) - self.qh + len(self.pq)
+        if self.policy in ("jffc", "priority"):
             # arrived-but-unstarted jobs of the virtual queue (see _run_jffc)
+            # resp. arrivals the paused priority loop has not processed yet
             central += max(0, bisect.bisect_right(self.times, t) - self.i)
         dedicated = sum(len(q) - h for q, h in zip(self.dq, self.dqh))
         return central + dedicated
@@ -326,25 +405,38 @@ class VectorSimulator:
         self,
         times: Union[Sequence[float], np.ndarray, Sequence[Tuple]],
         works: Optional[Union[Sequence[float], np.ndarray]] = None,
+        classes: Optional[Union[Sequence[int], np.ndarray]] = None,
     ) -> None:
         """Append an arrival batch.
 
-        Either ``(times, works)`` arrays, or a single list of
-        ``(time, work, in_tokens, out_tokens)`` tuples as consumed by the
-        scalar :func:`simulate` (token counts are ignored — the vectorized
-        engine models service as ``work / mu``).  Times must be
-        non-decreasing and not precede already-processed arrivals.
+        Either ``(times, works[, classes])`` arrays, or a single list of
+        ``(time, work, in_tokens, out_tokens[, cls])`` tuples as consumed by
+        the scalar :func:`simulate` (token counts are ignored — the
+        vectorized engine models service as ``work / mu``).  ``classes``
+        are per-job indices into the ``classes`` list given at construction
+        (default: class 0).  Times must be non-decreasing and not precede
+        already-processed arrivals.
         """
         if works is None:
             if len(times) == 0:
                 return
             cols = list(zip(*times))                   # tuple-list form
             tl, wl = list(cols[0]), list(cols[1])
+            cl = [int(c) for c in cols[4]] if len(cols) > 4 else None
         else:
             tl = np.asarray(times, dtype=np.float64).tolist()
             wl = np.asarray(works, dtype=np.float64).tolist()
+            cl = None if classes is None else \
+                np.asarray(classes, dtype=np.int64).tolist()
         if len(tl) != len(wl):
             raise ValueError("times and works must have equal length")
+        if cl is None:
+            cl = [0] * len(tl)
+        if len(cl) != len(tl):
+            raise ValueError("classes must match times in length")
+        if cl and (min(cl) < 0 or max(cl) >= len(self.classes)):
+            raise ValueError(
+                f"class indices must be in [0, {len(self.classes)})")
         ta = np.asarray(tl, dtype=np.float64)
         if len(ta) > 1 and np.any(np.diff(ta) < 0):
             raise ValueError("arrival times must be non-decreasing")
@@ -353,6 +445,7 @@ class VectorSimulator:
         self._times_np = ta if not self.times else None   # cache first batch
         self.times.extend(tl)
         self.works.extend(wl)
+        self.cls.extend(cl)
         m = len(tl)
         self.st.extend([0.0] * m)
         self.fin.extend([0.0] * m)
@@ -365,13 +458,48 @@ class VectorSimulator:
                 return k
         raise AssertionError("no free chain (caller must check total_free)")
 
+    def _in_system(self, k: int) -> int:
+        """Running + queued jobs on chain ``k`` (dedicated-queue policies)."""
+        return self.running[k] + len(self.dq[k]) - self.dqh[k]
+
     def _choose(self, ded_fastest: int) -> int:
-        """Dedicated-queue policy choice for one arrival (jffs / random)."""
-        if self.policy == "random":
+        """Dedicated-queue policy choice for one arrival.
+
+        Each branch replays the scalar policy's exact float operations and
+        RNG call sequence (``random.Random.choice`` / ``randrange``), so the
+        vectorized engine stays bit-identical to the oracle.
+        """
+        p = self.policy
+        if p == "random":
             return self.rng.randrange(self.K)
-        if self.total_free:
-            return self._fastest_free()
-        return ded_fastest
+        if p == "jffs":
+            if self.total_free:
+                return self._fastest_free()
+            return ded_fastest
+        if p == "jsq":
+            ns = [self._in_system(k) for k in range(self.K)]
+            m = min(ns)
+            cands = [k for k in range(self.K) if ns[k] == m]
+            return self.rng.choice(cands)
+        if p == "sa-jsq":
+            return min(range(self.K),
+                       key=lambda k: (self._in_system(k), -self.rates[k]))
+        if p == "sed":
+            rates, caps = self.rates, self.caps
+
+            def delay(k: int) -> float:
+                n = self._in_system(k)
+                mu, c = rates[k], caps[k]
+                wait = max(0, n + 1 - c) / (c * mu)
+                return wait + 1.0 / mu
+
+            return min(range(self.K), key=delay)
+        # jiq
+        free = [k for k in range(self.K)
+                if self.running[k] < self.caps[k]]
+        if free:
+            return self.rng.choice(free)
+        return self.rng.randrange(self.K)
 
     def _start(self, jid: int, k: int, t: float) -> None:
         self.running[k] += 1
@@ -386,6 +514,8 @@ class VectorSimulator:
         """Process every event with time strictly below ``until``."""
         if self.policy == "jffc":
             self._run_jffc(until)
+        elif self.policy == "priority":
+            self._run_priority(until)
         else:
             self._run_dedicated(until)
         if self._drain_pending:
@@ -568,6 +698,76 @@ class VectorSimulator:
         finally:
             self.i, self.seq, self.total_free, self.now = i, seq, total_free, now
 
+    def _run_priority(self, until: float) -> None:
+        """Per-event loop for the priority central queue (multi-tenant).
+
+        JFFC's structure with two changes: (1) the central queue is a heap
+        ordered by the *static* aged-priority key ``tier + aging * arrival``
+        (order-equivalent to ``tier - aging * waited`` at any instant, so
+        queued entries never need re-keying); (2) an arrival of a sheddable
+        class (finite deadline) that would have to queue is rejected when
+        its estimated wait — queue depth over the composed service rate —
+        exceeds ``deadline * admission_level``.  With a single default
+        class and admission off this reproduces the jffc trajectory bit for
+        bit (tier 0, no finite deadlines -> FIFO pulls, no shedding).
+        """
+        times, works, rates, caps = self.times, self.works, self.rates, self.caps
+        st, fin = self.st, self.fin
+        running, chain_order = self.running, self.chain_order
+        h, pq = self.heap, self.pq
+        comp_append = self.comp.append
+        rej_append = self.rejected.append
+        push, pop, replace = heapq.heappush, heapq.heappop, heapq.heapreplace
+        i, seq, total_free, now = self.i, self.seq, self.total_free, self.now
+        stop = self.n if until == _INF else bisect.bisect_left(times, until,
+                                                               self.i)
+        tiers, deadlines, cls = self._tiers, self._deadlines, self.cls
+        r_age, adm, nu = self.aging_rate, self.admission_level, self._nu
+        try:
+            while True:
+                t_arr = times[i] if i < stop else _INF
+                t_dep = h[0][0] if h else _INF
+                if t_arr <= t_dep:
+                    if t_arr == _INF:
+                        return
+                    jid = i
+                    i += 1
+                    now = t_arr
+                    if total_free:
+                        for k in chain_order:
+                            if running[k] < caps[k]:
+                                break
+                        running[k] += 1
+                        total_free -= 1
+                        st[jid] = t_arr
+                        push(h, (t_arr + works[jid] / rates[k], seq, jid, k))
+                        seq += 1
+                    else:
+                        dl = deadlines[cls[jid]]
+                        if dl != _INF and (nu <= 0.0
+                                           or (len(pq) + 1) / nu > dl * adm):
+                            rej_append(jid)     # sheds only when queueing
+                        else:
+                            push(pq, (tiers[cls[jid]] + r_age * t_arr, jid))
+                else:
+                    if t_dep >= until:
+                        return
+                    t, _, jid, k = h[0]
+                    fin[jid] = t
+                    comp_append(jid)
+                    now = t
+                    if pq:
+                        nxt = pop(pq)[1]
+                        st[nxt] = t
+                        replace(h, (t + works[nxt] / rates[k], seq, nxt, k))
+                        seq += 1
+                    else:
+                        pop(h)
+                        running[k] -= 1
+                        total_free += 1
+        finally:
+            self.i, self.seq, self.total_free, self.now = i, seq, total_free, now
+
     # -- reconfiguration (scenario engine hook) ---------------------------------
     def reconfigure(
         self,
@@ -663,9 +863,11 @@ class VectorSimulator:
             if ok not in remap:
                 evicted.extend(old_dq[ok][old_dqh[ok]:])
         evicted.sort(key=lambda j: (self.st[j], j))
-        if self.policy != "jffc":
+        if self.policy not in ("jffc", "priority"):
             # limbo jobs (parked during a total outage) re-dispatch first —
-            # they have been waiting longest
+            # they have been waiting longest (the priority queue survives a
+            # reconfiguration untouched: its keys depend only on class tier
+            # and arrival time, both invariant under recomposition)
             evicted = self.queue[self.qh:] + evicted
             self.queue = []
             self.qh = 0
@@ -683,7 +885,12 @@ class VectorSimulator:
         heapq.heapify(self.heap)
         # re-dispatch evicted jobs at t0 (context re-prefill: full work again)
         for jid in evicted:
-            if self.K == 0 or self.policy == "jffc":
+            if self.policy == "priority":
+                if self.total_free:
+                    self._start(jid, self._fastest_free(), t0)
+                else:       # original kappa: eviction does not reset aging
+                    heapq.heappush(self.pq, (self._kappa(jid), jid))
+            elif self.K == 0 or self.policy == "jffc":
                 if self.total_free:
                     self._start(jid, self._fastest_free(), t0)
                 else:
@@ -700,6 +907,10 @@ class VectorSimulator:
                 nxt = self.queue[self.qh]
                 self.qh += 1
                 self._start(nxt, self._fastest_free(), t0)
+        elif self.policy == "priority":
+            while self.total_free and self.pq:
+                self._start(heapq.heappop(self.pq)[1],
+                            self._fastest_free(), t0)
         else:
             for k in range(self.K):
                 qk, hk = self.dq[k], self.dqh[k]
@@ -726,14 +937,21 @@ class VectorSimulator:
         times = self._times_np
         st = np.asarray(self.st, dtype=np.float64)
         fin = np.asarray(self.fin, dtype=np.float64)
+        cls = np.asarray(self.cls, dtype=np.int64)
         if len(kept):
             resp = fin[kept] - times[kept]
             wait = st[kept] - times[kept]
             serv = fin[kept] - st[kept]
         else:
             resp = wait = serv = np.empty(0, dtype=np.float64)
+        rej = np.asarray(self.rejected, dtype=np.int64)
         return SimResult(resp, wait, serv, len(kept),
-                         max(self.now, self._drain_horizon))
+                         max(self.now, self._drain_horizon),
+                         class_ids=cls[kept] if len(kept)
+                         else np.empty(0, dtype=np.int64),
+                         n_rejected=len(rej),
+                         rejected_class_ids=cls[rej] if len(rej)
+                         else np.empty(0, dtype=np.int64))
 
 
 def simulate_vectorized(
@@ -742,20 +960,26 @@ def simulate_vectorized(
     arrivals: Union[Sequence[Tuple[float, float, int, int]], Tuple],
     seed: int = 0,
     warmup_fraction: float = 0.1,
+    classes: Optional[Sequence[RequestClass]] = None,
+    aging_rate: float = 0.0,
+    admission_level: float = 1.0,
 ) -> SimResult:
     """Vectorized counterpart of ``simulate(POLICIES[name](...), arrivals)``.
 
-    ``arrivals`` is either the scalar engine's tuple list or a
-    ``(times, works)`` array pair.  The RNG seeding matches
+    ``arrivals`` is the scalar engine's tuple list (optionally with a 5th
+    class column), a ``(times, works)`` array pair, or a class-labeled
+    ``(times, works, class_ids)`` triple.  The RNG seeding matches
     :func:`simulate_policy_name` (``seed + 1`` for the policy RNG) so the two
     wrappers are directly comparable.
     """
     rates = [m for m, _ in job_servers]
     caps = [c for _, c in job_servers]
-    sim = VectorSimulator(rates, caps, policy=policy_name, seed=seed + 1)
-    if isinstance(arrivals, tuple) and len(arrivals) == 2 \
+    sim = VectorSimulator(rates, caps, policy=policy_name, seed=seed + 1,
+                          classes=classes, aging_rate=aging_rate,
+                          admission_level=admission_level)
+    if isinstance(arrivals, tuple) and len(arrivals) in (2, 3) \
             and isinstance(arrivals[0], np.ndarray):
-        sim.add_arrivals(arrivals[0], arrivals[1])
+        sim.add_arrivals(*arrivals)
     else:
         sim.add_arrivals(arrivals)
     sim.run_to_completion()

@@ -32,6 +32,20 @@ service-work multiplier (prefill compute-bound, decode bandwidth-bound, as
 in the paper's footnote 11), normalized to mean ~1 so composed chain rates
 keep their jobs/sec meaning — the bridge that lets the simulators consume
 trace token counts directly.
+
+Multi-tenant SLO classes: real LLM serving fleets multiplex tenants with
+very different latency expectations (interactive chat vs. batch
+summarization — the DeepServe regime).  :class:`RequestClass` is the
+first-class description of one such tenant class (priority tier, SLO
+target, shed deadline) threaded through every layer of the request path:
+
+  * ``classed_poisson_mix`` — superposed per-class Poisson streams with
+    Exp(1) works, returned as class-labeled ``(times, works, class_ids)``
+    arrays;
+  * ``classed_phased_poisson`` — per-class piecewise-constant-rate streams
+    (the scenario engine's ``tenant_burst`` phases);
+  * ``label_classes`` / ``classed_azure_trace_np`` — i.i.d. class labels by
+    mix weight over any arrival batch, incl. the azure-like trace.
 """
 from __future__ import annotations
 
@@ -43,6 +57,48 @@ from typing import List, Optional, Sequence, Tuple
 import numpy as np
 
 Arrival = Tuple[float, float, int, int]   # (time, work, in_tokens, out_tokens)
+
+
+@dataclasses.dataclass(frozen=True)
+class RequestClass:
+    """One tenant / SLO class of the multiplexed request stream.
+
+    ``priority`` is the scheduling tier (0 = most urgent; lower wins).
+    ``slo_target`` is the response-time objective (seconds) the class is
+    reported and autoscaled against.  ``deadline`` is the maximum queueing
+    wait the class tolerates: a *finite* deadline marks the class as
+    sheddable — the admission gate may reject (simulated plane) or defer
+    (live plane) an arrival whose estimated wait exceeds it, which is how
+    best-effort work yields to interactive work before anyone pays for
+    scale-out.  ``float('inf')`` (the default) means never shed.
+    """
+    name: str = "default"
+    tenant: str = "default"
+    priority: int = 0
+    slo_target: float = math.inf
+    deadline: float = math.inf
+
+    @property
+    def sheddable(self) -> bool:
+        return math.isfinite(self.deadline)
+
+
+DEFAULT_CLASS = RequestClass()
+
+
+def interactive_batch_mix(
+    interactive_slo: float = 2.0,
+    batch_deadline: float = math.inf,
+    batch_slo: float = math.inf,
+) -> Tuple[RequestClass, RequestClass]:
+    """The canonical two-tenant mix: latency-sensitive interactive chat
+    (tier 0) over best-effort batch summarization (tier 1).  A finite
+    ``batch_deadline`` arms the admission gate for the batch class."""
+    return (
+        RequestClass("interactive", "chat", 0, slo_target=interactive_slo),
+        RequestClass("batch", "offline", 1, slo_target=batch_slo,
+                     deadline=batch_deadline),
+    )
 
 
 def poisson_exponential(lam: float, n: int, seed: int = 0) -> List[Arrival]:
@@ -176,6 +232,87 @@ def phased_poisson(
     times = np.concatenate(chunks)
     works = rng.exponential(1.0, size=len(times))
     return times, works
+
+
+def _merge_classed(
+    chunks: Sequence[Tuple[np.ndarray, np.ndarray, int]],
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Stable time-merge of per-class (times, works) streams into one
+    class-labeled batch."""
+    chunks = [c for c in chunks if len(c[0])]
+    if not chunks:
+        return (np.empty(0), np.empty(0), np.empty(0, dtype=np.int64))
+    times = np.concatenate([t for t, _, _ in chunks])
+    works = np.concatenate([w for _, w, _ in chunks])
+    cls = np.concatenate([np.full(len(t), c, dtype=np.int64)
+                          for t, _, c in chunks])
+    order = np.argsort(times, kind="stable")
+    return times[order], works[order], cls[order]
+
+
+def classed_poisson_mix(
+    class_rates: Sequence[float],
+    horizon: float,
+    seed: int = 0,
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Superposed per-class Poisson streams with Exp(1) works over
+    ``[0, horizon)``: class ``c`` arrives at rate ``class_rates[c]``.
+    Returns time-sorted ``(times, works, class_ids)`` arrays — the
+    class-labeled twin of :func:`poisson_exponential_np`.  Each class draws
+    from an independent RNG stream, so adding a class never perturbs the
+    others' sample paths."""
+    chunks = []
+    for c, lam in enumerate(class_rates):
+        if lam <= 0 or horizon <= 0:
+            continue
+        t, w = phased_poisson([(0.0, horizon, lam)], seed=seed + 100003 * (c + 1))
+        chunks.append((t, w, c))
+    return _merge_classed(chunks)
+
+
+def classed_phased_poisson(
+    phases_per_class: Sequence[Sequence[Tuple[float, float, float]]],
+    seed: int = 0,
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Per-class piecewise-constant-rate Poisson streams, merged into one
+    class-labeled batch — the scenario engine's ``tenant_burst`` workload
+    (each class has its own rate profile)."""
+    chunks = []
+    for c, phases in enumerate(phases_per_class):
+        t, w = phased_poisson(phases, seed=seed + 100003 * (c + 1))
+        chunks.append((t, w, c))
+    return _merge_classed(chunks)
+
+
+def label_classes(
+    n: int, weights: Sequence[float], seed: int = 0
+) -> np.ndarray:
+    """i.i.d. class labels for ``n`` arrivals drawn by mix weight — attach
+    tenant classes to any pre-generated arrival batch (e.g. a trace whose
+    arrival process should stay untouched)."""
+    w = np.asarray(weights, dtype=np.float64)
+    if len(w) == 0 or np.any(w < 0) or w.sum() <= 0:
+        raise ValueError("weights must be non-negative and sum > 0")
+    rng = np.random.default_rng(seed)
+    return rng.choice(len(w), size=n, p=w / w.sum()).astype(np.int64)
+
+
+def classed_azure_trace_np(
+    n: int,
+    weights: Sequence[float],
+    stats: TraceStats = AZURE_STATS,
+    seed: int = 0,
+    rate_scale: float = 1.0,
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Class-labeled azure-like trace:
+    ``(times, works, in_tokens, out_tokens, class_ids)`` — the bursty MMPP
+    arrival process of :func:`azure_like_trace_np` with tenant labels drawn
+    i.i.d. by ``weights`` (tenant mix is independent of burst state, as in
+    multiplexed serving fleets)."""
+    times, works, tin, tout = azure_like_trace_np(
+        n, stats=stats, seed=seed, rate_scale=rate_scale)
+    cls = label_classes(n, weights, seed=seed + 1)
+    return times, works, tin, tout, cls
 
 
 def diurnal_phases(

@@ -98,10 +98,21 @@ def mock_orchestrator(
     spec: ServiceSpec,
     arrival_rate: float,
     config: Optional[OrchestratorConfig] = None,
+    classes=None,
+    aging_rate: Optional[float] = None,
 ) -> Orchestrator:
-    """An ``Orchestrator`` over the mock data plane (no model, no jax)."""
+    """An ``Orchestrator`` over the mock data plane (no model, no jax).
+
+    ``classes`` / ``aging_rate`` are conveniences for multi-tenant
+    control-plane tests: they override the corresponding
+    :class:`OrchestratorConfig` fields without constructing a config.
+    """
     cfg = config if config is not None else OrchestratorConfig()
     if cfg.engine_factory is None:
         cfg = dataclasses.replace(cfg, engine_factory=MockEngine)
+    if classes is not None:
+        cfg = dataclasses.replace(cfg, classes=tuple(classes))
+    if aging_rate is not None:
+        cfg = dataclasses.replace(cfg, aging_rate=aging_rate)
     return Orchestrator(servers, spec, model=None, params=None,
                         arrival_rate=arrival_rate, config=cfg)

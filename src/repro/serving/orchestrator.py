@@ -25,10 +25,21 @@ The module is importable without jax — the default ``ChainEngine`` data
 plane is imported lazily; ``OrchestratorConfig.engine_factory`` swaps in a
 numpy-only mock (``repro.serving.mock.MockEngine``) for control-plane tests
 and benchmarks in minimal environments.
+
+Multi-tenant SLO classes: requests carry a class index into
+``OrchestratorConfig.classes`` (:class:`repro.core.RequestClass`).  The
+central queue is ordered by aged class priority (tier + aging * arrival —
+FIFO with a single default class), and submissions of sheddable classes
+(finite deadline) pass an **admission gate**: when the estimated queueing
+wait exceeds the class deadline (scaled by ``admission_level``, the
+autoscaler's throttle), the request is *deferred* — parked without a slot
+and readmitted once the backlog drains, so best-effort work yields to
+interactive work instead of forcing a scale-out.
 """
 from __future__ import annotations
 
 import dataclasses
+import heapq
 import math
 from collections import deque
 from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
@@ -37,6 +48,8 @@ import numpy as np
 
 from repro.core import (
     Allocation,
+    DEFAULT_CLASS,
+    RequestClass,
     Server,
     ServiceSpec,
     compose_best_effort,
@@ -55,6 +68,51 @@ class OrchestratorConfig:
     # data-plane constructor (model, params, chain, capacity, max_seq) ->
     # engine; None = the jax ChainEngine (imported lazily)
     engine_factory: Optional[Callable] = None
+    # multi-tenant SLO classes: request.cls indexes this list; None = the
+    # single default class (class-blind FIFO behavior, bit-compatible)
+    classes: Optional[Sequence[RequestClass]] = None
+    aging_rate: float = 0.0              # priority aging (anti-starvation)
+
+
+class _PriorityQueue:
+    """Central request queue ordered by aged class priority.
+
+    Key = ``(tier + aging * arrival, seq)`` — the static form of the aged
+    priority ``tier - aging * waited`` (see ``core.load_balance``), with the
+    push sequence as tie-break.  A single tier-0 class with no aging
+    degenerates to exact FIFO, preserving the class-blind orchestrator's
+    scheduling order.
+    """
+
+    def __init__(self, classes: Sequence[RequestClass], aging_rate: float):
+        self._classes = list(classes)
+        self._aging = float(aging_rate)
+        self._heap: List[Tuple[float, int, Request]] = []
+        self._seq = 0
+
+    def _kappa(self, req: Request) -> float:
+        tier = self._classes[req.cls].priority \
+            if 0 <= req.cls < len(self._classes) else 0
+        return tier + self._aging * req.arrival_time
+
+    def push(self, req: Request) -> None:
+        heapq.heappush(self._heap, (self._kappa(req), self._seq, req))
+        self._seq += 1
+
+    def pop(self) -> Request:
+        return heapq.heappop(self._heap)[2]
+
+    def peek(self) -> Request:
+        return self._heap[0][2]
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    def __bool__(self) -> bool:
+        return bool(self._heap)
+
+    def __iter__(self):
+        return (entry[2] for entry in sorted(self._heap, key=lambda e: e[:2]))
 
 
 class Orchestrator:
@@ -75,7 +133,11 @@ class Orchestrator:
         self.servers: Dict[str, Server] = {s.sid: s for s in servers}
         self.tau_scale: Dict[str, float] = {s.sid: 1.0 for s in servers}
         self.warming: Dict[str, float] = {}   # sid -> warm-at deadline
-        self.queue: Deque[Request] = deque()
+        self.classes: List[RequestClass] = (
+            list(config.classes) if config.classes else [DEFAULT_CLASS])
+        self.queue = _PriorityQueue(self.classes, config.aging_rate)
+        self.deferred: Deque[Request] = deque()   # admission-gated parking
+        self.admission_level = 1.0
         self.finished: List[Request] = []
         self.failed: List[Request] = []
         self.engines: List = []
@@ -127,19 +189,61 @@ class Orchestrator:
         self.recompositions += 1
 
     # -- dispatch (online time scale; Alg. 3) -------------------------------------
+    def set_admission_level(self, level: float) -> None:
+        """Autoscaler throttle: scales every sheddable class's deadline
+        (1.0 = nominal, 0.0 = defer all best-effort work that would queue)."""
+        self.admission_level = max(0.0, float(level))
+
+    def _should_defer(self, req: Request) -> bool:
+        """Admission gate: defer a sheddable request whose estimated
+        queueing wait exceeds its class deadline (scaled by the throttle).
+        Never fires when a slot is free (work conservation) — callers try
+        :meth:`_dispatch` first."""
+        rc = self.classes[req.cls] if 0 <= req.cls < len(self.classes) \
+            else DEFAULT_CLASS
+        if not rc.sheddable:
+            return False
+        rate = self.allocation.total_rate if self.allocation is not None \
+            else 0.0
+        est = (len(self.queue) + 1) / rate if rate > 0 else math.inf
+        return est > rc.deadline * self.admission_level
+
     def submit(self, req: Request, now: float = 0.0) -> None:
         for hook in self.submit_hooks:
             hook(req, now)
-        if not self._dispatch(req, now):
-            self.queue.append(req)
+        if self._dispatch(req, now):
+            return
+        if self._should_defer(req):
+            req.state = State.DEFERRED
+            self.deferred.append(req)
+            return
+        self.queue.push(req)
 
     def _resubmit(self, req: Request, now: float) -> None:
         """Re-dispatch an evicted/requeued request WITHOUT firing the submit
-        hooks — a requeue is not a new arrival, and counting it as one would
-        feed phantom load into the autoscaler's rate estimate right when the
-        cluster is already recomposing."""
+        hooks or the admission gate — a requeue is not a new arrival
+        (counting it as one would feed phantom load into the autoscaler's
+        rate estimate right when the cluster is already recomposing), and
+        work already admitted is never shed."""
         if not self._dispatch(req, now):
-            self.queue.append(req)
+            self.queue.push(req)
+
+    def _readmit_deferred(self, now: float) -> None:
+        """Pull deferred best-effort work back in once the backlog drains
+        below its admission threshold (oldest first).  Deferred work never
+        jumps the queue: freed capacity goes to queued requests first —
+        direct dispatch only when the queue is empty, otherwise readmission
+        means joining the priority queue at the back of its tier."""
+        while self.deferred:
+            req = self.deferred[0]
+            if not self.queue and self._dispatch(req, now):
+                self.deferred.popleft()
+                continue
+            if not self._should_defer(req):
+                req.state = State.QUEUED
+                self.queue.push(self.deferred.popleft())
+                continue
+            break
 
     def _dispatch(self, req: Request, now: float) -> bool:
         # engines are sorted fastest-first; JFFC = first with a free slot.
@@ -160,39 +264,40 @@ class Orchestrator:
         for eng in self.engines:
             for req in eng.step(now):
                 done.append(req)
-                # a completion frees a slot on THIS chain; pull the queue head
+                # a completion frees a slot on THIS chain; pull the
+                # highest-priority queued request (FIFO with one class)
                 if self.queue:
-                    nxt = self.queue.popleft()
+                    nxt = self.queue.peek()
                     if eng.admit(nxt, now):
+                        self.queue.pop()
                         if nxt.state == State.DONE:
                             done.append(nxt)
-                    else:   # capacity race: put it back
-                        self.queue.appendleft(nxt)
         # retired engines finish their committed requests (no new admits)
         for eng in list(self.draining):
             done.extend(eng.step(now))
             if not eng.requests:
                 self.draining.remove(eng)
         self.finished.extend(done)
+        self._readmit_deferred(now)
         for hook in self.step_hooks:
             hook(self, now)
         return done
 
     def drain(self, now_fn=None, max_rounds: int = 100_000) -> None:
-        """Run decode rounds until queue + engines are empty."""
+        """Run decode rounds until queue + deferred + engines are empty."""
         rounds = 0
         t = 0.0
-        while (self.queue or self.draining
+        while (self.queue or self.deferred or self.draining
                or any(e.requests for e in self.engines)) \
                 and rounds < max_rounds:
             t = now_fn() if now_fn else t + 1.0
             self.step(t)
             # JFFC also admits from the queue whenever capacity is free
             while self.queue:
-                req = self.queue[0]
+                req = self.queue.peek()
                 if not self._dispatch(req, t):
                     break
-                self.queue.popleft()
+                self.queue.pop()
             rounds += 1
 
     # -- fault tolerance / elasticity ---------------------------------------------
@@ -373,12 +478,12 @@ class Orchestrator:
                 next_req += 1
             self.step(t)
             while self.queue:                    # admit whenever capacity frees
-                if not self._dispatch(self.queue[0], t):
+                if not self._dispatch(self.queue.peek(), t):
                     break
-                self.queue.popleft()
+                self.queue.pop()
             rounds += 1
             if (next_req >= len(timed) and not pending and not self.queue
-                    and not self.draining
+                    and not self.deferred and not self.draining
                     and not any(e.requests for e in self.engines)):
                 break
         return {"rounds": rounds, "events": applied, **self.stats()}
@@ -386,10 +491,11 @@ class Orchestrator:
     # -- introspection ---------------------------------------------------------------
     def stats(self) -> dict:
         rts = [r.response_time() for r in self.finished if r.response_time() is not None]
-        return {
+        out = {
             "finished": len(self.finished),
             "failed": len(self.failed),
             "queued": len(self.queue),
+            "deferred": len(self.deferred),
             "active": sum(e.num_active for e in self.engines),
             "draining": sum(len(e.requests) for e in self.draining),
             "chains": [(list(e.chain.servers), e.capacity) for e in self.engines],
@@ -398,3 +504,23 @@ class Orchestrator:
             "recompositions": self.recompositions,
             "mean_response": float(np.mean(rts)) if rts else math.nan,
         }
+        if len(self.classes) > 1:
+            out["per_class"] = self.per_class_stats()
+        return out
+
+    def per_class_stats(self) -> Dict[int, dict]:
+        """Per-SLO-class completion counts and response quantiles."""
+        out: Dict[int, dict] = {}
+        for c, rc in enumerate(self.classes):
+            rts = np.asarray([r.response_time() for r in self.finished
+                              if r.cls == c and r.response_time() is not None])
+            out[c] = {
+                "name": rc.name,
+                "finished": int(sum(1 for r in self.finished if r.cls == c)),
+                "deferred": int(sum(1 for r in self.deferred if r.cls == c)),
+                "mean_response": float(np.mean(rts)) if len(rts) else math.nan,
+                "p99_response": float(np.percentile(rts, 99)) if len(rts)
+                else math.nan,
+                "slo_target": rc.slo_target,
+            }
+        return out

@@ -13,6 +13,7 @@ class State(enum.Enum):
     RUNNING = "running"
     DONE = "done"
     FAILED = "failed"
+    DEFERRED = "deferred"    # parked by the admission gate; readmitted later
 
 
 @dataclasses.dataclass
@@ -22,6 +23,8 @@ class Request:
     max_new_tokens: int
     arrival_time: float = 0.0
     eos_token: Optional[int] = None
+    cls: int = 0                        # index into the orchestrator's
+    #                                     RequestClass list (SLO class)
     # runtime state
     state: State = State.QUEUED
     output: List[int] = dataclasses.field(default_factory=list)

@@ -1,0 +1,458 @@
+"""Multi-tenant SLO-class serving: priority scheduling, aging, admission
+control, class-labeled workloads, tenant bursts, and the SLO-aware
+admission autoscale policy — across the simulated and live planes."""
+import math
+import random
+
+import numpy as np
+import pytest
+
+from repro.autoscale import (
+    AutoscaleAction,
+    AutoscaleController,
+    AutoscalePolicy,
+    ClusterView,
+    ControllerConfig,
+    SLOAwareAdmissionPolicy,
+    Telemetry,
+    TelemetryConfig,
+)
+from repro.core import (
+    DEFAULT_CLASS,
+    RequestClass,
+    Scenario,
+    Server,
+    ServiceSpec,
+    VectorSimulator,
+    classed_poisson_mix,
+    interactive_batch_mix,
+    label_classes,
+    run_scenario,
+    simulate_vectorized,
+)
+from repro.core.simulator import poisson_arrivals
+from repro.serving import Request, State, mock_orchestrator
+
+SERVERS = [(1.0, 2), (0.8, 2), (0.5, 4)]   # nu = 5.6
+RATES = [m for m, _ in SERVERS]
+CAPS = [c for _, c in SERVERS]
+NU = sum(m * c for m, c in SERVERS)
+
+SPEC = ServiceSpec(num_blocks=10, block_size_gb=1.32, cache_size_gb=0.11)
+
+TWO_CLASSES = [RequestClass("interactive", "chat", 0, slo_target=2.0),
+               RequestClass("batch", "offline", 1)]
+
+
+def mk(sid, mem=16.0, tc=0.05, tp=0.08):
+    return Server(sid, mem, tc, tp)
+
+
+# ---------------------------------------------------------------------------
+# Request classes + class-labeled workloads
+# ---------------------------------------------------------------------------
+
+def test_request_class_defaults_and_sheddability():
+    assert DEFAULT_CLASS.priority == 0
+    assert not DEFAULT_CLASS.sheddable
+    inter, batch = interactive_batch_mix(batch_deadline=30.0)
+    assert inter.priority < batch.priority
+    assert batch.sheddable and not inter.sheddable
+
+
+def test_classed_poisson_mix_rates_and_ordering():
+    t, w, c = classed_poisson_mix([3.0, 1.0], 2_000.0, seed=0)
+    assert len(t) == len(w) == len(c)
+    assert np.all(np.diff(t) >= 0)
+    n0, n1 = np.sum(c == 0), np.sum(c == 1)
+    assert n0 == pytest.approx(3.0 * 2_000, rel=0.05)
+    assert n1 == pytest.approx(1.0 * 2_000, rel=0.08)
+    # independent per-class streams: adding a class keeps class-0 arrivals
+    t2, _, c2 = classed_poisson_mix([3.0, 2.5], 2_000.0, seed=0)
+    assert np.array_equal(t[c == 0], t2[c2 == 0])
+
+
+def test_label_classes_weights():
+    cls = label_classes(50_000, [0.7, 0.3], seed=1)
+    assert set(np.unique(cls)) == {0, 1}
+    assert np.mean(cls == 0) == pytest.approx(0.7, abs=0.01)
+    with pytest.raises(ValueError):
+        label_classes(10, [])
+
+
+def test_tenant_burst_phases_per_class():
+    sc = (Scenario(horizon=100.0)
+          .burst(10.0, 10.0, 2.0)                 # global
+          .tenant_burst(50.0, 20.0, 4.0, cls=1))  # batch only
+    ph = sc.class_arrival_phases([1.0, 0.5])
+    assert ph[0] == [(0.0, 10.0, 1.0), (10.0, 20.0, 2.0), (20.0, 100.0, 1.0)]
+    assert ph[1] == [(0.0, 10.0, 0.5), (10.0, 20.0, 1.0), (20.0, 50.0, 0.5),
+                     (50.0, 70.0, 2.0), (70.0, 100.0, 0.5)]
+    # class-blind view ignores the tenant burst but keeps the global one
+    assert sc.arrival_phases(1.0) == ph[0]
+    # tenant_burst events are workload events, not cluster events
+    assert sc.cluster_events() == []
+    from repro.core import ScenarioEvent
+    with pytest.raises(ValueError):
+        ScenarioEvent(1.0, "tenant_burst", scale=2.0, duration=5.0)  # no cls
+
+
+# ---------------------------------------------------------------------------
+# Priority engine semantics
+# ---------------------------------------------------------------------------
+
+def test_work_conservation_across_classes_single_server():
+    """On one single-slot chain the unfinished work at any instant is
+    order-invariant, so priority reordering keeps the busy periods — and
+    therefore the makespan and total service — of class-blind FIFO."""
+    t, w, c = classed_poisson_mix([0.5, 0.3], 3_000.0, seed=3)
+    fifo = VectorSimulator([1.0], [1], policy="jffc", seed=4,
+                           classes=TWO_CLASSES)
+    fifo.add_arrivals(t, w, c)
+    fifo.run_to_completion()
+    pri = VectorSimulator([1.0], [1], policy="priority", seed=4,
+                          classes=TWO_CLASSES, aging_rate=0.0)
+    pri.add_arrivals(t, w, c)
+    pri.run_to_completion()
+    rf, rp = fifo.result(0.0), pri.result(0.0)
+    assert rf.n_completed == rp.n_completed == len(t)
+    assert rf.sim_time == pytest.approx(rp.sim_time)   # busy periods intact
+    assert float(np.sum(rf.service_times)) == pytest.approx(
+        float(np.sum(rp.service_times)))
+
+
+def test_priority_cuts_interactive_latency_under_overload():
+    lam = 1.15 * NU
+    t, w, c = classed_poisson_mix([0.7 * lam, 0.3 * lam], 2_500.0, seed=5)
+    fifo = simulate_vectorized("jffc", SERVERS, (t, w, c), seed=5,
+                               classes=TWO_CLASSES, warmup_fraction=0.0)
+    pri = simulate_vectorized("priority", SERVERS, (t, w, c), seed=5,
+                              classes=TWO_CLASSES, warmup_fraction=0.0)
+    p99_fifo = fifo.per_class()[0]["response"]["p99"]
+    p99_pri = pri.per_class()[0]["response"]["p99"]
+    assert p99_pri < 0.25 * p99_fifo
+    # work conservation: nothing lost, nothing shed
+    assert pri.n_completed == len(t) and pri.n_rejected == 0
+
+
+def test_no_starvation_under_aging():
+    """A lone batch job in a saturated interactive stream: strict priority
+    parks it until the stream ends; aging bounds its wait."""
+    interactive = [(0.1 * i, 1.0, 0, 0, 0) for i in range(400)]
+    batch_arrival = 1.0
+    arrivals = sorted(interactive + [(batch_arrival, 1.0, 0, 0, 1)])
+    classes = [RequestClass("interactive", "chat", 0),
+               RequestClass("batch", "offline", 1)]
+
+    def batch_wait(aging):
+        res = simulate_vectorized("priority", [(1.0, 1)], arrivals, seed=0,
+                                  classes=classes, aging_rate=aging,
+                                  warmup_fraction=0.0)
+        (bidx,) = np.where(res.class_ids == 1)
+        return float(res.waiting_times[bidx[0]])
+
+    strict, aged = batch_wait(0.0), batch_wait(0.5)
+    assert aged < strict
+    # aged key: tier 1 + 0.5*arr beats interactive arriving ~2/0.5 s later,
+    # so the wait is bounded well below the full-backlog wait
+    assert aged < 0.5 * strict
+
+
+def test_admission_sheds_only_best_effort_and_bounds_backlog():
+    lam = 1.3 * NU
+    horizon = 2_000.0
+    t, w, c = classed_poisson_mix([0.6 * lam, 0.4 * lam], horizon, seed=6)
+    classes = [RequestClass("interactive", "chat", 0, slo_target=2.0),
+               RequestClass("batch", "offline", 1, deadline=20.0)]
+    sim = VectorSimulator(RATES, CAPS, policy="priority", seed=7,
+                          classes=classes, aging_rate=0.001)
+    sim.add_arrivals(t, w, c)
+    sim.run_to_completion()
+    res = sim.result(0.0)
+    assert res.n_rejected > 0
+    # only the sheddable batch class was rejected
+    assert set(res.rejected_class_ids.tolist()) == {1}
+    # everything is accounted for: completed + shed == offered
+    assert res.n_completed + res.n_rejected == len(t)
+    # interactive never shed, never starved
+    pc = res.per_class()
+    assert pc[0]["rejected"] == 0
+    assert pc[0]["n"] == int(np.sum(c == 0))
+    # shedding bounds the batch backlog: batch p99 wait far below the
+    # no-admission run on the same trace
+    open_gate = [classes[0],
+                 RequestClass("batch", "offline", 1)]     # deadline = inf
+    ref = simulate_vectorized("priority", SERVERS, (t, w, c), seed=6,
+                              classes=open_gate, aging_rate=0.001,
+                              warmup_fraction=0.0)
+    assert pc[1]["waiting"]["p99"] < 0.5 * \
+        ref.per_class()[1]["waiting"]["p99"]
+
+
+def test_admission_level_zero_defers_all_queued_batch():
+    lam = 1.2 * NU
+    t, w, c = classed_poisson_mix([0.7 * lam, 0.3 * lam], 500.0, seed=8)
+    classes = [RequestClass("interactive", "chat", 0),
+               RequestClass("batch", "offline", 1, deadline=30.0)]
+    sim = VectorSimulator(RATES, CAPS, policy="priority", seed=9,
+                          classes=classes, admission_level=0.0)
+    sim.add_arrivals(t, w, c)
+    sim.run_to_completion()
+    res = sim.result(0.0)
+    # with the gate closed, every batch job that had to queue was shed
+    assert set(res.rejected_class_ids.tolist()) <= {1}
+    assert all(res.waiting_times[res.class_ids == 1] == 0.0)
+
+
+def test_per_class_littles_law_and_throughput():
+    """Stable mix: per-class completion rates recover the offered rates,
+    and per-class PASTA/Little occupancies are positive and ordered by
+    priority (interactive waits less than batch)."""
+    lam_int, lam_bat = 2.2, 1.1          # rho ~ 0.59 of nu=5.6
+    horizon = 20_000.0
+    t, w, c = classed_poisson_mix([lam_int, lam_bat], horizon, seed=10)
+    res = simulate_vectorized("priority", SERVERS, (t, w, c), seed=10,
+                              classes=TWO_CLASSES, aging_rate=0.0,
+                              warmup_fraction=0.1)
+    pc = res.per_class()
+    span = res.sim_time
+    assert pc[0]["n"] / (0.9 * span) == pytest.approx(lam_int, rel=0.05)
+    assert pc[1]["n"] / (0.9 * span) == pytest.approx(lam_bat, rel=0.05)
+    # Little: lambda_c * E[T_c]; priority orders the occupancies' wait share
+    occ_int = lam_int * pc[0]["response"]["mean"]
+    occ_bat = lam_bat * pc[1]["response"]["mean"]
+    assert occ_int > 0 and occ_bat > 0
+    assert pc[0]["waiting"]["mean"] <= pc[1]["waiting"]["mean"]
+    # aggregate Little consistency: class occupancies sum to the total
+    # (approximate: offered-rate weights vs. realized completion shares)
+    total = (lam_int + lam_bat) * res.summary()["response"]["mean"]
+    share = (lam_int * pc[0]["response"]["mean"]
+             + lam_bat * pc[1]["response"]["mean"])
+    assert share == pytest.approx(total, rel=0.02)
+
+
+def test_priority_reconfigure_loses_no_jobs():
+    t, w, c = classed_poisson_mix([2.6, 1.3], 1_000.0, seed=11)
+    sim = VectorSimulator(RATES, CAPS, policy="priority", seed=12,
+                          classes=TWO_CLASSES, aging_rate=0.01,
+                          keys=["a", "b", "c"])
+    sim.add_arrivals(t, w, c)
+    t_half = float(t[len(t) // 2])
+    sim.run_until(t_half)
+    sim.reconfigure([1.0, 0.5], [2, 4], at_time=t_half, keys=["a", "c"])
+    sim.run_to_completion()
+    res = sim.result(0.0)
+    assert res.n_completed == len(t)
+    assert sim.queue_len() == 0 and sim.in_flight == 0
+    assert len(set(sim.comp)) == len(t)
+
+
+def test_run_scenario_classed_end_to_end():
+    rng = random.Random(1234)
+    servers = [Server(f"s{i}", rng.uniform(15, 40), rng.uniform(0.02, 0.2),
+                      rng.uniform(0.02, 0.2)) for i in range(8)]
+    classes = [RequestClass("interactive", "chat", 0, slo_target=5.0),
+               RequestClass("batch", "offline", 1, deadline=60.0)]
+    sc = (Scenario(horizon=200.0)
+          .tenant_burst(50.0, 40.0, 3.0, cls=0)
+          .fail(100.0, "s3")
+          .recover(150.0, servers[3]))
+    res = run_scenario(servers, SPEC, sc, policy="priority",
+                       classes=classes, class_rates=[2.0, 1.0],
+                       aging_rate=0.001, seed=0)
+    assert res.completed_all
+    assert res.n_jobs > 0
+    pc = res.per_class()
+    assert set(pc) == {0, 1}
+    assert res.reconfigurations >= 2          # fail + recover
+
+
+# ---------------------------------------------------------------------------
+# Live plane: orchestrator priority dispatch + admission gate
+# ---------------------------------------------------------------------------
+
+def _req(rid, cls=0, n_new=6, arrival=0.0):
+    return Request(rid=rid, prompt=np.ones(4, np.int32),
+                   max_new_tokens=n_new, arrival_time=arrival, cls=cls)
+
+
+def test_orchestrator_priority_queue_orders_classes():
+    classes = [RequestClass("interactive", "chat", 0),
+               RequestClass("batch", "offline", 1)]
+    orch = mock_orchestrator([mk("b0")], SPEC, arrival_rate=1.0,
+                             classes=classes)
+    cap = sum(e.capacity for e in orch.engines)
+    # fill every slot, then queue batch before interactive
+    for i in range(cap):
+        orch.submit(_req(i), now=0.0)
+    batch = [_req(100 + i, cls=1, arrival=float(i)) for i in range(3)]
+    inter = [_req(200 + i, cls=0, arrival=3.0 + i) for i in range(3)]
+    for r in batch + inter:
+        orch.submit(r, now=r.arrival_time)
+    assert len(orch.queue) == 6
+    # later-arriving interactive requests outrank queued batch
+    order = [r.rid for r in orch.queue]
+    assert order[:3] == [200, 201, 202]
+    orch.drain()
+    assert all(r.state == State.DONE for r in batch + inter)
+
+
+def test_orchestrator_single_class_fifo_unchanged():
+    orch = mock_orchestrator([mk("b0")], SPEC, arrival_rate=1.0)
+    cap = sum(e.capacity for e in orch.engines)
+    reqs = [_req(i, arrival=float(i)) for i in range(cap + 4)]
+    for r in reqs:
+        orch.submit(r, now=r.arrival_time)
+    assert [r.rid for r in orch.queue] == [cap, cap + 1, cap + 2, cap + 3]
+    orch.drain()
+    assert all(r.state == State.DONE for r in reqs)
+
+
+def test_orchestrator_admission_defers_and_readmits():
+    classes = [RequestClass("interactive", "chat", 0),
+               RequestClass("batch", "offline", 1, deadline=1e-9)]
+    orch = mock_orchestrator([mk("b0")], SPEC, arrival_rate=1.0,
+                             classes=classes)
+    cap = sum(e.capacity for e in orch.engines)
+    for i in range(cap):
+        orch.submit(_req(i, n_new=4), now=0.0)
+    # saturated: the batch request's est. wait exceeds its deadline -> defer
+    b = _req(500, cls=1, n_new=4)
+    orch.submit(b, now=0.0)
+    assert b.state == State.DEFERRED
+    assert len(orch.deferred) == 1 and len(orch.queue) == 0
+    assert orch.stats()["deferred"] == 1
+    orch.drain()
+    # the backlog drained, the deferred request was readmitted + completed
+    assert b.state == State.DONE
+    assert not orch.deferred
+
+
+def test_orchestrator_admission_level_zero_then_reopen():
+    classes = [RequestClass("interactive", "chat", 0),
+               RequestClass("batch", "offline", 1, deadline=50.0)]
+    orch = mock_orchestrator([mk("b0")], SPEC, arrival_rate=1.0,
+                             classes=classes)
+    cap = sum(e.capacity for e in orch.engines)
+    orch.set_admission_level(0.0)
+    for i in range(cap):
+        orch.submit(_req(i, n_new=8), now=0.0)
+    b = _req(501, cls=1, n_new=4)
+    orch.submit(b, now=0.0)
+    assert b.state == State.DEFERRED        # gate closed
+    orch.set_admission_level(1.0)
+    orch.drain()
+    assert b.state == State.DONE
+
+
+# ---------------------------------------------------------------------------
+# SLO-aware admission autoscale policy + controller actuation
+# ---------------------------------------------------------------------------
+
+class _NoopPolicy(AutoscalePolicy):
+    name = "noop"
+
+    def decide(self, tel, view, now):
+        return AutoscaleAction(reason="noop")
+
+
+class _AddOnePolicy(AutoscalePolicy):
+    name = "add-one"
+
+    def decide(self, tel, view, now):
+        return AutoscaleAction(add=1, reason="inner add")
+
+
+def _view(admission_level=1.0, n=2):
+    return ClusterView(servers=[mk(f"s{i}") for i in range(n)], pending=[],
+                       spec=SPEC, rho_bar=0.7, total_rate=4.0,
+                       admission_level=admission_level)
+
+
+def _tel_with_p99(p99_value, queue_depth=0):
+    tel = Telemetry(TelemetryConfig(window=60.0))
+    for i in range(50):
+        tel.record_completion(float(i), p99_value, cls=0)
+    tel.record_sample(50.0, queue_depth=queue_depth, in_flight=1,
+                      capacity=4, n_servers=2)
+    return tel
+
+
+def test_slo_admission_tightens_before_scaling_out():
+    pol = SLOAwareAdmissionPolicy(_AddOnePolicy(), slo=2.0)
+    act = pol.decide(_tel_with_p99(5.0), _view(1.0), now=0.0)
+    assert act.add == 0 and act.admission_level == 0.5
+
+
+def test_slo_admission_delegates_when_gate_closed():
+    pol = SLOAwareAdmissionPolicy(_AddOnePolicy(), slo=2.0)
+    act = pol.decide(_tel_with_p99(5.0), _view(0.0), now=0.0)
+    assert act.add == 1 and act.admission_level is None
+
+
+def test_slo_admission_relaxes_when_healthy():
+    pol = SLOAwareAdmissionPolicy(_NoopPolicy(), slo=2.0)
+    act = pol.decide(_tel_with_p99(0.5), _view(0.25), now=0.0)
+    assert act.admission_level == 0.5
+    # fully open + healthy -> transparent to the inner policy
+    act2 = pol.decide(_tel_with_p99(0.5), _view(1.0), now=0.0)
+    assert act2.is_noop
+
+
+def test_slo_admission_snaps_to_floor():
+    pol = SLOAwareAdmissionPolicy(_NoopPolicy(), slo=2.0, floor_snap=0.2)
+    act = pol.decide(_tel_with_p99(5.0), _view(0.25), now=0.0)
+    assert act.admission_level == 0.0       # 0.125 < snap -> closed
+
+
+def test_controller_records_admission_actions():
+    ctrl = AutoscaleController(
+        SLOAwareAdmissionPolicy(_NoopPolicy(), slo=2.0), mk("tmpl"),
+        ControllerConfig(interval=5.0, cooldown=0.0))
+    ctrl.telemetry = _tel_with_p99(5.0)
+    events = ctrl.control_tick(_view(1.0), now=60.0, cluster_sids=["s0"])
+    assert events == []                     # admission is not a membership event
+    assert ctrl.admission_level == 0.5
+    assert ctrl.records and ctrl.records[-1].action == "admission"
+
+
+def test_closed_loop_admission_on_simulated_plane():
+    """End to end on run_scenario: an interactive tenant burst triggers
+    gate tightening (batch shed, no scale-out on a fixed budget) and the
+    run loses nothing."""
+    rng = random.Random(1234)
+    spec = ServiceSpec(num_blocks=10, block_size_gb=1.32, cache_size_gb=2.5)
+    servers = [Server(f"s{i}", rng.uniform(15, 40), rng.uniform(0.02, 0.2),
+                      rng.uniform(0.02, 0.2)) for i in range(4)]
+    template = Server("tmpl", 30.0, 0.05, 0.05)
+    classes = [RequestClass("interactive", "chat", 0, slo_target=4.0),
+               RequestClass("batch", "offline", 1, deadline=10.0)]
+    sc = Scenario(horizon=300.0).tenant_burst(90.0, 120.0, 3.0, cls=0)
+    pol = SLOAwareAdmissionPolicy(_NoopPolicy(), slo=4.0)
+    ctrl = AutoscaleController(
+        pol, template,
+        ControllerConfig(interval=6.0, cooldown=12.0, warmup_lag=10.0,
+                         max_servers=len(servers)))
+    res = run_scenario(servers, spec, sc, policy="priority",
+                       classes=classes, class_rates=[1.3, 0.7],
+                       aging_rate=0.001, seed=0, controller=ctrl)
+    assert res.completed_all
+    assert res.n_rejected > 0
+    assert set(res.result.rejected_class_ids.tolist()) == {1}
+    admissions = [r for r in ctrl.records if r.action == "admission"]
+    assert admissions, "the SLO breach must actuate the admission gate"
+    assert any(e.kind == "auto-admission" for e in res.log)
+    # fixed budget held: admission was the only actuation
+    assert not [r for r in ctrl.records if r.action == "add"]
+
+
+def test_telemetry_per_class_quantiles():
+    tel = Telemetry(TelemetryConfig(window=100.0))
+    for i in range(20):
+        tel.record_completion(float(i), 1.0, cls=0)
+        tel.record_completion(float(i), 10.0, cls=1)
+    assert tel.response_quantile(50, cls=0) == pytest.approx(1.0)
+    assert tel.response_quantile(50, cls=1) == pytest.approx(10.0)
+    assert tel.response_quantile(50) == pytest.approx(5.5)
+    assert tel.completions_in_window(cls=1) == 20
+    assert math.isnan(tel.response_quantile(99, cls=7))

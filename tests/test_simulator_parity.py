@@ -149,4 +149,46 @@ def test_dedicated_policy_conservation():
 
 def test_vectorized_rejects_unsupported_policy():
     with pytest.raises(ValueError):
-        VectorSimulator(RATES, CAPS, policy="jsq")
+        VectorSimulator(RATES, CAPS, policy="round-robin")
+
+
+# ---------------------------------------------------------------------------
+# Multi-tenant refactor: single-default-class parity guard
+# ---------------------------------------------------------------------------
+
+def test_single_class_parity_guard():
+    """The multi-tenant refactor must be invisible to class-blind runs:
+    with one default class, (a) attaching class labels to a jffc run
+    changes nothing, and (b) the priority engine reproduces jffc bit for
+    bit (tier 0 + no aging = FIFO pulls, no shedding)."""
+    arrivals = poisson_arrivals(4.8, 8_000, random.Random(17))
+    base = simulate_vectorized("jffc", SERVERS, arrivals, seed=17)
+    tt = np.array([a[0] for a in arrivals])
+    ww = np.array([a[1] for a in arrivals])
+    labeled = simulate_vectorized(
+        "jffc", SERVERS, (tt, ww, np.zeros(len(tt), dtype=np.int64)), seed=17)
+    _identical(base, labeled)
+    pri = simulate_vectorized("priority", SERVERS, arrivals, seed=17)
+    _identical(base, pri)
+    assert pri.n_rejected == 0
+    assert np.all(pri.class_ids == 0)
+
+
+def test_priority_multiclass_matches_scalar_oracle():
+    """Vector priority engine vs. the scalar PriorityJFFC oracle on a
+    two-class mix, with and without aging."""
+    from repro.core import PriorityJFFC, RequestClass, classed_poisson_mix
+
+    classes = [RequestClass("interactive", "chat", 0, slo_target=2.0),
+               RequestClass("batch", "offline", 1)]
+    t, w, c = classed_poisson_mix([3.6, 1.6], 1_200.0, seed=5)
+    tuples = [(float(ti), float(wi), 0, 0, int(ci))
+              for ti, wi, ci in zip(t, w, c)]
+    for aging in (0.0, 0.02):
+        pol = PriorityJFFC(RATES, CAPS, random.Random(6), classes=classes,
+                           aging_rate=aging)
+        sc = simulate(pol, tuples)
+        vec = simulate_vectorized("priority", SERVERS, (t, w, c), seed=5,
+                                  classes=classes, aging_rate=aging)
+        _identical(sc, vec)
+        assert np.array_equal(sc.class_ids, vec.class_ids)
