@@ -34,27 +34,9 @@ import json
 import time
 from typing import List
 
-import numpy as np
-
-from repro.core import (
-    Scenario,
-    Server,
-    ServiceSpec,
-    diurnal_phases,
-    diurnal_poisson,
-    run_scenario,
-)
-from repro.autoscale import (
-    AutoscaleController,
-    ControllerConfig,
-    PredictivePolicy,
-    QueueGradientPolicy,
-    TargetUtilizationPolicy,
-    Telemetry,
-    TelemetryConfig,
-    servers_needed,
-    static_baseline_cost,
-)
+from repro import api
+from repro.core import Server, ServiceSpec
+from repro.autoscale import servers_needed, static_baseline_cost
 
 SPEC = ServiceSpec(num_blocks=10, block_size_gb=1.32, cache_size_gb=0.11)
 #: a modest server: holds the 10-block service at c=2, ~2.4 jobs/s composed
@@ -67,47 +49,56 @@ SLO = 3.0                   # seconds; response-time SLO for violation counts
 TRACE_SEED = 3
 
 
+#: the three autoscale policies as declarative registry entries
+POLICY_PARAMS = [
+    ("target-util", {}),
+    ("queue-gradient", {}),
+    ("predictive", {"lead": 30.0, "margin": 1.2}),
+]
+
+
 def _mk(sid: str) -> Server:
     return Server(sid, TEMPLATE.memory_gb, TEMPLATE.tau_c, TEMPLATE.tau_p)
 
 
-def _policies():
-    return [
-        ("target-util", lambda: TargetUtilizationPolicy()),
-        ("queue-gradient", lambda: QueueGradientPolicy()),
-        ("predictive", lambda: PredictivePolicy(TEMPLATE, lead=30.0,
-                                                margin=1.2)),
-    ]
+def _spec(servers, horizon: float, *, autoscale=None,
+          name: str = "") -> api.ExperimentSpec:
+    """One frontier leg as a declarative spec: the identical diurnal trace
+    comes from pinning the workload seed (``workload.seed=TRACE_SEED``)
+    while every leg keeps the engine seed rule at ``seed=0``."""
+    return api.ExperimentSpec(
+        cluster=api.ClusterSpec(servers=tuple(servers), service=SPEC),
+        scenario=api.ScenarioSpec(horizon=horizon,
+                                  description="diurnal day/night curve"),
+        workload=api.WorkloadSpec(generator="diurnal", base_rate=BASE_RATE,
+                                  params={"amplitude": AMPLITUDE},
+                                  seed=TRACE_SEED),
+        autoscale=autoscale,
+        seed=0, name=name)
 
 
-def _controller(policy, warmup_lag: float,
-                max_servers: int) -> AutoscaleController:
-    return AutoscaleController(
-        policy, TEMPLATE,
-        ControllerConfig(interval=5.0, cooldown=20.0, warmup_lag=warmup_lag,
-                         min_servers=1, max_servers=max_servers,
-                         slo_response_time=SLO),
-        telemetry=Telemetry(TelemetryConfig(window=20.0)))
+def _autoscale_spec(pname: str, params: dict, warmup_lag: float,
+                    max_servers: int) -> api.AutoscaleSpec:
+    return api.AutoscaleSpec(
+        policy=pname, template=TEMPLATE, params=params,
+        interval=5.0, cooldown=20.0, warmup_lag=warmup_lag,
+        min_servers=1, max_servers=max_servers, slo_response_time=SLO,
+        telemetry_window=20.0)
 
 
-def frontier_records(horizon: float = 600.0, warmup_lag: float = 10.0,
-                     seed: int = TRACE_SEED) -> List[dict]:
+def frontier_records(horizon: float = 600.0,
+                     warmup_lag: float = 10.0) -> List[dict]:
     """Queueing-level frontier: static-for-peak vs. the three policies on
-    the identical diurnal trace."""
-    arrivals = diurnal_poisson(BASE_RATE, horizon, amplitude=AMPLITUDE,
-                               seed=seed)
-    scenario = Scenario(horizon=horizon,
-                        description="diurnal day/night curve")
+    the identical diurnal trace, every leg an ``ExperimentSpec``."""
     peak = BASE_RATE * (1.0 + AMPLITUDE)
     n_static = servers_needed([], TEMPLATE, SPEC, peak, 0.7, max_extra=60)
     rows = []
 
     static = [_mk(f"st{i}") for i in range(n_static)]
     t0 = time.perf_counter()
-    res = run_scenario(static, SPEC, scenario, base_rate=BASE_RATE,
-                       arrivals=arrivals, seed=0)
-    rep = static_baseline_cost(n_static, res.result.sim_time,
-                               res.result.response_times, SLO)
+    res = api.run(_spec(static, horizon, name="autoscale-static"))
+    rep = static_baseline_cost(n_static, res.sim_time,
+                               res.raw.result.response_times, SLO)
     rows.append({
         "name": "autoscale_static_baseline",
         "n_jobs": res.n_jobs,
@@ -118,13 +109,13 @@ def frontier_records(horizon: float = 600.0, warmup_lag: float = 10.0,
         **rep.as_dict(),
     })
 
-    for pname, mk_policy in _policies():
-        ctl = _controller(mk_policy(), warmup_lag, max_servers=40)
+    for pname, params in POLICY_PARAMS:
+        spec = _spec([_mk("base0")], horizon,
+                     autoscale=_autoscale_spec(pname, params, warmup_lag,
+                                               max_servers=40),
+                     name=f"autoscale-{pname}")
         t0 = time.perf_counter()
-        res = run_scenario([_mk("base0")], SPEC, scenario,
-                           base_rate=BASE_RATE, arrivals=arrivals,
-                           controller=ctl, seed=0)
-        rep = ctl.report(res.result.response_times, final_servers=0)
+        res = api.run(spec)
         rows.append({
             "name": f"autoscale_{pname}",
             "n_jobs": res.n_jobs,
@@ -133,7 +124,7 @@ def frontier_records(horizon: float = 600.0, warmup_lag: float = 10.0,
             "restarts": res.restarts,
             "reconfigurations": res.reconfigurations,
             "seconds": time.perf_counter() - t0,
-            **rep.as_dict(),
+            **res.cost,
         })
 
     static_row = rows[0]
@@ -147,48 +138,42 @@ def frontier_records(horizon: float = 600.0, warmup_lag: float = 10.0,
 
 
 def orchestrator_record(horizon: float = 200.0) -> dict:
-    """Live-plane leg: the three policies each drive a mock-model
+    """Live-plane leg: the *same kind of spec* as the frontier legs runs on
+    ``LivePlane(mock)`` — the three policies each drive a mock-model
     ``Orchestrator`` decode-round loop end to end (no jax needed)."""
-    from repro.serving import Request, mock_orchestrator
-
-    rng = np.random.default_rng(7)
-    reqs_per_policy = {}
-    times: List[float] = []
-    for (a, b, rate) in diurnal_phases(2.0, horizon, amplitude=0.8,
-                                       n_segments=16):
-        n = rng.poisson(rate * (b - a) * 0.6)
-        times.extend(np.sort(rng.uniform(a, b, n)).tolist())
-    times.sort()
-
     t0 = time.perf_counter()
     ok = True
-    for pname, mk_policy in _policies():
-        orch = mock_orchestrator([_mk("b0")], SPEC, arrival_rate=1.0)
-        ctl = AutoscaleController(
-            mk_policy(), TEMPLATE,
-            ControllerConfig(interval=5.0, cooldown=10.0, warmup_lag=8.0,
-                             min_servers=1, max_servers=12,
-                             slo_response_time=60.0),
-            telemetry=Telemetry(TelemetryConfig(window=20.0)))
-        ctl.bind_orchestrator(orch)
-        reqs = [(t, Request(rid=i, prompt=np.ones(4, np.int32),
-                            max_new_tokens=6, arrival_time=t))
-                for i, t in enumerate(times)]
-        summary = orch.run_scenario(Scenario(horizon=horizon), reqs, dt=0.5)
-        # close the billing integral at the end of the drive loop so the
-        # live-plane cost is on the same basis as the simulated plane
-        ctl.bill(summary["rounds"] * 0.5, len(orch.servers))
-        ctl.finalize(summary["rounds"] * 0.5)
-        ok &= summary["finished"] == len(reqs) and summary["failed"] == 0
+    n_requests = 0
+    reqs_per_policy = {}
+    for pname, params in POLICY_PARAMS:
+        live_params = dict(params)
+        if pname == "predictive":
+            live_params["lead"] = 20.0
+        spec = api.ExperimentSpec(
+            cluster=api.ClusterSpec(servers=(_mk("b0"),), service=SPEC),
+            scenario=api.ScenarioSpec(horizon=horizon),
+            workload=api.WorkloadSpec(generator="diurnal", base_rate=1.2,
+                                      params={"amplitude": 0.8,
+                                              "n_segments": 16},
+                                      seed=7),
+            autoscale=api.AutoscaleSpec(
+                policy=pname, template=TEMPLATE, params=live_params,
+                interval=5.0, cooldown=10.0, warmup_lag=8.0,
+                min_servers=1, max_servers=12, slo_response_time=60.0,
+                telemetry_window=20.0),
+            seed=0, name=f"autoscale-live-{pname}")
+        rep = api.run(spec, plane=api.LivePlane(dt=0.5, prompt_tokens=4))
+        ok &= rep.completed_all
+        n_requests = rep.n_jobs
         reqs_per_policy[pname] = {
-            "finished": summary["finished"],
-            "actions": len(ctl.records),
-            "peak_servers": ctl.peak_servers,
-            "server_seconds": ctl.server_seconds,
+            "finished": rep.n_completed,
+            "actions": rep.cost["n_actions"],
+            "peak_servers": rep.cost["peak_servers"],
+            "server_seconds": rep.cost["server_seconds"],
         }
     return {
         "name": "autoscale_orchestrator_loop",
-        "n_requests": len(times),
+        "n_requests": n_requests,
         "all_policies_complete": ok,
         "seconds": time.perf_counter() - t0,
         "per_policy": reqs_per_policy,

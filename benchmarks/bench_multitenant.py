@@ -34,28 +34,17 @@ from typing import List
 
 import numpy as np
 
-from repro.autoscale import (
-    AutoscaleController,
-    ControllerConfig,
-    PredictivePolicy,
-    SLOAwareAdmissionPolicy,
-)
+from repro import api
 from repro.core import (
     RequestClass,
     Scenario,
     Server,
     ServiceSpec,
-    VectorSimulator,
-    classed_poisson_mix,
-    run_scenario,
-    simulate_vectorized,
 )
 from repro.core.simulator import poisson_arrivals
 
 # Same composed system as bench_simulator: 3 job-server classes, 16 slots.
-JOB_SERVERS = [(1.0, 4), (0.8, 4), (0.5, 8)]
-RATES = [m for m, _ in JOB_SERVERS]
-CAPS = [c for _, c in JOB_SERVERS]
+JOB_SERVERS = ((1.0, 4), (0.8, 4), (0.5, 8))
 NU = sum(m * c for m, c in JOB_SERVERS)
 
 OVERLOAD = 1.05          # offered load vs. composed capacity
@@ -72,19 +61,29 @@ def _mix_classes(batch_deadline: float) -> List[RequestClass]:
 
 def overload_mix_record(n_target: int = 60_000, seed: int = 42) -> dict:
     """70/30 interactive/batch at 1.05x capacity: FIFO vs. priority vs.
-    priority + admission on the identical arrival trace."""
+    priority + admission on the identical arrival trace (identical because
+    every leg's spec shares the same workload seed and class rates — only
+    policy/deadline fields differ)."""
     lam = OVERLOAD * NU
     horizon = n_target / lam
     lam_int = INTERACTIVE_SHARE * lam
     lam_bat = (1.0 - INTERACTIVE_SHARE) * lam
     batch_deadline = 0.03 * horizon        # generous: sheds only the excess
-    t, w, c = classed_poisson_mix([lam_int, lam_bat], horizon, seed=seed)
+    n_jobs = 0
 
     def leg(policy: str, classes: List[RequestClass],
             aging: float = 0.0) -> dict:
-        sim = VectorSimulator(RATES, CAPS, policy=policy, seed=seed + 1,
-                              classes=classes, aging_rate=aging)
-        sim.add_arrivals(t, w, c)
+        nonlocal n_jobs
+        spec = api.ExperimentSpec(
+            cluster=api.ClusterSpec(job_servers=JOB_SERVERS),
+            scenario=api.ScenarioSpec(horizon=horizon),
+            workload=api.WorkloadSpec(generator="classed-mix",
+                                      class_rates=(lam_int, lam_bat),
+                                      classes=tuple(classes)),
+            policy=api.PolicySpec(name=policy, aging_rate=aging),
+            seed=seed, name=f"multitenant-{policy}")
+        sim = api.build_simulator(spec)
+        n_jobs = sim.n
         t0 = time.perf_counter()
         sim.run_to_completion()
         dt = time.perf_counter() - t0
@@ -108,7 +107,7 @@ def overload_mix_record(n_target: int = 60_000, seed: int = 42) -> dict:
     goodput_ratio = adm["batch_goodput"] / fifo["batch_goodput"]
     return {
         "name": "multitenant_overload_mix",
-        "n_jobs": len(t),
+        "n_jobs": n_jobs,
         "offered_load": OVERLOAD,
         "interactive_share": INTERACTIVE_SHARE,
         "batch_deadline": batch_deadline,
@@ -126,14 +125,25 @@ def overload_mix_record(n_target: int = 60_000, seed: int = 42) -> dict:
 def parity_record(n: int = 20_000, seed: int = 17) -> dict:
     """Single-default-class runs are bit-identical to the pre-refactor
     engine: labels do not perturb jffc; priority with one tier-0 class IS
-    jffc."""
-    arrivals = poisson_arrivals(0.85 * NU, n, random.Random(seed))
-    base = simulate_vectorized("jffc", JOB_SERVERS, arrivals, seed=seed)
+    jffc — all three legs built and run through ``ExperimentSpec``."""
+    lam = 0.85 * NU
+    arrivals = poisson_arrivals(lam, n, random.Random(seed))
     tt = np.array([a[0] for a in arrivals])
     ww = np.array([a[1] for a in arrivals])
-    labeled = simulate_vectorized(
-        "jffc", JOB_SERVERS, (tt, ww, np.zeros(n, dtype=np.int64)), seed=seed)
-    prio = simulate_vectorized("priority", JOB_SERVERS, arrivals, seed=seed)
+
+    def leg(policy: str, arr) -> "api.RunReport":
+        spec = api.ExperimentSpec(
+            cluster=api.ClusterSpec(job_servers=JOB_SERVERS),
+            scenario=api.ScenarioSpec(horizon=float(tt[-1]) + 1.0),
+            workload=api.WorkloadSpec(base_rate=lam),
+            policy=api.PolicySpec(name=policy),
+            seed=seed, warmup_fraction=0.1,
+            name=f"multitenant-parity-{policy}")
+        return api.run(spec, arrivals=arr)
+
+    base = leg("jffc", arrivals).raw.result
+    labeled = leg("jffc", (tt, ww, np.zeros(n, dtype=np.int64))).raw.result
+    prio = leg("priority", arrivals).raw.result
     same = all(
         np.array_equal(base.response_times, other.response_times)
         and np.array_equal(base.waiting_times, other.waiting_times)
@@ -149,33 +159,41 @@ def closed_loop_record(seed: int = 0) -> dict:
     server budget: the gate tightens instead of scaling out, sheds only
     batch, and loses nothing."""
     rng = random.Random(1234)
-    spec = ServiceSpec(num_blocks=10, block_size_gb=1.32, cache_size_gb=2.5)
-    servers = [Server(f"s{i}", rng.uniform(15, 40), rng.uniform(0.02, 0.2),
-                      rng.uniform(0.02, 0.2)) for i in range(4)]
+    service = ServiceSpec(num_blocks=10, block_size_gb=1.32,
+                          cache_size_gb=2.5)
+    servers = tuple(Server(f"s{i}", rng.uniform(15, 40),
+                           rng.uniform(0.02, 0.2), rng.uniform(0.02, 0.2))
+                    for i in range(4))
     template = Server("tmpl", 30.0, 0.05, 0.05)
     base_total = 2.0
-    class_rates = [0.65 * base_total, 0.35 * base_total]
-    classes = [RequestClass("interactive", "chat", 0, slo_target=4.0),
-               RequestClass("batch", "offline", 1, deadline=10.0)]
+    class_rates = (0.65 * base_total, 0.35 * base_total)
+    classes = (RequestClass("interactive", "chat", 0, slo_target=4.0),
+               RequestClass("batch", "offline", 1, deadline=10.0))
     sc = Scenario(horizon=300.0).tenant_burst(90.0, 120.0, 3.0, cls=0)
-    policy = SLOAwareAdmissionPolicy(
-        PredictivePolicy(template, lead=25.0), slo=4.0)
-    ctrl = AutoscaleController(
-        policy, template,
-        ControllerConfig(interval=6.0, cooldown=12.0, warmup_lag=10.0,
-                         max_servers=len(servers)))   # fixed budget: no adds
+    spec = api.ExperimentSpec(
+        cluster=api.ClusterSpec(servers=servers, service=service),
+        scenario=api.ScenarioSpec.from_scenario(sc),
+        workload=api.WorkloadSpec(class_rates=class_rates, classes=classes),
+        policy=api.PolicySpec(name="priority", aging_rate=0.001),
+        autoscale=api.AutoscaleSpec(
+            policy="slo-admission", template=template,
+            params={"slo": 4.0,
+                    "inner": {"policy": "predictive",
+                              "params": {"lead": 25.0}}},
+            interval=6.0, cooldown=12.0, warmup_lag=10.0,
+            max_servers=len(servers)),   # fixed budget: no adds
+        seed=seed, name="multitenant-closed-loop")
     t0 = time.perf_counter()
-    res = run_scenario(servers, spec, sc, policy="priority",
-                       classes=classes, class_rates=class_rates,
-                       aging_rate=0.001, seed=seed, controller=ctrl)
+    res = api.run(spec)
     dt = time.perf_counter() - t0
-    baseline = run_scenario(servers, spec, sc, policy="jffc",
-                            classes=classes, class_rates=class_rates,
-                            seed=seed)
-    pc = res.per_class()
-    adm = [r for r in ctrl.records if r.action == "admission"]
-    adds = [r for r in ctrl.records if r.action == "add"]
-    rejected_classes = set(res.result.rejected_class_ids.tolist())
+    baseline = api.run(spec.replace(policy=api.PolicySpec(name="jffc"),
+                                    autoscale=None))
+    pc = res.raw.per_class()
+    records = res.extras["scaling_records"]
+    adm = [r for r in records if r["action"] == "admission"]
+    adds = [r for r in records if r["action"] == "add"]
+    rejected_classes = set(
+        res.raw.result.rejected_class_ids.tolist())
     return {
         "name": "multitenant_closed_loop",
         "seconds": dt,
@@ -186,7 +204,7 @@ def closed_loop_record(seed: int = 0) -> dict:
         "admission_actions": len(adm),
         "scaleout_actions": len(adds),
         "interactive_p99": pc[0]["response"]["p99"],
-        "fifo_interactive_p99": baseline.per_class()[0]["response"]["p99"],
+        "fifo_interactive_p99": baseline.per_class[0]["response"]["p99"],
         "admission_fired_no_scaleout": bool(adm and not adds
                                             and res.n_rejected > 0),
     }

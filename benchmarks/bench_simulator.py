@@ -23,18 +23,15 @@ from typing import List
 
 import numpy as np
 
+from repro import api
 from repro.core import (
     POLICIES,
     Scenario,
     Server,
     ServiceSpec,
     VECTORIZED_POLICIES,
-    VectorSimulator,
     poisson_exponential,
-    poisson_exponential_np,
-    run_scenario,
     simulate,
-    simulate_vectorized,
 )
 from repro.core.simulator import poisson_arrivals
 
@@ -42,21 +39,38 @@ from .common import timed_pair
 
 # A composed system representative of the paper's GCA outputs: 3 job-server
 # classes, 16 concurrent slots, nu = 11.2.
-JOB_SERVERS = [(1.0, 4), (0.8, 4), (0.5, 8)]
+JOB_SERVERS = ((1.0, 4), (0.8, 4), (0.5, 8))
 RATES = [m for m, _ in JOB_SERVERS]
 CAPS = [c for _, c in JOB_SERVERS]
 NU = sum(m * c for m, c in JOB_SERVERS)
 
 
+def _precomposed_spec(lam: float, n: int, policy: str = "jffc",
+                      seed: int = 0) -> api.ExperimentSpec:
+    """The benchmark's fixed chain set + Poisson(lam) workload as one
+    declarative spec (engine RNG = seed + 1 by the spec's seed rule, same
+    as the pre-API wrappers)."""
+    return api.ExperimentSpec(
+        cluster=api.ClusterSpec(job_servers=JOB_SERVERS),
+        scenario=api.ScenarioSpec(horizon=1.25 * n / lam),
+        workload=api.WorkloadSpec(generator="poisson", base_rate=lam,
+                                  params={"n": n}),
+        policy=api.PolicySpec(name=policy),
+        seed=seed, warmup_fraction=0.1,
+        name=f"simulator-{policy}-lam{lam:g}")
+
+
 def parity_record(n: int = 20_000) -> dict:
-    """Bit-identical response times across every vectorized policy."""
+    """Bit-identical response times across every vectorized policy — the
+    scalar oracle vs. the same trace run through ``repro.api.run``."""
     ok = True
     for policy in VECTORIZED_POLICIES:
         for lam in (0.5 * NU, 0.85 * NU):
             arrivals = poisson_arrivals(lam, n, random.Random(0))
             sc = simulate(POLICIES[policy](RATES, CAPS, random.Random(1)),
                           arrivals)
-            vec = simulate_vectorized(policy, JOB_SERVERS, arrivals, seed=0)
+            vec = api.run(_precomposed_spec(lam, n, policy),
+                          arrivals=arrivals).raw.result
             ok &= bool(np.array_equal(sc.response_times, vec.response_times))
     return {"name": "simulator_parity", "bit_identical": ok, "n_jobs": n,
             "policies": list(VECTORIZED_POLICIES)}
@@ -65,20 +79,23 @@ def parity_record(n: int = 20_000) -> dict:
 def throughput_records(n: int, repeats: int = 5) -> List[dict]:
     """Scalar vs. vectorized engine and pipeline, timed with the shared
     median-of-N ``process_time`` helper (headline speedups are medians;
-    best-of-N rides along for comparison with older records)."""
+    best-of-N rides along for comparison with older records).  The
+    vectorized runs are built through ``ExperimentSpec`` —
+    ``api.build_simulator`` resolves the spec, the timers see only what
+    they saw before (construct + load + run)."""
     rows = []
     for rho in (0.7, 0.9, 0.95):
         lam = rho * NU
         arrivals = poisson_arrivals(lam, n, random.Random(0))
-        tt, ww = poisson_exponential_np(lam, n, seed=0)
+        spec = _precomposed_spec(lam, n)
+        tt, ww = np.asarray([a[0] for a in arrivals]), \
+            np.asarray([a[1] for a in arrivals])
 
         def scalar_engine():
             simulate(POLICIES["jffc"](RATES, CAPS, random.Random(1)), arrivals)
 
         def vec_engine():
-            sim = VectorSimulator(RATES, CAPS, policy="jffc", seed=1)
-            sim.add_arrivals(tt, ww)
-            sim.run_to_completion()
+            api.build_simulator(spec, arrivals=(tt, ww)).run_to_completion()
 
         s_eng, v_eng = timed_pair(scalar_engine, vec_engine, repeats)
 
@@ -87,9 +104,7 @@ def throughput_records(n: int, repeats: int = 5) -> List[dict]:
             simulate(POLICIES["jffc"](RATES, CAPS, random.Random(1)), arr)
 
         def vec_pipeline():
-            t2, w2 = poisson_exponential_np(lam, n, seed=0)
-            sim = VectorSimulator(RATES, CAPS, policy="jffc", seed=1)
-            sim.add_arrivals(t2, w2)
+            sim = api.build_simulator(spec)    # generates from the spec
             sim.run_to_completion()
             sim.result()
 
@@ -119,10 +134,8 @@ def throughput_records(n: int, repeats: int = 5) -> List[dict]:
 def million_job_record(n: int = 1_000_000) -> dict:
     """Feasibility: one million jobs through the vectorized engine."""
     lam = 0.9 * NU
-    tt, ww = poisson_exponential_np(lam, n, seed=0)
+    sim = api.build_simulator(_precomposed_spec(lam, n))   # loads arrivals
     t0 = time.perf_counter()
-    sim = VectorSimulator(RATES, CAPS, policy="jffc", seed=1)
-    sim.add_arrivals(tt, ww)
     sim.run_to_completion()
     res = sim.result()
     dt = time.perf_counter() - t0
@@ -136,9 +149,11 @@ def million_job_record(n: int = 1_000_000) -> dict:
 
 
 def scenario_record(n_target: int = 5_000) -> dict:
-    """Scenario engine smoke: failure + 6x burst + autoscale-in."""
+    """Scenario engine smoke: failure + 6x burst + autoscale-in, built as
+    one declarative spec and executed on the sim plane."""
     rng = random.Random(1234)
-    spec = ServiceSpec(num_blocks=10, block_size_gb=1.32, cache_size_gb=0.11)
+    service = ServiceSpec(num_blocks=10, block_size_gb=1.32,
+                          cache_size_gb=0.11)
     servers = [Server(f"s{i}", rng.uniform(15, 40), rng.uniform(0.02, 0.2),
                       rng.uniform(0.02, 0.2)) for i in range(8)]
     base_rate = 4.0
@@ -147,17 +162,22 @@ def scenario_record(n_target: int = 5_000) -> dict:
           .fail(horizon * 0.25, "s3")
           .burst(horizon * 0.5, horizon * 0.1, 6.0)
           .recover(horizon * 0.65, servers[3]))
+    spec = api.ExperimentSpec(
+        cluster=api.ClusterSpec(servers=tuple(servers), service=service),
+        scenario=api.ScenarioSpec.from_scenario(sc),
+        workload=api.WorkloadSpec(base_rate=base_rate),
+        seed=0, name="simulator-scenario-smoke")
     t0 = time.perf_counter()
-    res = run_scenario(servers, spec, sc, base_rate=base_rate, seed=0)
+    rep = api.run(spec, plane="sim")
     dt = time.perf_counter() - t0
     return {
         "name": "simulator_scenario_smoke",
-        "n_jobs": res.n_jobs,
+        "n_jobs": rep.n_jobs,
         "seconds": dt,
-        "completed_all": res.completed_all,
-        "reconfigurations": res.reconfigurations,
-        "restarts": res.restarts,
-        "p99_response": res.p99(),
+        "completed_all": rep.completed_all,
+        "reconfigurations": rep.reconfigurations,
+        "restarts": rep.restarts,
+        "p99_response": rep.p99(),
     }
 
 

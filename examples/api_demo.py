@@ -1,0 +1,63 @@
+"""One spec, two planes: the declarative experiment API end to end.
+
+A single ~10-line ``ExperimentSpec`` — a small heterogeneous cluster, a
+failure + recovery timeline, Poisson load — is executed twice:
+
+  * on :class:`SimPlane` (the vectorized queueing simulator, microseconds
+    per job), and
+  * on ``LivePlane(mock)`` (the real serving orchestrator stepping decode
+    rounds over mock chain engines — same control plane as the jax stack),
+
+then the two :class:`RunReport`s are **diffed**: the unified schema makes
+"what does the queueing model predict vs. what does the live system do"
+a one-call comparison.  The spec also round-trips through JSON on the way,
+because a spec you cannot serialize is a spec you cannot sweep, store, or
+ship to a cluster.
+
+Numpy-only; runs in about a second:
+
+    PYTHONPATH=src python examples/api_demo.py
+"""
+import random
+
+from repro import api
+from repro.core import Scenario, Server, ServiceSpec
+
+# -- the 10-line spec -------------------------------------------------------
+rng = random.Random(1234)
+servers = tuple(Server(f"s{i}", rng.uniform(15, 40), rng.uniform(0.02, 0.2),
+                       rng.uniform(0.02, 0.2)) for i in range(6))
+spec = api.ExperimentSpec(
+    cluster=api.ClusterSpec(
+        servers=servers,
+        service=ServiceSpec(num_blocks=10, block_size_gb=1.32,
+                            cache_size_gb=0.11)),
+    scenario=api.ScenarioSpec.from_scenario(
+        Scenario(horizon=120.0).fail(40.0, "s3").recover(80.0, servers[3])),
+    workload=api.WorkloadSpec(base_rate=2.0),
+    seed=0, name="api-demo")
+
+# -- JSON round trip: the spec is the experiment's portable identity --------
+wire = spec.to_json()
+spec = api.ExperimentSpec.from_json(wire)
+print(f"spec '{spec.name}': {len(wire)} bytes of JSON, "
+      f"{len(spec.cluster.servers)} servers, "
+      f"{len(spec.scenario.events)} scripted events")
+
+# -- same spec, both planes -------------------------------------------------
+rep_sim = api.run(spec, plane="sim")
+rep_live = api.run(spec, plane=api.LivePlane(dt=0.5))
+print(rep_sim.summary_line())
+print(rep_live.summary_line())
+
+# -- one-call comparison ----------------------------------------------------
+print("\nsim vs live (unified RunReport diff):")
+for field, (a, b) in sorted(rep_sim.diff(rep_live).items()):
+    def fmt(x):
+        return f"{x:.3f}" if isinstance(x, float) else x
+    print(f"  {field:>18s}: {fmt(a)!s:>10s} (sim)   {fmt(b)!s:>10s} (live)")
+
+assert rep_sim.completed_all and rep_live.completed_all
+assert rep_sim.n_jobs == rep_live.n_jobs, "planes resolved different traces"
+print("\nboth planes completed the identical workload — "
+      "the spec IS the experiment.")

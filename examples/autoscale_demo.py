@@ -1,41 +1,29 @@
 """Closed-loop autoscaling demo: serve a day/night curve you did not script.
 
-Two legs, mirroring the two execution planes:
+One declarative ``ExperimentSpec`` family, two execution planes:
 
-1. **Queueing plane** — a diurnal trace (trough 1.2 jobs/s, peak ~15 jobs/s)
-   hits a cluster that starts as ONE small server.  The controller watches
-   the telemetry window, the predictive policy forecasts the ramp, sizes the
-   fleet through the paper's own composition pipeline, and servers join
-   after a provisioning warm-up lag.  Compare against the peak-provisioned
-   static cluster: same tail latency, fewer server-seconds.
+1. **Queueing plane** (``plane="sim"``) — a diurnal trace (trough 1.2
+   jobs/s, peak ~15 jobs/s) hits a cluster that starts as ONE small server.
+   The controller watches the telemetry window, the predictive policy
+   forecasts the ramp, sizes the fleet through the paper's own composition
+   pipeline, and servers join after a provisioning warm-up lag.  Compare
+   against the peak-provisioned static cluster: same tail latency, fewer
+   server-seconds.
 
-2. **Live plane** — the same control loop bound to a (mock-model)
-   ``Orchestrator``: decisions actuate through ``add_server`` (with warm-up)
-   and ``retire_servers`` (graceful drain) between decode rounds.
+2. **Live plane** (``plane=LivePlane(mock)``) — the *same spec shape*
+   bound to a mock-model ``Orchestrator``: decisions actuate through
+   ``add_server`` (with warm-up) and ``retire_servers`` (graceful drain)
+   between decode rounds.
+
+Every leg differs from its neighbors only in spec fields — the autoscale
+policy is a registry name, the workload a generator name, the trace pinned
+by ``workload.seed``.
 
 Run:  PYTHONPATH=src python examples/autoscale_demo.py
 """
-import numpy as np
-
-from repro.core import (
-    Scenario,
-    Server,
-    ServiceSpec,
-    diurnal_phases,
-    diurnal_poisson,
-    run_scenario,
-)
-from repro.autoscale import (
-    AutoscaleController,
-    ControllerConfig,
-    PredictivePolicy,
-    TargetUtilizationPolicy,
-    Telemetry,
-    TelemetryConfig,
-    servers_needed,
-    static_baseline_cost,
-)
-from repro.serving import Request, mock_orchestrator
+from repro import api
+from repro.autoscale import servers_needed, static_baseline_cost
+from repro.core import Server, ServiceSpec
 
 SPEC = ServiceSpec(num_blocks=10, block_size_gb=1.32, cache_size_gb=0.11)
 TEMPLATE = Server("template", 16.0, 0.05, 0.08)
@@ -45,13 +33,24 @@ def mk(sid: str) -> Server:
     return Server(sid, TEMPLATE.memory_gb, TEMPLATE.tau_c, TEMPLATE.tau_p)
 
 
-def controller(policy) -> AutoscaleController:
-    return AutoscaleController(
-        policy, TEMPLATE,
-        ControllerConfig(interval=5.0, cooldown=20.0, warmup_lag=10.0,
-                         min_servers=1, max_servers=40,
-                         slo_response_time=3.0),
-        telemetry=Telemetry(TelemetryConfig(window=20.0)))
+def diurnal_spec(servers, horizon, base_rate, amplitude, trace_seed,
+                 autoscale=None, name="") -> api.ExperimentSpec:
+    return api.ExperimentSpec(
+        cluster=api.ClusterSpec(servers=tuple(servers), service=SPEC),
+        scenario=api.ScenarioSpec(horizon=horizon,
+                                  description="diurnal day/night curve"),
+        workload=api.WorkloadSpec(generator="diurnal", base_rate=base_rate,
+                                  params={"amplitude": amplitude},
+                                  seed=trace_seed),
+        autoscale=autoscale, seed=0, name=name)
+
+
+def scaler(policy: str, params=None, **cfg) -> api.AutoscaleSpec:
+    cfg = {"interval": 5.0, "cooldown": 20.0, "warmup_lag": 10.0,
+           "min_servers": 1, "max_servers": 40, "slo_response_time": 3.0,
+           "telemetry_window": 20.0, **cfg}
+    return api.AutoscaleSpec(policy=policy, template=TEMPLATE,
+                             params=params or {}, **cfg)
 
 
 def queueing_plane() -> None:
@@ -59,76 +58,58 @@ def queueing_plane() -> None:
     print("Queueing plane: diurnal trace, 600 s, trough 1.2/s -> peak 14.8/s")
     print("=" * 72)
     horizon, base_rate, amplitude = 600.0, 8.0, 0.85
-    arrivals = diurnal_poisson(base_rate, horizon, amplitude=amplitude,
-                               seed=3)
-    scenario = Scenario(horizon=horizon)
 
     peak = base_rate * (1 + amplitude)
     n_static = servers_needed([], TEMPLATE, SPEC, peak, 0.7, max_extra=60)
     static = [mk(f"st{i}") for i in range(n_static)]
-    res = run_scenario(static, SPEC, scenario, base_rate=base_rate,
-                       arrivals=arrivals, seed=0)
-    srep = static_baseline_cost(n_static, res.result.sim_time,
-                                res.result.response_times, 3.0)
-    print(f"static x{n_static} (peak-provisioned): p99 {res.p99():.2f} s, "
+    rep = api.run(diurnal_spec(static, horizon, base_rate, amplitude, 3,
+                               name="static"))
+    srep = static_baseline_cost(n_static, rep.sim_time,
+                                rep.raw.result.response_times, 3.0)
+    print(f"static x{n_static} (peak-provisioned): p99 {rep.p99():.2f} s, "
           f"{srep.server_seconds:.0f} server-s, "
           f"{srep.slo_violations} SLO violations")
 
-    for policy in (PredictivePolicy(TEMPLATE, lead=30.0, margin=1.2),
-                   TargetUtilizationPolicy()):
-        ctl = controller(policy)
-        res = run_scenario([mk("base0")], SPEC, scenario,
-                           base_rate=base_rate, arrivals=arrivals,
-                           controller=ctl, seed=0)
-        rep = ctl.report(res.result.response_times, 0)
-        print(f"{policy.name:>12}: p99 {res.p99():.2f} s, "
-              f"{rep.server_seconds:.0f} server-s, "
-              f"{rep.slo_violations} SLO violations, "
-              f"{rep.n_actions} actions, peak {rep.peak_servers} servers")
-        for rec in ctl.records[:6]:
-            print(f"     t={rec.time:6.1f}  {rec.action:6s} x{rec.count}  "
-                  f"({rec.reason})")
-        if len(ctl.records) > 6:
-            print(f"     ... {len(ctl.records) - 6} more actions")
+    for policy, params in (("predictive", {"lead": 30.0, "margin": 1.2}),
+                           ("target-util", {})):
+        spec = diurnal_spec([mk("base0")], horizon, base_rate, amplitude, 3,
+                            autoscale=scaler(policy, params), name=policy)
+        rep = api.run(spec)
+        cost = rep.cost
+        print(f"{policy:>12}: p99 {rep.p99():.2f} s, "
+              f"{cost['server_seconds']:.0f} server-s, "
+              f"{cost['slo_violations']} SLO violations, "
+              f"{cost['n_actions']} actions, "
+              f"peak {cost['peak_servers']} servers")
+        for rec in rep.extras["scaling_records"][:6]:
+            print(f"     t={rec['time']:6.1f}  {rec['action']:6s} "
+                  f"x{rec['count']}  ({rec['reason']})")
+        if len(rep.extras["scaling_records"]) > 6:
+            print(f"     ... {len(rep.extras['scaling_records']) - 6} "
+                  f"more actions")
 
 
 def live_plane() -> None:
     print()
     print("=" * 72)
-    print("Live plane: mock-model Orchestrator + bound controller")
+    print("Live plane: the same spec shape on a mock-model Orchestrator")
     print("=" * 72)
-    rng = np.random.default_rng(7)
-    horizon = 200.0
-    times = []
-    for (a, b, rate) in diurnal_phases(2.0, horizon, amplitude=0.8,
-                                       n_segments=16):
-        n = rng.poisson(rate * (b - a) * 0.6)
-        times.extend(np.sort(rng.uniform(a, b, n)).tolist())
-    times.sort()
-    reqs = [(t, Request(rid=i, prompt=np.ones(4, np.int32),
-                        max_new_tokens=6, arrival_time=t))
-            for i, t in enumerate(times)]
-
-    orch = mock_orchestrator([mk("b0")], SPEC, arrival_rate=1.0)
-    ctl = AutoscaleController(
-        PredictivePolicy(TEMPLATE, lead=20.0, margin=1.2), TEMPLATE,
-        ControllerConfig(interval=5.0, cooldown=10.0, warmup_lag=8.0,
-                         min_servers=1, max_servers=12,
+    spec = diurnal_spec(
+        [mk("b0")], 200.0, base_rate=1.2, amplitude=0.8, trace_seed=7,
+        autoscale=scaler("predictive", {"lead": 20.0, "margin": 1.2},
+                         cooldown=10.0, warmup_lag=8.0, max_servers=12,
                          slo_response_time=60.0),
-        telemetry=Telemetry(TelemetryConfig(window=20.0)))
-    ctl.bind_orchestrator(orch)
-    summary = orch.run_scenario(Scenario(horizon=horizon), reqs, dt=0.5)
-    ctl.bill(summary["rounds"] * 0.5, len(orch.servers))
-    ctl.finalize(summary["rounds"] * 0.5)
-    print(f"requests: {summary['finished']}/{len(reqs)} finished, "
-          f"{summary['failed']} failed, "
-          f"{summary['recompositions']} recompositions")
-    print(f"controller: {len(ctl.records)} actions, "
-          f"peak {ctl.peak_servers} servers, "
-          f"{ctl.server_seconds:.0f} server-s")
-    for rec in ctl.records:
-        print(f"   t={rec.time:6.1f}  {rec.action:6s} x{rec.count}  "
-              f"({rec.reason})")
+        name="live-predictive")
+    rep = api.run(spec, plane=api.LivePlane(dt=0.5, prompt_tokens=4))
+    print(f"requests: {rep.n_completed}/{rep.n_jobs} finished, "
+          f"{rep.n_failed} failed, {rep.reconfigurations} recompositions "
+          f"({rep.extras['idle_skipped']} idle rounds fast-forwarded)")
+    print(f"controller: {rep.cost['n_actions']} actions, "
+          f"peak {rep.cost['peak_servers']} servers, "
+          f"{rep.cost['server_seconds']:.0f} server-s")
+    for rec in rep.extras["scaling_records"]:
+        print(f"   t={rec['time']:6.1f}  {rec['action']:6s} x{rec['count']}  "
+              f"({rec['reason']})")
 
 
 if __name__ == "__main__":

@@ -12,8 +12,9 @@ import random
 import jax
 import numpy as np
 
+from repro import api
 from repro.configs import get
-from repro.core import Scenario, Server, ServiceSpec, run_scenario
+from repro.core import Scenario, Server, ServiceSpec
 from repro.models import Model
 from repro.serving import Orchestrator, OrchestratorConfig, Request, State, service_spec_for
 
@@ -90,7 +91,9 @@ scenario = (Scenario(horizon=10.0, description="fail + straggler + recover")
 rng = np.random.default_rng(7)
 reqs_c = [Request(rid=i, prompt=rng.integers(1, 200, 10).astype(np.int32),
                   max_new_tokens=6) for i in range(8)]
-summary = orch_c.run_scenario(scenario, reqs_c, dt=1.0)
+# the drive loop that used to be Orchestrator.run_scenario now lives behind
+# the experiment API (it also fast-forwards idle stretches)
+summary = api.drive_orchestrator(orch_c, scenario, reqs_c, dt=1.0)
 for ev in summary["events"]:
     print(f"  t={ev['time']:.0f} {ev['kind']:9s} requeued={ev['requeued']} "
           f"chains={ev['chains']}")
@@ -100,9 +103,10 @@ assert all(r.state == State.DONE for r in reqs_c)
 
 # ---------------------------------------------------------------------------
 # The same kind of timeline at queueing scale: 8 servers, a mid-run failure,
-# a 6x burst, autoscale-in — thousands of jobs through the vectorized engine.
+# a 6x burst, autoscale-in — thousands of jobs through the vectorized engine,
+# swept over dispatch policies with one declarative spec.
 # ---------------------------------------------------------------------------
-print("\nqueueing-scale scenario (vectorized engine):")
+print("\nqueueing-scale scenario (vectorized engine, spec-driven sweep):")
 prng = random.Random(1234)
 big_spec = ServiceSpec(num_blocks=10, block_size_gb=1.32, cache_size_gb=0.11)
 cluster = [Server(f"s{i}", prng.uniform(15, 40), prng.uniform(0.02, 0.2),
@@ -111,8 +115,14 @@ big = (Scenario(horizon=400.0)
        .fail(100.0, "s3")
        .burst(200.0, 40.0, 6.0)
        .recover(260.0, cluster[3]))
-for pol in ("jffc", "random"):
-    res = run_scenario(cluster, big_spec, big, base_rate=2.0, policy=pol, seed=0)
-    print(f"  {pol:7s}: {res.n_jobs} jobs, completed_all={res.completed_all}, "
-          f"restarts={res.restarts}, p99={res.p99():.2f}s")
+espec = api.ExperimentSpec(
+    cluster=api.ClusterSpec(servers=tuple(cluster), service=big_spec),
+    scenario=api.ScenarioSpec.from_scenario(big),
+    workload=api.WorkloadSpec(base_rate=2.0),
+    seed=0, name="queueing-scale")
+for pt in api.sweep(espec, {"policy.name": ["jffc", "random"]}):
+    rep = pt.report
+    print(f"  {pt.overrides['policy.name']:7s}: {rep.n_jobs} jobs, "
+          f"completed_all={rep.completed_all}, "
+          f"restarts={rep.restarts}, p99={rep.p99():.2f}s")
 print("done.")

@@ -1,21 +1,23 @@
-"""Multi-tenant SLO-class serving, end to end.
+"""Multi-tenant SLO-class serving, end to end — spec-driven.
 
 Three escalating demos over the same two-tenant mix (interactive chat,
-tier 0, tight SLO — batch summarization, tier 1, best-effort):
+tier 0, tight SLO — batch summarization, tier 1, best-effort), each leg an
+``ExperimentSpec`` differing only in declarative fields:
 
   1. **Overload triage** — a 70/30 mix offered at 1.05x composed capacity
-     through three engines on the identical trace: class-blind FIFO,
-     priority scheduling, and priority + the SLO admission gate.  Priority
-     collapses the interactive p99; admission additionally bounds the
-     batch backlog by shedding only the arrivals that could never meet
-     their deadline.
+     through three specs on the identical trace (same workload seed):
+     class-blind FIFO, priority scheduling, and priority + the SLO
+     admission gate.  Priority collapses the interactive p99; admission
+     additionally bounds the batch backlog by shedding only the arrivals
+     that could never meet their deadline.
   2. **Aging** — a lone batch job inside a saturated interactive stream:
      strict priority parks it until the stream ends, linear aging bounds
-     its wait (no starvation).
-  3. **Closed loop** — a 3x interactive tenant burst under the SLO-aware
-     admission policy wrapped around the predictive scaler on a fixed
-     server budget: the controller answers the p99 breach by tightening
-     the admission gate (defer/shed batch) instead of buying servers.
+     its wait (no starvation).  (The hand-built arrival list rides the
+     ``arrivals=`` escape hatch.)
+  3. **Closed loop** — a 3x interactive tenant burst under the
+     ``slo-admission``-wrapped predictive scaler on a fixed server budget:
+     the controller answers the p99 breach by tightening the admission gate
+     (defer/shed batch) instead of buying servers.
 
 Numpy-only; runs in seconds:
 
@@ -25,26 +27,10 @@ import random
 
 import numpy as np
 
-from repro.autoscale import (
-    AutoscaleController,
-    ControllerConfig,
-    PredictivePolicy,
-    SLOAwareAdmissionPolicy,
-)
-from repro.core import (
-    RequestClass,
-    Scenario,
-    Server,
-    ServiceSpec,
-    VectorSimulator,
-    classed_poisson_mix,
-    run_scenario,
-    simulate_vectorized,
-)
+from repro import api
+from repro.core import RequestClass, Scenario, Server, ServiceSpec
 
-JOB_SERVERS = [(1.0, 4), (0.8, 4), (0.5, 8)]       # composed: nu = 11.2
-RATES = [m for m, _ in JOB_SERVERS]
-CAPS = [c for _, c in JOB_SERVERS]
+JOB_SERVERS = ((1.0, 4), (0.8, 4), (0.5, 8))       # composed: nu = 11.2
 NU = sum(m * c for m, c in JOB_SERVERS)
 
 
@@ -54,29 +40,33 @@ def overload_triage() -> None:
     print("=" * 70)
     lam = 1.05 * NU
     horizon = 40_000 / lam
-    t, w, c = classed_poisson_mix([0.7 * lam, 0.3 * lam], horizon, seed=42)
+
+    def classes(batch_deadline=float("inf")):
+        return (RequestClass("interactive", "chat", 0, slo_target=2.0),
+                RequestClass("batch", "offline", 1,
+                             deadline=batch_deadline))
+
     legs = {
-        "class-blind FIFO": ("jffc", [
-            RequestClass("interactive", "chat", 0, slo_target=2.0),
-            RequestClass("batch", "offline", 1)], 0.0),
-        "priority": ("priority", [
-            RequestClass("interactive", "chat", 0, slo_target=2.0),
-            RequestClass("batch", "offline", 1)], 0.001),
-        "priority + admission": ("priority", [
-            RequestClass("interactive", "chat", 0, slo_target=2.0),
-            RequestClass("batch", "offline", 1,
-                         deadline=0.03 * horizon)], 0.001),
+        "class-blind FIFO": ("jffc", classes(), 0.0),
+        "priority": ("priority", classes(), 0.001),
+        "priority + admission": ("priority", classes(0.03 * horizon), 0.001),
     }
     print(f"{'engine':22s} {'int p99':>9s} {'batch p99':>10s} "
           f"{'batch done':>10s} {'shed':>6s}")
-    for name, (policy, classes, aging) in legs.items():
-        res = simulate_vectorized(policy, JOB_SERVERS, (t, w, c), seed=42,
-                                  classes=classes, aging_rate=aging,
-                                  warmup_fraction=0.0)
-        pc = res.per_class()
+    for name, (policy, cls, aging) in legs.items():
+        spec = api.ExperimentSpec(
+            cluster=api.ClusterSpec(job_servers=JOB_SERVERS),
+            scenario=api.ScenarioSpec(horizon=horizon),
+            workload=api.WorkloadSpec(generator="classed-mix",
+                                      class_rates=(0.7 * lam, 0.3 * lam),
+                                      classes=cls),
+            policy=api.PolicySpec(name=policy, aging_rate=aging),
+            seed=42, name=name)
+        rep = api.run(spec)
+        pc = rep.per_class
         print(f"{name:22s} {pc[0]['response']['p99']:9.2f} "
               f"{pc[1]['response']['p99']:10.2f} {pc[1]['n']:10d} "
-              f"{res.n_rejected:6d}")
+              f"{rep.n_rejected:6d}")
     print("-> priority protects the interactive tenant; the admission gate")
     print("   additionally sheds only the batch excess (goodput ~intact).\n")
 
@@ -87,12 +77,16 @@ def aging_demo() -> None:
     print("=" * 70)
     interactive = [(0.1 * i, 1.0, 0, 0, 0) for i in range(400)]
     arrivals = sorted(interactive + [(1.0, 1.0, 0, 0, 1)])
-    classes = [RequestClass("interactive", "chat", 0),
-               RequestClass("batch", "offline", 1)]
+    classes = (RequestClass("interactive", "chat", 0),
+               RequestClass("batch", "offline", 1))
     for aging in (0.0, 0.2, 0.5):
-        res = simulate_vectorized("priority", [(1.0, 1)], arrivals, seed=0,
-                                  classes=classes, aging_rate=aging,
-                                  warmup_fraction=0.0)
+        spec = api.ExperimentSpec(
+            cluster=api.ClusterSpec(job_servers=((1.0, 1),)),
+            scenario=api.ScenarioSpec(horizon=60.0),
+            workload=api.WorkloadSpec(base_rate=10.0, classes=classes),
+            policy=api.PolicySpec(name="priority", aging_rate=aging),
+            seed=0, name=f"aging-{aging:g}")
+        res = api.run(spec, arrivals=arrivals).raw.result
         (bidx,) = np.where(res.class_ids == 1)
         print(f"aging_rate={aging:4.1f}  batch waited "
               f"{res.waiting_times[bidx[0]]:7.2f} s")
@@ -104,33 +98,39 @@ def closed_loop() -> None:
     print("3. Closed loop: tenant burst, SLO admission before scale-out")
     print("=" * 70)
     rng = random.Random(1234)
-    spec = ServiceSpec(num_blocks=10, block_size_gb=1.32, cache_size_gb=2.5)
-    servers = [Server(f"s{i}", rng.uniform(15, 40), rng.uniform(0.02, 0.2),
-                      rng.uniform(0.02, 0.2)) for i in range(4)]
-    template = Server("tmpl", 30.0, 0.05, 0.05)
-    classes = [RequestClass("interactive", "chat", 0, slo_target=4.0),
-               RequestClass("batch", "offline", 1, deadline=10.0)]
-    sc = Scenario(horizon=300.0).tenant_burst(90.0, 120.0, 3.0, cls=0)
-    ctrl = AutoscaleController(
-        SLOAwareAdmissionPolicy(PredictivePolicy(template, lead=25.0),
-                                slo=4.0),
-        template,
-        ControllerConfig(interval=6.0, cooldown=12.0, warmup_lag=10.0,
-                         max_servers=len(servers)))   # fixed budget
-    res = run_scenario(servers, spec, sc, policy="priority",
-                       classes=classes, class_rates=[1.3, 0.7],
-                       aging_rate=0.001, seed=0, controller=ctrl)
-    baseline = run_scenario(servers, spec, sc, policy="jffc",
-                            classes=classes, class_rates=[1.3, 0.7], seed=0)
-    pc = res.per_class()
-    print(f"completed_all={res.completed_all}  shed={res.n_rejected} "
-          f"(batch only: "
-          f"{set(res.result.rejected_class_ids.tolist()) <= {1}})")
+    service = ServiceSpec(num_blocks=10, block_size_gb=1.32,
+                          cache_size_gb=2.5)
+    servers = tuple(Server(f"s{i}", rng.uniform(15, 40),
+                           rng.uniform(0.02, 0.2), rng.uniform(0.02, 0.2))
+                    for i in range(4))
+    classes = (RequestClass("interactive", "chat", 0, slo_target=4.0),
+               RequestClass("batch", "offline", 1, deadline=10.0))
+    spec = api.ExperimentSpec(
+        cluster=api.ClusterSpec(servers=servers, service=service),
+        scenario=api.ScenarioSpec.from_scenario(
+            Scenario(horizon=300.0).tenant_burst(90.0, 120.0, 3.0, cls=0)),
+        workload=api.WorkloadSpec(class_rates=(1.3, 0.7), classes=classes),
+        policy=api.PolicySpec(name="priority", aging_rate=0.001),
+        autoscale=api.AutoscaleSpec(
+            policy="slo-admission",
+            template=Server("tmpl", 30.0, 0.05, 0.05),
+            params={"slo": 4.0, "inner": {"policy": "predictive",
+                                          "params": {"lead": 25.0}}},
+            interval=6.0, cooldown=12.0, warmup_lag=10.0,
+            max_servers=len(servers)),   # fixed budget
+        seed=0, name="tenant-burst")
+    rep = api.run(spec)
+    baseline = api.run(spec.replace(policy=api.PolicySpec(name="jffc"),
+                                    autoscale=None))
+    pc = rep.per_class
+    shed_cls = set(rep.raw.result.rejected_class_ids.tolist())
+    print(f"completed_all={rep.completed_all}  shed={rep.n_rejected} "
+          f"(batch only: {shed_cls <= {1}})")
     print(f"interactive p99: {pc[0]['response']['p99']:.2f} s  "
           f"(class-blind FIFO baseline: "
-          f"{baseline.per_class()[0]['response']['p99']:.2f} s)")
-    for r in ctrl.records:
-        print(f"  t={r.time:6.1f}  {r.action:9s}  {r.reason}")
+          f"{baseline.per_class[0]['response']['p99']:.2f} s)")
+    for r in rep.extras["scaling_records"]:
+        print(f"  t={r['time']:6.1f}  {r['action']:9s}  {r['reason']}")
     print("-> every actuation is an admission retune; no server was bought.")
 
 

@@ -1,0 +1,69 @@
+"""One experiment API: declarative specs, plane-agnostic execution.
+
+Three PRs of growth left the repo with two diverging front doors —
+``repro.core.scenarios.run_scenario`` (17 keyword arguments, returns a
+``ScenarioResult``) and ``Orchestrator.run_scenario`` (a different
+signature, returns an ad-hoc dict).  This package is the single front door
+the ROADMAP's "as many scenarios as you can imagine" needs:
+
+* **Specs** (:mod:`repro.api.spec`): frozen dataclasses —
+  :class:`ClusterSpec`, :class:`WorkloadSpec`, :class:`PolicySpec`,
+  :class:`AdmissionSpec`, :class:`AutoscaleSpec`, :class:`ScenarioSpec` —
+  composed into one :class:`ExperimentSpec` with lossless dict/JSON
+  round-trip and validation errors that name the bad field.
+* **Registries** (:mod:`repro.api.registry`): dispatch policies, tuners,
+  workload generators, scenario event kinds, autoscale policies and
+  execution planes are all string-keyed and decorator-extensible — new
+  behaviors become registry entries, not new keyword arguments.
+* **Planes** (:mod:`repro.api.planes`): :class:`SimPlane` (vectorized
+  simulator + the recompose loop) and :class:`LivePlane` (the serving
+  orchestrator over mock or jax engines) execute the *same* spec;
+  :func:`run` returns one :class:`RunReport` schema either way, and
+  :func:`sweep` runs seeded grids of spec variations.
+
+The pre-API entry points survive as deprecation shims and stay
+bit-identical on fixed seeds (``tests/test_api.py`` pins the parity).
+
+    >>> from repro.api import ExperimentSpec, ClusterSpec, ScenarioSpec, run
+    >>> spec = ExperimentSpec(
+    ...     cluster=ClusterSpec(servers=servers, service=service),
+    ...     scenario=ScenarioSpec(horizon=300.0),
+    ...     workload=WorkloadSpec(base_rate=4.0))
+    >>> run(spec, plane="sim").p99()
+"""
+from .registry import (
+    DISPATCH_POLICIES,
+    EVENT_KINDS,
+    PLANES,
+    Registry,
+    SCALERS,
+    TUNERS,
+    UnknownNameError,
+    WORKLOADS,
+)
+from .spec import (
+    AdmissionSpec,
+    AutoscaleSpec,
+    ClusterSpec,
+    ENGINE_SEED_OFFSET,
+    ExperimentSpec,
+    PolicySpec,
+    ScenarioSpec,
+    SpecError,
+    WorkloadSpec,
+)
+from .report import RunReport
+from .planes import LivePlane, SimPlane, build_simulator, drive_orchestrator
+from .runner import SweepPoint, get_plane, run, spec_replace, sweep
+
+__all__ = [
+    "Registry", "UnknownNameError",
+    "DISPATCH_POLICIES", "TUNERS", "WORKLOADS", "EVENT_KINDS", "SCALERS",
+    "PLANES",
+    "ClusterSpec", "WorkloadSpec", "PolicySpec", "AdmissionSpec",
+    "AutoscaleSpec", "ScenarioSpec", "ExperimentSpec", "SpecError",
+    "ENGINE_SEED_OFFSET",
+    "RunReport",
+    "SimPlane", "LivePlane", "build_simulator", "drive_orchestrator",
+    "run", "sweep", "spec_replace", "get_plane", "SweepPoint",
+]

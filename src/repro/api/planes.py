@@ -1,0 +1,525 @@
+"""Execution planes: run one :class:`ExperimentSpec` anywhere.
+
+A *plane* is anything with ``name`` and
+``run(spec, *, arrivals=None, controller=None) -> RunReport``:
+
+* :class:`SimPlane` — the queueing-level plane: the vectorized
+  :class:`repro.core.simulator.VectorSimulator` driven through the
+  recompose loop that used to be inlined in
+  ``repro.core.scenarios.run_scenario`` (scripted cluster events and/or a
+  closed autoscale loop, tuned-c -> GBP-CR -> GCA at every recomposition).
+* :class:`LivePlane` — the serving plane: a
+  :class:`repro.serving.Orchestrator` stepping decode rounds over mock or
+  jax chain engines, driven by :func:`drive_orchestrator` (the loop that
+  used to be ``Orchestrator.run_scenario``, now with idle fast-forward).
+
+Both planes resolve workload, seeds, classes, admission and autoscaling
+from the *same* spec fields, so ``repro.api.run(spec, plane="sim")`` and
+``repro.api.run(spec, plane="live")`` answer the same question at two
+fidelities and return one :class:`repro.api.report.RunReport` schema.
+
+``arrivals=`` overrides the spec's generated workload with a pre-built
+trace (the benchmarks' identical-trace-across-legs pattern);
+``controller=`` injects an existing stateful controller instead of building
+one from ``spec.autoscale`` (the deprecation shims use both).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from collections import deque
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.scenarios import (
+    Scenario,
+    ScenarioLogEntry,
+    ScenarioResult,
+    _apply_membership,
+    _effective,
+    _resolve_arrivals,
+    compose_or_degrade,
+)
+from repro.core.simulator import VectorSimulator
+from repro.core.workload import AZURE_STATS
+
+from .registry import PLANES, WORKLOADS
+from .report import (
+    RunReport,
+    report_from_orchestrator,
+    report_from_scenario_result,
+)
+from .spec import ExperimentSpec, SpecError
+
+
+def _coerce_arrivals(arrivals):
+    """Normalize an explicit-arrivals override: column-array tuples pass
+    through; the scalar engine's row form ``[(time, work, in_tokens,
+    out_tokens[, cls]), ...]`` (list OR tuple of rows) converts to column
+    arrays.  The discriminator matches the old ``simulate_vectorized``
+    rule: a tuple whose first element is an ndarray is columns, anything
+    else sequence-like is rows."""
+    if arrivals is None:
+        return None
+    if isinstance(arrivals, tuple) \
+            and (len(arrivals) == 0
+                 or isinstance(arrivals[0], np.ndarray)):
+        return arrivals
+    if isinstance(arrivals, (list, tuple, np.ndarray)):
+        if len(arrivals) == 0:
+            return (np.empty(0), np.empty(0))
+        if not all(hasattr(row, "__len__") and len(row) >= 2
+                   for row in arrivals):
+            raise SpecError(
+                "arrivals",
+                "rows must be (time, work[, in_tokens, out_tokens[, cls]]) "
+                "tuples; for column arrays pass a tuple of numpy arrays")
+        cols = list(zip(*arrivals))
+        out = [np.asarray(cols[0], dtype=np.float64),
+               np.asarray(cols[1], dtype=np.float64)]
+        for c in cols[2:4]:
+            out.append(np.asarray(c, dtype=np.int64))
+        if len(cols) > 4:
+            out.append(np.asarray(cols[4], dtype=np.int64))
+        return tuple(out)
+    raise SpecError("arrivals",
+                    f"expected an arrivals tuple or tuple list, got "
+                    f"{type(arrivals).__name__}")
+
+
+def _resolve_workload(spec: ExperimentSpec, scenario: Scenario,
+                      arrivals_override=None):
+    """The spec's arrival trace: the explicit override when given, else the
+    registry generator's output (``None`` = scenario-generated, resolved
+    downstream by ``_resolve_arrivals``)."""
+    if arrivals_override is not None:
+        return _coerce_arrivals(arrivals_override)
+    gen = WORKLOADS.get(spec.workload.generator)
+    return gen(spec.workload, scenario, spec.workload_seed())
+
+
+def _resolve_controller(spec: ExperimentSpec, controller):
+    if controller is not None:
+        return controller
+    if spec.autoscale is not None:
+        return spec.autoscale.build_controller()
+    return None
+
+
+# ---------------------------------------------------------------------------
+# Sim-plane execution (the recompose loop formerly inlined in run_scenario)
+# ---------------------------------------------------------------------------
+
+def _execute_sim(
+    spec: ExperimentSpec,
+    scenario: Scenario,
+    arrivals,
+    controller,
+) -> Tuple[ScenarioResult, int]:
+    """Drive the vectorized simulator through the scenario; returns the
+    plane-native :class:`ScenarioResult` plus the final cluster size.
+
+    This is the pre-API ``run_scenario`` driver verbatim (the parity tests
+    pin it bit for bit); only the spec resolution around it moved out.
+    """
+    servers = spec.cluster.servers
+    service = spec.cluster.service
+    rho_bar = spec.cluster.rho_bar
+    tuner = spec.cluster.tuner
+    base_rate = spec.workload.resolved_base_rate()
+    classes = list(spec.workload.classes) if spec.workload.classes else None
+    class_rates = spec.workload.class_rates
+    trace_stats = spec.workload.trace_stats or AZURE_STATS
+
+    cluster = {s.sid: s for s in servers}
+    tau = {s.sid: 1.0 for s in servers}
+    times, works, cls_ids = _resolve_arrivals(
+        scenario, base_rate, spec.workload_seed(), arrivals,
+        spec.workload.service_model, trace_stats, class_rates)
+    rates, caps, keys, degraded = compose_or_degrade(
+        _effective(cluster, tau), service, base_rate, rho_bar, tuner)
+    sim = VectorSimulator(rates, caps, policy=spec.policy.name,
+                          seed=spec.engine_seed(), keys=keys,
+                          classes=classes,
+                          aging_rate=spec.policy.aging_rate,
+                          admission_level=spec.admission.level)
+    sim.add_arrivals(times, works, cls_ids)
+    log: List[ScenarioLogEntry] = []
+    composed_lam = base_rate          # load the current chain set targets
+
+    def recompose(at: float, kind: str, sid_str: str, requeue_lam: float,
+                  mode: str = "restart") -> None:
+        nonlocal rates, caps, keys, degraded, composed_lam
+        rates, caps, keys, degraded = compose_or_degrade(
+            _effective(cluster, tau), service, requeue_lam, rho_bar, tuner)
+        composed_lam = requeue_lam
+        drains_before = sim.drains
+        requeued = sim.reconfigure(rates, caps, at_time=at, keys=keys,
+                                   mode=mode)
+        log.append(ScenarioLogEntry(
+            time=at, kind=kind, sid=sid_str, requeued=requeued,
+            n_chains=len(rates),
+            total_rate=float(sum(m * c for m, c in zip(rates, caps))),
+            degraded=degraded, drained=sim.drains - drains_before))
+
+    def scripted_mode(ev) -> str:
+        # involuntary events (failures, straggler drift — a slowdown's
+        # displaced jobs must not finish on their old full-speed schedule)
+        # lose the in-flight work; voluntary adds drain
+        return "restart" if ev.kind in ("fail", "fail_group", "slowdown") \
+            else "drain"
+
+    scripted = deque(scenario.cluster_events())
+    if controller is None:
+        while scripted:
+            ev = scripted.popleft()
+            sim.run_until(ev.time)
+            sid_str = _apply_membership(cluster, tau, ev)
+            recompose(ev.time, ev.kind, sid_str, base_rate,
+                      mode=scripted_mode(ev))
+        sim.run_to_completion()
+    else:
+        from repro.autoscale import ClusterView
+        from repro.autoscale.telemetry import sample_simulator
+
+        interval = controller.cfg.interval
+        tick = interval
+        max_t = scenario.horizon * 3.0 + interval   # drain-phase safety cap
+        tel_cursor = (0, 0.0)
+        # the controller's throttle tracks the gate it actuates — seed it
+        # with the run's configured level so the first tick's sync does not
+        # clobber a user-passed admission_level
+        controller.admission_level = sim.admission_level
+        controller.bill(0.0, len(cluster) + len(controller.pending))
+        while True:
+            t_scripted = scripted[0].time if scripted else math.inf
+            t_next = min(t_scripted, tick)
+            if t_next == math.inf:
+                break
+            sim.run_until(t_next)
+            if t_scripted <= tick:
+                ev = scripted.popleft()
+                sid_str = _apply_membership(cluster, tau, ev)
+                recompose(ev.time, ev.kind, sid_str,
+                          controller.compose_rate(base_rate),
+                          mode=scripted_mode(ev))
+                controller.bill(ev.time,
+                                len(cluster) + len(controller.pending))
+                continue
+            # ---- control tick: observe -> decide -> act
+            tel_cursor = sample_simulator(controller.telemetry, sim, tick,
+                                          len(cluster), tel_cursor)
+            view = ClusterView(
+                servers=_effective(cluster, tau),
+                pending=[s for _, s in controller.pending],
+                spec=service, rho_bar=rho_bar,
+                total_rate=float(sum(m * c for m, c in zip(rates, caps))),
+                admission_level=sim.admission_level)
+            events = controller.control_tick(view, tick, list(cluster))
+            lvl = getattr(controller, "admission_level", None)
+            if lvl is not None and lvl != sim.admission_level:
+                # SLO-aware admission: defer/shed best-effort work first —
+                # cheaper than a scale-out, reversible at the next tick
+                sim.set_admission_level(lvl)
+                log.append(ScenarioLogEntry(
+                    time=tick, kind="auto-admission", sid=f"{lvl:g}",
+                    requeued=0, n_chains=len(rates),
+                    total_rate=float(sum(m * c for m, c in zip(rates, caps))),
+                    degraded=degraded))
+            if events:
+                # controller-synthesized actions are voluntary — drain, never
+                # restart (a scale-in is a graceful retirement, not a crash)
+                sids = [_apply_membership(cluster, tau, ev) for ev in events]
+                lam = controller.compose_rate(base_rate)
+                recompose(tick, "auto-" + "+".join(e.kind for e in events),
+                          ",".join(sids), lam, mode="drain")
+            elif controller.needs_retune(composed_lam, base_rate):
+                # same servers, different load: the tuned-c pipeline targets
+                # a specific lambda — re-run it when the estimate drifts
+                recompose(tick, "auto-retune", "",
+                          controller.compose_rate(base_rate), mode="drain")
+            controller.bill(tick, len(cluster) + len(controller.pending))
+            tick += interval
+            drained = len(sim.comp) + sim.n_rejected == sim.n
+            if tick > max_t or (drained and tick > scenario.horizon
+                                and not scripted):
+                tick = math.inf
+        sim.run_to_completion()
+        controller.finalize(sim.now)
+    res = sim.result(spec.warmup_fraction)
+    return ScenarioResult(
+        result=res,
+        log=log,
+        n_jobs=len(times),
+        completed_all=(sim.queue_len() == 0 and sim.in_flight == 0
+                       and len(sim.comp) + sim.n_rejected == len(times)),
+        reconfigurations=sim.reconfigurations,
+        restarts=sim.restarts,
+        n_rejected=sim.n_rejected,
+    ), len(cluster)
+
+
+def _execute_precomposed(spec: ExperimentSpec, scenario: Scenario,
+                         arrivals) -> Tuple[ScenarioResult, int]:
+    """Pre-composed (``cluster.job_servers``) runs: a fixed chain set, no
+    recomposition — the ``simulate_vectorized`` regime behind the same
+    spec/report schema."""
+    sim = build_simulator(spec, scenario=scenario, arrivals=arrivals)
+    sim.run_to_completion()
+    res = sim.result(spec.warmup_fraction)
+    n = sim.n
+    return ScenarioResult(
+        result=res,
+        log=[],
+        n_jobs=n,
+        completed_all=(sim.queue_len() == 0 and sim.in_flight == 0
+                       and len(sim.comp) + sim.n_rejected == n),
+        reconfigurations=0,
+        restarts=0,
+        n_rejected=sim.n_rejected,
+    ), len(spec.cluster.job_servers)
+
+
+def build_simulator(spec: ExperimentSpec, scenario: Optional[Scenario] = None,
+                    arrivals=None) -> VectorSimulator:
+    """A loaded-but-not-run :class:`VectorSimulator` for a pre-composed
+    spec — the benchmarks' engine-timing hook (build through the spec, time
+    only ``run_to_completion``)."""
+    if not spec.cluster.job_servers:
+        raise SpecError("cluster.job_servers",
+                        "build_simulator needs a pre-composed cluster")
+    scenario = scenario if scenario is not None \
+        else spec.scenario.to_scenario()
+    arr = _resolve_workload(spec, scenario, arrivals)
+    times, works, cls_ids = _resolve_arrivals(
+        scenario, spec.workload.resolved_base_rate(), spec.workload_seed(),
+        arr, spec.workload.service_model,
+        spec.workload.trace_stats or AZURE_STATS, spec.workload.class_rates)
+    rates = [m for m, _ in spec.cluster.job_servers]
+    caps = [c for _, c in spec.cluster.job_servers]
+    classes = list(spec.workload.classes) if spec.workload.classes else None
+    sim = VectorSimulator(rates, caps, policy=spec.policy.name,
+                          seed=spec.engine_seed(), classes=classes,
+                          aging_rate=spec.policy.aging_rate,
+                          admission_level=spec.admission.level)
+    sim.add_arrivals(times, works, cls_ids)
+    return sim
+
+
+class SimPlane:
+    """The queueing-level execution plane (vectorized simulator)."""
+
+    name = "sim"
+
+    def run(self, spec: ExperimentSpec, *, arrivals=None,
+            controller=None) -> RunReport:
+        scenario = spec.scenario.to_scenario()
+        ctl = _resolve_controller(spec, controller)
+        if spec.cluster.job_servers:
+            if ctl is not None:
+                raise SpecError("autoscale",
+                                "autoscaling needs a composable cluster")
+            res, n_final = _execute_precomposed(spec, scenario, arrivals)
+        else:
+            arr = _resolve_workload(spec, scenario, arrivals)
+            res, n_final = _execute_sim(spec, scenario, arr, ctl)
+        cost = None
+        extras = {"n_servers_final": n_final}
+        if ctl is not None:
+            cost = ctl.report(res.result.response_times,
+                              final_servers=n_final).as_dict()
+            extras["scaling_records"] = [dataclasses.asdict(r)
+                                         for r in ctl.records]
+            extras["controller"] = ctl
+        return report_from_scenario_result(spec, res, plane=self.name,
+                                           cost=cost, extras=extras)
+
+
+# ---------------------------------------------------------------------------
+# Live-plane execution (the decode-round loop formerly Orchestrator.run_scenario)
+# ---------------------------------------------------------------------------
+
+def drive_orchestrator(orch, scenario, requests, dt: float = 1.0,
+                       max_rounds: int = 100_000) -> dict:
+    """Drive decode rounds while firing the scenario's cluster events.
+
+    ``requests`` is a list of ``Request`` (all submitted at t=0) or of
+    ``(time, Request)`` pairs.  Each round advances time by ``dt``, applies
+    due events, submits due requests, steps every engine, and re-admits
+    from the queue.  When the system is completely idle (no queued,
+    deferred, draining or in-flight work, and no step hooks observing the
+    clock), time **fast-forwards** to the next due event / arrival /
+    warm-up deadline instead of spinning ``dt`` at a time — sparse traces
+    cost what their events cost, not their silences (skipped rounds are
+    counted in ``idle_skipped``; ``rounds`` stays on the ``t = rounds*dt``
+    grid so event timing is unchanged).  Returns a summary with the
+    applied-event log merged into ``orch.stats()``.
+    """
+    from repro.serving.request import Request
+
+    timed: List[Tuple[float, object]] = []
+    for item in requests:
+        if isinstance(item, Request):
+            timed.append((0.0, item))
+        else:
+            timed.append((float(item[0]), item[1]))
+    timed.sort(key=lambda p: p[0])
+    pending = deque(scenario.cluster_events())
+    applied: List[dict] = []
+    next_req = 0
+    rounds = 0
+    idle_skipped = 0
+    t = 0.0
+    while rounds < max_rounds:
+        t = rounds * dt
+        while pending and pending[0].time <= t:
+            applied.append(orch.apply_scenario_event(pending.popleft(), t))
+        while next_req < len(timed) and timed[next_req][0] <= t:
+            orch.submit(timed[next_req][1], t)
+            next_req += 1
+        orch.step(t)
+        while orch.queue:                    # admit whenever capacity frees
+            if not orch._dispatch(orch.queue.peek(), t):
+                break
+            orch.queue.pop()
+        rounds += 1
+        if (next_req >= len(timed) and not pending and not orch.queue
+                and not orch.deferred and not orch.draining
+                and not any(e.requests for e in orch.engines)):
+            break
+        # ---- idle fast-forward: nothing can happen until the next due
+        # time, and no step hook is watching the clock — jump there.
+        if (not orch.step_hooks and not orch.queue and not orch.deferred
+                and not orch.draining
+                and not any(e.requests for e in orch.engines)):
+            t_due = math.inf
+            if pending:
+                t_due = min(t_due, pending[0].time)
+            if next_req < len(timed):
+                t_due = min(t_due, timed[next_req][0])
+            if orch.warming:
+                t_due = min(t_due, min(orch.warming.values()))
+            if t_due is not math.inf:
+                k = int(t_due // dt)
+                while k * dt < t_due:        # exact: first grid point >= due
+                    k += 1
+                if k > rounds:
+                    idle_skipped += k - rounds
+                    rounds = k
+    return {"rounds": rounds, "idle_skipped": idle_skipped,
+            "events": applied, **orch.stats()}
+
+
+class LivePlane:
+    """The serving execution plane: a live ``Orchestrator`` over mock or
+    jax chain engines.
+
+    The spec's workload resolves to the *same* ``(times, works, classes)``
+    trace as on the sim plane (same seed rule); each arrival becomes a
+    ``Request`` whose decode length scales with its work
+    (``max_new_tokens = round(work * tokens_per_work)``), so service-demand
+    heterogeneity survives the plane switch.
+    """
+
+    name = "live"
+
+    def __init__(self, engine: str = "mock", dt: float = 0.5,
+                 max_rounds: int = 100_000, prompt_tokens: int = 8,
+                 tokens_per_work: float = 6.0, max_seq: int = 256,
+                 model=None, params=None):
+        if engine not in ("mock", "jax"):
+            raise ValueError("engine must be 'mock' or 'jax'")
+        if engine == "jax" and (model is None or params is None):
+            raise ValueError("engine='jax' needs model= and params=")
+        self.engine = engine
+        self.dt = float(dt)
+        self.max_rounds = int(max_rounds)
+        self.prompt_tokens = int(prompt_tokens)
+        self.tokens_per_work = float(tokens_per_work)
+        self.max_seq = int(max_seq)
+        self.model = model
+        self.params = params
+
+    def _build_orchestrator(self, spec: ExperimentSpec):
+        from repro.serving import Orchestrator, OrchestratorConfig
+        from repro.serving.mock import MockEngine
+
+        cfg = OrchestratorConfig(
+            rho_bar=spec.cluster.rho_bar,
+            tuner=spec.cluster.tuner,
+            max_seq=self.max_seq,
+            engine_factory=MockEngine if self.engine == "mock" else None,
+            classes=tuple(spec.workload.classes) or None,
+            aging_rate=spec.policy.aging_rate,
+        )
+        return Orchestrator(list(spec.cluster.servers), spec.cluster.service,
+                            self.model, self.params,
+                            spec.workload.resolved_base_rate(), cfg)
+
+    def _requests(self, spec: ExperimentSpec, times, works, cls_ids):
+        from repro.serving import Request
+
+        max_new_cap = max(1, self.max_seq - self.prompt_tokens - 1)
+        prompt = np.ones(self.prompt_tokens, np.int32)
+        reqs = []
+        for i, (t, w) in enumerate(zip(times, works)):
+            n_new = max(1, min(max_new_cap,
+                               int(round(float(w) * self.tokens_per_work))))
+            reqs.append((float(t), Request(
+                rid=i, prompt=prompt.copy(), max_new_tokens=n_new,
+                arrival_time=float(t),
+                cls=int(cls_ids[i]) if cls_ids is not None else 0)))
+        return reqs
+
+    def run(self, spec: ExperimentSpec, *, arrivals=None,
+            controller=None) -> RunReport:
+        if spec.cluster.job_servers:
+            raise SpecError("cluster.job_servers",
+                            "the live plane needs physical servers "
+                            "(cluster.servers) to compose engines over")
+        if spec.policy.name not in ("jffc", "priority"):
+            # the orchestrator's online dispatch IS JFFC over a central
+            # (priority) queue — silently running a different-named policy
+            # would report a comparison that never happened
+            raise SpecError(
+                "policy.name",
+                f"{spec.policy.name!r} has no live-plane implementation "
+                f"(the orchestrator dispatches jffc/priority); run it on "
+                f"plane='sim'")
+        scenario = spec.scenario.to_scenario()
+        arr = _resolve_workload(spec, scenario, arrivals)
+        times, works, cls_ids = _resolve_arrivals(
+            scenario, spec.workload.resolved_base_rate(),
+            spec.workload_seed(), arr, spec.workload.service_model,
+            spec.workload.trace_stats or AZURE_STATS,
+            spec.workload.class_rates)
+        orch = self._build_orchestrator(spec)
+        orch.set_admission_level(spec.admission.level)
+        ctl = _resolve_controller(spec, controller)
+        if ctl is not None:
+            ctl.bind_orchestrator(orch)
+        reqs = self._requests(spec, times, works, cls_ids)
+        summary = drive_orchestrator(orch, scenario, reqs, dt=self.dt,
+                                     max_rounds=self.max_rounds)
+        summary["n_jobs"] = len(reqs)
+        cost = None
+        extras = {}
+        if ctl is not None:
+            t_end = summary["rounds"] * self.dt
+            ctl.bill(t_end, len(orch.servers))
+            ctl.finalize(t_end)
+            rts = np.asarray([r.response_time() for r in orch.finished
+                              if r.response_time() is not None])
+            cost = ctl.report(rts, final_servers=len(orch.servers)).as_dict()
+            extras["scaling_records"] = [dataclasses.asdict(r)
+                                         for r in ctl.records]
+            extras["controller"] = ctl
+        extras["orchestrator"] = orch
+        return report_from_orchestrator(spec, orch, summary, self.dt,
+                                        plane=self.name, cost=cost,
+                                        extras=extras)
+
+
+PLANES.register("sim", SimPlane)
+PLANES.register("live", LivePlane)

@@ -1,0 +1,233 @@
+"""The unified run report every execution plane returns.
+
+Before this layer existed, the sim plane returned a ``ScenarioResult`` and
+the live orchestrator an ad-hoc dict; comparing the two meant hand-mapping
+field names.  :class:`RunReport` is the one schema both planes fill in —
+per-class quantiles, the event log, the autoscaler's cost report, and
+plane-specific extras — so a spec replayed on both planes can be *diffed*
+(:meth:`RunReport.diff`).  The plane-native object rides along as ``raw``
+for callers that need it (the deprecation shims return exactly that).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.simulator import _quantile_stats
+
+#: report fields diff() compares by default
+_DIFF_KEYS = ("plane", "n_jobs", "n_completed", "n_rejected", "n_failed",
+              "completed_all", "reconfigurations", "restarts")
+
+
+def _close(a, b, rel: float = 1e-9) -> bool:
+    if isinstance(a, float) and isinstance(b, float):
+        if math.isnan(a) and math.isnan(b):
+            return True
+        return math.isclose(a, b, rel_tol=rel, abs_tol=1e-12)
+    return a == b
+
+
+def _jsonable(x):
+    if isinstance(x, dict):
+        return {str(k): _jsonable(v) for k, v in x.items()}
+    if isinstance(x, (list, tuple)):
+        return [_jsonable(v) for v in x]
+    if isinstance(x, np.ndarray):
+        return x.tolist()
+    if isinstance(x, (np.integer,)):
+        return int(x)
+    if isinstance(x, (np.floating,)):
+        return float(x)
+    if isinstance(x, (str, int, float, bool)) or x is None:
+        return x
+    return repr(x)
+
+
+@dataclasses.dataclass
+class RunReport:
+    """What one :class:`repro.api.ExperimentSpec` run produced, on any plane.
+
+    ``n_rejected`` counts requests the admission gate kept out of service at
+    the end of the run: shed arrivals on the sim plane, still-deferred
+    requests on the live plane.  ``restarts`` counts re-dispatches
+    (re-prefills) caused by failures/recompositions on the sim plane and
+    request retries on the live plane.
+    """
+
+    plane: str
+    name: str
+    n_jobs: int
+    n_completed: int
+    n_rejected: int
+    n_failed: int
+    completed_all: bool
+    sim_time: float
+    response: Dict[str, float]
+    waiting: Dict[str, float]
+    per_class: Dict[int, dict]
+    events: List[dict]
+    reconfigurations: int
+    restarts: int
+    cost: Optional[dict] = None
+    extras: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    raw: Any = None
+
+    def p99(self) -> float:
+        return float(self.response.get("p99", math.nan))
+
+    def mean_response(self) -> float:
+        return float(self.response.get("mean", math.nan))
+
+    def to_dict(self) -> dict:
+        """JSON-safe dict (drops ``raw``; coerces extras)."""
+        d = dataclasses.asdict(self)
+        d.pop("raw")
+        return _jsonable(d)
+
+    def diff(self, other: "RunReport",
+             rel: float = 1e-9) -> Dict[str, Tuple[Any, Any]]:
+        """Fields where two reports disagree: ``{field: (self, other)}``.
+
+        Scalar counters compare exactly; response/waiting quantiles and the
+        cost report compare to ``rel`` relative tolerance.  An empty dict
+        means the runs agree on everything the unified schema captures.
+        """
+        out: Dict[str, Tuple[Any, Any]] = {}
+        for k in _DIFF_KEYS:
+            a, b = getattr(self, k), getattr(other, k)
+            if a != b:
+                out[k] = (a, b)
+        for group in ("response", "waiting"):
+            a_g, b_g = getattr(self, group), getattr(other, group)
+            for k in sorted(set(a_g) | set(b_g)):
+                a, b = a_g.get(k, math.nan), b_g.get(k, math.nan)
+                if not _close(float(a), float(b), rel):
+                    out[f"{group}.{k}"] = (a, b)
+        a_cost = self.cost or {}
+        b_cost = other.cost or {}
+        for k in sorted(set(a_cost) | set(b_cost)):
+            a, b = a_cost.get(k), b_cost.get(k)
+            if not _close(a, b, rel):
+                out[f"cost.{k}"] = (a, b)
+        return out
+
+    def summary_line(self) -> str:
+        r = self.response
+        return (f"[{self.plane}] {self.name or 'experiment'}: "
+                f"{self.n_completed}/{self.n_jobs} completed "
+                f"(+{self.n_rejected} gated, {self.n_failed} failed), "
+                f"mean {r.get('mean', math.nan):.3f}s "
+                f"p99 {r.get('p99', math.nan):.3f}s, "
+                f"{self.reconfigurations} recompositions")
+
+
+def _normalize_per_class(per_class: dict, classes) -> Dict[int, dict]:
+    """Attach class names to the simulator's per-class stats."""
+    out: Dict[int, dict] = {}
+    for c, stats in per_class.items():
+        entry = dict(stats)
+        if 0 <= int(c) < len(classes):
+            entry.setdefault("name", classes[int(c)].name)
+        out[int(c)] = entry
+    return out
+
+
+def report_from_scenario_result(spec, res, plane: str = "sim",
+                                cost: Optional[dict] = None,
+                                extras: Optional[dict] = None) -> RunReport:
+    """Fold a sim-plane ``ScenarioResult`` into the unified schema."""
+    sim = res.result
+    return RunReport(
+        plane=plane,
+        name=spec.name,
+        n_jobs=res.n_jobs,
+        n_completed=sim.n_completed,
+        n_rejected=res.n_rejected,
+        n_failed=0,
+        completed_all=res.completed_all,
+        sim_time=sim.sim_time,
+        response=_quantile_stats(sim.response_times),
+        waiting=_quantile_stats(sim.waiting_times),
+        per_class=_normalize_per_class(res.per_class(),
+                                       spec.workload.classes),
+        events=[dataclasses.asdict(e) for e in res.log],
+        reconfigurations=res.reconfigurations,
+        restarts=res.restarts,
+        cost=cost,
+        extras=extras or {},
+        raw=res,
+    )
+
+
+def report_from_orchestrator(spec, orch, summary: dict, dt: float,
+                             plane: str = "live",
+                             cost: Optional[dict] = None,
+                             extras: Optional[dict] = None) -> RunReport:
+    """Fold a live-plane drive summary + orchestrator state into the
+    unified schema.
+
+    ``spec.warmup_fraction`` trims the front of the completion-ordered
+    finished list before any quantile is computed — the same rule the sim
+    plane's ``SimResult`` applies — so cross-plane diffs compare the same
+    job population.  ``completed_all`` is judged on the untrimmed counts.
+    """
+    n_finished_total = len(orch.finished)
+    skip = int(n_finished_total * spec.warmup_fraction)
+    finished = orch.finished[skip:]
+    rts = np.asarray([r.response_time() for r in finished
+                      if r.response_time() is not None])
+    wts = np.asarray([r.waiting_time() for r in finished
+                      if r.waiting_time() is not None])
+    per_class: Dict[int, dict] = {}
+    if len(orch.classes) > 1:
+        for c, rc in enumerate(orch.classes):
+            c_rts = np.asarray([r.response_time() for r in finished
+                                if r.cls == c
+                                and r.response_time() is not None])
+            c_wts = np.asarray([r.waiting_time() for r in finished
+                                if r.cls == c
+                                and r.waiting_time() is not None])
+            per_class[c] = {
+                "name": rc.name,
+                "n": int(sum(1 for r in finished if r.cls == c)),
+                "rejected": int(sum(1 for r in orch.deferred
+                                    if r.cls == c)),
+                "response": _quantile_stats(c_rts),
+                "waiting": _quantile_stats(c_wts),
+            }
+    n_jobs = summary.get("n_jobs", n_finished_total + len(orch.failed)
+                         + len(orch.deferred))
+    all_extras = {"rounds": summary.get("rounds", 0),
+                  "idle_skipped": summary.get("idle_skipped", 0),
+                  "deferred": len(orch.deferred),
+                  "c_star": orch.c_star,
+                  "chains": [(list(c), cap)
+                             for c, cap in ((tuple(e.chain.servers),
+                                             e.capacity)
+                                            for e in orch.engines)]}
+    all_extras.update(extras or {})
+    return RunReport(
+        plane=plane,
+        name=spec.name,
+        n_jobs=n_jobs,
+        n_completed=len(finished),
+        n_rejected=len(orch.deferred),
+        n_failed=len(orch.failed),
+        completed_all=(n_finished_total == n_jobs and not orch.failed
+                       and not orch.deferred),
+        sim_time=summary.get("rounds", 0) * dt,
+        response=_quantile_stats(rts),
+        waiting=_quantile_stats(wts),
+        per_class=per_class,
+        events=list(summary.get("events", [])),
+        reconfigurations=orch.recompositions,
+        restarts=int(sum(r.retries for r in orch.finished)
+                     + sum(r.retries for r in orch.failed)),
+        cost=cost,
+        extras=all_extras,
+        raw=summary,
+    )

@@ -1,0 +1,98 @@
+"""``run`` and ``sweep``: the two entry points of the experiment API."""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, List, Mapping, Sequence, Union
+
+from .planes import LivePlane, SimPlane  # noqa: F401  (registers planes)
+from .registry import PLANES
+from .report import RunReport
+from .spec import ExperimentSpec, SpecError
+
+
+def get_plane(plane: Union[str, object] = "sim"):
+    """Resolve a plane argument: a registered name (``"sim"``/``"live"``,
+    constructed with defaults) or an already-built plane instance."""
+    if isinstance(plane, str):
+        return PLANES.get(plane)()
+    if hasattr(plane, "run") and hasattr(plane, "name"):
+        return plane
+    raise SpecError("plane", f"expected a plane name {PLANES.names()} or a "
+                             f"plane instance, got {type(plane).__name__}")
+
+
+def run(spec: ExperimentSpec, plane: Union[str, object] = "sim", *,
+        arrivals=None, controller=None) -> RunReport:
+    """Execute one :class:`ExperimentSpec` on the chosen plane.
+
+    ``arrivals=`` pins a pre-generated trace (identical-trace comparisons
+    across policies/planes); ``controller=`` injects an existing stateful
+    autoscale controller instead of building one from ``spec.autoscale``.
+    """
+    if not isinstance(spec, ExperimentSpec):
+        raise SpecError("spec",
+                        f"expected an ExperimentSpec, got "
+                        f"{type(spec).__name__} (build one, or "
+                        f"ExperimentSpec.from_dict(...) it)")
+    return get_plane(plane).run(spec, arrivals=arrivals,
+                                controller=controller)
+
+
+def spec_replace(spec: ExperimentSpec, path: str, value) -> ExperimentSpec:
+    """Replace one field addressed by dotted path
+    (``"workload.base_rate"``, ``"seed"``) — rebuilding and re-validating
+    every frozen spec along the path."""
+    parts = path.split(".")
+    target = spec
+    chain = [spec]
+    for p in parts[:-1]:
+        if not hasattr(target, p):
+            raise SpecError(path, f"no such field {p!r}")
+        target = getattr(target, p)
+        chain.append(target)
+    leaf = parts[-1]
+    if not dataclasses.is_dataclass(target) or not hasattr(target, leaf):
+        raise SpecError(path, f"no such field {leaf!r}")
+    # fold bottom-up: replace the leaf on the innermost spec, then re-attach
+    # each rebuilt sub-spec to its parent (validation reruns at every level)
+    new = dataclasses.replace(chain[-1], **{leaf: value})
+    for obj, name in zip(reversed(chain[:-1]), reversed(parts[:-1])):
+        new = dataclasses.replace(obj, **{name: new})
+    return new
+
+
+@dataclasses.dataclass
+class SweepPoint:
+    """One grid point of a sweep: the overrides applied, the resolved spec,
+    and its report."""
+
+    overrides: Dict[str, object]
+    spec: ExperimentSpec
+    report: RunReport
+
+
+def sweep(spec: ExperimentSpec, grid: Mapping[str, Sequence],
+          plane: Union[str, object] = "sim", *,
+          arrivals=None) -> List[SweepPoint]:
+    """Seeded grid sweep: run ``spec`` once per point of the cartesian
+    product of ``grid`` (dotted-path field -> values, e.g.
+    ``{"policy.name": ["jffc", "sed"], "seed": [0, 1]}``).
+
+    Deterministic: points enumerate in the grid's key order (first key
+    varies slowest), and each point's RNG streams derive from its own
+    spec's seed rule — reordering the grid never changes any point's
+    result.
+    """
+    if not grid:
+        return [SweepPoint({}, spec, run(spec, plane, arrivals=arrivals))]
+    keys = list(grid)
+    points = []
+    for values in itertools.product(*(grid[k] for k in keys)):
+        overrides = dict(zip(keys, values))
+        pt_spec = spec
+        for path, value in overrides.items():
+            pt_spec = spec_replace(pt_spec, path, value)
+        points.append(SweepPoint(
+            overrides, pt_spec, run(pt_spec, plane, arrivals=arrivals)))
+    return points

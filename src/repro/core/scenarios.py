@@ -11,14 +11,19 @@ regimes on top of the control-plane algorithms:
   cluster — server **failure**, **add** (recovery / autoscale-in),
   **slowdown** (straggler drift, a tau multiplier), and **burst** phases
   (arrival-rate multipliers over a window);
-* :func:`run_scenario` drives the vectorized simulator
-  (:class:`repro.core.simulator.VectorSimulator`) between events, recomposing
-  the cluster with the paper's full offline pipeline (tuned c -> GBP-CR ->
-  GCA) at every cluster event and carrying queue + in-flight state across the
-  reconfiguration;
-* the serving layer exposes the same timeline to a live
-  ``repro.serving.Orchestrator`` via ``Orchestrator.run_scenario`` (decode
-  rounds instead of queueing-theoretic service times).
+* the **sim plane** (:class:`repro.api.planes.SimPlane`) drives the
+  vectorized simulator (:class:`repro.core.simulator.VectorSimulator`)
+  between events, recomposing the cluster with the paper's full offline
+  pipeline (tuned c -> GBP-CR -> GCA) at every cluster event and carrying
+  queue + in-flight state across the reconfiguration;
+* the **live plane** (:class:`repro.api.planes.LivePlane`) exposes the same
+  timeline to a live ``repro.serving.Orchestrator`` (decode rounds instead
+  of queueing-theoretic service times).
+
+Both are reached through ``repro.api.run(spec, plane=...)``; this module
+keeps the scenario description (:class:`Scenario`/:class:`ScenarioEvent`),
+the composition/membership helpers the planes execute with, and
+:func:`run_scenario` as a deprecation shim over the API.
 
 Burst phases affect workload generation (piecewise-constant-rate Poisson via
 :func:`repro.core.workload.phased_poisson`); cluster events trigger
@@ -44,21 +49,22 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from collections import deque
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from .servers import Server, ServiceSpec
-from .simulator import SimResult, VectorSimulator
+from .simulator import SimResult
 from .tuning import compose_best_effort
 from .workload import (
     AZURE_STATS, RequestClass, classed_phased_poisson, phased_poisson,
     token_work,
 )
 
-EVENT_KINDS = ("fail", "add", "slowdown", "burst", "fail_group",
-               "tenant_burst")
+#: known event kinds — a mutable list so the declarative API's event-kind
+#: registry (``repro.api.EVENT_KINDS``) can extend it without core edits
+EVENT_KINDS = ["fail", "add", "slowdown", "burst", "fail_group",
+               "tenant_burst"]
 
 #: event kinds that shape the arrival process rather than the cluster
 BURST_KINDS = ("burst", "tenant_burst")
@@ -356,164 +362,44 @@ def run_scenario(
     aging_rate: float = 0.0,
     admission_level: float = 1.0,
 ) -> ScenarioResult:
-    """Simulate the scenario end to end at the queueing level.
+    """Deprecated compatibility shim — build an
+    :class:`repro.api.ExperimentSpec` and call ``repro.api.run(spec)``.
 
-    The cluster starts as ``servers``; at each cluster event the composition
-    is re-tuned on the survivors (with straggler tau multipliers applied) and
-    the simulator reconfigures in place — in-flight jobs on retired chains
-    restart (re-prefill), queue and completed statistics carry over.  All
-    arrivals are generated up front from the scenario's burst phases unless
-    an explicit ``(times, works)`` pair — or, with
-    ``service_model="tokens"``, an ``azure_like_trace_np``-style
-    ``(times, works, in_tokens, out_tokens)`` tuple — is passed (e.g. to
-    compare policies on the identical trace).
+    The 17-keyword signature survives for existing call sites: it folds the
+    arguments into an ``ExperimentSpec`` and executes it on the sim plane
+    (:class:`repro.api.planes.SimPlane` now owns the recompose loop that
+    used to live here), returning the plane-native ``ScenarioResult``.
+    Results are **bit-identical** to both the pre-refactor driver and a
+    direct ``repro.api.run`` of the equivalent spec on the same seed —
+    ``tests/test_api.py`` pins this.  The RNG convention this function
+    established (arrivals at ``seed``, simulator at ``seed + 1``) is now
+    written down once, in ``repro.api.spec`` (``ENGINE_SEED_OFFSET``).
 
-    With a ``controller`` (:class:`repro.autoscale.AutoscaleController`),
-    the simulator additionally pauses every ``controller.cfg.interval``
-    seconds: the paused state feeds the controller's telemetry window and
-    the controller's synthesized add/fail events are applied through the
-    same recompose-and-reconfigure path as scripted events (logged with an
-    ``auto-`` kind prefix).  Composition at controller ticks targets the
-    *estimated* arrival rate, not ``base_rate`` — the whole point of the
-    loop is that the true rate is unknown.  Control ticks continue through
-    the post-horizon drain (so scale-in can release servers) and billing
-    runs to the last completion.
-
-    Multi-tenant runs: pass ``classes`` (the run's ``RequestClass`` list)
-    with either ``class_rates`` (per-class base rates — the scenario's
-    global *and* ``tenant_burst`` phases apply) or class-labeled explicit
-    ``arrivals``.  ``policy="priority"`` schedules by aged class tier
-    (``aging_rate``); sheddable classes (finite deadline) pass through the
-    admission gate at ``admission_level`` (a controller returning
-    admission actions retunes that level live — deferring best-effort work
-    before paying for scale-out).  ``base_rate`` defaults to
-    ``sum(class_rates)`` when omitted.
+    Explicit ``arrivals`` and an externally-built ``controller`` pass
+    through as ``repro.api.run``'s escape-hatch overrides.
     """
-    if base_rate is None:
-        if class_rates is None:
-            raise ValueError("need base_rate or class_rates")
-        base_rate = float(sum(class_rates))
-    cluster: Dict[str, Server] = {s.sid: s for s in servers}
-    tau: Dict[str, float] = {s.sid: 1.0 for s in servers}
-    times, works, cls_ids = _resolve_arrivals(
-        scenario, base_rate, seed, arrivals, service_model, trace_stats,
-        class_rates)
-    rates, caps, keys, degraded = compose_or_degrade(
-        _effective(cluster, tau), spec, base_rate, rho_bar, tuner)
-    sim = VectorSimulator(rates, caps, policy=policy, seed=seed + 1, keys=keys,
-                          classes=classes, aging_rate=aging_rate,
-                          admission_level=admission_level)
-    sim.add_arrivals(times, works, cls_ids)
-    log: List[ScenarioLogEntry] = []
-    composed_lam = base_rate          # load the current chain set targets
+    import warnings
 
-    def recompose(at: float, kind: str, sid_str: str, requeue_lam: float,
-                  mode: str = "restart") -> None:
-        nonlocal rates, caps, keys, degraded, composed_lam
-        rates, caps, keys, degraded = compose_or_degrade(
-            _effective(cluster, tau), spec, requeue_lam, rho_bar, tuner)
-        composed_lam = requeue_lam
-        drains_before = sim.drains
-        requeued = sim.reconfigure(rates, caps, at_time=at, keys=keys,
-                                   mode=mode)
-        log.append(ScenarioLogEntry(
-            time=at, kind=kind, sid=sid_str, requeued=requeued,
-            n_chains=len(rates),
-            total_rate=float(sum(m * c for m, c in zip(rates, caps))),
-            degraded=degraded, drained=sim.drains - drains_before))
+    warnings.warn(
+        "repro.core.scenarios.run_scenario is deprecated; build a "
+        "repro.api.ExperimentSpec and call repro.api.run(spec)",
+        DeprecationWarning, stacklevel=2)
+    from repro import api
 
-    def scripted_mode(ev: ScenarioEvent) -> str:
-        # involuntary events (failures, straggler drift — a slowdown's
-        # displaced jobs must not finish on their old full-speed schedule)
-        # lose the in-flight work; voluntary adds drain
-        return "restart" if ev.kind in ("fail", "fail_group", "slowdown") \
-            else "drain"
-
-    scripted = deque(scenario.cluster_events())
-    if controller is None:
-        while scripted:
-            ev = scripted.popleft()
-            sim.run_until(ev.time)
-            sid_str = _apply_membership(cluster, tau, ev)
-            recompose(ev.time, ev.kind, sid_str, base_rate,
-                      mode=scripted_mode(ev))
-        sim.run_to_completion()
-    else:
-        from repro.autoscale import ClusterView
-        from repro.autoscale.telemetry import sample_simulator
-
-        interval = controller.cfg.interval
-        tick = interval
-        max_t = scenario.horizon * 3.0 + interval   # drain-phase safety cap
-        tel_cursor = (0, 0.0)
-        # the controller's throttle tracks the gate it actuates — seed it
-        # with the run's configured level so the first tick's sync does not
-        # clobber a user-passed admission_level
-        controller.admission_level = sim.admission_level
-        controller.bill(0.0, len(cluster) + len(controller.pending))
-        while True:
-            t_scripted = scripted[0].time if scripted else math.inf
-            t_next = min(t_scripted, tick)
-            if t_next == math.inf:
-                break
-            sim.run_until(t_next)
-            if t_scripted <= tick:
-                ev = scripted.popleft()
-                sid_str = _apply_membership(cluster, tau, ev)
-                recompose(ev.time, ev.kind, sid_str,
-                          controller.compose_rate(base_rate),
-                          mode=scripted_mode(ev))
-                controller.bill(ev.time,
-                                len(cluster) + len(controller.pending))
-                continue
-            # ---- control tick: observe -> decide -> act
-            tel_cursor = sample_simulator(controller.telemetry, sim, tick,
-                                          len(cluster), tel_cursor)
-            view = ClusterView(
-                servers=_effective(cluster, tau),
-                pending=[s for _, s in controller.pending],
-                spec=spec, rho_bar=rho_bar,
-                total_rate=float(sum(m * c for m, c in zip(rates, caps))),
-                admission_level=sim.admission_level)
-            events = controller.control_tick(view, tick, list(cluster))
-            lvl = getattr(controller, "admission_level", None)
-            if lvl is not None and lvl != sim.admission_level:
-                # SLO-aware admission: defer/shed best-effort work first —
-                # cheaper than a scale-out, reversible at the next tick
-                sim.set_admission_level(lvl)
-                log.append(ScenarioLogEntry(
-                    time=tick, kind="auto-admission", sid=f"{lvl:g}",
-                    requeued=0, n_chains=len(rates),
-                    total_rate=float(sum(m * c for m, c in zip(rates, caps))),
-                    degraded=degraded))
-            if events:
-                # controller-synthesized actions are voluntary — drain, never
-                # restart (a scale-in is a graceful retirement, not a crash)
-                sids = [_apply_membership(cluster, tau, ev) for ev in events]
-                lam = controller.compose_rate(base_rate)
-                recompose(tick, "auto-" + "+".join(e.kind for e in events),
-                          ",".join(sids), lam, mode="drain")
-            elif controller.needs_retune(composed_lam, base_rate):
-                # same servers, different load: the tuned-c pipeline targets
-                # a specific lambda — re-run it when the estimate drifts
-                recompose(tick, "auto-retune", "",
-                          controller.compose_rate(base_rate), mode="drain")
-            controller.bill(tick, len(cluster) + len(controller.pending))
-            tick += interval
-            drained = len(sim.comp) + sim.n_rejected == sim.n
-            if tick > max_t or (drained and tick > scenario.horizon
-                                and not scripted):
-                tick = math.inf
-        sim.run_to_completion()
-        controller.finalize(sim.now)
-    res = sim.result(warmup_fraction)
-    return ScenarioResult(
-        result=res,
-        log=log,
-        n_jobs=len(times),
-        completed_all=(sim.queue_len() == 0 and sim.in_flight == 0
-                       and len(sim.comp) + sim.n_rejected == len(times)),
-        reconfigurations=sim.reconfigurations,
-        restarts=sim.restarts,
-        n_rejected=sim.n_rejected,
+    espec = api.ExperimentSpec(
+        cluster=api.ClusterSpec(servers=tuple(servers), service=spec,
+                                rho_bar=rho_bar, tuner=tuner),
+        scenario=api.ScenarioSpec.from_scenario(scenario),
+        workload=api.WorkloadSpec(
+            base_rate=base_rate,
+            class_rates=None if class_rates is None else tuple(class_rates),
+            classes=tuple(classes) if classes else (),
+            service_model=service_model,
+            trace_stats=trace_stats),
+        policy=api.PolicySpec(name=policy, aging_rate=aging_rate),
+        admission=api.AdmissionSpec(level=max(0.0, admission_level)),
+        seed=seed,
+        warmup_fraction=warmup_fraction,
     )
+    return api.run(espec, plane="sim", arrivals=arrivals,
+                   controller=controller).raw

@@ -90,6 +90,33 @@ def tune_bound(
     return TuningResult(best[0], best[1], per_c, placement=best[2], allocation=best[3])
 
 
+def _compose_surrogate(servers, spec, lam, rho_bar):
+    res = tune_surrogate(servers, spec, lam, rho_bar)
+    pl = gbp_cr(servers, spec, res.c_star, lam, rho_bar, use_all_servers=True)
+    return res.c_star, pl, gca(servers, pl)
+
+
+def _compose_bound(which: str):
+    def tuner_fn(servers, spec, lam, rho_bar):
+        res = tune_bound(servers, spec, lam, rho_bar, which=which)
+        assert res.placement is not None and res.allocation is not None
+        return res.c_star, res.placement, res.allocation
+
+    tuner_fn.__name__ = f"bound_{which}"
+    return tuner_fn
+
+
+#: tuner registry consulted by :func:`compose`: name ->
+#: ``fn(servers, spec, lam, rho_bar) -> (c_star, Placement, Allocation)``.
+#: ``repro.api.TUNERS`` writes through here, so tuners registered on the
+#: declarative API run inside the composition pipeline with no core edits.
+TUNERS = {
+    "surrogate": _compose_surrogate,
+    "bound-lower": _compose_bound("lower"),
+    "bound-upper": _compose_bound("upper"),
+}
+
+
 def compose(
     servers: Sequence[Server],
     spec: ServiceSpec,
@@ -100,12 +127,13 @@ def compose(
     """One-call server-chain composition: tune c, place, allocate.
 
     This is the paper's full offline pipeline (GBP-CR + GCA with tuned c) and
-    the entry point used by the serving orchestrator.
+    the entry point used by the serving orchestrator.  ``tuner`` names an
+    entry of :data:`TUNERS`; unregistered names keep their historical
+    meaning as a Theorem 3.7 bound selector (``"<anything>-upper"`` etc.).
     """
-    if tuner == "surrogate":
-        res = tune_surrogate(servers, spec, lam, rho_bar)
-        pl = gbp_cr(servers, spec, res.c_star, lam, rho_bar, use_all_servers=True)
-        return res.c_star, pl, gca(servers, pl)
+    fn = TUNERS.get(tuner)
+    if fn is not None:
+        return fn(servers, spec, lam, rho_bar)
     which = tuner.split("-")[1] if "-" in tuner else "lower"
     res = tune_bound(servers, spec, lam, rho_bar, which=which)
     assert res.placement is not None and res.allocation is not None

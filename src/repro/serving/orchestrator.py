@@ -449,44 +449,25 @@ class Orchestrator:
         dt: float = 1.0,
         max_rounds: int = 100_000,
     ) -> dict:
-        """Drive decode rounds while firing the scenario's cluster events.
-
-        ``requests`` is a list of ``Request`` (all submitted at t=0) or of
-        ``(time, Request)`` pairs.  Each round advances time by ``dt``,
-        applies due events, submits due requests, steps every engine, and
-        re-admits from the queue.  Returns a summary with the applied-event
-        log merged into :meth:`stats`.
+        """Deprecated compatibility shim — the decode-round drive loop now
+        lives in :func:`repro.api.planes.drive_orchestrator` (the live
+        plane's executor), which also fast-forwards idle stretches instead
+        of spinning ``dt`` at a time.  Declarative runs should build a
+        ``repro.api.ExperimentSpec`` and call
+        ``repro.api.run(spec, plane="live")``; this method survives for
+        callers holding a live orchestrator with their own ``Request``
+        objects and returns the same summary dict as before.
         """
-        timed: List[Tuple[float, Request]] = []
-        for item in requests:
-            if isinstance(item, Request):
-                timed.append((0.0, item))
-            else:
-                timed.append((float(item[0]), item[1]))
-        timed.sort(key=lambda p: p[0])
-        pending = deque(scenario.cluster_events())
-        applied: List[dict] = []
-        next_req = 0
-        rounds = 0
-        t = 0.0
-        while rounds < max_rounds:
-            t = rounds * dt
-            while pending and pending[0].time <= t:
-                applied.append(self.apply_scenario_event(pending.popleft(), t))
-            while next_req < len(timed) and timed[next_req][0] <= t:
-                self.submit(timed[next_req][1], t)
-                next_req += 1
-            self.step(t)
-            while self.queue:                    # admit whenever capacity frees
-                if not self._dispatch(self.queue.peek(), t):
-                    break
-                self.queue.pop()
-            rounds += 1
-            if (next_req >= len(timed) and not pending and not self.queue
-                    and not self.deferred and not self.draining
-                    and not any(e.requests for e in self.engines)):
-                break
-        return {"rounds": rounds, "events": applied, **self.stats()}
+        import warnings
+
+        warnings.warn(
+            "Orchestrator.run_scenario is deprecated; use repro.api.run("
+            "spec, plane='live') or repro.api.planes.drive_orchestrator",
+            DeprecationWarning, stacklevel=2)
+        from repro.api.planes import drive_orchestrator
+
+        return drive_orchestrator(self, scenario, requests, dt=dt,
+                                  max_rounds=max_rounds)
 
     # -- introspection ---------------------------------------------------------------
     def stats(self) -> dict:

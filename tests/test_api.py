@@ -1,0 +1,650 @@
+"""The declarative experiment API (repro.api).
+
+Four pillars, matching the refactor's acceptance gates:
+
+* **round-trip** — ``from_dict(to_dict(spec)) == spec`` across randomized
+  specs (and through JSON, including inf-valued SLO fields), with
+  validation errors that name the offending field;
+* **shim parity** — the deprecated ``run_scenario`` entry points are
+  bit-identical to direct ``repro.api.run`` on fixed seeds, for scripted
+  scenarios, all eight dispatch policies, multi-tenant priority runs and
+  controller-driven runs;
+* **plane agnosticism** — the same spec executes on ``SimPlane`` and
+  ``LivePlane(mock)`` and returns one ``RunReport`` schema (diffable);
+* **registries** — policies/tuners/workloads/event kinds/scalers extend by
+  decorator with zero core edits.
+
+Numpy-only: no jax anywhere (the CI ``api-smoke`` job runs this file in a
+minimal environment).
+"""
+import dataclasses
+import json
+import math
+import random
+import warnings
+
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core import (
+    RequestClass,
+    Scenario,
+    ScenarioEvent,
+    Server,
+    ServiceSpec,
+    VECTORIZED_POLICIES,
+    run_scenario,
+    simulate_vectorized,
+)
+from repro.core import scenarios as core_scenarios
+from repro.core.workload import poisson_exponential_np
+
+SERVICE = ServiceSpec(num_blocks=10, block_size_gb=1.32, cache_size_gb=0.11)
+JOB_SERVERS = ((1.0, 4), (0.8, 4), (0.5, 8))
+NU = sum(m * c for m, c in JOB_SERVERS)
+TEMPLATE = Server("tmpl", 30.0, 0.05, 0.05)
+
+
+def cluster(n=8, seed=1234):
+    rng = random.Random(seed)
+    return tuple(Server(f"s{i}", rng.uniform(15, 40), rng.uniform(0.02, 0.2),
+                        rng.uniform(0.02, 0.2)) for i in range(n))
+
+
+def scripted_scenario(servers, horizon=120.0) -> Scenario:
+    return (Scenario(horizon=horizon, description="fail+burst+recover")
+            .fail(horizon * 0.3, "s3")
+            .burst(horizon * 0.5, horizon * 0.15, 4.0)
+            .recover(horizon * 0.7, servers[3]))
+
+
+def base_spec(servers=None, horizon=120.0, **kw) -> api.ExperimentSpec:
+    servers = cluster() if servers is None else servers
+    defaults = dict(
+        cluster=api.ClusterSpec(servers=servers, service=SERVICE),
+        scenario=api.ScenarioSpec.from_scenario(
+            scripted_scenario(servers, horizon)),
+        workload=api.WorkloadSpec(base_rate=3.0),
+        seed=0,
+    )
+    defaults.update(kw)
+    return api.ExperimentSpec(**defaults)
+
+
+def no_deprecation(fn, *args, **kwargs):
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        return fn(*args, **kwargs)
+
+
+# ---------------------------------------------------------------------------
+# Round-trip
+# ---------------------------------------------------------------------------
+
+def _random_spec(rng: random.Random) -> api.ExperimentSpec:
+    """A randomized-but-valid spec touching most of the surface."""
+    horizon = rng.uniform(50.0, 500.0)
+    servers = cluster(rng.randint(4, 10), seed=rng.randrange(10_000))
+    precomposed = rng.random() < 0.3
+    if precomposed:
+        cl = api.ClusterSpec(job_servers=tuple(
+            (round(rng.uniform(0.2, 2.0), 3), rng.randint(1, 8))
+            for _ in range(rng.randint(1, 4))))
+        sc = api.ScenarioSpec(
+            horizon=horizon,
+            events=(ScenarioEvent(horizon * 0.4, "burst", scale=3.0,
+                                  duration=horizon * 0.1),))
+    else:
+        cl = api.ClusterSpec(
+            servers=servers, service=SERVICE,
+            rho_bar=round(rng.uniform(0.4, 0.95), 2),
+            tuner=rng.choice(list(api.TUNERS)))
+        sc = api.ScenarioSpec.from_scenario(scripted_scenario(
+            servers, horizon))
+    classed = rng.random() < 0.5
+    classes = ()
+    class_rates = None
+    if classed:
+        classes = (RequestClass("interactive", "chat", 0, slo_target=2.0),
+                   RequestClass("batch", "offline", 1,
+                                deadline=rng.choice([math.inf, 30.0])))
+        class_rates = (round(rng.uniform(0.5, 3.0), 3),
+                       round(rng.uniform(0.5, 3.0), 3))
+    autoscale = None
+    if not precomposed and rng.random() < 0.5:
+        scaler = rng.choice(list(api.SCALERS))
+        params = {}
+        if scaler == "slo-admission":
+            params = {"slo": 4.0, "inner": {"policy": "target-util",
+                                            "params": {"high": 0.9}}}
+        elif scaler == "predictive":
+            params = {"lead": round(rng.uniform(10.0, 40.0), 1)}
+        autoscale = api.AutoscaleSpec(
+            policy=scaler, template=TEMPLATE, params=params,
+            interval=round(rng.uniform(2.0, 10.0), 1),
+            max_servers=rng.randint(4, 32),
+            slo_response_time=rng.choice([None, 4.0]))
+    return api.ExperimentSpec(
+        cluster=cl,
+        scenario=sc,
+        workload=api.WorkloadSpec(
+            base_rate=round(rng.uniform(1.0, 8.0), 3),
+            class_rates=class_rates,
+            classes=classes,
+            seed=rng.choice([None, rng.randrange(100)])),
+        policy=api.PolicySpec(
+            name=rng.choice(list(VECTORIZED_POLICIES)),
+            aging_rate=rng.choice([0.0, 0.001])),
+        admission=api.AdmissionSpec(level=rng.choice([1.0, 0.5])),
+        autoscale=autoscale,
+        seed=rng.randrange(1000),
+        warmup_fraction=rng.choice([0.0, 0.1]),
+        name=f"rand-{rng.randrange(10_000)}")
+
+
+def test_roundtrip_property_randomized_specs():
+    """from_dict(to_dict(spec)) == spec — 40 randomized specs, dict and
+    JSON paths both."""
+    rng = random.Random(7)
+    for _ in range(40):
+        spec = _random_spec(rng)
+        d = spec.to_dict()
+        back = api.ExperimentSpec.from_dict(d)
+        assert back == spec
+        back_json = api.ExperimentSpec.from_json(spec.to_json())
+        assert back_json == spec
+        # to_dict output is strictly JSON-serializable (inf encodes)
+        json.dumps(d)
+
+
+def test_roundtrip_preserves_infinite_slo_fields():
+    spec = base_spec(workload=api.WorkloadSpec(
+        base_rate=2.0,
+        classes=(RequestClass("a", "t", 0),
+                 RequestClass("b", "t", 1, deadline=10.0)),
+        class_rates=(1.0, 1.0)))
+    s = spec.to_json()
+    assert '"inf"' in s
+    back = api.ExperimentSpec.from_json(s)
+    assert back.workload.classes[0].deadline == math.inf
+    assert back == spec
+
+
+def test_run_after_roundtrip_is_bit_identical():
+    """Acceptance: spec -> to_dict -> from_dict -> run reproduces the
+    direct-spec result exactly."""
+    spec = base_spec()
+    direct = api.run(spec)
+    rebuilt = api.run(api.ExperimentSpec.from_dict(spec.to_dict()))
+    assert np.array_equal(direct.raw.result.response_times,
+                          rebuilt.raw.result.response_times)
+    assert direct.to_dict() == rebuilt.to_dict()
+
+
+# ---------------------------------------------------------------------------
+# Validation errors name the bad field
+# ---------------------------------------------------------------------------
+
+def test_unknown_policy_names_field():
+    with pytest.raises(api.SpecError, match="policy.name.*nosuch"):
+        api.PolicySpec(name="nosuch")
+
+
+def test_unknown_tuner_names_field():
+    with pytest.raises(api.SpecError, match="cluster.tuner.*warp"):
+        api.ClusterSpec(servers=cluster(), service=SERVICE, tuner="warp")
+
+
+def test_unknown_generator_names_field():
+    with pytest.raises(api.SpecError, match="workload.generator"):
+        api.WorkloadSpec(generator="nope", base_rate=1.0)
+
+
+def test_unknown_scaler_names_field():
+    with pytest.raises(api.SpecError, match="autoscale.policy"):
+        api.AutoscaleSpec(policy="nope", template=TEMPLATE)
+
+
+def test_unknown_event_kind_names_indexed_field():
+    d = base_spec().to_dict()
+    d["scenario"]["events"][0]["kind"] = "explode"
+    with pytest.raises(api.SpecError, match=r"scenario.events\[0\].kind"):
+        api.ExperimentSpec.from_dict(d)
+
+
+def test_unknown_dict_key_names_field():
+    d = base_spec().to_dict()
+    d["workload"]["bogus"] = 1
+    with pytest.raises(api.SpecError, match="workload.bogus"):
+        api.ExperimentSpec.from_dict(d)
+
+
+def test_cluster_needs_exactly_one_of_servers_or_job_servers():
+    with pytest.raises(api.SpecError, match="cluster"):
+        api.ClusterSpec()
+    with pytest.raises(api.SpecError, match="cluster"):
+        api.ClusterSpec(servers=cluster(), service=SERVICE,
+                        job_servers=JOB_SERVERS)
+
+
+def test_precomposed_cluster_rejects_cluster_events_and_autoscale():
+    servers = cluster()
+    with pytest.raises(api.SpecError, match="scenario.events"):
+        api.ExperimentSpec(
+            cluster=api.ClusterSpec(job_servers=JOB_SERVERS),
+            scenario=api.ScenarioSpec.from_scenario(
+                scripted_scenario(servers)),
+            workload=api.WorkloadSpec(base_rate=1.0))
+    with pytest.raises(api.SpecError, match="autoscale"):
+        api.ExperimentSpec(
+            cluster=api.ClusterSpec(job_servers=JOB_SERVERS),
+            scenario=api.ScenarioSpec(horizon=100.0),
+            workload=api.WorkloadSpec(base_rate=1.0),
+            autoscale=api.AutoscaleSpec(policy="predictive",
+                                        template=TEMPLATE))
+
+
+def test_missing_rate_names_field():
+    with pytest.raises(api.SpecError, match="workload.base_rate"):
+        base_spec(workload=api.WorkloadSpec())
+
+
+def test_class_rates_length_mismatch_names_field():
+    with pytest.raises(api.SpecError, match="workload.class_rates"):
+        api.WorkloadSpec(class_rates=(1.0,),
+                         classes=(RequestClass(), RequestClass("b")))
+
+
+# ---------------------------------------------------------------------------
+# Seed derivation rule
+# ---------------------------------------------------------------------------
+
+def test_seed_rule_is_centralized():
+    spec = base_spec(seed=41)
+    assert api.ENGINE_SEED_OFFSET == 1
+    assert spec.engine_seed() == 42
+    assert spec.workload_seed() == 41
+    override = spec.replace(workload=dataclasses.replace(
+        spec.workload, seed=7))
+    assert override.workload_seed() == 7
+    assert override.engine_seed() == 42   # engine stream is never overridden
+
+
+# ---------------------------------------------------------------------------
+# Shim parity: deprecated entry points == repro.api.run, bit for bit
+# ---------------------------------------------------------------------------
+
+def test_run_scenario_shim_warns_and_matches_api_run():
+    servers = cluster()
+    sc = scripted_scenario(servers)
+    with pytest.warns(DeprecationWarning):
+        old = run_scenario(servers, SERVICE, sc, base_rate=3.0, seed=0)
+    rep = api.run(base_spec(servers))
+    assert np.array_equal(old.result.response_times,
+                          rep.raw.result.response_times)
+    assert np.array_equal(old.result.waiting_times,
+                          rep.raw.result.waiting_times)
+    assert old.result.sim_time == rep.raw.result.sim_time
+    assert [dataclasses.asdict(e) for e in old.log] == rep.events
+
+
+@pytest.mark.parametrize("policy", VECTORIZED_POLICIES)
+def test_all_eight_policies_bit_identical_via_spec(policy):
+    n, lam, seed = 4000, 0.85 * NU, 5
+    arrivals = poisson_exponential_np(lam, n, seed=seed)
+    old = simulate_vectorized(policy, list(JOB_SERVERS), arrivals, seed=seed)
+    spec = api.ExperimentSpec(
+        cluster=api.ClusterSpec(job_servers=JOB_SERVERS),
+        scenario=api.ScenarioSpec(horizon=float(arrivals[0][-1]) + 1.0),
+        workload=api.WorkloadSpec(generator="poisson", base_rate=lam,
+                                  params={"n": n}),
+        policy=api.PolicySpec(name=policy),
+        seed=seed, warmup_fraction=0.1)
+    rep = api.run(spec)
+    assert np.array_equal(old.response_times, rep.raw.result.response_times)
+    assert np.array_equal(old.waiting_times, rep.raw.result.waiting_times)
+    assert old.sim_time == rep.raw.result.sim_time
+
+
+def test_multitenant_priority_run_bit_identical_via_spec():
+    servers = cluster()
+    classes = (RequestClass("interactive", "chat", 0, slo_target=2.0),
+               RequestClass("batch", "offline", 1, deadline=10.0))
+    sc = Scenario(horizon=150.0).tenant_burst(50.0, 40.0, 3.0, cls=0)
+    old = no_deprecation(
+        run_scenario, servers, SERVICE, sc, policy="priority",
+        classes=list(classes), class_rates=[1.3, 0.7], aging_rate=0.001,
+        admission_level=0.8, seed=3)
+    spec = api.ExperimentSpec(
+        cluster=api.ClusterSpec(servers=servers, service=SERVICE),
+        scenario=api.ScenarioSpec.from_scenario(sc),
+        workload=api.WorkloadSpec(class_rates=(1.3, 0.7), classes=classes),
+        policy=api.PolicySpec(name="priority", aging_rate=0.001),
+        admission=api.AdmissionSpec(level=0.8),
+        seed=3)
+    rep = api.run(spec)
+    assert np.array_equal(old.result.response_times,
+                          rep.raw.result.response_times)
+    assert old.n_rejected == rep.n_rejected
+    assert old.per_class().keys() == rep.raw.per_class().keys()
+
+
+def test_controller_run_bit_identical_via_spec():
+    """A spec-built controller reproduces an externally-built identical
+    controller bit for bit (same telemetry, same decisions, same events)."""
+    from repro.autoscale import (
+        AutoscaleController, ControllerConfig, PredictivePolicy, Telemetry,
+        TelemetryConfig,
+    )
+
+    servers = (Server("b0", TEMPLATE.memory_gb, TEMPLATE.tau_c,
+                      TEMPLATE.tau_p),)
+    sc = Scenario(horizon=150.0)
+    ctl = AutoscaleController(
+        PredictivePolicy(TEMPLATE, lead=20.0, margin=1.2), TEMPLATE,
+        ControllerConfig(interval=5.0, cooldown=20.0, warmup_lag=10.0,
+                         min_servers=1, max_servers=12,
+                         slo_response_time=3.0),
+        telemetry=Telemetry(TelemetryConfig(window=20.0)))
+    old = no_deprecation(
+        run_scenario, servers, SERVICE, sc, base_rate=4.0, seed=0,
+        controller=ctl)
+    spec = api.ExperimentSpec(
+        cluster=api.ClusterSpec(servers=servers, service=SERVICE),
+        scenario=api.ScenarioSpec.from_scenario(sc),
+        workload=api.WorkloadSpec(base_rate=4.0),
+        autoscale=api.AutoscaleSpec(
+            policy="predictive", template=TEMPLATE,
+            params={"lead": 20.0, "margin": 1.2},
+            interval=5.0, cooldown=20.0, warmup_lag=10.0,
+            min_servers=1, max_servers=12, slo_response_time=3.0,
+            telemetry_window=20.0),
+        seed=0)
+    rep = api.run(spec)
+    assert np.array_equal(old.result.response_times,
+                          rep.raw.result.response_times)
+    assert [dataclasses.asdict(e) for e in old.log] == rep.events
+    assert rep.cost is not None and rep.cost["policy"] == "predictive"
+    assert rep.cost["server_seconds"] == pytest.approx(ctl.server_seconds)
+
+
+def test_orchestrator_shim_matches_drive_orchestrator():
+    from repro.serving import Request, mock_orchestrator
+
+    def build():
+        orch = mock_orchestrator(
+            [Server(f"b{i}", 16.0, 0.05, 0.08) for i in range(3)], SERVICE,
+            arrival_rate=1.0)
+        reqs = [(0.5 * i, Request(rid=i, prompt=np.ones(4, np.int32),
+                                  max_new_tokens=5, arrival_time=0.5 * i))
+                for i in range(20)]
+        return orch, reqs
+
+    orch_a, reqs_a = build()
+    sc = Scenario(horizon=30.0).fail(5.0, "b0").recover(10.0, orch_a.servers
+                                                        .get("b0")
+                                                        or Server("b0", 16.0,
+                                                                  0.05, 0.08))
+    with pytest.warns(DeprecationWarning):
+        old = orch_a.run_scenario(sc, reqs_a, dt=0.5)
+    orch_b, reqs_b = build()
+    new = api.drive_orchestrator(orch_b, sc, reqs_b, dt=0.5)
+    assert old["finished"] == new["finished"] == 20
+    assert old["rounds"] == new["rounds"]
+    assert [r[1].output for r in reqs_a] == [r[1].output for r in reqs_b]
+
+
+# ---------------------------------------------------------------------------
+# Plane agnosticism
+# ---------------------------------------------------------------------------
+
+def test_same_spec_runs_on_both_planes():
+    servers = cluster(6)
+    spec = api.ExperimentSpec(
+        cluster=api.ClusterSpec(servers=servers, service=SERVICE),
+        scenario=api.ScenarioSpec.from_scenario(
+            Scenario(horizon=60.0).fail(20.0, "s3")
+            .recover(40.0, servers[3])),
+        workload=api.WorkloadSpec(base_rate=2.0),
+        seed=0, name="both-planes")
+    rep_sim = api.run(spec, plane="sim")
+    rep_live = api.run(spec, plane=api.LivePlane(dt=0.5))
+    assert rep_sim.plane == "sim" and rep_live.plane == "live"
+    assert rep_sim.completed_all and rep_live.completed_all
+    assert rep_sim.n_jobs == rep_live.n_jobs      # same resolved workload
+    diff = rep_sim.diff(rep_live)
+    assert diff["plane"] == ("sim", "live")
+    assert "n_jobs" not in diff
+    # both reports serialize
+    json.dumps(rep_sim.to_dict())
+    json.dumps(rep_live.to_dict())
+
+
+def test_live_plane_multitenant_defers_only_batch():
+    classes = (RequestClass("interactive", "chat", 0, slo_target=2.0),
+               RequestClass("batch", "offline", 1, deadline=2.0))
+    spec = api.ExperimentSpec(
+        cluster=api.ClusterSpec(
+            servers=(Server("b0", 16.0, 0.05, 0.08),), service=SERVICE),
+        scenario=api.ScenarioSpec(horizon=40.0),
+        workload=api.WorkloadSpec(class_rates=(2.0, 2.0), classes=classes),
+        policy=api.PolicySpec(name="priority", aging_rate=0.001),
+        seed=1)
+    rep = api.run(spec, plane=api.LivePlane(dt=0.5))
+    assert rep.per_class, "live plane must report per-class stats"
+    assert set(rep.per_class) == {0, 1}
+    assert rep.per_class[0]["name"] == "interactive"
+    assert rep.n_completed + rep.n_rejected + rep.n_failed == rep.n_jobs
+
+
+def test_idle_fast_forward_skips_sparse_gaps():
+    """A 200 s silence between two requests costs ~0 rounds when nothing is
+    in flight — and the outcome is identical to the spin-every-dt drive
+    (reconstructed by installing a no-op step hook, which disables the
+    fast-forward)."""
+    from repro.serving import Request, mock_orchestrator
+
+    def build(hook: bool):
+        orch = mock_orchestrator([Server("b0", 16.0, 0.05, 0.08)], SERVICE,
+                                 arrival_rate=1.0)
+        if hook:
+            orch.step_hooks.append(lambda o, now: None)
+        reqs = [(0.0, Request(rid=0, prompt=np.ones(4, np.int32),
+                              max_new_tokens=4)),
+                (200.0, Request(rid=1, prompt=np.ones(4, np.int32),
+                                max_new_tokens=4, arrival_time=200.0))]
+        return orch, reqs
+
+    orch_fast, reqs_fast = build(hook=False)
+    fast = api.drive_orchestrator(orch_fast, Scenario(horizon=250.0),
+                                  reqs_fast, dt=0.5)
+    orch_slow, reqs_slow = build(hook=True)
+    slow = api.drive_orchestrator(orch_slow, Scenario(horizon=250.0),
+                                  reqs_slow, dt=0.5)
+    assert fast["finished"] == slow["finished"] == 2
+    assert fast["idle_skipped"] > 300          # ~200 s / 0.5 s of silence
+    assert slow["idle_skipped"] == 0
+    assert fast["rounds"] == slow["rounds"]    # same t = rounds*dt grid
+    assert [r[1].output for r in reqs_fast] \
+        == [r[1].output for r in reqs_slow]
+    # events/warm-ups are still honored on the fast path at the same grid
+    # times, so response times agree exactly
+    assert [r[1].response_time() for r in reqs_fast] \
+        == [r[1].response_time() for r in reqs_slow]
+
+
+# ---------------------------------------------------------------------------
+# Sweeps
+# ---------------------------------------------------------------------------
+
+def test_sweep_grid_is_deterministic_and_seeded():
+    spec = base_spec(horizon=80.0)
+    grid = {"policy.name": ["jffc", "sed"], "seed": [0, 1]}
+    pts = api.sweep(spec, grid)
+    assert len(pts) == 4
+    assert [p.overrides for p in pts] == [
+        {"policy.name": "jffc", "seed": 0},
+        {"policy.name": "jffc", "seed": 1},
+        {"policy.name": "sed", "seed": 0},
+        {"policy.name": "sed", "seed": 1},
+    ]
+    # each point reproduces a direct run of its own spec exactly
+    for p in pts:
+        direct = api.run(p.spec)
+        assert np.array_equal(direct.raw.result.response_times,
+                              p.report.raw.result.response_times)
+    # re-running the sweep reproduces itself
+    again = api.sweep(spec, grid)
+    for a, b in zip(pts, again):
+        assert np.array_equal(a.report.raw.result.response_times,
+                              b.report.raw.result.response_times)
+
+
+def test_spec_replace_nested_paths_and_errors():
+    spec = base_spec()
+    out = api.spec_replace(spec, "workload.base_rate", 5.0)
+    assert out.workload.base_rate == 5.0 and spec.workload.base_rate == 3.0
+    out = api.spec_replace(spec, "seed", 9)
+    assert out.seed == 9
+    with pytest.raises(api.SpecError, match="no such field"):
+        api.spec_replace(spec, "workload.nope", 1)
+    with pytest.raises(api.SpecError):        # replace re-validates
+        api.spec_replace(spec, "policy.name", "nosuch")
+
+
+# ---------------------------------------------------------------------------
+# Registries: third-party extension with zero core edits
+# ---------------------------------------------------------------------------
+
+def test_workload_generator_registers_by_decorator():
+    name = "test-burst-pair"
+    try:
+        @api.WORKLOADS.register(name)
+        def _gen(workload, scenario, seed):
+            t = np.array([1.0, 2.0])
+            return t, np.ones(2)
+
+        spec = base_spec(workload=api.WorkloadSpec(generator=name,
+                                                   base_rate=1.0))
+        rep = api.run(spec)
+        assert rep.n_jobs == 2 and rep.completed_all
+    finally:
+        api.WORKLOADS._entries.pop(name, None)
+
+
+def test_event_kind_registry_writes_through_to_core():
+    name = "chaos-monkey"
+    assert name not in core_scenarios.EVENT_KINDS
+    try:
+        api.EVENT_KINDS.register(name, None)
+        assert name in core_scenarios.EVENT_KINDS
+        # ScenarioEvent now accepts the new kind with no core edits
+        ev = ScenarioEvent(1.0, name)
+        assert ev.kind == name
+    finally:
+        api.EVENT_KINDS._entries.pop(name, None)
+        if name in core_scenarios.EVENT_KINDS:
+            core_scenarios.EVENT_KINDS.remove(name)
+
+
+def test_dispatch_policy_registry_writes_through_to_core():
+    from repro.core.load_balance import POLICIES
+
+    name = "test-policy"
+    try:
+        api.DISPATCH_POLICIES.register(name, object)
+        assert POLICIES[name] is object
+        assert api.PolicySpec(name=name).name == name
+    finally:
+        api.DISPATCH_POLICIES._entries.pop(name, None)
+        POLICIES.pop(name, None)
+
+
+def test_tuner_registry_writes_through_to_compose():
+    from repro.core.tuning import TUNERS, compose
+
+    name = "test-fixed-c"
+    calls = []
+    try:
+        @api.TUNERS.register(name)
+        def _tuner(servers, spec, lam, rho_bar):
+            calls.append(lam)
+            return TUNERS["bound-lower"](servers, spec, lam, rho_bar)
+
+        c, pl, alloc = compose(list(cluster()), SERVICE, 2.0, 0.7,
+                               tuner=name)
+        assert calls == [2.0] and alloc.total_rate > 0
+        # and the spec layer validates it
+        api.ClusterSpec(servers=cluster(), service=SERVICE, tuner=name)
+    finally:
+        api.TUNERS._entries.pop(name, None)
+        TUNERS.pop(name, None)
+
+
+def test_unknown_plane_lists_known_names():
+    with pytest.raises(api.UnknownNameError, match="sim"):
+        api.get_plane("warp")
+
+
+# ---------------------------------------------------------------------------
+# Review regressions
+# ---------------------------------------------------------------------------
+
+def test_registry_reregistration_wins_in_core_too():
+    """Latest-wins must propagate through the write-through: stubbing a
+    builtin tuner on the API registry changes what ``compose`` runs."""
+    from repro.core.tuning import TUNERS, compose
+
+    original = TUNERS["bound-lower"]
+    calls = []
+
+    def stub(servers, spec, lam, rho_bar):
+        calls.append(lam)
+        return original(servers, spec, lam, rho_bar)
+
+    try:
+        api.TUNERS.register("bound-lower", stub)
+        assert TUNERS["bound-lower"] is stub
+        compose(list(cluster()), SERVICE, 2.0, 0.7, tuner="bound-lower")
+        assert calls == [2.0]
+    finally:
+        api.TUNERS.register("bound-lower", original)
+    assert TUNERS["bound-lower"] is original
+
+
+def test_live_plane_rejects_unimplemented_policies():
+    spec = base_spec(policy=api.PolicySpec(name="sed"))
+    with pytest.raises(api.SpecError, match="policy.name"):
+        api.run(spec, plane=api.LivePlane())
+    # sim plane runs it fine
+    assert api.run(spec).completed_all
+
+
+def test_live_plane_honors_warmup_fraction():
+    spec = base_spec(cluster(6), horizon=60.0,
+                     workload=api.WorkloadSpec(base_rate=2.0),
+                     scenario=api.ScenarioSpec(horizon=60.0))
+    full = api.run(spec, plane=api.LivePlane(dt=0.5))
+    trimmed = api.run(spec.replace(warmup_fraction=0.5),
+                      plane=api.LivePlane(dt=0.5))
+    assert trimmed.completed_all           # judged on untrimmed counts
+    assert trimmed.n_jobs == full.n_jobs
+    assert trimmed.n_completed == full.n_completed \
+        - int(full.n_completed * 0.5)
+    assert trimmed.response["mean"] != full.response["mean"]
+
+
+def test_arrivals_override_accepts_rows_as_tuple_or_list():
+    rows = [(0.5, 1.0, 0, 0), (1.0, 0.5, 0, 0), (1.5, 2.0, 0, 0)]
+    spec = api.ExperimentSpec(
+        cluster=api.ClusterSpec(job_servers=((1.0, 1),)),
+        scenario=api.ScenarioSpec(horizon=10.0),
+        workload=api.WorkloadSpec(base_rate=1.0), seed=0)
+    as_list = api.run(spec, arrivals=rows)
+    as_tuple = api.run(spec, arrivals=tuple(rows))
+    assert as_list.n_jobs == as_tuple.n_jobs == 3
+    assert np.array_equal(as_list.raw.result.response_times,
+                          as_tuple.raw.result.response_times)
+    with pytest.raises(api.SpecError, match="arrivals"):
+        api.run(spec, arrivals=(0.5, 1.0))   # scalars are neither form
