@@ -1,4 +1,4 @@
-"""Vectorized vs. scalar simulator: parity, throughput, scenario engine.
+"""Simulation backends vs. the scalar oracle: parity, throughput, engines.
 
 Headline numbers (written to ``BENCH_simulator.json``):
   * engine speedup — ``VectorSimulator`` event loop vs. the scalar
@@ -6,8 +6,12 @@ Headline numbers (written to ``BENCH_simulator.json``):
   * pipeline speedup — trace generation + simulation + statistics end to
     end (batched numpy generators vs. the scalar tuple-list path), i.e. the
     wall-clock cost of producing one ``SimResult``;
+  * **backend legs** — ``engine="vector"`` vs ``engine="batched"`` jobs/s
+    (one spec, two backends, identical results) and a 16-seed
+    ``repro.api.sweep`` executed as one compiled vmapped pass vs
+    sequential per-seed replay;
   * a million-job feasibility run through the vectorized engine;
-  * a scenario-engine run (failure + burst + autoscale-in) at 5k+ jobs.
+  * a scenario-engine run (the ``failover_burst`` preset) at 5k+ jobs.
 
 Run directly:  PYTHONPATH=src python -m benchmarks.bench_simulator \
                    [--n-jobs 100000] [--out BENCH_simulator.json]
@@ -26,14 +30,13 @@ import numpy as np
 from repro import api
 from repro.core import (
     POLICIES,
-    Scenario,
-    Server,
-    ServiceSpec,
     VECTORIZED_POLICIES,
     poisson_exponential,
     simulate,
 )
+from repro.core.engines import jax_available
 from repro.core.simulator import poisson_arrivals
+from repro.core.workload import poisson_exponential_np
 
 from .common import timed_pair
 
@@ -46,12 +49,13 @@ NU = sum(m * c for m, c in JOB_SERVERS)
 
 
 def _precomposed_spec(lam: float, n: int, policy: str = "jffc",
-                      seed: int = 0) -> api.ExperimentSpec:
+                      seed: int = 0,
+                      engine: str = "vector") -> api.ExperimentSpec:
     """The benchmark's fixed chain set + Poisson(lam) workload as one
     declarative spec (engine RNG = seed + 1 by the spec's seed rule, same
     as the pre-API wrappers)."""
     return api.ExperimentSpec(
-        cluster=api.ClusterSpec(job_servers=JOB_SERVERS),
+        cluster=api.ClusterSpec(job_servers=JOB_SERVERS, engine=engine),
         scenario=api.ScenarioSpec(horizon=1.25 * n / lam),
         workload=api.WorkloadSpec(generator="poisson", base_rate=lam,
                                   params={"n": n}),
@@ -62,8 +66,10 @@ def _precomposed_spec(lam: float, n: int, policy: str = "jffc",
 
 def parity_record(n: int = 20_000) -> dict:
     """Bit-identical response times across every vectorized policy — the
-    scalar oracle vs. the same trace run through ``repro.api.run``."""
+    scalar oracle vs. the same trace run through ``repro.api.run``, on
+    **both** simulation backends."""
     ok = True
+    cross_ok = True
     for policy in VECTORIZED_POLICIES:
         for lam in (0.5 * NU, 0.85 * NU):
             arrivals = poisson_arrivals(lam, n, random.Random(0))
@@ -71,8 +77,14 @@ def parity_record(n: int = 20_000) -> dict:
                           arrivals)
             vec = api.run(_precomposed_spec(lam, n, policy),
                           arrivals=arrivals).raw.result
+            bat = api.run(_precomposed_spec(lam, n, policy,
+                                            engine="batched"),
+                          arrivals=arrivals).raw.result
             ok &= bool(np.array_equal(sc.response_times, vec.response_times))
-    return {"name": "simulator_parity", "bit_identical": ok, "n_jobs": n,
+            cross_ok &= bool(np.array_equal(vec.response_times,
+                                            bat.response_times))
+    return {"name": "simulator_parity", "bit_identical": ok,
+            "cross_engine_bit_identical": cross_ok, "n_jobs": n,
             "policies": list(VECTORIZED_POLICIES)}
 
 
@@ -131,6 +143,83 @@ def throughput_records(n: int, repeats: int = 5) -> List[dict]:
     return rows
 
 
+def engine_records(n: int, repeats: int = 5) -> List[dict]:
+    """Per-backend jobs/s: one spec, ``engine="vector"`` vs
+    ``engine="batched"``, end to end (construct + load + run + result) on
+    the identical pre-generated trace — interleaved median-of-N CPU
+    timing.  The batched backend's compiled JFFC path needs jax; without
+    it the leg still runs (interpreter fallback) and records the fact."""
+    rows = []
+    for rho in (0.7, 0.9):
+        lam = rho * NU
+        tt, ww = poisson_exponential_np(lam, n, seed=0)
+        spec_v = _precomposed_spec(lam, n)
+        spec_b = _precomposed_spec(lam, n, engine="batched")
+
+        def run_vector():
+            api.build_simulator(spec_v, arrivals=(tt, ww)) \
+               .run_to_completion().result()
+
+        def run_batched():
+            api.build_simulator(spec_b, arrivals=(tt, ww)) \
+               .run_to_completion().result()
+
+        s_v, s_b = timed_pair(run_vector, run_batched, repeats)
+        rows.append({
+            "name": f"simulator_engines_rho{rho}",
+            "n_jobs": n,
+            "timer": "process_time",
+            "repeats": repeats,
+            "compiled_kernel": jax_available(),
+            "vector_jobs_per_s": n / max(s_v["median"], 1e-9),
+            "batched_jobs_per_s": n / max(s_b["median"], 1e-9),
+            "batched_speedup": s_v["median"] / max(s_b["median"], 1e-9),
+            "batched_speedup_best": s_v["best"] / max(s_b["best"], 1e-9),
+        })
+    return rows
+
+
+def sweep_records(n: int = 50_000, seeds: int = 16,
+                  repeats: int = 3) -> List[dict]:
+    """A whole seed grid in one compiled pass: ``repro.api.sweep`` with
+    ``engine="batched"`` (vmapped ``jax.lax.scan`` over the stacked seed
+    traces) vs sequential per-seed replay on the interpreter backend —
+    identical results, interleaved median-of-N CPU timing."""
+    rows = []
+    for rho in (0.7, 0.9):
+        lam = rho * NU
+        spec = _precomposed_spec(lam, n)
+        grid = {"seed": list(range(seeds))}
+
+        # equality ride-along: the fast path must be a pure wall-clock win
+        fast = api.sweep(spec, grid, engine="batched")
+        slow = api.sweep(spec, grid, engine="vector")
+        identical = all(
+            np.array_equal(a.report.raw.result.response_times,
+                           b.report.raw.result.response_times)
+            for a, b in zip(fast, slow))
+        one_pass = all(p.report.extras.get("swept_one_pass") for p in fast)
+
+        s_seq, s_bat = timed_pair(
+            lambda: api.sweep(spec, grid, engine="vector"),
+            lambda: api.sweep(spec, grid, engine="batched"), repeats)
+        rows.append({
+            "name": f"simulator_sweep_seed_grid_rho{rho}",
+            "n_jobs": n,
+            "seeds": seeds,
+            "timer": "process_time",
+            "repeats": repeats,
+            "compiled_kernel": jax_available(),
+            "one_pass": one_pass,
+            "bit_identical": identical,
+            "sequential_s": s_seq["median"],
+            "one_pass_s": s_bat["median"],
+            "sweep_speedup": s_seq["median"] / max(s_bat["median"], 1e-9),
+            "sweep_speedup_best": s_seq["best"] / max(s_bat["best"], 1e-9),
+        })
+    return rows
+
+
 def million_job_record(n: int = 1_000_000) -> dict:
     """Feasibility: one million jobs through the vectorized engine."""
     lam = 0.9 * NU
@@ -149,24 +238,10 @@ def million_job_record(n: int = 1_000_000) -> dict:
 
 
 def scenario_record(n_target: int = 5_000) -> dict:
-    """Scenario engine smoke: failure + 6x burst + autoscale-in, built as
-    one declarative spec and executed on the sim plane."""
-    rng = random.Random(1234)
-    service = ServiceSpec(num_blocks=10, block_size_gb=1.32,
-                          cache_size_gb=0.11)
-    servers = [Server(f"s{i}", rng.uniform(15, 40), rng.uniform(0.02, 0.2),
-                      rng.uniform(0.02, 0.2)) for i in range(8)]
-    base_rate = 4.0
-    horizon = n_target / base_rate
-    sc = (Scenario(horizon=horizon)
-          .fail(horizon * 0.25, "s3")
-          .burst(horizon * 0.5, horizon * 0.1, 6.0)
-          .recover(horizon * 0.65, servers[3]))
-    spec = api.ExperimentSpec(
-        cluster=api.ClusterSpec(servers=tuple(servers), service=service),
-        scenario=api.ScenarioSpec.from_scenario(sc),
-        workload=api.WorkloadSpec(base_rate=base_rate),
-        seed=0, name="simulator-scenario-smoke")
+    """Scenario engine smoke: the ``failover_burst`` preset (failure + 6x
+    burst + recovery) executed on the sim plane."""
+    spec = api.preset("failover_burst", n_target=n_target,
+                      name="simulator-scenario-smoke")
     t0 = time.perf_counter()
     rep = api.run(spec, plane="sim")
     dt = time.perf_counter() - t0
@@ -184,6 +259,8 @@ def scenario_record(n_target: int = 5_000) -> dict:
 def run(n_jobs: int = 100_000, million: bool = True) -> List[dict]:
     rows = [parity_record()]
     rows += throughput_records(n_jobs)
+    rows += engine_records(max(n_jobs, 5_000))
+    rows += sweep_records(n=max(n_jobs // 2, 2_500), seeds=16)
     if million:
         rows.append(million_job_record())
     rows.append(scenario_record())
@@ -201,8 +278,10 @@ def main() -> None:
     args = ap.parse_args()
     rows = run(args.n_jobs, million=not args.no_million)
     for row in rows:
-        keys = [k for k in ("bit_identical", "engine_speedup",
-                            "pipeline_speedup", "jobs_per_s", "completed_all")
+        keys = [k for k in ("bit_identical", "cross_engine_bit_identical",
+                            "engine_speedup", "pipeline_speedup",
+                            "batched_speedup", "sweep_speedup",
+                            "jobs_per_s", "completed_all")
                 if k in row]
         print(row["name"] + ": "
               + ", ".join(f"{k}={row[k]:.2f}" if isinstance(row[k], float)

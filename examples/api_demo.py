@@ -61,3 +61,20 @@ assert rep_sim.completed_all and rep_live.completed_all
 assert rep_sim.n_jobs == rep_live.n_jobs, "planes resolved different traces"
 print("\nboth planes completed the identical workload — "
       "the spec IS the experiment.")
+
+# -- presets + the results store: canned experiments, cached reports --------
+# Named presets replace hand-built specs for the canonical scenarios, and a
+# ResultsStore keyed by the spec's content hash makes re-runs free.
+import tempfile                                              # noqa: E402
+
+with tempfile.TemporaryDirectory() as cache_dir:
+    store = api.ResultsStore(cache_dir)
+    burst = api.preset("failover_burst", n_target=2_000)
+    first = api.run(burst, store=store)                      # executes
+    again = api.run(burst, store=store)                      # cache hit
+    assert store.hits == 1 and again.p99() == first.p99()
+    moved = api.run(burst.replace(seed=1), store=store)      # miss: re-runs
+    print(f"\npreset '{burst.name}': p99 {first.p99():.2f}s "
+          f"({first.reconfigurations} recompositions); store: "
+          f"{store.hits} hit, {len(store)} reports on disk")
+    assert moved.completed_all

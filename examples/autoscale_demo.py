@@ -25,32 +25,11 @@ from repro import api
 from repro.autoscale import servers_needed, static_baseline_cost
 from repro.core import Server, ServiceSpec
 
-SPEC = ServiceSpec(num_blocks=10, block_size_gb=1.32, cache_size_gb=0.11)
+# the cluster/service/controller shape lives in the "diurnal_autoscale"
+# preset (repro.api.presets); the demo only turns its knobs — these two
+# mirror the preset's template for the static-baseline sizing below
 TEMPLATE = Server("template", 16.0, 0.05, 0.08)
-
-
-def mk(sid: str) -> Server:
-    return Server(sid, TEMPLATE.memory_gb, TEMPLATE.tau_c, TEMPLATE.tau_p)
-
-
-def diurnal_spec(servers, horizon, base_rate, amplitude, trace_seed,
-                 autoscale=None, name="") -> api.ExperimentSpec:
-    return api.ExperimentSpec(
-        cluster=api.ClusterSpec(servers=tuple(servers), service=SPEC),
-        scenario=api.ScenarioSpec(horizon=horizon,
-                                  description="diurnal day/night curve"),
-        workload=api.WorkloadSpec(generator="diurnal", base_rate=base_rate,
-                                  params={"amplitude": amplitude},
-                                  seed=trace_seed),
-        autoscale=autoscale, seed=0, name=name)
-
-
-def scaler(policy: str, params=None, **cfg) -> api.AutoscaleSpec:
-    cfg = {"interval": 5.0, "cooldown": 20.0, "warmup_lag": 10.0,
-           "min_servers": 1, "max_servers": 40, "slo_response_time": 3.0,
-           "telemetry_window": 20.0, **cfg}
-    return api.AutoscaleSpec(policy=policy, template=TEMPLATE,
-                             params=params or {}, **cfg)
+SPEC = ServiceSpec(num_blocks=10, block_size_gb=1.32, cache_size_gb=0.11)
 
 
 def queueing_plane() -> None:
@@ -61,9 +40,10 @@ def queueing_plane() -> None:
 
     peak = base_rate * (1 + amplitude)
     n_static = servers_needed([], TEMPLATE, SPEC, peak, 0.7, max_extra=60)
-    static = [mk(f"st{i}") for i in range(n_static)]
-    rep = api.run(diurnal_spec(static, horizon, base_rate, amplitude, 3,
-                               name="static"))
+    rep = api.run(api.preset("diurnal_autoscale", policy=None,
+                             n_servers=n_static, horizon=horizon,
+                             base_rate=base_rate, amplitude=amplitude,
+                             trace_seed=3, name="static"))
     srep = static_baseline_cost(n_static, rep.sim_time,
                                 rep.raw.result.response_times, 3.0)
     print(f"static x{n_static} (peak-provisioned): p99 {rep.p99():.2f} s, "
@@ -72,8 +52,9 @@ def queueing_plane() -> None:
 
     for policy, params in (("predictive", {"lead": 30.0, "margin": 1.2}),
                            ("target-util", {})):
-        spec = diurnal_spec([mk("base0")], horizon, base_rate, amplitude, 3,
-                            autoscale=scaler(policy, params), name=policy)
+        spec = api.preset("diurnal_autoscale", policy=policy, params=params,
+                          horizon=horizon, base_rate=base_rate,
+                          amplitude=amplitude, trace_seed=3, name=policy)
         rep = api.run(spec)
         cost = rep.cost
         print(f"{policy:>12}: p99 {rep.p99():.2f} s, "
@@ -94,12 +75,11 @@ def live_plane() -> None:
     print("=" * 72)
     print("Live plane: the same spec shape on a mock-model Orchestrator")
     print("=" * 72)
-    spec = diurnal_spec(
-        [mk("b0")], 200.0, base_rate=1.2, amplitude=0.8, trace_seed=7,
-        autoscale=scaler("predictive", {"lead": 20.0, "margin": 1.2},
-                         cooldown=10.0, warmup_lag=8.0, max_servers=12,
-                         slo_response_time=60.0),
-        name="live-predictive")
+    spec = api.preset(
+        "diurnal_autoscale", policy="predictive",
+        params={"lead": 20.0, "margin": 1.2}, horizon=200.0, base_rate=1.2,
+        amplitude=0.8, trace_seed=7, cooldown=10.0, warmup_lag=8.0,
+        max_servers=12, slo_response_time=60.0, name="live-predictive")
     rep = api.run(spec, plane=api.LivePlane(dt=0.5, prompt_tokens=4))
     print(f"requests: {rep.n_completed}/{rep.n_jobs} finished, "
           f"{rep.n_failed} failed, {rep.reconfigurations} recompositions "

@@ -38,31 +38,18 @@ def overload_triage() -> None:
     print("=" * 70)
     print("1. Overload triage: 70/30 interactive/batch at 1.05x capacity")
     print("=" * 70)
-    lam = 1.05 * NU
-    horizon = 40_000 / lam
-
-    def classes(batch_deadline=float("inf")):
-        return (RequestClass("interactive", "chat", 0, slo_target=2.0),
-                RequestClass("batch", "offline", 1,
-                             deadline=batch_deadline))
-
+    inf = float("inf")
+    # three legs of the "overloaded_70_30" preset on the identical trace
     legs = {
-        "class-blind FIFO": ("jffc", classes(), 0.0),
-        "priority": ("priority", classes(), 0.001),
-        "priority + admission": ("priority", classes(0.03 * horizon), 0.001),
+        "class-blind FIFO": {"policy": "jffc", "aging_rate": 0.0,
+                             "batch_deadline": inf},
+        "priority": {"batch_deadline": inf},
+        "priority + admission": {},          # the preset's full gate
     }
     print(f"{'engine':22s} {'int p99':>9s} {'batch p99':>10s} "
           f"{'batch done':>10s} {'shed':>6s}")
-    for name, (policy, cls, aging) in legs.items():
-        spec = api.ExperimentSpec(
-            cluster=api.ClusterSpec(job_servers=JOB_SERVERS),
-            scenario=api.ScenarioSpec(horizon=horizon),
-            workload=api.WorkloadSpec(generator="classed-mix",
-                                      class_rates=(0.7 * lam, 0.3 * lam),
-                                      classes=cls),
-            policy=api.PolicySpec(name=policy, aging_rate=aging),
-            seed=42, name=name)
-        rep = api.run(spec)
+    for name, knobs in legs.items():
+        rep = api.run(api.preset("overloaded_70_30", name=name, **knobs))
         pc = rep.per_class
         print(f"{name:22s} {pc[0]['response']['p99']:9.2f} "
               f"{pc[1]['response']['p99']:10.2f} {pc[1]['n']:10d} "

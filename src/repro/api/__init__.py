@@ -33,6 +33,7 @@ bit-identical on fixed seeds (``tests/test_api.py`` pins the parity).
 """
 from .registry import (
     DISPATCH_POLICIES,
+    ENGINES,
     EVENT_KINDS,
     PLANES,
     Registry,
@@ -53,17 +54,21 @@ from .spec import (
     WorkloadSpec,
 )
 from .report import RunReport
+from .results import ResultsStore, spec_key
+from .presets import PRESETS, preset
 from .planes import LivePlane, SimPlane, build_simulator, drive_orchestrator
 from .runner import SweepPoint, get_plane, run, spec_replace, sweep
 
 __all__ = [
     "Registry", "UnknownNameError",
     "DISPATCH_POLICIES", "TUNERS", "WORKLOADS", "EVENT_KINDS", "SCALERS",
-    "PLANES",
+    "PLANES", "ENGINES",
     "ClusterSpec", "WorkloadSpec", "PolicySpec", "AdmissionSpec",
     "AutoscaleSpec", "ScenarioSpec", "ExperimentSpec", "SpecError",
     "ENGINE_SEED_OFFSET",
     "RunReport",
+    "ResultsStore", "spec_key",
+    "PRESETS", "preset",
     "SimPlane", "LivePlane", "build_simulator", "drive_orchestrator",
     "run", "sweep", "spec_replace", "get_plane", "SweepPoint",
 ]

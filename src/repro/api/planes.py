@@ -3,11 +3,12 @@
 A *plane* is anything with ``name`` and
 ``run(spec, *, arrivals=None, controller=None) -> RunReport``:
 
-* :class:`SimPlane` — the queueing-level plane: the vectorized
-  :class:`repro.core.simulator.VectorSimulator` driven through the
-  recompose loop that used to be inlined in
-  ``repro.core.scenarios.run_scenario`` (scripted cluster events and/or a
-  closed autoscale loop, tuned-c -> GBP-CR -> GCA at every recomposition).
+* :class:`SimPlane` — the queueing-level plane: the spec-selected
+  simulation backend (``spec.cluster.engine``, see
+  :mod:`repro.core.engines`) driven through the recompose loop that used
+  to be inlined in ``repro.core.scenarios.run_scenario`` (scripted cluster
+  events and/or a closed autoscale loop, tuned-c -> GBP-CR -> GCA at every
+  recomposition).
 * :class:`LivePlane` — the serving plane: a
   :class:`repro.serving.Orchestrator` stepping decode rounds over mock or
   jax chain engines, driven by :func:`drive_orchestrator` (the loop that
@@ -41,7 +42,7 @@ from repro.core.scenarios import (
     _resolve_arrivals,
     compose_or_degrade,
 )
-from repro.core.simulator import VectorSimulator
+from repro.core.engines import SimEngine, make_engine
 from repro.core.workload import AZURE_STATS
 
 from .registry import PLANES, WORKLOADS
@@ -139,11 +140,12 @@ def _execute_sim(
         spec.workload.service_model, trace_stats, class_rates)
     rates, caps, keys, degraded = compose_or_degrade(
         _effective(cluster, tau), service, base_rate, rho_bar, tuner)
-    sim = VectorSimulator(rates, caps, policy=spec.policy.name,
-                          seed=spec.engine_seed(), keys=keys,
-                          classes=classes,
-                          aging_rate=spec.policy.aging_rate,
-                          admission_level=spec.admission.level)
+    sim = make_engine(spec.cluster.engine, rates, caps,
+                      policy=spec.policy.name,
+                      seed=spec.engine_seed(), keys=keys,
+                      classes=classes,
+                      aging_rate=spec.policy.aging_rate,
+                      admission_level=spec.admission.level)
     sim.add_arrivals(times, works, cls_ids)
     log: List[ScenarioLogEntry] = []
     composed_lam = base_rate          # load the current chain set targets
@@ -282,10 +284,10 @@ def _execute_precomposed(spec: ExperimentSpec, scenario: Scenario,
 
 
 def build_simulator(spec: ExperimentSpec, scenario: Optional[Scenario] = None,
-                    arrivals=None) -> VectorSimulator:
-    """A loaded-but-not-run :class:`VectorSimulator` for a pre-composed
-    spec — the benchmarks' engine-timing hook (build through the spec, time
-    only ``run_to_completion``)."""
+                    arrivals=None) -> SimEngine:
+    """A loaded-but-not-run simulation backend (``spec.cluster.engine``)
+    for a pre-composed spec — the benchmarks' engine-timing hook (build
+    through the spec, time only ``run_to_completion``)."""
     if not spec.cluster.job_servers:
         raise SpecError("cluster.job_servers",
                         "build_simulator needs a pre-composed cluster")
@@ -299,10 +301,11 @@ def build_simulator(spec: ExperimentSpec, scenario: Optional[Scenario] = None,
     rates = [m for m, _ in spec.cluster.job_servers]
     caps = [c for _, c in spec.cluster.job_servers]
     classes = list(spec.workload.classes) if spec.workload.classes else None
-    sim = VectorSimulator(rates, caps, policy=spec.policy.name,
-                          seed=spec.engine_seed(), classes=classes,
-                          aging_rate=spec.policy.aging_rate,
-                          admission_level=spec.admission.level)
+    sim = make_engine(spec.cluster.engine, rates, caps,
+                      policy=spec.policy.name,
+                      seed=spec.engine_seed(), classes=classes,
+                      aging_rate=spec.policy.aging_rate,
+                      admission_level=spec.admission.level)
     sim.add_arrivals(times, works, cls_ids)
     return sim
 
@@ -311,6 +314,12 @@ class SimPlane:
     """The queueing-level execution plane (vectorized simulator)."""
 
     name = "sim"
+
+    def store_key(self) -> Optional[str]:
+        """This plane's identity for the results store: everything that
+        determines a run's outcome beyond the spec itself (``None`` means
+        "not cacheable").  The default sim plane is stateless."""
+        return self.name
 
     def run(self, spec: ExperimentSpec, *, arrivals=None,
             controller=None) -> RunReport:
@@ -424,6 +433,10 @@ class LivePlane:
 
     name = "live"
 
+    #: the sim-only ``cluster.engine`` field does not shape live runs, so
+    #: the results store normalizes it out of this plane's cache keys
+    ignores_sim_engine = True
+
     def __init__(self, engine: str = "mock", dt: float = 0.5,
                  max_rounds: int = 100_000, prompt_tokens: int = 8,
                  tokens_per_work: float = 6.0, max_seq: int = 256,
@@ -440,6 +453,19 @@ class LivePlane:
         self.max_seq = int(max_seq)
         self.model = model
         self.params = params
+
+    def store_key(self) -> Optional[str]:
+        """Results-store identity: the constructor knobs all shape the
+        outcome, so they are part of the key.  Runs over a user-supplied
+        model/params (the jax engine) are not reproducible from the spec
+        alone — those return ``None`` and bypass the store."""
+        if self.model is not None or self.params is not None:
+            return None
+        return (f"{self.name}:engine={self.engine}:dt={self.dt:g}"
+                f":max_rounds={self.max_rounds}"
+                f":prompt_tokens={self.prompt_tokens}"
+                f":tokens_per_work={self.tokens_per_work:g}"
+                f":max_seq={self.max_seq}")
 
     def _build_orchestrator(self, spec: ExperimentSpec):
         from repro.serving import Orchestrator, OrchestratorConfig

@@ -1,0 +1,199 @@
+"""Named experiment presets: canonical scenarios as one-call specs.
+
+Every demo, benchmark and CI gate that used to hand-assemble the same
+cluster + workload + timeline now asks the :data:`PRESETS` registry for a
+ready :class:`~repro.api.spec.ExperimentSpec`::
+
+    from repro import api
+
+    spec = api.preset("failover_burst")                  # the defaults
+    spec = api.preset("overloaded_70_30", policy="jffc") # a variant leg
+    api.run(spec, plane="sim")
+
+A preset is a factory with keyword knobs for the handful of parameters an
+experiment legitimately varies (load, horizon, policy, seeds); everything
+else — server fleets, service shapes, class definitions, event timelines —
+is fixed inside the preset so two callers asking for the same name get the
+same experiment.  Register your own with zero core edits::
+
+    @api.PRESETS.register("my-scenario")
+    def my_scenario(**kw) -> api.ExperimentSpec: ...
+
+Builtin presets:
+
+* ``diurnal_autoscale`` — the autoscaling frontier setting: a day/night
+  arrival curve over a composable template-server cluster, optionally
+  closed-loop (``policy="predictive"`` / ``"target-util"`` /
+  ``"queue-gradient"`` / ``None`` for a static fleet).
+* ``overloaded_70_30`` — the multi-tenant triage setting: a 70/30
+  interactive/batch class mix offered at 1.05x composed capacity on the
+  canonical pre-composed chain set (``policy="jffc"`` for the class-blind
+  baseline, ``"priority"`` + a finite batch deadline for the full gate).
+* ``failover_burst`` — the resilience smoke: a heterogeneous 8-server
+  cluster through a failure, a 6x burst, and a recovery.
+"""
+from __future__ import annotations
+
+import random
+from typing import Optional
+
+from repro.core.scenarios import Scenario
+from repro.core.servers import Server, ServiceSpec
+from repro.core.workload import RequestClass
+
+from .registry import Registry
+from .spec import (
+    AutoscaleSpec,
+    ClusterSpec,
+    ExperimentSpec,
+    PolicySpec,
+    ScenarioSpec,
+    SpecError,
+    WorkloadSpec,
+)
+
+PRESETS = Registry("experiment preset")
+
+
+def preset(name: str, /, **overrides) -> ExperimentSpec:
+    """Build the named preset (see :data:`PRESETS`) with its knobs.
+
+    The registry name is positional-only so presets may themselves take a
+    ``name=`` knob (the spec's display name)."""
+    return PRESETS.get(name)(**overrides)
+
+
+@PRESETS.register("diurnal_autoscale")
+def diurnal_autoscale(
+    policy: Optional[str] = "predictive",
+    params: Optional[dict] = None,
+    n_servers: int = 1,
+    horizon: float = 600.0,
+    base_rate: float = 8.0,
+    amplitude: float = 0.85,
+    trace_seed: int = 3,
+    seed: int = 0,
+    engine: str = "vector",
+    name: Optional[str] = None,
+    **controller_cfg,
+) -> ExperimentSpec:
+    """Day/night sinusoid (trough ``base_rate*(1-amplitude)``, peak
+    ``base_rate*(1+amplitude)``) against a template-server cluster.
+
+    ``policy`` names the scaler (``repro.api.SCALERS``); ``None`` returns
+    the static fleet of ``n_servers`` (the peak-provisioned baseline leg).
+    ``controller_cfg`` overrides the ``AutoscaleSpec`` controller fields
+    (interval, cooldown, warmup_lag, bounds, ...); the trace is pinned by
+    ``trace_seed`` so legs differing only in policy see identical load.
+    """
+    service = ServiceSpec(num_blocks=10, block_size_gb=1.32,
+                          cache_size_gb=0.11)
+    template = Server("template", 16.0, 0.05, 0.08)
+    servers = tuple(Server(f"as{i}", template.memory_gb, template.tau_c,
+                           template.tau_p) for i in range(n_servers))
+    autoscale = None
+    if policy is not None:
+        cfg = {"interval": 5.0, "cooldown": 20.0, "warmup_lag": 10.0,
+               "min_servers": 1, "max_servers": 40,
+               "slo_response_time": 3.0, "telemetry_window": 20.0}
+        cfg.update(controller_cfg)
+        if params is None and policy == "predictive":
+            params = {"lead": 30.0, "margin": 1.2}
+        autoscale = AutoscaleSpec(policy=policy, template=template,
+                                  params=params or {}, **cfg)
+    return ExperimentSpec(
+        cluster=ClusterSpec(servers=servers, service=service, engine=engine),
+        scenario=ScenarioSpec(horizon=horizon,
+                              description="diurnal day/night curve"),
+        workload=WorkloadSpec(generator="diurnal", base_rate=base_rate,
+                              params={"amplitude": amplitude},
+                              seed=trace_seed),
+        autoscale=autoscale, seed=seed,
+        name=name or f"diurnal-{policy or 'static'}")
+
+
+#: the canonical pre-composed chain set (3 classes, 16 slots, nu = 11.2)
+#: shared by the queueing benchmarks and the multi-tenant demos
+CANONICAL_JOB_SERVERS = ((1.0, 4), (0.8, 4), (0.5, 8))
+
+
+@PRESETS.register("overloaded_70_30")
+def overloaded_70_30(
+    policy: str = "priority",
+    aging_rate: float = 0.001,
+    batch_deadline: Optional[float] = None,
+    n_jobs: int = 40_000,
+    overload: float = 1.05,
+    interactive_frac: float = 0.7,
+    seed: int = 42,
+    engine: str = "vector",
+    name: Optional[str] = None,
+) -> ExperimentSpec:
+    """Two-tenant overload triage on the canonical chain set: an
+    interactive class (tier 0, 2 s SLO) and a batch class (tier 1),
+    offered at ``overload`` x composed capacity.
+
+    Defaults give the full gate — priority scheduling with anti-starvation
+    aging and a finite batch ``deadline`` (3% of the horizon) the
+    admission gate sheds against.  ``policy="jffc"`` (class-blind FIFO
+    baseline) or ``batch_deadline=math.inf`` (priority without shedding)
+    produce the comparison legs on the identical trace (same ``seed``).
+    """
+    nu = sum(m * c for m, c in CANONICAL_JOB_SERVERS)
+    lam = overload * nu
+    horizon = n_jobs / lam
+    if batch_deadline is None:
+        batch_deadline = 0.03 * horizon
+    classes = (
+        RequestClass("interactive", "chat", 0, slo_target=2.0),
+        RequestClass("batch", "offline", 1, deadline=batch_deadline),
+    )
+    return ExperimentSpec(
+        cluster=ClusterSpec(job_servers=CANONICAL_JOB_SERVERS,
+                            engine=engine),
+        scenario=ScenarioSpec(horizon=horizon,
+                              description="70/30 overload triage"),
+        workload=WorkloadSpec(
+            generator="classed-mix",
+            class_rates=(interactive_frac * lam,
+                         (1.0 - interactive_frac) * lam),
+            classes=classes),
+        policy=PolicySpec(name=policy, aging_rate=aging_rate),
+        seed=seed, name=name or f"overloaded-70-30-{policy}")
+
+
+@PRESETS.register("failover_burst")
+def failover_burst(
+    n_servers: int = 8,
+    base_rate: float = 4.0,
+    n_target: int = 5_000,
+    burst_scale: float = 6.0,
+    cluster_seed: int = 1234,
+    seed: int = 0,
+    engine: str = "vector",
+    name: Optional[str] = None,
+) -> ExperimentSpec:
+    """Resilience smoke on a heterogeneous composable cluster: server s3
+    fails at 25% of the horizon, a ``burst_scale``x arrival burst hits at
+    50%, and the failed server rejoins at 65% — the scenario-engine gate
+    (``completed_all`` must hold through all three recompositions)."""
+    if n_servers < 4:
+        raise SpecError("failover_burst.n_servers",
+                        "must be >= 4 (the timeline fails and recovers "
+                        "server 's3')")
+    rng = random.Random(cluster_seed)
+    service = ServiceSpec(num_blocks=10, block_size_gb=1.32,
+                          cache_size_gb=0.11)
+    servers = [Server(f"s{i}", rng.uniform(15, 40), rng.uniform(0.02, 0.2),
+                      rng.uniform(0.02, 0.2)) for i in range(n_servers)]
+    horizon = n_target / base_rate
+    sc = (Scenario(horizon=horizon)
+          .fail(horizon * 0.25, "s3")
+          .burst(horizon * 0.5, horizon * 0.1, burst_scale)
+          .recover(horizon * 0.65, servers[3]))
+    return ExperimentSpec(
+        cluster=ClusterSpec(servers=tuple(servers), service=service,
+                            engine=engine),
+        scenario=ScenarioSpec.from_scenario(sc),
+        workload=WorkloadSpec(base_rate=base_rate),
+        seed=seed, name=name or "failover-burst")

@@ -138,6 +138,22 @@ for _name in _scenarios.EVENT_KINDS:
 
 
 # ---------------------------------------------------------------------------
+# Simulation backends — write-through to repro.core.engines.ENGINES, so an
+# engine registered here is constructible by ``make_engine`` and nameable in
+# ``ClusterSpec(engine=...)``.
+# ---------------------------------------------------------------------------
+
+from repro.core.engines import ENGINES as _CORE_ENGINES  # noqa: E402
+
+ENGINES = Registry(
+    "simulation engine",
+    on_register=lambda name, obj: _CORE_ENGINES.__setitem__(name, obj))
+
+for _name, _cls in _CORE_ENGINES.items():
+    ENGINES.register(_name, _cls)
+
+
+# ---------------------------------------------------------------------------
 # Autoscale policies ("scalers") — factories (template, params) -> policy.
 # ---------------------------------------------------------------------------
 

@@ -88,6 +88,22 @@ class RunReport:
         d.pop("raw")
         return _jsonable(d)
 
+    @classmethod
+    def from_dict(cls, d: dict) -> "RunReport":
+        """Rebuild a report from :meth:`to_dict` output (the results
+        store's read path).  ``raw`` is gone — it never serializes — and
+        extras hold whatever JSON survived (live handles like the
+        controller/orchestrator objects were reduced to reprs)."""
+        d = dict(d)
+        d.pop("raw", None)
+        d["per_class"] = {int(k): v
+                          for k, v in (d.get("per_class") or {}).items()}
+        known = {f.name for f in dataclasses.fields(cls) if f.name != "raw"}
+        unknown = set(d) - known
+        if unknown:
+            raise ValueError(f"unknown RunReport fields: {sorted(unknown)}")
+        return cls(raw=None, **d)
+
     def diff(self, other: "RunReport",
              rel: float = 1e-9) -> Dict[str, Tuple[Any, Any]]:
         """Fields where two reports disagree: ``{field: (self, other)}``.
@@ -141,6 +157,10 @@ def report_from_scenario_result(spec, res, plane: str = "sim",
                                 extras: Optional[dict] = None) -> RunReport:
     """Fold a sim-plane ``ScenarioResult`` into the unified schema."""
     sim = res.result
+    response = _quantile_stats(sim.response_times)
+    waiting = _quantile_stats(sim.waiting_times)
+    per_class = _normalize_per_class(res.per_class(response, waiting),
+                                     spec.workload.classes)
     return RunReport(
         plane=plane,
         name=spec.name,
@@ -150,10 +170,9 @@ def report_from_scenario_result(spec, res, plane: str = "sim",
         n_failed=0,
         completed_all=res.completed_all,
         sim_time=sim.sim_time,
-        response=_quantile_stats(sim.response_times),
-        waiting=_quantile_stats(sim.waiting_times),
-        per_class=_normalize_per_class(res.per_class(),
-                                       spec.workload.classes),
+        response=response,
+        waiting=waiting,
+        per_class=per_class,
         events=[dataclasses.asdict(e) for e in res.log],
         reconfigurations=res.reconfigurations,
         restarts=res.restarts,

@@ -1,0 +1,114 @@
+"""On-disk results store: never run the same experiment twice.
+
+A :class:`ResultsStore` caches every :class:`~repro.api.report.RunReport`
+under a content key — the SHA-256 of the spec's canonical JSON plus the
+plane and engine names — so ``repro.api.run(spec, store=store)`` returns
+the cached report when an identical (spec, plane, engine) has already run,
+and any mutation of the spec (one field, one seed, one event) misses and
+re-executes.  Sweeps over large grids and CI re-runs pay only for the
+points that changed.
+
+What a cache *hit* returns is the report as serialized: ``raw`` (the
+plane-native result object) is ``None`` and live handles in ``extras``
+(controller, orchestrator) were reduced to their reprs — everything in the
+unified schema (quantiles, per-class stats, event log, cost report,
+counters) survives the round trip.  Runs whose outcome is not a function
+of (spec, plane configuration, engine) alone bypass the store entirely:
+the ``arrivals=`` / ``controller=`` escape hatches, planes without a
+``store_key``, and live planes carrying a user-supplied model.
+
+    >>> store = ResultsStore("results/cache")
+    >>> api.run(spec, store=store)      # executes, saves
+    >>> api.run(spec, store=store)      # cache hit: no simulation
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import tempfile
+from typing import Optional
+
+from .report import RunReport
+from .spec import ExperimentSpec
+
+#: bump when the stored record layout changes (stale versions miss)
+STORE_VERSION = 1
+
+
+def spec_key(spec: ExperimentSpec, plane: str, engine: str) -> str:
+    """The content key: SHA-256 over the spec's canonical (sorted-keys)
+    JSON, the plane's store key (its name plus any outcome-shaping plane
+    configuration — see ``SimPlane.store_key`` / ``LivePlane.store_key``),
+    and the engine name."""
+    h = hashlib.sha256()
+    h.update(spec.to_json().encode("utf-8"))
+    h.update(b"\x00")
+    h.update(plane.encode("utf-8"))
+    h.update(b"\x00")
+    h.update(engine.encode("utf-8"))
+    return h.hexdigest()
+
+
+class ResultsStore:
+    """A directory of ``<key>.json`` records, one per completed run."""
+
+    def __init__(self, path: str):
+        self.path = str(path)
+        os.makedirs(self.path, exist_ok=True)
+        self.hits = 0
+        self.misses = 0
+
+    def _file(self, key: str) -> str:
+        return os.path.join(self.path, f"{key}.json")
+
+    # -- primitive interface -------------------------------------------------
+    def contains(self, spec: ExperimentSpec, plane: str,
+                 engine: Optional[str] = None) -> bool:
+        key = spec_key(spec, plane, engine or spec.cluster.engine)
+        return os.path.exists(self._file(key))
+
+    def load(self, spec: ExperimentSpec, plane: str,
+             engine: Optional[str] = None) -> Optional[RunReport]:
+        """The cached report for (spec, plane, engine), or ``None``."""
+        key = spec_key(spec, plane, engine or spec.cluster.engine)
+        try:
+            with open(self._file(key)) as f:
+                record = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            self.misses += 1
+            return None
+        if record.get("version") != STORE_VERSION:
+            self.misses += 1
+            return None
+        self.hits += 1
+        return RunReport.from_dict(record["report"])
+
+    def save(self, spec: ExperimentSpec, plane: str,
+             report: RunReport, engine: Optional[str] = None) -> str:
+        """Persist one report; returns its key.  Writes are atomic
+        (tempfile + rename), so a crashed run never leaves a half-record
+        that would poison later hits."""
+        key = spec_key(spec, plane, engine or spec.cluster.engine)
+        record = {
+            "version": STORE_VERSION,
+            "key": key,
+            "plane": plane,
+            "engine": engine or spec.cluster.engine,
+            "spec": spec.to_dict(),
+            "report": report.to_dict(),
+        }
+        fd, tmp = tempfile.mkstemp(dir=self.path, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(record, f, indent=1, default=float)
+            os.replace(tmp, self._file(key))
+        except BaseException:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+            raise
+        return key
+
+    def __len__(self) -> int:
+        return sum(1 for name in os.listdir(self.path)
+                   if name.endswith(".json"))

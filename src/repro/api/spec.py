@@ -36,7 +36,7 @@ from repro.core.workload import RequestClass, TraceStats
 
 from . import workloads as _workloads  # noqa: F401  (registers builtins)
 from .registry import (
-    DISPATCH_POLICIES, SCALERS, TUNERS, UnknownNameError, WORKLOADS,
+    DISPATCH_POLICIES, ENGINES, SCALERS, TUNERS, UnknownNameError, WORKLOADS,
 )
 
 #: engine RNG = spec.seed + this (see the module docstring's seed rule)
@@ -224,13 +224,20 @@ class ClusterSpec:
     """The serving hardware: either physical ``servers`` composed through
     the paper's tuned-c -> GBP-CR -> GCA pipeline, or pre-composed
     ``job_servers`` as ``(rate, capacity)`` pairs (micro-benchmarks and
-    queueing studies that start from a known chain set)."""
+    queueing studies that start from a known chain set).
+
+    ``engine`` names the simulation backend the sim plane drives
+    (``repro.api.ENGINES``): ``"vector"`` — the interpreter event loop,
+    the parity anchor — or ``"batched"`` — the compiled batched-horizon
+    backend (bit-identical results, faster where its compiled paths
+    apply).  The live plane ignores it."""
 
     servers: Tuple[Server, ...] = ()
     service: Optional[ServiceSpec] = None
     job_servers: Tuple[Tuple[float, int], ...] = ()
     rho_bar: float = 0.7
     tuner: str = "bound-lower"
+    engine: str = "vector"
 
     def __post_init__(self):
         object.__setattr__(self, "servers", tuple(self.servers))
@@ -256,6 +263,10 @@ class ClusterSpec:
             TUNERS.validate(self.tuner)
         except UnknownNameError as e:
             raise SpecError("cluster.tuner", str(e)) from None
+        try:
+            ENGINES.validate(self.engine)
+        except UnknownNameError as e:
+            raise SpecError("cluster.engine", str(e)) from None
 
     def to_dict(self) -> dict:
         return {
@@ -265,12 +276,14 @@ class ClusterSpec:
             "job_servers": [list(p) for p in self.job_servers],
             "rho_bar": self.rho_bar,
             "tuner": self.tuner,
+            "engine": self.engine,
         }
 
     @classmethod
     def from_dict(cls, d) -> "ClusterSpec":
         d = _take(d, "cluster",
-                  ("servers", "service", "job_servers", "rho_bar", "tuner"))
+                  ("servers", "service", "job_servers", "rho_bar", "tuner",
+                   "engine"))
         servers = d.get("servers", [])
         if not isinstance(servers, (list, tuple)):
             raise SpecError("cluster.servers", "expected a list")
@@ -292,7 +305,8 @@ class ClusterSpec:
             else _service_from_dict(service, "cluster.service"),
             job_servers=tuple(js),
             rho_bar=_dec_float(d.get("rho_bar", 0.7), "cluster.rho_bar"),
-            tuner=_dec_str(d.get("tuner", "bound-lower"), "cluster.tuner"))
+            tuner=_dec_str(d.get("tuner", "bound-lower"), "cluster.tuner"),
+            engine=_dec_str(d.get("engine", "vector"), "cluster.engine"))
 
 
 @dataclasses.dataclass(frozen=True)

@@ -23,6 +23,10 @@ from .queueing import (
     is_stable,
     total_rate,
 )
+from .engines import (
+    BatchedEngine, ENGINES, EngineCore, POLICY_KERNELS, SimEngine,
+    VectorEngine, engine_names, make_engine,
+)
 from .simulator import (
     Job, SimResult, VectorSimulator, VECTORIZED_POLICIES,
     simulate, simulate_policy_name, simulate_vectorized, poisson_arrivals,
@@ -54,6 +58,8 @@ __all__ = [
     "Job", "SimResult", "VectorSimulator", "VECTORIZED_POLICIES",
     "simulate", "simulate_policy_name", "simulate_vectorized",
     "poisson_arrivals",
+    "SimEngine", "EngineCore", "VectorEngine", "BatchedEngine", "ENGINES",
+    "POLICY_KERNELS", "engine_names", "make_engine",
     "TuningResult", "tune_surrogate", "tune_bound", "compose",
     "compose_best_effort",
     "Scenario", "ScenarioEvent", "ScenarioResult", "ScenarioLogEntry",

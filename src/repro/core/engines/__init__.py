@@ -1,0 +1,119 @@
+"""Pluggable simulation backends behind one :class:`SimEngine` protocol.
+
+The simulator splits into three layers:
+
+* **event core** (:mod:`repro.core.engines.core`) — arrival arrays, the
+  capacity-sized departure heap, queue buffers, mid-run
+  :meth:`~repro.core.engines.core.EngineCore.reconfigure` with in-flight
+  carry-over, telemetry taps, result construction: shared by every backend.
+* **policy kernels** (:mod:`repro.core.engines.kernels`) — stateless
+  array-in/array-out dispatch decisions (jffc / jffs / random / jsq /
+  sa-jsq / sed / jiq / priority), bit-identical to the scalar policies.
+* **backends** — :class:`VectorEngine` (``engine="vector"``: the
+  interpreter event loop, the parity anchor) and :class:`BatchedEngine`
+  (``engine="batched"``: compiled batched-horizon execution with a
+  ``jax.lax.scan`` JFFC kernel + vmap-over-seeds grid runner, interpreter
+  fallback elsewhere).
+
+Select a backend by name through :data:`ENGINES` / :func:`make_engine`,
+or declaratively via ``ClusterSpec(engine=...)`` in the experiment API.
+Every backend produces bit-identical :class:`SimResult`\\ s on fixed seeds
+— the cross-backend parity suite (``tests/test_engines.py``) enforces it.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence, Tuple, Type, Union
+
+import numpy as np
+
+try:                                     # Protocol: py3.8+
+    from typing import Protocol, runtime_checkable
+except ImportError:                      # pragma: no cover
+    Protocol = object
+
+    def runtime_checkable(cls):
+        return cls
+
+from .result import SimResult, _quantile_stats
+from .kernels import (
+    CENTRAL_QUEUE_POLICIES,
+    POLICY_KERNELS,
+    VECTORIZED_POLICIES,
+    get_kernel,
+)
+from .core import EngineCore
+from .vector import VectorEngine
+from .batched import BatchedEngine, jax_available, run_seed_grid
+
+
+@runtime_checkable
+class SimEngine(Protocol):
+    """What an execution plane needs from a simulation backend.
+
+    Any object with this surface plugs into ``SimPlane`` / the scenario
+    recompose loop / the autoscale telemetry sampler; :class:`EngineCore`
+    implements everything except the event loops.
+    """
+
+    policy: str
+    now: float
+    n: int
+
+    def add_arrivals(self, times, works=None, classes=None) -> None: ...
+
+    def run_until(self, until: float = ...) -> "SimEngine": ...
+
+    def run_to_completion(self) -> "SimEngine": ...
+
+    def reconfigure(self, rates, caps, at_time=None, keys=None,
+                    mode: str = "restart") -> int: ...
+
+    def result(self, warmup_fraction: float = ...) -> SimResult: ...
+
+    # telemetry taps (autoscale control plane)
+    @property
+    def total_capacity(self) -> int: ...
+
+    def completions_since(self, cursor: int): ...
+
+    def queue_len(self, at: Optional[float] = None) -> int: ...
+
+
+#: name -> backend class; the canonical home (the ``repro.api.ENGINES``
+#: registry writes through to this dict, mirroring POLICIES / TUNERS)
+ENGINES: Dict[str, Type[EngineCore]] = {
+    "vector": VectorEngine,
+    "batched": BatchedEngine,
+}
+
+#: the default backend (the pre-refactor ``VectorSimulator`` behavior)
+DEFAULT_ENGINE = "vector"
+
+
+def engine_names() -> Tuple[str, ...]:
+    return tuple(sorted(ENGINES))
+
+
+def make_engine(engine: Union[str, None] = None, *args, **kwargs):
+    """Construct a backend by registry name (``None`` = the default).
+
+    Positional/keyword arguments are the shared :class:`EngineCore`
+    constructor surface: ``(rates, caps, policy=, seed=, keys=, classes=,
+    aging_rate=, admission_level=)``.
+    """
+    name = DEFAULT_ENGINE if engine is None else engine
+    try:
+        cls = ENGINES[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown simulation engine {name!r} "
+            f"(known: {', '.join(engine_names())})") from None
+    return cls(*args, **kwargs)
+
+
+__all__ = [
+    "SimEngine", "EngineCore", "VectorEngine", "BatchedEngine",
+    "SimResult", "ENGINES", "DEFAULT_ENGINE", "engine_names", "make_engine",
+    "POLICY_KERNELS", "VECTORIZED_POLICIES", "CENTRAL_QUEUE_POLICIES",
+    "get_kernel", "jax_available", "run_seed_grid", "_quantile_stats",
+]

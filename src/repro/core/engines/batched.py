@@ -1,0 +1,237 @@
+"""The compiled batched-horizon backend (``engine="batched"``).
+
+:class:`BatchedEngine` advances the system a horizon of events per step
+instead of one event at a time: for the JFFC central-queue policy the
+whole remaining trace is one horizon, executed by the compiled
+``jax.lax.scan`` slot-race kernel (:mod:`repro.core.engines.jax_scan`) —
+the per-job recurrence runs inside XLA and the epilogue reconstructs
+per-job starts/finishes and the completion order with numpy-vectorized
+``lexsort``/slice assignments rather than per-event Python.  Measured on
+the shared container this is ~3x the interpreter backend on a 100k-job
+trace and, ``vmap``-ed over seeds (:func:`run_seed_grid`), ~5x a
+sequential 16-seed replay.
+
+**Parity is non-negotiable**: outputs are bit-identical to
+``engine="vector"`` (and hence the scalar oracle) on fixed seeds.  Where
+the compiled horizon path does not apply — RNG-consuming or priority
+policies, paused runs (``run_until`` with a finite horizon), explicit
+overflow queues left by :meth:`reconfigure`, pending drains, jax absent —
+the engine *falls back to the interpreter loops it inherits*, so every
+policy and scenario feature keeps working on this backend with identical
+results, just without the speedup.
+
+The fallback is not an afterthought: mid-run reconfiguration works by
+pausing (interpreter), swapping chains (shared core), then resuming — and
+the resumed stretch re-enters the compiled path when the overflow queue
+has drained back into the virtual queue.
+"""
+from __future__ import annotations
+
+import math
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from .result import SimResult
+from .vector import VectorEngine
+
+_INF = math.inf
+
+
+def _jax_available() -> bool:
+    from . import jax_scan
+
+    return jax_scan.HAS_JAX
+
+
+class BatchedEngine(VectorEngine):
+    """Batched-horizon backend: compiled JFFC fast path, interpreter
+    fallback for everything else — bit-identical either way.
+
+    Ingest is **array-native**: a single ``(times, works[, classes])``
+    column-array batch is kept as float64 arrays end to end — no
+    per-element Python lists on the way in, vectorized slice-assignment of
+    the scan outputs on the way out, and zero-copy ``result()``
+    construction.  Appending further batches or feeding the tuple-list
+    form falls back to the shared list representation (the interpreter
+    loops run bit-identically over either, since element reads of a
+    float64 array produce the same IEEE doubles)."""
+
+    ENGINE_NAME = "batched"
+
+    #: smallest remaining-trace size worth a compiled dispatch (below it
+    #: the jit call overhead beats the interpreter's ~1 µs/job)
+    scan_min_jobs = 2048
+
+    def add_arrivals(self, times, works=None, classes=None):
+        if works is None or self.n or len(times) == 0:
+            # tuple-list form, an appended batch, or empty: the shared
+            # list path (first convert any array-native state back)
+            self._materialize_lists()
+            return super().add_arrivals(times, works, classes)
+        ta = np.ascontiguousarray(np.asarray(times, dtype=np.float64))
+        wa = np.ascontiguousarray(np.asarray(works, dtype=np.float64))
+        if len(ta) != len(wa):
+            raise ValueError("times and works must have equal length")
+        if classes is None:
+            ca = np.zeros(len(ta), dtype=np.int64)
+        else:
+            ca = np.asarray(classes, dtype=np.int64)
+            if len(ca) != len(ta):
+                raise ValueError("classes must match times in length")
+            if len(ca) and (ca.min() < 0 or ca.max() >= len(self.classes)):
+                raise ValueError(
+                    f"class indices must be in [0, {len(self.classes)})")
+        if len(ta) > 1 and np.any(np.diff(ta) < 0):
+            raise ValueError("arrival times must be non-decreasing")
+        self.times = ta
+        self.works = wa
+        self.cls = ca
+        self.st = np.zeros(len(ta), dtype=np.float64)
+        self.fin = np.zeros(len(ta), dtype=np.float64)
+        self._times_np = ta
+        self._works_np = wa
+        self.n = len(ta)
+
+    def _materialize_lists(self) -> None:
+        """Convert array-native state back to the shared list
+        representation (required only to append further batches)."""
+        if isinstance(self.times, np.ndarray):
+            self.times = self.times.tolist()
+            self.works = self.works.tolist()
+            self.cls = self.cls.tolist()
+            self.st = self.st.tolist()
+            self.fin = self.fin.tolist()
+
+    def _scan_eligible(self) -> bool:
+        return (self.policy == "jffc"
+                and self.n - self.i >= self.scan_min_jobs
+                and self.qh >= len(self.queue)        # no overflow queue
+                and not self._drain_pending
+                and self.total_capacity > 0
+                and _jax_available())
+
+    def run_until(self, until: float = _INF):
+        if until == _INF and self._scan_eligible():
+            self._run_scan()
+            return self
+        return super().run_until(until)
+
+    def _arrival_arrays(self):
+        """Remaining (times, works) as float64 arrays (zero-copy for the
+        array-native ingest, cached for a single list batch)."""
+        i0 = self.i
+        if self._times_np is not None and len(self._times_np) == self.n:
+            times = self._times_np[i0:]
+        else:
+            times = np.asarray(self.times[i0:], dtype=np.float64)
+        if self._works_np is not None and len(self._works_np) == self.n:
+            works = self._works_np[i0:]
+        else:
+            works = np.asarray(self.works[i0:], dtype=np.float64)
+        return times, works
+
+    def _run_scan(self) -> None:
+        """The compiled horizon: every remaining event in one pass."""
+        from . import jax_scan
+
+        i0 = self.i
+        n_new = self.n - i0
+        times, works = self._arrival_arrays()
+        slot_rate, slot_prio, slot_chain = jax_scan.slot_layout(
+            self.rates, self.caps, self.chain_order)
+        C = len(slot_rate)
+        # seed the slot state from the in-flight departure heap (resume
+        # support): each entry occupies one slot of its chain; idle slots
+        # have been free since forever
+        f0 = np.full(C, -np.inf)
+        seq0 = np.zeros(C)
+        free_slots: List[List[int]] = [[] for _ in range(self.K)]
+        for s_idx in range(C - 1, -1, -1):
+            free_slots[slot_chain[s_idx]].append(s_idx)
+        for (t, s, jid, k) in self.heap:
+            slot = free_slots[k].pop()
+            f0[slot] = t
+            seq0[slot] = float(s)
+            self.fin[jid] = t            # completes as already scheduled
+        starts, finishes = jax_scan.run_jffc_scan(
+            times, works, slot_rate, slot_prio, f0, seq0, float(self.seq))
+        if isinstance(self.st, np.ndarray):
+            self.st[i0:] = starts             # vectorized slice assignment
+            self.fin[i0:] = finishes
+        else:
+            self.st[i0:] = starts.tolist()
+            self.fin[i0:] = finishes.tolist()
+        # completion order = the departure heap's (finish, seq) ordering,
+        # reconstructed over in-flight + new jobs in one lexsort
+        pre = self.heap
+        all_fin = np.concatenate(
+            [np.asarray([e[0] for e in pre]), finishes])
+        all_seq = np.concatenate(
+            [np.asarray([float(e[1]) for e in pre]),
+             self.seq + np.arange(n_new, dtype=np.float64)])
+        all_jid = np.concatenate(
+            [np.asarray([e[2] for e in pre], dtype=np.int64),
+             np.arange(i0, self.n, dtype=np.int64)])
+        order = np.lexsort((all_seq, all_fin))
+        self.comp.extend(all_jid[order].tolist())
+        if len(all_fin):
+            self.now = max(self.now, float(all_fin.max()))
+        self.heap = []
+        self.running = [0] * self.K
+        self.total_free = sum(self.caps)
+        self.i = self.n
+        self.seq += n_new
+
+
+def run_seed_grid(
+    rates: Sequence[float],
+    caps: Sequence[int],
+    times: np.ndarray,
+    works: np.ndarray,
+    warmup_fraction: float = 0.1,
+) -> List[SimResult]:
+    """Execute a whole seed grid in one compiled pass (JFFC, fresh state).
+
+    ``times``/``works`` are (S, n) stacks — one row per seed — as produced
+    by the batched workload generators.  Returns one :class:`SimResult`
+    per row, each bit-identical to running that row through any engine
+    alone.  This is the ``repro.api.sweep(..., engine="batched")`` fast
+    path; callers must check :func:`jax_available` first.
+    """
+    from . import jax_scan
+
+    chain_order = sorted(range(len(rates)),
+                         key=lambda k: (-float(rates[k]), k))
+    slot_rate, slot_prio, _ = jax_scan.slot_layout(rates, caps, chain_order)
+    times = np.asarray(times, dtype=np.float64)
+    works = np.asarray(works, dtype=np.float64)
+    starts, finishes = jax_scan.run_jffc_scan_batch(
+        times, works, slot_rate, slot_prio)
+    S, n = times.shape
+    # completion order for every seed in one call: a stable argsort over
+    # finishes tie-breaks by position = jid, exactly the departure heap's
+    # (finish, seq) order (seq is monotone in jid for JFFC)
+    orders = np.argsort(finishes, axis=1, kind="stable")
+    out: List[SimResult] = []
+    for r in range(S):
+        fin = finishes[r]
+        order = orders[r]
+        skip = int(n * warmup_fraction)
+        kept = order[skip:]
+        resp = fin[kept] - times[r][kept]
+        wait = starts[r][kept] - times[r][kept]
+        serv = fin[kept] - starts[r][kept]
+        out.append(SimResult(
+            resp, wait, serv, len(kept),
+            float(fin.max()) if n else 0.0,
+            class_ids=np.zeros(len(kept), dtype=np.int64) if len(kept)
+            else np.empty(0, dtype=np.int64),
+            n_rejected=0,
+            rejected_class_ids=np.empty(0, dtype=np.int64)))
+    return out
+
+
+def jax_available() -> bool:
+    """Whether the compiled fast paths can run in this environment."""
+    return _jax_available()

@@ -1,0 +1,494 @@
+"""The event core every simulation backend shares.
+
+:class:`EngineCore` owns the state no backend can do without — flat arrival
+arrays, the capacity-sized departure heap, central/dedicated queue buffers,
+chain bookkeeping, the telemetry taps the autoscale control plane samples,
+mid-run :meth:`reconfigure` with in-flight carry-over, and
+:meth:`result` construction — while the *event-advancing loops* live in the
+backends (:mod:`repro.core.engines.vector`,
+:mod:`repro.core.engines.batched`).  Dispatch decisions go through the
+stateless policy kernels in :mod:`repro.core.engines.kernels`, so a backend
+never re-implements a policy.
+
+Design (vs. the scalar loop): arrivals are two flat arrays consumed by a
+cursor — never heap events; in-flight jobs live in a heap of at most
+``sum(caps)`` entries ``(finish, seq, jid, chain)``; the JFFC central
+queue is *virtual* — during saturation every arrival queues and pulls are
+FIFO, so the queue is just the arrival-cursor range and a departure pulls
+the cursor job directly (zero bookkeeping per queued arrival).  Per-job
+state (start, finish) is kept in flat lists indexed by job id and turned
+into numpy arrays only once, in :meth:`EngineCore.result`.
+
+Event ordering matches the scalar engine exactly: ties between an arrival
+and a departure at the same instant resolve to the arrival (the scalar
+loop pushes all arrivals with lower sequence numbers), and simultaneous
+departures resolve in scheduling order (monotone ``seq``).  Service time
+of job ``j`` on chain ``k`` is computed as ``works[j] / rates[k]`` — the
+same IEEE-754 double operations as the scalar loop — so per-job response
+times agree bit for bit.
+
+``run_until(t)`` processes every event with time strictly below ``t`` and
+pauses, allowing :meth:`reconfigure` to change the chain set mid-run (the
+scenario engine's server failure / autoscale hook).  On reconfiguration,
+chains are matched to the new composition by physical identity (``keys``)
+when given, else by ``(rate, capacity)``; in-flight jobs on surviving
+chains continue undisturbed, jobs on retired chains are re-dispatched
+from scratch (context re-prefill semantics, as in
+``Orchestrator._recompose_preserving``).
+"""
+from __future__ import annotations
+
+import bisect
+import heapq
+import math
+import random
+from typing import List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from ..workload import DEFAULT_CLASS, RequestClass
+from .kernels import (
+    POLICY_KERNELS,
+    get_kernel,
+)
+from .result import SimResult
+
+_INF = math.inf
+
+
+class EngineCore:
+    """Shared state + bookkeeping of the array-based simulation backends.
+
+    Subclasses provide the event loops (``_run_jffc`` / ``_run_dedicated``
+    / ``_run_priority``); everything else — arrivals, queues, the
+    departure heap, reconfiguration, telemetry taps, results — lives here
+    and is therefore identical across backends by construction.
+    """
+
+    #: registry name of the backend (subclasses set it)
+    ENGINE_NAME = "core"
+
+    def __init__(
+        self,
+        rates: Sequence[float],
+        caps: Sequence[int],
+        policy: str = "jffc",
+        seed: int = 0,
+        keys: Optional[Sequence] = None,
+        classes: Optional[Sequence[RequestClass]] = None,
+        aging_rate: float = 0.0,
+        admission_level: float = 1.0,
+    ):
+        if policy not in POLICY_KERNELS:
+            get_kernel(policy)          # raises the canonical ValueError
+        if len(rates) != len(caps):
+            raise ValueError("rates and caps must have equal length")
+        if any(r <= 0 for r in rates) or any(c < 0 for c in caps):
+            raise ValueError("rates must be positive, caps non-negative")
+        self.policy = policy
+        self._kernel = get_kernel(policy)
+        self.rng = random.Random(seed)
+        # multi-tenant request classes (single default class = legacy path)
+        self.classes = list(classes) if classes else [DEFAULT_CLASS]
+        self._tiers = [c.priority for c in self.classes]
+        self._deadlines = [c.deadline for c in self.classes]
+        self.aging_rate = float(aging_rate)
+        self.admission_level = float(admission_level)
+        self._set_chains([float(r) for r in rates], [int(c) for c in caps])
+        # optional physical identities (e.g. server-id tuples) used by
+        # reconfigure() to decide which chains survive a recomposition
+        self.keys = list(keys) if keys is not None else None
+        # arrival streams
+        self.times: List[float] = []
+        self.works: List[float] = []
+        self.cls: List[int] = []         # per-job class index (flat)
+        self.n = 0
+        self.i = 0                       # next-arrival cursor
+        # per-job state (flat, indexed by jid)
+        self.st: List[float] = []        # start (last dispatch) time
+        self.fin: List[float] = []       # finish time
+        self.comp: List[int] = []        # jids in completion order
+        self.rejected: List[int] = []    # jids shed by the admission gate
+        # in-flight departures: (finish, seq, jid, chain) — the chain rides
+        # in the tuple so the hot loops never touch a per-job chain array.
+        self.heap: List[Tuple[float, int, int, int]] = []
+        self.seq = 0
+        self.queue: List[int] = []       # central FIFO (jffc)
+        self.qh = 0
+        self.pq: List[Tuple[float, int]] = []   # (kappa, jid) priority queue
+        self.dq: List[List[int]] = [[] for _ in caps]   # dedicated FIFOs
+        self.dqh: List[int] = [0] * len(caps)
+        self.now = 0.0
+        self.reconfigurations = 0
+        self.restarts = 0                # jobs re-dispatched by reconfigure()
+        self.drains = 0                  # jobs drained out-of-band (mode=drain)
+        self._drain_horizon = 0.0        # latest out-of-band completion
+        # committed jobs draining out-of-band: (scheduled finish, jid) heap,
+        # merged into the completion list when the clock passes their finish
+        # (at run_until pause boundaries), so ``comp`` stays time-ordered at
+        # tick granularity and telemetry never sees a future completion
+        self._drain_pending: List[Tuple[float, int]] = []
+        self._times_np: Optional[np.ndarray] = None
+        self._works_np: Optional[np.ndarray] = None
+
+    # -- chain bookkeeping ---------------------------------------------------
+    def _set_chains(self, rates: List[float], caps: List[int]) -> None:
+        self.rates = rates
+        self.caps = caps
+        self.K = len(rates)
+        # scan order for "fastest free chain": descending rate, then index —
+        # matches max(free, key=rates.__getitem__) of the scalar policies.
+        self.chain_order = sorted(range(self.K), key=lambda k: (-rates[k], k))
+        self.running = [0] * self.K
+        self.total_free = sum(caps)
+        self._nu = sum(r * c for r, c in zip(rates, caps))
+
+    @property
+    def in_flight(self) -> int:
+        return len(self.heap)
+
+    @property
+    def n_rejected(self) -> int:
+        return len(self.rejected)
+
+    # -- multi-tenant helpers --------------------------------------------------
+    def _kappa(self, jid: int) -> float:
+        """Static priority key of a queued job: ``tier + aging * arrival``
+        (order-equivalent to the aged priority ``tier - aging * waited``,
+        so the heap never needs re-keying as time passes)."""
+        return self._tiers[self.cls[jid]] + self.aging_rate * self.times[jid]
+
+    def set_admission_level(self, level: float) -> None:
+        """Autoscaler throttle: scales every sheddable class's deadline.
+        ``1.0`` = nominal admission, ``0.0`` = defer/shed all best-effort
+        work that would have to queue."""
+        self.admission_level = max(0.0, float(level))
+
+    # -- telemetry taps (autoscale control plane) ------------------------------
+    # ``run_until`` pauses the engine at a control-tick boundary; these
+    # read-only views let :class:`repro.autoscale.Telemetry` sample the paused
+    # state without touching engine internals.  They live on the core so
+    # every backend exposes the identical control surface.
+
+    @property
+    def total_capacity(self) -> int:
+        """Concurrent service slots across all composed chains."""
+        return sum(self.caps)
+
+    def completions_since(self, cursor: int) -> Tuple[int, List[int]]:
+        """Jids completed since a previous cursor; returns (new_cursor, jids).
+
+        ``cursor`` is an index into the completion-order list — pass 0 the
+        first time and the returned cursor thereafter.
+        """
+        jids = self.comp[cursor:]
+        return len(self.comp), jids
+
+    def response_time_of(self, jid: int) -> float:
+        return self.fin[jid] - self.times[jid]
+
+    def queue_len(self, at: Optional[float] = None) -> int:
+        """Queued (arrived, unstarted) jobs; ``at`` overrides the frontier
+        time — pass the pause boundary after ``run_until(t)`` so arrivals
+        between the last processed event and ``t`` count as queued."""
+        t = self.now if at is None else max(self.now, at)
+        central = len(self.queue) - self.qh + len(self.pq)
+        if self.policy in ("jffc", "priority"):
+            # arrived-but-unstarted jobs of the virtual queue (see _run_jffc)
+            # resp. arrivals the paused priority loop has not processed yet
+            central += max(0, bisect.bisect_right(self.times, t) - self.i)
+        dedicated = sum(len(q) - h for q, h in zip(self.dq, self.dqh))
+        return central + dedicated
+
+    # -- arrivals --------------------------------------------------------------
+    def add_arrivals(
+        self,
+        times: Union[Sequence[float], np.ndarray, Sequence[Tuple]],
+        works: Optional[Union[Sequence[float], np.ndarray]] = None,
+        classes: Optional[Union[Sequence[int], np.ndarray]] = None,
+    ) -> None:
+        """Append an arrival batch.
+
+        Either ``(times, works[, classes])`` arrays, or a single list of
+        ``(time, work, in_tokens, out_tokens[, cls])`` tuples as consumed by
+        the scalar :func:`repro.core.simulator.simulate` (token counts are
+        ignored — the array engines model service as ``work / mu``).
+        ``classes`` are per-job indices into the ``classes`` list given at
+        construction (default: class 0).  Times must be non-decreasing and
+        not precede already-processed arrivals.
+        """
+        if works is None:
+            if len(times) == 0:
+                return
+            cols = list(zip(*times))                   # tuple-list form
+            tl, wl = list(cols[0]), list(cols[1])
+            cl = [int(c) for c in cols[4]] if len(cols) > 4 else None
+        else:
+            tl = np.asarray(times, dtype=np.float64).tolist()
+            wl = np.asarray(works, dtype=np.float64).tolist()
+            cl = None if classes is None else \
+                np.asarray(classes, dtype=np.int64).tolist()
+        if len(tl) != len(wl):
+            raise ValueError("times and works must have equal length")
+        if cl is None:
+            cl = [0] * len(tl)
+        if len(cl) != len(tl):
+            raise ValueError("classes must match times in length")
+        if cl and (min(cl) < 0 or max(cl) >= len(self.classes)):
+            raise ValueError(
+                f"class indices must be in [0, {len(self.classes)})")
+        ta = np.asarray(tl, dtype=np.float64)
+        if len(ta) > 1 and np.any(np.diff(ta) < 0):
+            raise ValueError("arrival times must be non-decreasing")
+        if tl and self.times and tl[0] < self.times[-1]:
+            raise ValueError("arrival batch precedes existing arrivals")
+        if not self.times:                              # cache first batch
+            self._times_np = ta
+            self._works_np = np.asarray(wl, dtype=np.float64)
+        else:
+            self._times_np = None
+            self._works_np = None
+        self.times.extend(tl)
+        self.works.extend(wl)
+        self.cls.extend(cl)
+        m = len(tl)
+        self.st.extend([0.0] * m)
+        self.fin.extend([0.0] * m)
+        self.n += m
+
+    # -- dispatch helpers ------------------------------------------------------
+    def _fastest_free(self) -> int:
+        for k in self.chain_order:
+            if self.running[k] < self.caps[k]:
+                return k
+        raise AssertionError("no free chain (caller must check total_free)")
+
+    def _choose(self, ded_fastest: int) -> int:
+        """Dedicated-queue policy choice for one arrival, delegated to the
+        stateless kernel bound at construction (kernels replay the scalar
+        policies' exact float operations and RNG call sequences, so any
+        backend using them stays bit-identical to the oracle)."""
+        return self._kernel(self.rng, self.rates, self.caps, self.running,
+                            self.chain_order, self.total_free, self.dq,
+                            self.dqh)
+
+    def _start(self, jid: int, k: int, t: float) -> None:
+        self.running[k] += 1
+        self.total_free -= 1
+        self.st[jid] = t
+        heapq.heappush(self.heap, (t + self.works[jid] / self.rates[k],
+                                   self.seq, jid, k))
+        self.seq += 1
+
+    # -- main loops (the backend contract) -------------------------------------
+    def _run_jffc(self, until: float) -> None:
+        raise NotImplementedError
+
+    def _run_dedicated(self, until: float) -> None:
+        raise NotImplementedError
+
+    def _run_priority(self, until: float) -> None:
+        raise NotImplementedError
+
+    def run_until(self, until: float = _INF) -> "EngineCore":
+        """Process every event with time strictly below ``until``."""
+        if self.policy == "jffc":
+            self._run_jffc(until)
+        elif self.policy == "priority":
+            self._run_priority(until)
+        else:
+            self._run_dedicated(until)
+        if self._drain_pending:
+            # surface out-of-band drain completions the clock has passed
+            dp = self._drain_pending
+            while dp and dp[0][0] < until:
+                self.comp.append(heapq.heappop(dp)[1])
+        return self
+
+    def run_to_completion(self) -> "EngineCore":
+        return self.run_until(_INF)
+
+    # -- reconfiguration (scenario engine hook) ---------------------------------
+    def reconfigure(
+        self,
+        rates: Sequence[float],
+        caps: Sequence[int],
+        at_time: Optional[float] = None,
+        keys: Optional[Sequence] = None,
+        mode: str = "restart",
+    ) -> int:
+        """Swap the composed chain set mid-run; returns #jobs re-dispatched.
+
+        Chains in the new composition that match an old chain keep their
+        in-flight jobs (committed service finishes as scheduled — the
+        physical servers complete the pass even if the chain's nominal rate
+        was retuned) and, for dedicated policies, their FIFO queue.
+        Matching uses physical identity (``keys``: server-id + block tuples,
+        as the orchestrator matches engines) when provided on both sides,
+        else the chain rate.  Capacity deliberately does **not** participate
+        in matching: a recomposition that merely re-tunes a surviving
+        chain's concurrency must not restart its in-flight work — only jobs
+        beyond the shrunken capacity spill (latest-finishing first, the ones
+        with the most service left).
+
+        ``mode`` governs unmatched/spilled in-flight work:
+
+        * ``"restart"`` (failures): the work is lost — jobs re-dispatch from
+          scratch with their original arrival time preserved, so the failure
+          penalty shows up in their response time;
+        * ``"drain"`` (voluntary recompositions: retune, scale-out,
+          graceful scale-in): retired chains stop accepting work but their
+          committed jobs finish at the already-scheduled time, exactly like
+          an orchestrator draining an engine before tearing it down.  The
+          drain window briefly overlaps old and new compositions (~one
+          service time), the cost a real system pays during a rollout.
+
+        Queued-but-unstarted jobs re-dispatch in both modes (no service has
+        been invested, so nothing is lost).
+        """
+        if mode not in ("restart", "drain"):
+            raise ValueError("mode must be 'restart' or 'drain'")
+        t0 = self.now if at_time is None else float(at_time)
+        new_rates = [float(r) for r in rates]
+        new_caps = [int(c) for c in caps]
+        new_keys = list(keys) if keys is not None else None
+        if self.policy == "jffc":
+            # materialize the virtual central queue (arrivals before t0 that
+            # have not started) so evicted jobs can line up behind it.
+            frontier = max(self.i, bisect.bisect_left(self.times, t0))
+            self.queue = self.queue[self.qh:] + list(range(self.i, frontier))
+            self.qh = 0
+            self.i = frontier
+        # greedy identity matching old chain -> new chain index
+        use_keys = self.keys is not None and new_keys is not None
+        old_ids = list(self.keys) if use_keys else list(self.rates)
+        new_ids = list(new_keys) if use_keys else list(new_rates)
+        pool: dict = {}
+        for nk, key in enumerate(new_ids):
+            pool.setdefault(key, []).append(nk)
+        remap: dict = {}
+        for ok in range(self.K):
+            if pool.get(old_ids[ok]):
+                remap[ok] = pool[old_ids[ok]].pop(0)
+        # split in-flight jobs into survivors and displaced; enforce the new
+        # capacities by spilling the latest-finishing overflow
+        per_new: dict = {}
+        displaced: List[Tuple[float, int]] = []      # (scheduled finish, jid)
+        for (t, s, jid, ok) in self.heap:
+            if ok in remap:
+                per_new.setdefault(remap[ok], []).append((t, s, jid))
+            else:
+                displaced.append((t, jid))
+        kept: List[Tuple[float, int, int, int]] = []
+        for nk, entries in per_new.items():
+            entries.sort()
+            cap = new_caps[nk]
+            kept.extend((t, s, jid, nk) for (t, s, jid) in entries[:cap])
+            displaced.extend((t, jid) for (t, _, jid) in entries[cap:])
+        evicted: List[int] = []
+        if mode == "drain":
+            # committed service completes as scheduled, out of band — these
+            # jobs never rejoin the queues or the departure heap; their
+            # completions surface once the clock reaches them
+            for (t, jid) in displaced:
+                self.fin[jid] = t
+                heapq.heappush(self._drain_pending, (t, jid))
+                self._drain_horizon = max(self._drain_horizon, t)
+            self.drains += len(displaced)
+        else:
+            evicted.extend(jid for (_, jid) in displaced)
+        old_dq, old_dqh, old_remap = self.dq, self.dqh, remap
+        # queued jobs on retired dedicated queues are re-dispatched too
+        for ok in range(self.K):
+            if ok not in remap:
+                evicted.extend(old_dq[ok][old_dqh[ok]:])
+        evicted.sort(key=lambda j: (self.st[j], j))
+        if self.policy not in ("jffc", "priority"):
+            # limbo jobs (parked during a total outage) re-dispatch first —
+            # they have been waiting longest (the priority queue survives a
+            # reconfiguration untouched: its keys depend only on class tier
+            # and arrival time, both invariant under recomposition)
+            evicted = self.queue[self.qh:] + evicted
+            self.queue = []
+            self.qh = 0
+        self._set_chains(new_rates, new_caps)
+        self.keys = new_keys
+        self.dq = [[] for _ in new_caps]
+        self.dqh = [0] * self.K
+        for ok, nk in old_remap.items():
+            self.dq[nk] = old_dq[ok]
+            self.dqh[nk] = old_dqh[ok]
+        self.heap = kept
+        for (_, _, _, nk) in kept:
+            self.running[nk] += 1
+            self.total_free -= 1
+        heapq.heapify(self.heap)
+        # re-dispatch evicted jobs at t0 (context re-prefill: full work again)
+        for jid in evicted:
+            if self.policy == "priority":
+                if self.total_free:
+                    self._start(jid, self._fastest_free(), t0)
+                else:       # original kappa: eviction does not reset aging
+                    heapq.heappush(self.pq, (self._kappa(jid), jid))
+            elif self.K == 0 or self.policy == "jffc":
+                if self.total_free:
+                    self._start(jid, self._fastest_free(), t0)
+                else:
+                    self.queue.append(jid)       # limbo during a total outage
+            else:
+                k = self._choose(self.chain_order[0])
+                if self.running[k] < self.caps[k]:
+                    self._start(jid, k, t0)
+                else:
+                    self.dq[k].append(jid)
+        # freed / added capacity absorbs waiting work immediately
+        if self.policy == "jffc":
+            while self.total_free and self.qh < len(self.queue):
+                nxt = self.queue[self.qh]
+                self.qh += 1
+                self._start(nxt, self._fastest_free(), t0)
+        elif self.policy == "priority":
+            while self.total_free and self.pq:
+                self._start(heapq.heappop(self.pq)[1],
+                            self._fastest_free(), t0)
+        else:
+            for k in range(self.K):
+                qk, hk = self.dq[k], self.dqh[k]
+                while self.running[k] < self.caps[k] and hk < len(qk):
+                    self._start(qk[hk], k, t0)
+                    hk += 1
+                self.dqh[k] = hk
+        self.now = max(self.now, t0)
+        self.reconfigurations += 1
+        self.restarts += len(evicted)
+        return len(evicted)
+
+    # -- results ----------------------------------------------------------------
+    def result(self, warmup_fraction: float = 0.1) -> SimResult:
+        """SimResult over completions so far (same trimming as the oracle)."""
+        dp = self._drain_pending
+        while dp and dp[0][0] <= self.now:
+            self.comp.append(heapq.heappop(dp)[1])
+        comp = np.asarray(self.comp, dtype=np.int64)
+        skip = int(len(comp) * warmup_fraction)
+        kept = comp[skip:]
+        if self._times_np is None or len(self._times_np) != self.n:
+            self._times_np = np.asarray(self.times, dtype=np.float64)
+        times = self._times_np
+        st = np.asarray(self.st, dtype=np.float64)
+        fin = np.asarray(self.fin, dtype=np.float64)
+        cls = np.asarray(self.cls, dtype=np.int64)
+        if len(kept):
+            resp = fin[kept] - times[kept]
+            wait = st[kept] - times[kept]
+            serv = fin[kept] - st[kept]
+        else:
+            resp = wait = serv = np.empty(0, dtype=np.float64)
+        rej = np.asarray(self.rejected, dtype=np.int64)
+        return SimResult(resp, wait, serv, len(kept),
+                         max(self.now, self._drain_horizon),
+                         class_ids=cls[kept] if len(kept)
+                         else np.empty(0, dtype=np.int64),
+                         n_rejected=len(rej),
+                         rejected_class_ids=cls[rej] if len(rej)
+                         else np.empty(0, dtype=np.int64))

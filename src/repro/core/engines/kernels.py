@@ -1,0 +1,141 @@
+"""Stateless dispatch-policy kernels shared by every simulation backend.
+
+Each kernel answers one question — *which chain takes this arrival?* — from
+flat arrays of engine state, without owning any of it.  The event core
+(:class:`repro.core.engines.core.EngineCore`) holds the arrays; backends
+(interpreter or batched) call the kernel bound at construction.  Every
+kernel replays the exact float operations and RNG call sequence
+(``random.Random.choice`` / ``randrange``) of the scalar policies in
+:mod:`repro.core.load_balance`, so any backend built on them stays
+bit-identical to the oracle on fixed seeds.
+
+Kernel signature::
+
+    kernel(rng, rates, caps, running, chain_order, total_free, dq, dqh)
+        -> chain index
+
+where ``chain_order`` is the fastest-first scan order (descending rate,
+then index), ``dq``/``dqh`` the dedicated FIFO buffers + head cursors
+(empty for central-queue policies), and ``total_free`` the count of idle
+service slots.
+
+The kernel names are the dispatch-policy names of the
+``repro.api.DISPATCH_POLICIES`` registry (write-through to
+``repro.core.load_balance.POLICIES``); :data:`VECTORIZED_POLICIES` is
+derived from this table, so registering a kernel is what makes a policy
+available to the array engines.
+"""
+from __future__ import annotations
+
+import random
+from typing import Callable, Dict, List, Sequence
+
+Kernel = Callable[..., int]
+
+#: name -> kernel; the source of truth for which policies the array
+#: engines can run (everything else must use the scalar oracle).
+POLICY_KERNELS: Dict[str, Kernel] = {}
+
+#: policies whose queue is the central (virtual / priority) queue — the
+#: kernel only ever picks among *free* chains; queued jobs are pulled by
+#: departures, not dispatched.
+CENTRAL_QUEUE_POLICIES = ("jffc", "priority")
+
+
+def register_kernel(name: str):
+    def decorate(fn: Kernel) -> Kernel:
+        POLICY_KERNELS[name] = fn
+        return fn
+    return decorate
+
+
+def fastest_free(running: Sequence[int], caps: Sequence[int],
+                 chain_order: Sequence[int]) -> int:
+    """First chain in fastest-first order with a free slot — matches
+    ``max(free, key=rates.__getitem__)`` of the scalar policies."""
+    for k in chain_order:
+        if running[k] < caps[k]:
+            return k
+    raise AssertionError("no free chain (caller must check total_free)")
+
+
+def _in_system(k: int, running, dq, dqh) -> int:
+    """Running + queued jobs on chain ``k`` (dedicated-queue policies)."""
+    return running[k] + len(dq[k]) - dqh[k]
+
+
+@register_kernel("jffc")
+def kernel_jffc(rng, rates, caps, running, chain_order, total_free, dq, dqh):
+    return fastest_free(running, caps, chain_order)
+
+
+@register_kernel("jffs")
+def kernel_jffs(rng, rates, caps, running, chain_order, total_free, dq, dqh):
+    if total_free:
+        return fastest_free(running, caps, chain_order)
+    return chain_order[0]
+
+
+@register_kernel("random")
+def kernel_random(rng, rates, caps, running, chain_order, total_free, dq,
+                  dqh):
+    return rng.randrange(len(rates))
+
+
+@register_kernel("jsq")
+def kernel_jsq(rng, rates, caps, running, chain_order, total_free, dq, dqh):
+    K = len(rates)
+    ns = [_in_system(k, running, dq, dqh) for k in range(K)]
+    m = min(ns)
+    cands = [k for k in range(K) if ns[k] == m]
+    return rng.choice(cands)
+
+
+@register_kernel("sa-jsq")
+def kernel_sajsq(rng, rates, caps, running, chain_order, total_free, dq, dqh):
+    return min(range(len(rates)),
+               key=lambda k: (_in_system(k, running, dq, dqh), -rates[k]))
+
+
+@register_kernel("sed")
+def kernel_sed(rng, rates, caps, running, chain_order, total_free, dq, dqh):
+    def delay(k: int) -> float:
+        n = _in_system(k, running, dq, dqh)
+        mu, c = rates[k], caps[k]
+        wait = max(0, n + 1 - c) / (c * mu)
+        return wait + 1.0 / mu
+
+    return min(range(len(rates)), key=delay)
+
+
+@register_kernel("jiq")
+def kernel_jiq(rng, rates, caps, running, chain_order, total_free, dq, dqh):
+    K = len(rates)
+    free = [k for k in range(K) if running[k] < caps[k]]
+    if free:
+        return rng.choice(free)
+    return rng.randrange(K)
+
+
+@register_kernel("priority")
+def kernel_priority(rng, rates, caps, running, chain_order, total_free, dq,
+                    dqh):
+    return fastest_free(running, caps, chain_order)
+
+
+#: policies the array engines reproduce bit-identically vs. the scalar
+#: oracle on fixed seeds — exactly the registered kernels.
+VECTORIZED_POLICIES = tuple(POLICY_KERNELS)
+
+#: dedicated-queue policies served by the generic per-event loop
+_DEDICATED_POLICIES = tuple(p for p in POLICY_KERNELS
+                            if p not in CENTRAL_QUEUE_POLICIES)
+
+
+def get_kernel(name: str) -> Kernel:
+    try:
+        return POLICY_KERNELS[name]
+    except KeyError:
+        raise ValueError(
+            f"policy {name!r} is not vectorized (supported: "
+            f"{VECTORIZED_POLICIES}); use simulate() instead") from None

@@ -1,0 +1,277 @@
+"""The interpreter backend: per-event Python loops over the shared core.
+
+:class:`VectorEngine` is the pre-refactor ``VectorSimulator`` event loop,
+verbatim — the **parity anchor** every other backend is tested against.  It
+reproduces the scalar oracle bit-identically on fixed seeds for every
+policy with a registered kernel (:data:`repro.core.engines.kernels
+.VECTORIZED_POLICIES`), supports pausing (``run_until``) and mid-run
+cluster reconfiguration (``reconfigure``) for the scenario engine in
+:mod:`repro.core.scenarios`, and runs at ~1 µs/job.
+
+Multi-tenant SLO classes: every job carries a class index into a
+``RequestClass`` list (:mod:`repro.core.workload`).  The ``priority``
+policy schedules the central queue by aged class tier, and its admission
+gate sheds best-effort arrivals whose estimated wait exceeds the class
+deadline (scaled by ``admission_level`` — the autoscaler's throttle knob).
+With a single default class everything degenerates to the class-blind
+engines bit for bit.
+"""
+from __future__ import annotations
+
+import bisect
+import heapq
+import math
+
+from .core import EngineCore
+
+_INF = math.inf
+
+
+class VectorEngine(EngineCore):
+    """Batch-event interpreter over composed job servers (the default
+    backend, ``engine="vector"``)."""
+
+    ENGINE_NAME = "vector"
+
+    def _run_jffc(self, until: float) -> None:
+        """JFFC hot loop.
+
+        The central FIFO queue is *virtual*: while saturated, every arrival
+        queues and every pull takes the oldest arrival, so queued jobs are
+        exactly the consecutive range ``[i, arrived-frontier)`` of the
+        arrival cursor — a departure pulls job ``i`` iff ``times[i] <= t``.
+        No queue list is ever touched in steady state; only
+        :meth:`EngineCore.reconfigure` materializes an explicit overflow
+        queue (for re-dispatched jobs), drained before the virtual range.
+        Departures peek + ``heapreplace`` (one sift) instead of pop + push
+        (two).
+        """
+        times, works, rates, caps = self.times, self.works, self.rates, self.caps
+        st, fin, comp = self.st, self.fin, self.comp
+        running, chain_order = self.running, self.chain_order
+        h, queue = self.heap, self.queue
+        comp_append = comp.append
+        push, pop, replace = heapq.heappush, heapq.heappop, heapq.heapreplace
+        i, qh, total_free, now = self.i, self.qh, self.total_free, self.now
+        qlen = len(queue)
+        stop = self.n if until == _INF else bisect.bisect_left(times, until,
+                                                               self.i)
+        # every start consumes either the arrival cursor or the overflow
+        # head, so seq tracks i + qh up to a constant — derive, don't count.
+        seq_off = self.seq - i - qh
+        try:
+            while True:
+                if total_free:
+                    # ---- light mode: queues empty, at least one slot free.
+                    # t_arr / t_dep are cached: a push can only lower the
+                    # heap top to the pushed finish (min), a pop re-peeks.
+                    t_arr = times[i] if i < stop else _INF
+                    t_dep = h[0][0] if h else _INF
+                    while True:
+                        if t_arr <= t_dep:
+                            if t_arr == _INF:
+                                return
+                            jid = i
+                            i += 1
+                            for k in chain_order:
+                                if running[k] < caps[k]:
+                                    break
+                            running[k] += 1
+                            total_free -= 1
+                            st[jid] = t_arr
+                            f = t_arr + works[jid] / rates[k]
+                            push(h, (f, seq_off + i + qh - 1, jid, k))
+                            if f < t_dep:
+                                t_dep = f
+                            now = t_arr
+                            if not total_free:
+                                break            # -> saturated mode
+                            t_arr = times[i] if i < stop else _INF
+                        else:
+                            if t_dep >= until:
+                                return
+                            t, _, jid, k = pop(h)
+                            fin[jid] = t
+                            comp_append(jid)
+                            running[k] -= 1
+                            total_free += 1
+                            now = t
+                            t_dep = h[0][0] if h else _INF
+                    continue
+                # ---- saturated mode: every slot busy
+                if not h:                # zero total capacity: nothing can run
+                    return
+                while qh != qlen:
+                    # overflow queue (reconfigure evictions) drains first
+                    t, _, jid, k = h[0]
+                    if t >= until:
+                        if comp:
+                            now = max(now, fin[comp[-1]])
+                        return
+                    fin[jid] = t
+                    comp_append(jid)
+                    nxt = queue[qh]
+                    qh += 1
+                    st[nxt] = t
+                    replace(h, (t + works[nxt] / rates[k],
+                                seq_off + i + qh - 1, nxt, k))
+                # fast path: pulls come straight off the arrival cursor
+                soq = seq_off + qh
+                t_next = times[i] if i < stop else _INF
+                while True:
+                    t, _, jid, k = h[0]
+                    if t >= until:
+                        if comp:
+                            now = max(now, fin[comp[-1]])
+                        return
+                    fin[jid] = t
+                    comp_append(jid)
+                    if t_next <= t:                      # virtual queue head
+                        st[i] = t
+                        replace(h, (t + works[i] / rates[k], soq + i, i, k))
+                        i += 1
+                        t_next = times[i] if i < stop else _INF
+                    else:                                # queue empty: free up
+                        pop(h)
+                        running[k] -= 1
+                        total_free += 1
+                        now = t
+                        break
+        finally:
+            self.i, self.qh, self.total_free, self.now = i, qh, total_free, now
+            self.seq = seq_off + i + qh
+            if qh == qlen and qlen:                     # overflow fully drained
+                queue.clear()
+                self.qh = 0
+
+    def _run_dedicated(self, until: float) -> None:
+        """Per-event loop for dedicated-queue policies (jffs / random /
+        jsq / sa-jsq / sed / jiq — every registered kernel that is not a
+        central-queue policy)."""
+        times, works, rates, caps = self.times, self.works, self.rates, self.caps
+        st, fin = self.st, self.fin
+        running = self.running
+        h, dq, dqh = self.heap, self.dq, self.dqh
+        comp_append = self.comp.append
+        push, pop, replace = heapq.heappush, heapq.heappop, heapq.heapreplace
+        i, seq, total_free, now = self.i, self.seq, self.total_free, self.now
+        stop = self.n if until == _INF else bisect.bisect_left(times, until,
+                                                               self.i)
+        if self.K == 0:
+            # total outage: no chains exist, so arrivals park in the limbo
+            # queue until a reconfigure() brings capacity back
+            self.queue.extend(range(self.i, stop))
+            self.i = stop
+            return
+        choose = self._choose
+        ded_fastest = self.chain_order[0]
+        try:
+            while True:
+                t_arr = times[i] if i < stop else _INF
+                t_dep = h[0][0] if h else _INF
+                if t_arr <= t_dep:
+                    if t_arr == _INF:
+                        return
+                    jid = i
+                    i += 1
+                    self.total_free = total_free          # choose() reads it
+                    k = choose(ded_fastest)
+                    if running[k] < caps[k]:
+                        running[k] += 1
+                        total_free -= 1
+                        st[jid] = t_arr
+                        push(h, (t_arr + works[jid] / rates[k], seq, jid, k))
+                        seq += 1
+                    else:
+                        dq[k].append(jid)
+                    now = t_arr
+                else:
+                    if t_dep >= until:
+                        return
+                    t, _, jid, k = h[0]
+                    fin[jid] = t
+                    comp_append(jid)
+                    now = t
+                    qk = dq[k]
+                    if dqh[k] < len(qk):
+                        nxt = qk[dqh[k]]
+                        dqh[k] += 1
+                        st[nxt] = t
+                        replace(h, (t + works[nxt] / rates[k], seq, nxt, k))
+                        seq += 1
+                    else:
+                        pop(h)
+                        running[k] -= 1
+                        total_free += 1
+        finally:
+            self.i, self.seq, self.total_free, self.now = i, seq, total_free, now
+
+    def _run_priority(self, until: float) -> None:
+        """Per-event loop for the priority central queue (multi-tenant).
+
+        JFFC's structure with two changes: (1) the central queue is a heap
+        ordered by the *static* aged-priority key ``tier + aging * arrival``
+        (order-equivalent to ``tier - aging * waited`` at any instant, so
+        queued entries never need re-keying); (2) an arrival of a sheddable
+        class (finite deadline) that would have to queue is rejected when
+        its estimated wait — queue depth over the composed service rate —
+        exceeds ``deadline * admission_level``.  With a single default
+        class and admission off this reproduces the jffc trajectory bit for
+        bit (tier 0, no finite deadlines -> FIFO pulls, no shedding).
+        """
+        times, works, rates, caps = self.times, self.works, self.rates, self.caps
+        st, fin = self.st, self.fin
+        running, chain_order = self.running, self.chain_order
+        h, pq = self.heap, self.pq
+        comp_append = self.comp.append
+        rej_append = self.rejected.append
+        push, pop, replace = heapq.heappush, heapq.heappop, heapq.heapreplace
+        i, seq, total_free, now = self.i, self.seq, self.total_free, self.now
+        stop = self.n if until == _INF else bisect.bisect_left(times, until,
+                                                               self.i)
+        tiers, deadlines, cls = self._tiers, self._deadlines, self.cls
+        r_age, adm, nu = self.aging_rate, self.admission_level, self._nu
+        try:
+            while True:
+                t_arr = times[i] if i < stop else _INF
+                t_dep = h[0][0] if h else _INF
+                if t_arr <= t_dep:
+                    if t_arr == _INF:
+                        return
+                    jid = i
+                    i += 1
+                    now = t_arr
+                    if total_free:
+                        for k in chain_order:
+                            if running[k] < caps[k]:
+                                break
+                        running[k] += 1
+                        total_free -= 1
+                        st[jid] = t_arr
+                        push(h, (t_arr + works[jid] / rates[k], seq, jid, k))
+                        seq += 1
+                    else:
+                        dl = deadlines[cls[jid]]
+                        if dl != _INF and (nu <= 0.0
+                                           or (len(pq) + 1) / nu > dl * adm):
+                            rej_append(jid)     # sheds only when queueing
+                        else:
+                            push(pq, (tiers[cls[jid]] + r_age * t_arr, jid))
+                else:
+                    if t_dep >= until:
+                        return
+                    t, _, jid, k = h[0]
+                    fin[jid] = t
+                    comp_append(jid)
+                    now = t
+                    if pq:
+                        nxt = pop(pq)[1]
+                        st[nxt] = t
+                        replace(h, (t + works[nxt] / rates[k], seq, nxt, k))
+                        seq += 1
+                    else:
+                        pop(h)
+                        running[k] -= 1
+                        total_free += 1
+        finally:
+            self.i, self.seq, self.total_free, self.now = i, seq, total_free, now

@@ -236,9 +236,11 @@ class ScenarioResult:
         rt = self.result.response_times
         return float(np.percentile(rt, 99)) if len(rt) else math.nan
 
-    def per_class(self) -> dict:
-        """Per-class response/waiting quantiles (empty for class-blind runs)."""
-        return self.result.per_class()
+    def per_class(self, response_stats=None, waiting_stats=None) -> dict:
+        """Per-class response/waiting quantiles (empty for class-blind runs);
+        optional precomputed whole-run stats pass through to
+        :meth:`SimResult.per_class`."""
+        return self.result.per_class(response_stats, waiting_stats)
 
 
 def compose_or_degrade(

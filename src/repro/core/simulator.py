@@ -1,21 +1,22 @@
 """Discrete-event simulation for chain-structured job serving (Section 4.1).
 
-Two engines share the :class:`SimResult` API:
+Two kinds of engine share the :class:`SimResult` API:
 
 * :func:`simulate` — the original scalar event loop (heapq over per-job
   ``Job`` objects, a :class:`repro.core.load_balance.Policy` owning the
   queues).  It supports every policy and arbitrary ``service_time_fn``; it is
-  kept as the *reference oracle* the vectorized engine is parity-tested
+  kept as the *reference oracle* the array engines are parity-tested
   against.
-* :class:`VectorSimulator` — the batch-event engine.  Arrivals live in flat
-  arrays, in-flight jobs in a capacity-sized departure heap (never the
-  O(n)-element event heap of the scalar loop), queues are index buffers with
-  head pointers, and saturated stretches bulk-append arrivals.  It reproduces
-  the scalar engine bit-identically on fixed seeds for every policy in
-  :data:`VECTORIZED_POLICIES` (jffc / jffs / random / jsq / sa-jsq / sed /
-  jiq / priority), supports pausing (``run_until``) and mid-run cluster
-  reconfiguration (``reconfigure``) for the scenario engine in
-  :mod:`repro.core.scenarios`.
+* the pluggable array backends in :mod:`repro.core.engines` — the
+  interpreter :class:`~repro.core.engines.vector.VectorEngine`
+  (``engine="vector"``, exported here as :class:`VectorSimulator` for
+  backward compatibility) and the compiled
+  :class:`~repro.core.engines.batched.BatchedEngine` (``engine="batched"``).
+  Both reproduce the scalar engine bit-identically on fixed seeds for every
+  policy in :data:`VECTORIZED_POLICIES` (jffc / jffs / random / jsq /
+  sa-jsq / sed / jiq / priority), support pausing (``run_until``) and
+  mid-run cluster reconfiguration (``reconfigure``) for the scenario engine
+  in :mod:`repro.core.scenarios`.
 
 Jobs arrive (Poisson or trace), carry an exponential-mean-1 ``work`` (or
 token counts for trace mode), and are dispatched to composed job servers by a
@@ -35,19 +36,31 @@ class-blind engines bit for bit.
 """
 from __future__ import annotations
 
-import bisect
 import dataclasses
 import heapq
-import math
 import random
-from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
+from typing import Callable, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
+from .engines import (          # noqa: F401  (re-exported API surface)
+    BatchedEngine,
+    ENGINES,
+    SimEngine,
+    SimResult,
+    VECTORIZED_POLICIES,
+    VectorEngine,
+    _quantile_stats,
+    make_engine,
+)
+from .engines.kernels import _DEDICATED_POLICIES  # noqa: F401  (compat)
 from .load_balance import Policy
-from .workload import DEFAULT_CLASS, RequestClass
+from .workload import RequestClass
 
 ARRIVAL, DEPARTURE = 0, 1
+
+#: backward-compatible name of the interpreter backend (``engine="vector"``)
+VectorSimulator = VectorEngine
 
 
 @dataclasses.dataclass
@@ -61,72 +74,6 @@ class Job:
     start: Optional[float] = None
     finish: Optional[float] = None
     cls: int = 0                    # index into the run's RequestClass list
-
-
-def _quantile_stats(x: np.ndarray) -> dict:
-    if len(x) == 0:
-        return {"mean": math.nan}
-    return {
-        "mean": float(np.mean(x)),
-        "median": float(np.median(x)),
-        "p95": float(np.percentile(x, 95)),
-        "p99": float(np.percentile(x, 99)),
-        "max": float(np.max(x)),
-        "min": float(np.min(x)),
-    }
-
-
-@dataclasses.dataclass
-class SimResult:
-    response_times: np.ndarray
-    waiting_times: np.ndarray
-    service_times: np.ndarray
-    n_completed: int
-    sim_time: float
-    # multi-tenant extensions (None / 0 for class-blind legacy constructions)
-    class_ids: Optional[np.ndarray] = None       # per completed job, aligned
-    n_rejected: int = 0                          # shed by the admission gate
-    rejected_class_ids: Optional[np.ndarray] = None
-
-    def summary(self) -> dict:
-        out = {
-            "response": _quantile_stats(self.response_times),
-            "waiting": _quantile_stats(self.waiting_times),
-            "service": _quantile_stats(self.service_times),
-            "n": self.n_completed,
-        }
-        if self.n_rejected:
-            out["rejected"] = self.n_rejected
-        return out
-
-    def per_class(self) -> Dict[int, dict]:
-        """Per-class response/waiting quantiles + completion/shed counts."""
-        if self.class_ids is None:
-            return {}
-        rej = self.rejected_class_ids if self.rejected_class_ids is not None \
-            else np.empty(0, dtype=np.int64)
-        present = set(np.unique(self.class_ids).tolist()) \
-            | set(np.unique(rej).tolist())
-        out: Dict[int, dict] = {}
-        for c in sorted(present):
-            m = self.class_ids == c
-            out[int(c)] = {
-                "n": int(np.sum(m)),
-                "rejected": int(np.sum(rej == c)),
-                "response": _quantile_stats(self.response_times[m]),
-                "waiting": _quantile_stats(self.waiting_times[m]),
-            }
-        return out
-
-    @property
-    def mean_response(self) -> float:
-        return float(np.mean(self.response_times)) if len(self.response_times) else math.nan
-
-    @property
-    def mean_occupancy_via_little(self) -> float:
-        # E[N] = lambda_eff * E[T]
-        lam_eff = self.n_completed / self.sim_time
-        return lam_eff * self.mean_response
 
 
 def simulate(
@@ -224,736 +171,6 @@ def simulate_policy_name(
     return simulate(policy, poisson_arrivals(lam, n_jobs, rng))
 
 
-# ===========================================================================
-# Vectorized batch-event engine
-# ===========================================================================
-
-_INF = math.inf
-
-#: policies the vectorized engine reproduces bit-identically vs. the scalar
-#: oracle on fixed seeds (every registered policy is now vectorized).
-VECTORIZED_POLICIES = ("jffc", "jffs", "random", "jsq", "sa-jsq", "sed",
-                       "jiq", "priority")
-
-#: dedicated-queue policies served by the generic per-event loop
-_DEDICATED_POLICIES = ("jffs", "random", "jsq", "sa-jsq", "sed", "jiq")
-
-
-class VectorSimulator:
-    """Batch-event simulator over composed job servers.
-
-    Design (vs. the scalar loop): arrivals are two flat arrays consumed by a
-    cursor — never heap events; in-flight jobs live in a heap of at most
-    ``sum(caps)`` entries ``(finish, seq, jid, chain)``; the JFFC central
-    queue is *virtual* — during saturation every arrival queues and pulls are
-    FIFO, so the queue is just the arrival-cursor range and a departure pulls
-    the cursor job directly (zero bookkeeping per queued arrival).  Per-job
-    state (start, finish) is kept in flat lists indexed by job id and turned
-    into numpy arrays only once, in :meth:`result`.
-
-    Event ordering matches the scalar engine exactly: ties between an arrival
-    and a departure at the same instant resolve to the arrival (the scalar
-    loop pushes all arrivals with lower sequence numbers), and simultaneous
-    departures resolve in scheduling order (monotone ``seq``).  Service time
-    of job ``j`` on chain ``k`` is computed as ``works[j] / rates[k]`` — the
-    same IEEE-754 double operations as the scalar loop — so per-job response
-    times agree bit for bit.
-
-    ``run_until(t)`` processes every event with time strictly below ``t`` and
-    pauses, allowing :meth:`reconfigure` to change the chain set mid-run (the
-    scenario engine's server failure / autoscale hook).  On reconfiguration,
-    chains are matched to the new composition by physical identity (``keys``)
-    when given, else by ``(rate, capacity)``; in-flight jobs on surviving
-    chains continue undisturbed, jobs on retired chains are re-dispatched
-    from scratch (context re-prefill semantics, as in
-    ``Orchestrator._recompose_preserving``).
-    """
-
-    def __init__(
-        self,
-        rates: Sequence[float],
-        caps: Sequence[int],
-        policy: str = "jffc",
-        seed: int = 0,
-        keys: Optional[Sequence] = None,
-        classes: Optional[Sequence[RequestClass]] = None,
-        aging_rate: float = 0.0,
-        admission_level: float = 1.0,
-    ):
-        if policy not in VECTORIZED_POLICIES:
-            raise ValueError(
-                f"policy {policy!r} is not vectorized (supported: "
-                f"{VECTORIZED_POLICIES}); use simulate() instead")
-        if len(rates) != len(caps):
-            raise ValueError("rates and caps must have equal length")
-        if any(r <= 0 for r in rates) or any(c < 0 for c in caps):
-            raise ValueError("rates must be positive, caps non-negative")
-        self.policy = policy
-        self.rng = random.Random(seed)
-        # multi-tenant request classes (single default class = legacy path)
-        self.classes = list(classes) if classes else [DEFAULT_CLASS]
-        self._tiers = [c.priority for c in self.classes]
-        self._deadlines = [c.deadline for c in self.classes]
-        self.aging_rate = float(aging_rate)
-        self.admission_level = float(admission_level)
-        self._set_chains([float(r) for r in rates], [int(c) for c in caps])
-        # optional physical identities (e.g. server-id tuples) used by
-        # reconfigure() to decide which chains survive a recomposition
-        self.keys = list(keys) if keys is not None else None
-        # arrival streams
-        self.times: List[float] = []
-        self.works: List[float] = []
-        self.cls: List[int] = []         # per-job class index (flat)
-        self.n = 0
-        self.i = 0                       # next-arrival cursor
-        # per-job state (flat, indexed by jid)
-        self.st: List[float] = []        # start (last dispatch) time
-        self.fin: List[float] = []       # finish time
-        self.comp: List[int] = []        # jids in completion order
-        self.rejected: List[int] = []    # jids shed by the admission gate
-        # in-flight departures: (finish, seq, jid, chain) — the chain rides
-        # in the tuple so the hot loops never touch a per-job chain array.
-        self.heap: List[Tuple[float, int, int, int]] = []
-        self.seq = 0
-        self.queue: List[int] = []       # central FIFO (jffc)
-        self.qh = 0
-        self.pq: List[Tuple[float, int]] = []   # (kappa, jid) priority queue
-        self.dq: List[List[int]] = [[] for _ in caps]   # dedicated FIFOs
-        self.dqh: List[int] = [0] * len(caps)
-        self.now = 0.0
-        self.reconfigurations = 0
-        self.restarts = 0                # jobs re-dispatched by reconfigure()
-        self.drains = 0                  # jobs drained out-of-band (mode=drain)
-        self._drain_horizon = 0.0        # latest out-of-band completion
-        # committed jobs draining out-of-band: (scheduled finish, jid) heap,
-        # merged into the completion list when the clock passes their finish
-        # (at run_until pause boundaries), so ``comp`` stays time-ordered at
-        # tick granularity and telemetry never sees a future completion
-        self._drain_pending: List[Tuple[float, int]] = []
-        self._times_np: Optional[np.ndarray] = None
-
-    # -- chain bookkeeping ---------------------------------------------------
-    def _set_chains(self, rates: List[float], caps: List[int]) -> None:
-        self.rates = rates
-        self.caps = caps
-        self.K = len(rates)
-        # scan order for "fastest free chain": descending rate, then index —
-        # matches max(free, key=rates.__getitem__) of the scalar policies.
-        self.chain_order = sorted(range(self.K), key=lambda k: (-rates[k], k))
-        self.running = [0] * self.K
-        self.total_free = sum(caps)
-        self._nu = sum(r * c for r, c in zip(rates, caps))
-
-    @property
-    def in_flight(self) -> int:
-        return len(self.heap)
-
-    @property
-    def n_rejected(self) -> int:
-        return len(self.rejected)
-
-    # -- multi-tenant helpers --------------------------------------------------
-    def _kappa(self, jid: int) -> float:
-        """Static priority key of a queued job: ``tier + aging * arrival``
-        (order-equivalent to the aged priority ``tier - aging * waited``,
-        so the heap never needs re-keying as time passes)."""
-        return self._tiers[self.cls[jid]] + self.aging_rate * self.times[jid]
-
-    def set_admission_level(self, level: float) -> None:
-        """Autoscaler throttle: scales every sheddable class's deadline.
-        ``1.0`` = nominal admission, ``0.0`` = defer/shed all best-effort
-        work that would have to queue."""
-        self.admission_level = max(0.0, float(level))
-
-    # -- telemetry taps (autoscale control plane) ------------------------------
-    # ``run_until`` pauses the engine at a control-tick boundary; these
-    # read-only views let :class:`repro.autoscale.Telemetry` sample the paused
-    # state without touching engine internals.
-
-    @property
-    def total_capacity(self) -> int:
-        """Concurrent service slots across all composed chains."""
-        return sum(self.caps)
-
-    def completions_since(self, cursor: int) -> Tuple[int, List[int]]:
-        """Jids completed since a previous cursor; returns (new_cursor, jids).
-
-        ``cursor`` is an index into the completion-order list — pass 0 the
-        first time and the returned cursor thereafter.
-        """
-        jids = self.comp[cursor:]
-        return len(self.comp), jids
-
-    def response_time_of(self, jid: int) -> float:
-        return self.fin[jid] - self.times[jid]
-
-    def queue_len(self, at: Optional[float] = None) -> int:
-        """Queued (arrived, unstarted) jobs; ``at`` overrides the frontier
-        time — pass the pause boundary after ``run_until(t)`` so arrivals
-        between the last processed event and ``t`` count as queued."""
-        t = self.now if at is None else max(self.now, at)
-        central = len(self.queue) - self.qh + len(self.pq)
-        if self.policy in ("jffc", "priority"):
-            # arrived-but-unstarted jobs of the virtual queue (see _run_jffc)
-            # resp. arrivals the paused priority loop has not processed yet
-            central += max(0, bisect.bisect_right(self.times, t) - self.i)
-        dedicated = sum(len(q) - h for q, h in zip(self.dq, self.dqh))
-        return central + dedicated
-
-    # -- arrivals --------------------------------------------------------------
-    def add_arrivals(
-        self,
-        times: Union[Sequence[float], np.ndarray, Sequence[Tuple]],
-        works: Optional[Union[Sequence[float], np.ndarray]] = None,
-        classes: Optional[Union[Sequence[int], np.ndarray]] = None,
-    ) -> None:
-        """Append an arrival batch.
-
-        Either ``(times, works[, classes])`` arrays, or a single list of
-        ``(time, work, in_tokens, out_tokens[, cls])`` tuples as consumed by
-        the scalar :func:`simulate` (token counts are ignored — the
-        vectorized engine models service as ``work / mu``).  ``classes``
-        are per-job indices into the ``classes`` list given at construction
-        (default: class 0).  Times must be non-decreasing and not precede
-        already-processed arrivals.
-        """
-        if works is None:
-            if len(times) == 0:
-                return
-            cols = list(zip(*times))                   # tuple-list form
-            tl, wl = list(cols[0]), list(cols[1])
-            cl = [int(c) for c in cols[4]] if len(cols) > 4 else None
-        else:
-            tl = np.asarray(times, dtype=np.float64).tolist()
-            wl = np.asarray(works, dtype=np.float64).tolist()
-            cl = None if classes is None else \
-                np.asarray(classes, dtype=np.int64).tolist()
-        if len(tl) != len(wl):
-            raise ValueError("times and works must have equal length")
-        if cl is None:
-            cl = [0] * len(tl)
-        if len(cl) != len(tl):
-            raise ValueError("classes must match times in length")
-        if cl and (min(cl) < 0 or max(cl) >= len(self.classes)):
-            raise ValueError(
-                f"class indices must be in [0, {len(self.classes)})")
-        ta = np.asarray(tl, dtype=np.float64)
-        if len(ta) > 1 and np.any(np.diff(ta) < 0):
-            raise ValueError("arrival times must be non-decreasing")
-        if tl and self.times and tl[0] < self.times[-1]:
-            raise ValueError("arrival batch precedes existing arrivals")
-        self._times_np = ta if not self.times else None   # cache first batch
-        self.times.extend(tl)
-        self.works.extend(wl)
-        self.cls.extend(cl)
-        m = len(tl)
-        self.st.extend([0.0] * m)
-        self.fin.extend([0.0] * m)
-        self.n += m
-
-    # -- dispatch helpers ------------------------------------------------------
-    def _fastest_free(self) -> int:
-        for k in self.chain_order:
-            if self.running[k] < self.caps[k]:
-                return k
-        raise AssertionError("no free chain (caller must check total_free)")
-
-    def _in_system(self, k: int) -> int:
-        """Running + queued jobs on chain ``k`` (dedicated-queue policies)."""
-        return self.running[k] + len(self.dq[k]) - self.dqh[k]
-
-    def _choose(self, ded_fastest: int) -> int:
-        """Dedicated-queue policy choice for one arrival.
-
-        Each branch replays the scalar policy's exact float operations and
-        RNG call sequence (``random.Random.choice`` / ``randrange``), so the
-        vectorized engine stays bit-identical to the oracle.
-        """
-        p = self.policy
-        if p == "random":
-            return self.rng.randrange(self.K)
-        if p == "jffs":
-            if self.total_free:
-                return self._fastest_free()
-            return ded_fastest
-        if p == "jsq":
-            ns = [self._in_system(k) for k in range(self.K)]
-            m = min(ns)
-            cands = [k for k in range(self.K) if ns[k] == m]
-            return self.rng.choice(cands)
-        if p == "sa-jsq":
-            return min(range(self.K),
-                       key=lambda k: (self._in_system(k), -self.rates[k]))
-        if p == "sed":
-            rates, caps = self.rates, self.caps
-
-            def delay(k: int) -> float:
-                n = self._in_system(k)
-                mu, c = rates[k], caps[k]
-                wait = max(0, n + 1 - c) / (c * mu)
-                return wait + 1.0 / mu
-
-            return min(range(self.K), key=delay)
-        # jiq
-        free = [k for k in range(self.K)
-                if self.running[k] < self.caps[k]]
-        if free:
-            return self.rng.choice(free)
-        return self.rng.randrange(self.K)
-
-    def _start(self, jid: int, k: int, t: float) -> None:
-        self.running[k] += 1
-        self.total_free -= 1
-        self.st[jid] = t
-        heapq.heappush(self.heap, (t + self.works[jid] / self.rates[k],
-                                   self.seq, jid, k))
-        self.seq += 1
-
-    # -- main loops --------------------------------------------------------------
-    def run_until(self, until: float = _INF) -> "VectorSimulator":
-        """Process every event with time strictly below ``until``."""
-        if self.policy == "jffc":
-            self._run_jffc(until)
-        elif self.policy == "priority":
-            self._run_priority(until)
-        else:
-            self._run_dedicated(until)
-        if self._drain_pending:
-            # surface out-of-band drain completions the clock has passed
-            dp = self._drain_pending
-            while dp and dp[0][0] < until:
-                self.comp.append(heapq.heappop(dp)[1])
-        return self
-
-    def run_to_completion(self) -> "VectorSimulator":
-        return self.run_until(_INF)
-
-    def _run_jffc(self, until: float) -> None:
-        """JFFC hot loop.
-
-        The central FIFO queue is *virtual*: while saturated, every arrival
-        queues and every pull takes the oldest arrival, so queued jobs are
-        exactly the consecutive range ``[i, arrived-frontier)`` of the
-        arrival cursor — a departure pulls job ``i`` iff ``times[i] <= t``.
-        No queue list is ever touched in steady state; only
-        :meth:`reconfigure` materializes an explicit overflow queue (for
-        re-dispatched jobs), drained before the virtual range.  Departures
-        peek + ``heapreplace`` (one sift) instead of pop + push (two).
-        """
-        times, works, rates, caps = self.times, self.works, self.rates, self.caps
-        st, fin, comp = self.st, self.fin, self.comp
-        running, chain_order = self.running, self.chain_order
-        h, queue = self.heap, self.queue
-        comp_append = comp.append
-        push, pop, replace = heapq.heappush, heapq.heappop, heapq.heapreplace
-        i, qh, total_free, now = self.i, self.qh, self.total_free, self.now
-        qlen = len(queue)
-        stop = self.n if until == _INF else bisect.bisect_left(times, until,
-                                                               self.i)
-        # every start consumes either the arrival cursor or the overflow
-        # head, so seq tracks i + qh up to a constant — derive, don't count.
-        seq_off = self.seq - i - qh
-        try:
-            while True:
-                if total_free:
-                    # ---- light mode: queues empty, at least one slot free.
-                    # t_arr / t_dep are cached: a push can only lower the
-                    # heap top to the pushed finish (min), a pop re-peeks.
-                    t_arr = times[i] if i < stop else _INF
-                    t_dep = h[0][0] if h else _INF
-                    while True:
-                        if t_arr <= t_dep:
-                            if t_arr == _INF:
-                                return
-                            jid = i
-                            i += 1
-                            for k in chain_order:
-                                if running[k] < caps[k]:
-                                    break
-                            running[k] += 1
-                            total_free -= 1
-                            st[jid] = t_arr
-                            f = t_arr + works[jid] / rates[k]
-                            push(h, (f, seq_off + i + qh - 1, jid, k))
-                            if f < t_dep:
-                                t_dep = f
-                            now = t_arr
-                            if not total_free:
-                                break            # -> saturated mode
-                            t_arr = times[i] if i < stop else _INF
-                        else:
-                            if t_dep >= until:
-                                return
-                            t, _, jid, k = pop(h)
-                            fin[jid] = t
-                            comp_append(jid)
-                            running[k] -= 1
-                            total_free += 1
-                            now = t
-                            t_dep = h[0][0] if h else _INF
-                    continue
-                # ---- saturated mode: every slot busy
-                if not h:                # zero total capacity: nothing can run
-                    return
-                while qh != qlen:
-                    # overflow queue (reconfigure evictions) drains first
-                    t, _, jid, k = h[0]
-                    if t >= until:
-                        if comp:
-                            now = max(now, fin[comp[-1]])
-                        return
-                    fin[jid] = t
-                    comp_append(jid)
-                    nxt = queue[qh]
-                    qh += 1
-                    st[nxt] = t
-                    replace(h, (t + works[nxt] / rates[k],
-                                seq_off + i + qh - 1, nxt, k))
-                # fast path: pulls come straight off the arrival cursor
-                soq = seq_off + qh
-                t_next = times[i] if i < stop else _INF
-                while True:
-                    t, _, jid, k = h[0]
-                    if t >= until:
-                        if comp:
-                            now = max(now, fin[comp[-1]])
-                        return
-                    fin[jid] = t
-                    comp_append(jid)
-                    if t_next <= t:                      # virtual queue head
-                        st[i] = t
-                        replace(h, (t + works[i] / rates[k], soq + i, i, k))
-                        i += 1
-                        t_next = times[i] if i < stop else _INF
-                    else:                                # queue empty: free up
-                        pop(h)
-                        running[k] -= 1
-                        total_free += 1
-                        now = t
-                        break
-        finally:
-            self.i, self.qh, self.total_free, self.now = i, qh, total_free, now
-            self.seq = seq_off + i + qh
-            if qh == qlen and qlen:                     # overflow fully drained
-                queue.clear()
-                self.qh = 0
-
-    def _run_dedicated(self, until: float) -> None:
-        """Per-event loop for dedicated-queue policies (jffs / random)."""
-        times, works, rates, caps = self.times, self.works, self.rates, self.caps
-        st, fin = self.st, self.fin
-        running = self.running
-        h, dq, dqh = self.heap, self.dq, self.dqh
-        comp_append = self.comp.append
-        push, pop, replace = heapq.heappush, heapq.heappop, heapq.heapreplace
-        i, seq, total_free, now = self.i, self.seq, self.total_free, self.now
-        stop = self.n if until == _INF else bisect.bisect_left(times, until,
-                                                               self.i)
-        if self.K == 0:
-            # total outage: no chains exist, so arrivals park in the limbo
-            # queue until a reconfigure() brings capacity back
-            self.queue.extend(range(self.i, stop))
-            self.i = stop
-            return
-        choose = self._choose
-        ded_fastest = self.chain_order[0]
-        try:
-            while True:
-                t_arr = times[i] if i < stop else _INF
-                t_dep = h[0][0] if h else _INF
-                if t_arr <= t_dep:
-                    if t_arr == _INF:
-                        return
-                    jid = i
-                    i += 1
-                    self.total_free = total_free          # choose() reads it
-                    k = choose(ded_fastest)
-                    if running[k] < caps[k]:
-                        running[k] += 1
-                        total_free -= 1
-                        st[jid] = t_arr
-                        push(h, (t_arr + works[jid] / rates[k], seq, jid, k))
-                        seq += 1
-                    else:
-                        dq[k].append(jid)
-                    now = t_arr
-                else:
-                    if t_dep >= until:
-                        return
-                    t, _, jid, k = h[0]
-                    fin[jid] = t
-                    comp_append(jid)
-                    now = t
-                    qk = dq[k]
-                    if dqh[k] < len(qk):
-                        nxt = qk[dqh[k]]
-                        dqh[k] += 1
-                        st[nxt] = t
-                        replace(h, (t + works[nxt] / rates[k], seq, nxt, k))
-                        seq += 1
-                    else:
-                        pop(h)
-                        running[k] -= 1
-                        total_free += 1
-        finally:
-            self.i, self.seq, self.total_free, self.now = i, seq, total_free, now
-
-    def _run_priority(self, until: float) -> None:
-        """Per-event loop for the priority central queue (multi-tenant).
-
-        JFFC's structure with two changes: (1) the central queue is a heap
-        ordered by the *static* aged-priority key ``tier + aging * arrival``
-        (order-equivalent to ``tier - aging * waited`` at any instant, so
-        queued entries never need re-keying); (2) an arrival of a sheddable
-        class (finite deadline) that would have to queue is rejected when
-        its estimated wait — queue depth over the composed service rate —
-        exceeds ``deadline * admission_level``.  With a single default
-        class and admission off this reproduces the jffc trajectory bit for
-        bit (tier 0, no finite deadlines -> FIFO pulls, no shedding).
-        """
-        times, works, rates, caps = self.times, self.works, self.rates, self.caps
-        st, fin = self.st, self.fin
-        running, chain_order = self.running, self.chain_order
-        h, pq = self.heap, self.pq
-        comp_append = self.comp.append
-        rej_append = self.rejected.append
-        push, pop, replace = heapq.heappush, heapq.heappop, heapq.heapreplace
-        i, seq, total_free, now = self.i, self.seq, self.total_free, self.now
-        stop = self.n if until == _INF else bisect.bisect_left(times, until,
-                                                               self.i)
-        tiers, deadlines, cls = self._tiers, self._deadlines, self.cls
-        r_age, adm, nu = self.aging_rate, self.admission_level, self._nu
-        try:
-            while True:
-                t_arr = times[i] if i < stop else _INF
-                t_dep = h[0][0] if h else _INF
-                if t_arr <= t_dep:
-                    if t_arr == _INF:
-                        return
-                    jid = i
-                    i += 1
-                    now = t_arr
-                    if total_free:
-                        for k in chain_order:
-                            if running[k] < caps[k]:
-                                break
-                        running[k] += 1
-                        total_free -= 1
-                        st[jid] = t_arr
-                        push(h, (t_arr + works[jid] / rates[k], seq, jid, k))
-                        seq += 1
-                    else:
-                        dl = deadlines[cls[jid]]
-                        if dl != _INF and (nu <= 0.0
-                                           or (len(pq) + 1) / nu > dl * adm):
-                            rej_append(jid)     # sheds only when queueing
-                        else:
-                            push(pq, (tiers[cls[jid]] + r_age * t_arr, jid))
-                else:
-                    if t_dep >= until:
-                        return
-                    t, _, jid, k = h[0]
-                    fin[jid] = t
-                    comp_append(jid)
-                    now = t
-                    if pq:
-                        nxt = pop(pq)[1]
-                        st[nxt] = t
-                        replace(h, (t + works[nxt] / rates[k], seq, nxt, k))
-                        seq += 1
-                    else:
-                        pop(h)
-                        running[k] -= 1
-                        total_free += 1
-        finally:
-            self.i, self.seq, self.total_free, self.now = i, seq, total_free, now
-
-    # -- reconfiguration (scenario engine hook) ---------------------------------
-    def reconfigure(
-        self,
-        rates: Sequence[float],
-        caps: Sequence[int],
-        at_time: Optional[float] = None,
-        keys: Optional[Sequence] = None,
-        mode: str = "restart",
-    ) -> int:
-        """Swap the composed chain set mid-run; returns #jobs re-dispatched.
-
-        Chains in the new composition that match an old chain keep their
-        in-flight jobs (committed service finishes as scheduled — the
-        physical servers complete the pass even if the chain's nominal rate
-        was retuned) and, for dedicated policies, their FIFO queue.
-        Matching uses physical identity (``keys``: server-id + block tuples,
-        as the orchestrator matches engines) when provided on both sides,
-        else the chain rate.  Capacity deliberately does **not** participate
-        in matching: a recomposition that merely re-tunes a surviving
-        chain's concurrency must not restart its in-flight work — only jobs
-        beyond the shrunken capacity spill (latest-finishing first, the ones
-        with the most service left).
-
-        ``mode`` governs unmatched/spilled in-flight work:
-
-        * ``"restart"`` (failures): the work is lost — jobs re-dispatch from
-          scratch with their original arrival time preserved, so the failure
-          penalty shows up in their response time;
-        * ``"drain"`` (voluntary recompositions: retune, scale-out,
-          graceful scale-in): retired chains stop accepting work but their
-          committed jobs finish at the already-scheduled time, exactly like
-          an orchestrator draining an engine before tearing it down.  The
-          drain window briefly overlaps old and new compositions (~one
-          service time), the cost a real system pays during a rollout.
-
-        Queued-but-unstarted jobs re-dispatch in both modes (no service has
-        been invested, so nothing is lost).
-        """
-        if mode not in ("restart", "drain"):
-            raise ValueError("mode must be 'restart' or 'drain'")
-        t0 = self.now if at_time is None else float(at_time)
-        new_rates = [float(r) for r in rates]
-        new_caps = [int(c) for c in caps]
-        new_keys = list(keys) if keys is not None else None
-        if self.policy == "jffc":
-            # materialize the virtual central queue (arrivals before t0 that
-            # have not started) so evicted jobs can line up behind it.
-            frontier = max(self.i, bisect.bisect_left(self.times, t0))
-            self.queue = self.queue[self.qh:] + list(range(self.i, frontier))
-            self.qh = 0
-            self.i = frontier
-        # greedy identity matching old chain -> new chain index
-        use_keys = self.keys is not None and new_keys is not None
-        old_ids = list(self.keys) if use_keys else list(self.rates)
-        new_ids = list(new_keys) if use_keys else list(new_rates)
-        pool: dict = {}
-        for nk, key in enumerate(new_ids):
-            pool.setdefault(key, []).append(nk)
-        remap: dict = {}
-        for ok in range(self.K):
-            if pool.get(old_ids[ok]):
-                remap[ok] = pool[old_ids[ok]].pop(0)
-        # split in-flight jobs into survivors and displaced; enforce the new
-        # capacities by spilling the latest-finishing overflow
-        per_new: dict = {}
-        displaced: List[Tuple[float, int]] = []      # (scheduled finish, jid)
-        for (t, s, jid, ok) in self.heap:
-            if ok in remap:
-                per_new.setdefault(remap[ok], []).append((t, s, jid))
-            else:
-                displaced.append((t, jid))
-        kept: List[Tuple[float, int, int, int]] = []
-        for nk, entries in per_new.items():
-            entries.sort()
-            cap = new_caps[nk]
-            kept.extend((t, s, jid, nk) for (t, s, jid) in entries[:cap])
-            displaced.extend((t, jid) for (t, _, jid) in entries[cap:])
-        evicted: List[int] = []
-        if mode == "drain":
-            # committed service completes as scheduled, out of band — these
-            # jobs never rejoin the queues or the departure heap; their
-            # completions surface once the clock reaches them
-            for (t, jid) in displaced:
-                self.fin[jid] = t
-                heapq.heappush(self._drain_pending, (t, jid))
-                self._drain_horizon = max(self._drain_horizon, t)
-            self.drains += len(displaced)
-        else:
-            evicted.extend(jid for (_, jid) in displaced)
-        old_dq, old_dqh, old_remap = self.dq, self.dqh, remap
-        # queued jobs on retired dedicated queues are re-dispatched too
-        for ok in range(self.K):
-            if ok not in remap:
-                evicted.extend(old_dq[ok][old_dqh[ok]:])
-        evicted.sort(key=lambda j: (self.st[j], j))
-        if self.policy not in ("jffc", "priority"):
-            # limbo jobs (parked during a total outage) re-dispatch first —
-            # they have been waiting longest (the priority queue survives a
-            # reconfiguration untouched: its keys depend only on class tier
-            # and arrival time, both invariant under recomposition)
-            evicted = self.queue[self.qh:] + evicted
-            self.queue = []
-            self.qh = 0
-        self._set_chains(new_rates, new_caps)
-        self.keys = new_keys
-        self.dq = [[] for _ in new_caps]
-        self.dqh = [0] * self.K
-        for ok, nk in old_remap.items():
-            self.dq[nk] = old_dq[ok]
-            self.dqh[nk] = old_dqh[ok]
-        self.heap = kept
-        for (_, _, _, nk) in kept:
-            self.running[nk] += 1
-            self.total_free -= 1
-        heapq.heapify(self.heap)
-        # re-dispatch evicted jobs at t0 (context re-prefill: full work again)
-        for jid in evicted:
-            if self.policy == "priority":
-                if self.total_free:
-                    self._start(jid, self._fastest_free(), t0)
-                else:       # original kappa: eviction does not reset aging
-                    heapq.heappush(self.pq, (self._kappa(jid), jid))
-            elif self.K == 0 or self.policy == "jffc":
-                if self.total_free:
-                    self._start(jid, self._fastest_free(), t0)
-                else:
-                    self.queue.append(jid)       # limbo during a total outage
-            else:
-                k = self._choose(self.chain_order[0])
-                if self.running[k] < self.caps[k]:
-                    self._start(jid, k, t0)
-                else:
-                    self.dq[k].append(jid)
-        # freed / added capacity absorbs waiting work immediately
-        if self.policy == "jffc":
-            while self.total_free and self.qh < len(self.queue):
-                nxt = self.queue[self.qh]
-                self.qh += 1
-                self._start(nxt, self._fastest_free(), t0)
-        elif self.policy == "priority":
-            while self.total_free and self.pq:
-                self._start(heapq.heappop(self.pq)[1],
-                            self._fastest_free(), t0)
-        else:
-            for k in range(self.K):
-                qk, hk = self.dq[k], self.dqh[k]
-                while self.running[k] < self.caps[k] and hk < len(qk):
-                    self._start(qk[hk], k, t0)
-                    hk += 1
-                self.dqh[k] = hk
-        self.now = max(self.now, t0)
-        self.reconfigurations += 1
-        self.restarts += len(evicted)
-        return len(evicted)
-
-    # -- results ----------------------------------------------------------------
-    def result(self, warmup_fraction: float = 0.1) -> SimResult:
-        """SimResult over completions so far (same trimming as the oracle)."""
-        dp = self._drain_pending
-        while dp and dp[0][0] <= self.now:
-            self.comp.append(heapq.heappop(dp)[1])
-        comp = np.asarray(self.comp, dtype=np.int64)
-        skip = int(len(comp) * warmup_fraction)
-        kept = comp[skip:]
-        if self._times_np is None or len(self._times_np) != self.n:
-            self._times_np = np.asarray(self.times, dtype=np.float64)
-        times = self._times_np
-        st = np.asarray(self.st, dtype=np.float64)
-        fin = np.asarray(self.fin, dtype=np.float64)
-        cls = np.asarray(self.cls, dtype=np.int64)
-        if len(kept):
-            resp = fin[kept] - times[kept]
-            wait = st[kept] - times[kept]
-            serv = fin[kept] - st[kept]
-        else:
-            resp = wait = serv = np.empty(0, dtype=np.float64)
-        rej = np.asarray(self.rejected, dtype=np.int64)
-        return SimResult(resp, wait, serv, len(kept),
-                         max(self.now, self._drain_horizon),
-                         class_ids=cls[kept] if len(kept)
-                         else np.empty(0, dtype=np.int64),
-                         n_rejected=len(rej),
-                         rejected_class_ids=cls[rej] if len(rej)
-                         else np.empty(0, dtype=np.int64))
-
-
 def simulate_vectorized(
     policy_name: str,
     job_servers: Sequence[Tuple[float, int]],
@@ -963,20 +180,23 @@ def simulate_vectorized(
     classes: Optional[Sequence[RequestClass]] = None,
     aging_rate: float = 0.0,
     admission_level: float = 1.0,
+    engine: str = "vector",
 ) -> SimResult:
-    """Vectorized counterpart of ``simulate(POLICIES[name](...), arrivals)``.
+    """Array-engine counterpart of ``simulate(POLICIES[name](...), ...)``.
 
     ``arrivals`` is the scalar engine's tuple list (optionally with a 5th
     class column), a ``(times, works)`` array pair, or a class-labeled
     ``(times, works, class_ids)`` triple.  The RNG seeding matches
     :func:`simulate_policy_name` (``seed + 1`` for the policy RNG) so the two
-    wrappers are directly comparable.
+    wrappers are directly comparable.  ``engine`` selects the backend from
+    :data:`repro.core.engines.ENGINES` — results are bit-identical across
+    backends on the same seed.
     """
     rates = [m for m, _ in job_servers]
     caps = [c for _, c in job_servers]
-    sim = VectorSimulator(rates, caps, policy=policy_name, seed=seed + 1,
-                          classes=classes, aging_rate=aging_rate,
-                          admission_level=admission_level)
+    sim = make_engine(engine, rates, caps, policy=policy_name, seed=seed + 1,
+                      classes=classes, aging_rate=aging_rate,
+                      admission_level=admission_level)
     if isinstance(arrivals, tuple) and len(arrivals) in (2, 3) \
             and isinstance(arrivals[0], np.ndarray):
         sim.add_arrivals(*arrivals)

@@ -108,3 +108,28 @@ def small_cluster():
 def job_servers():
     """Composed job servers as (mu, c) pairs, descending rate."""
     return [(1.0, 2), (0.8, 2), (0.5, 4)]
+
+
+def run_scenario_spec(servers, service, sc, base_rate=None, policy="jffc",
+                      seed=0, arrivals=None, controller=None,
+                      service_model="work", classes=None, class_rates=None,
+                      aging_rate=0.0, admission_level=1.0):
+    """The scenario engine via the experiment API on the old keyword
+    surface the pre-API regressions were written against — shared by
+    test_scenarios / test_autoscale / test_multitenant so none of them
+    touches the deprecated ``run_scenario`` shim (whose warning is an
+    error under this suite, see pytest.ini)."""
+    from repro import api
+
+    spec = api.ExperimentSpec(
+        cluster=api.ClusterSpec(servers=tuple(servers), service=service),
+        scenario=api.ScenarioSpec.from_scenario(sc),
+        workload=api.WorkloadSpec(
+            base_rate=base_rate,
+            class_rates=None if class_rates is None else tuple(class_rates),
+            classes=tuple(classes) if classes else (),
+            service_model=service_model),
+        policy=api.PolicySpec(name=policy, aging_rate=aging_rate),
+        admission=api.AdmissionSpec(level=admission_level),
+        seed=seed)
+    return api.run(spec, arrivals=arrivals, controller=controller).raw

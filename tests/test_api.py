@@ -90,7 +90,8 @@ def _random_spec(rng: random.Random) -> api.ExperimentSpec:
     if precomposed:
         cl = api.ClusterSpec(job_servers=tuple(
             (round(rng.uniform(0.2, 2.0), 3), rng.randint(1, 8))
-            for _ in range(rng.randint(1, 4))))
+            for _ in range(rng.randint(1, 4))),
+            engine=rng.choice(list(api.ENGINES)))
         sc = api.ScenarioSpec(
             horizon=horizon,
             events=(ScenarioEvent(horizon * 0.4, "burst", scale=3.0,
@@ -99,7 +100,8 @@ def _random_spec(rng: random.Random) -> api.ExperimentSpec:
         cl = api.ClusterSpec(
             servers=servers, service=SERVICE,
             rho_bar=round(rng.uniform(0.4, 0.95), 2),
-            tuner=rng.choice(list(api.TUNERS)))
+            tuner=rng.choice(list(api.TUNERS)),
+            engine=rng.choice(list(api.ENGINES)))
         sc = api.ScenarioSpec.from_scenario(scripted_scenario(
             servers, horizon))
     classed = rng.random() < 0.5
@@ -648,3 +650,260 @@ def test_arrivals_override_accepts_rows_as_tuple_or_list():
                           as_tuple.raw.result.response_times)
     with pytest.raises(api.SpecError, match="arrivals"):
         api.run(spec, arrivals=(0.5, 1.0))   # scalars are neither form
+
+
+# ---------------------------------------------------------------------------
+# Simulation backends through the spec (PR 5)
+# ---------------------------------------------------------------------------
+
+def test_engine_field_round_trips_and_validates():
+    spec = api.ExperimentSpec(
+        cluster=api.ClusterSpec(job_servers=JOB_SERVERS, engine="batched"),
+        scenario=api.ScenarioSpec(horizon=50.0),
+        workload=api.WorkloadSpec(generator="poisson", base_rate=4.0,
+                                  params={"n": 100}))
+    back = api.ExperimentSpec.from_json(spec.to_json())
+    assert back == spec and back.cluster.engine == "batched"
+    # pre-engine-field records (no "engine" key) read as the default
+    d = spec.to_dict()
+    del d["cluster"]["engine"]
+    assert api.ExperimentSpec.from_dict(d).cluster.engine == "vector"
+    with pytest.raises(api.SpecError, match="cluster.engine"):
+        api.ClusterSpec(job_servers=JOB_SERVERS, engine="warp")
+
+
+def test_engine_choice_is_result_invariant():
+    """engine='batched' must reproduce engine='vector' bit for bit through
+    the full spec path (composed cluster + scripted events included)."""
+    servers = cluster(6)
+    sc = scripted_scenario(servers, horizon=150.0)
+    reports = {}
+    for engine in api.ENGINES:
+        spec = api.ExperimentSpec(
+            cluster=api.ClusterSpec(servers=servers, service=SERVICE,
+                                    engine=engine),
+            scenario=api.ScenarioSpec.from_scenario(sc),
+            workload=api.WorkloadSpec(base_rate=3.0), seed=0)
+        reports[engine] = api.run(spec)
+    a, b = reports["vector"], reports["batched"]
+    assert not {k: v for k, v in a.diff(b).items()}, a.diff(b)
+    assert np.array_equal(a.raw.result.response_times,
+                          b.raw.result.response_times)
+
+
+def test_build_simulator_honors_engine():
+    from repro.core.engines import BatchedEngine, VectorEngine
+
+    spec = api.ExperimentSpec(
+        cluster=api.ClusterSpec(job_servers=JOB_SERVERS, engine="batched"),
+        scenario=api.ScenarioSpec(horizon=100.0),
+        workload=api.WorkloadSpec(generator="poisson", base_rate=4.0,
+                                  params={"n": 500}))
+    assert isinstance(api.build_simulator(spec), BatchedEngine)
+    assert isinstance(
+        api.build_simulator(
+            api.spec_replace(spec, "cluster.engine", "vector")),
+        VectorEngine)
+
+
+def test_sweep_engine_override_and_parity():
+    """sweep(engine=...) rewrites every point's engine; batched and vector
+    sweeps agree bit for bit whether or not the one-pass fast path ran."""
+    spec = api.ExperimentSpec(
+        cluster=api.ClusterSpec(job_servers=JOB_SERVERS),
+        scenario=api.ScenarioSpec(horizon=300.0),
+        workload=api.WorkloadSpec(generator="poisson", base_rate=8.0,
+                                  params={"n": 2500}),
+        seed=0, warmup_fraction=0.1)
+    seeds = [0, 1, 2, 3]
+    fast = api.sweep(spec, {"seed": seeds}, engine="batched")
+    slow = api.sweep(spec, {"seed": seeds}, engine="vector")
+    assert [p.spec.cluster.engine for p in fast] == ["batched"] * 4
+    for pf, ps in zip(fast, slow):
+        assert pf.overrides == ps.overrides
+        assert np.array_equal(pf.report.raw.result.response_times,
+                              ps.report.raw.result.response_times)
+        assert pf.report.completed_all
+
+
+def test_sweep_one_pass_only_when_eligible():
+    """Grids that cannot stack (multi-policy) must take the per-point
+    path and still agree with per-point runs."""
+    from repro.core.engines import jax_available
+
+    spec = api.ExperimentSpec(
+        cluster=api.ClusterSpec(job_servers=JOB_SERVERS, engine="batched"),
+        scenario=api.ScenarioSpec(horizon=200.0),
+        workload=api.WorkloadSpec(generator="poisson", base_rate=8.0,
+                                  params={"n": 1500}),
+        seed=0)
+    pts = api.sweep(spec, {"policy.name": ["jffc", "sed"]})
+    assert not any(p.report.extras.get("swept_one_pass") for p in pts)
+    for p in pts:
+        solo = api.run(p.spec)
+        assert np.array_equal(p.report.raw.result.response_times,
+                              solo.raw.result.response_times)
+    if jax_available():
+        one = api.sweep(spec, {"seed": [0, 1]})
+        assert all(p.report.extras.get("swept_one_pass") for p in one)
+
+
+# ---------------------------------------------------------------------------
+# Results store (PR 5)
+# ---------------------------------------------------------------------------
+
+def _store_spec(seed=0):
+    return api.ExperimentSpec(
+        cluster=api.ClusterSpec(job_servers=JOB_SERVERS),
+        scenario=api.ScenarioSpec(horizon=100.0),
+        workload=api.WorkloadSpec(generator="poisson", base_rate=6.0,
+                                  params={"n": 800}),
+        seed=seed, warmup_fraction=0.1, name="store-test")
+
+
+def test_results_store_hit_and_mutation_miss(tmp_path):
+    store = api.ResultsStore(str(tmp_path / "cache"))
+    spec = _store_spec()
+    first = api.run(spec, store=store)
+    assert (store.hits, len(store)) == (0, 1)
+    second = api.run(spec, store=store)          # identical spec: cache hit
+    assert store.hits == 1 and len(store) == 1
+    assert second.raw is None                    # served from disk
+    assert second.response == first.response
+    assert second.n_completed == first.n_completed
+    assert not first.diff(second)
+    mutated = api.run(spec.replace(seed=1), store=store)   # any change: miss
+    assert store.hits == 1 and len(store) == 2
+    assert mutated.response != first.response
+
+
+def test_results_store_keys_on_plane_and_engine(tmp_path):
+    store = api.ResultsStore(str(tmp_path))
+    spec = _store_spec()
+    api.run(spec, store=store)
+    # same spec, different engine -> different key -> miss
+    api.run(api.spec_replace(spec, "cluster.engine", "batched"),
+            store=store)
+    assert store.hits == 0 and len(store) == 2
+    assert api.spec_key(spec, "sim", "vector") \
+        != api.spec_key(spec, "live", "vector")
+    assert api.spec_key(spec, "sim", "vector") \
+        != api.spec_key(spec, "sim", "batched")
+
+
+def test_results_store_bypassed_by_escape_hatches(tmp_path):
+    store = api.ResultsStore(str(tmp_path))
+    spec = _store_spec()
+    rows = [(0.5, 1.0, 0, 0), (1.0, 0.5, 0, 0)]
+    api.run(spec, arrivals=rows, store=store)
+    assert len(store) == 0                       # not a function of the spec
+
+
+def test_run_report_from_dict_round_trip():
+    rep = api.run(_store_spec())
+    back = api.RunReport.from_dict(rep.to_dict())
+    assert back.response == rep.to_dict()["response"]
+    assert back.per_class.keys() == rep.per_class.keys()
+    assert not rep.diff(back)
+    with pytest.raises(ValueError, match="unknown RunReport fields"):
+        api.RunReport.from_dict({**rep.to_dict(), "bogus": 1})
+
+
+# ---------------------------------------------------------------------------
+# Experiment presets (PR 5)
+# ---------------------------------------------------------------------------
+
+def test_presets_registry_builds_valid_specs():
+    assert set(api.PRESETS.names()) >= {"diurnal_autoscale",
+                                        "overloaded_70_30",
+                                        "failover_burst"}
+    for name in api.PRESETS:
+        spec = api.preset(name)
+        assert isinstance(spec, api.ExperimentSpec)
+        # every preset round-trips (it is an ExperimentSpec like any other)
+        assert api.ExperimentSpec.from_json(spec.to_json()) == spec
+
+
+def test_preset_knobs_and_unknown_name():
+    spec = api.preset("overloaded_70_30", policy="jffc", aging_rate=0.0,
+                      batch_deadline=math.inf, name="fifo-leg")
+    assert spec.policy.name == "jffc" and spec.name == "fifo-leg"
+    assert spec.workload.classes[1].deadline == math.inf
+    with pytest.raises(api.UnknownNameError, match="experiment preset"):
+        api.preset("no-such-preset")
+
+
+def test_failover_burst_preset_runs_clean():
+    rep = api.run(api.preset("failover_burst", n_target=1_500))
+    assert rep.completed_all
+    assert rep.reconfigurations == 2             # fail + recover
+    kinds = [e["kind"] for e in rep.events]
+    assert kinds == ["fail", "add"]
+
+
+def test_results_store_keys_on_plane_configuration(tmp_path):
+    """Two differently configured planes must never share a cache entry
+    (a LivePlane(dt=2.0) report is not a LivePlane(dt=0.25) report)."""
+    store = api.ResultsStore(str(tmp_path))
+    spec = base_spec(cluster(6), horizon=60.0,
+                     workload=api.WorkloadSpec(base_rate=2.0),
+                     scenario=api.ScenarioSpec(horizon=60.0))
+    coarse = api.run(spec, plane=api.LivePlane(dt=2.0), store=store)
+    fine = api.run(spec, plane=api.LivePlane(dt=0.25), store=store)
+    assert store.hits == 0 and len(store) == 2
+    assert coarse.sim_time != fine.sim_time
+    # same configuration: a hit
+    again = api.run(spec, plane=api.LivePlane(dt=2.0), store=store)
+    assert store.hits == 1 and again.sim_time == coarse.sim_time
+
+
+def test_results_store_bypassed_without_store_key(tmp_path):
+    """A plane that does not declare a store_key is never cached."""
+    class OpaquePlane:
+        name = "opaque"
+
+        def run(self, spec, *, arrivals=None, controller=None):
+            return api.run(spec)          # delegate, identity unknown
+
+    store = api.ResultsStore(str(tmp_path))
+    rep = api.run(_store_spec(), plane=OpaquePlane(), store=store)
+    assert rep.completed_all and len(store) == 0
+
+
+def test_sweep_late_fallback_reuses_traces_and_matches_per_point():
+    """A batched-engine grid whose traces cannot stack (the horizon-driven
+    'scenario' generator gives each seed a different job count) must fall
+    back to sequential execution with results identical to plain runs."""
+    spec = api.ExperimentSpec(
+        cluster=api.ClusterSpec(job_servers=JOB_SERVERS, engine="batched"),
+        scenario=api.ScenarioSpec(horizon=400.0),
+        workload=api.WorkloadSpec(base_rate=6.0),       # scenario-generated
+        seed=0, warmup_fraction=0.1)
+    pts = api.sweep(spec, {"seed": [0, 1, 2]})
+    assert not any(p.report.extras.get("swept_one_pass") for p in pts)
+    lens = {p.report.n_jobs for p in pts}
+    assert len(lens) > 1                   # the reason it could not stack
+    for p in pts:
+        solo = api.run(p.spec)
+        assert np.array_equal(p.report.raw.result.response_times,
+                              solo.raw.result.response_times)
+
+
+def test_failover_burst_preset_validates_fleet_size():
+    with pytest.raises(api.SpecError, match="n_servers"):
+        api.preset("failover_burst", n_servers=3)
+    api.preset("failover_burst", n_servers=4)   # smallest valid fleet
+
+
+def test_results_store_live_plane_ignores_sim_engine(tmp_path):
+    """cluster.engine is sim-only: live-plane runs of its engine variants
+    share one cache entry (same experiment, no silent re-execution)."""
+    store = api.ResultsStore(str(tmp_path))
+    spec = base_spec(cluster(6), horizon=60.0,
+                     workload=api.WorkloadSpec(base_rate=2.0),
+                     scenario=api.ScenarioSpec(horizon=60.0))
+    api.run(spec, plane=api.LivePlane(dt=1.0), store=store)
+    hit = api.run(api.spec_replace(spec, "cluster.engine", "batched"),
+                  plane=api.LivePlane(dt=1.0), store=store)
+    assert store.hits == 1 and len(store) == 1
+    assert hit.plane == "live"

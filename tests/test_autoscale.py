@@ -11,6 +11,8 @@ import math
 import numpy as np
 import pytest
 
+from conftest import run_scenario_spec as run_scenario
+from repro import api
 from repro.core import (
     Scenario,
     ScenarioEvent,
@@ -19,7 +21,6 @@ from repro.core import (
     azure_like_trace_np,
     diurnal_phases,
     diurnal_poisson,
-    run_scenario,
     token_work,
     trace_replay_phases,
 )
@@ -429,7 +430,8 @@ def test_controller_closes_loop_on_orchestrator():
             telemetry=Telemetry(TelemetryConfig(window=20.0)))
         ctl.bind_orchestrator(orch)
         reqs = _timed_requests()
-        summary = orch.run_scenario(Scenario(horizon=120.0), reqs, dt=0.5)
+        summary = api.drive_orchestrator(orch, Scenario(horizon=120.0),
+                                         reqs, dt=0.5)
         assert summary["finished"] == len(reqs), pol.name
         assert summary["failed"] == 0, pol.name
         assert ctl.server_seconds > 0

@@ -1,0 +1,245 @@
+"""Cross-backend parity suite: every simulation backend produces
+bit-identical ``SimResult``s on fixed seeds.
+
+``engine="vector"`` is the parity anchor (itself pinned to the scalar
+oracle by ``test_simulator_parity.py``); ``engine="batched"`` must match it
+bit for bit on every policy, through pauses, reconfigurations, and the
+compiled JFFC fast path (exercised directly when jax is importable, and by
+construction absent when it is not — the suite passes in both the full and
+the minimal CI matrices).
+"""
+import random
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    RequestClass,
+    VECTORIZED_POLICIES,
+    classed_poisson_mix,
+    engine_names,
+    make_engine,
+    simulate_vectorized,
+)
+from repro.core.engines import (
+    BatchedEngine,
+    ENGINES,
+    POLICY_KERNELS,
+    VectorEngine,
+    jax_available,
+    run_seed_grid,
+)
+from repro.core.simulator import poisson_arrivals
+from repro.core.workload import poisson_exponential_np
+
+SERVERS = [(1.0, 2), (0.8, 2), (0.5, 4)]   # nu = 5.6
+RATES = [m for m, _ in SERVERS]
+CAPS = [c for _, c in SERVERS]
+
+needs_jax = pytest.mark.skipif(not jax_available(),
+                               reason="jax not installed")
+
+
+def _identical(a, b):
+    assert a.n_completed == b.n_completed
+    assert np.array_equal(a.response_times, b.response_times)
+    assert np.array_equal(a.waiting_times, b.waiting_times)
+    assert np.array_equal(a.service_times, b.service_times)
+    assert a.sim_time == b.sim_time
+    assert a.n_rejected == b.n_rejected
+    if a.class_ids is not None or b.class_ids is not None:
+        assert np.array_equal(a.class_ids, b.class_ids)
+
+
+def _pair(policy, seed=3, classes=None, aging=0.0, scan_min=None):
+    """A (vector, batched) engine pair over the standard chain set."""
+    v = make_engine("vector", RATES, CAPS, policy=policy, seed=seed,
+                    classes=classes, aging_rate=aging)
+    b = make_engine("batched", RATES, CAPS, policy=policy, seed=seed,
+                    classes=classes, aging_rate=aging)
+    if scan_min is not None:
+        b.scan_min_jobs = scan_min
+    return v, b
+
+
+# ---------------------------------------------------------------------------
+# Registry / construction surface
+# ---------------------------------------------------------------------------
+
+def test_engine_registry_surface():
+    assert engine_names() == ("batched", "vector")
+    assert ENGINES["vector"] is VectorEngine
+    assert ENGINES["batched"] is BatchedEngine
+    assert isinstance(make_engine(None, RATES, CAPS), VectorEngine)
+    with pytest.raises(ValueError, match="unknown simulation engine"):
+        make_engine("warp", RATES, CAPS)
+    assert set(VECTORIZED_POLICIES) == set(POLICY_KERNELS)
+
+
+@pytest.mark.parametrize("engine", sorted(ENGINES))
+def test_engines_reject_unsupported_policy(engine):
+    with pytest.raises(ValueError, match="not vectorized"):
+        make_engine(engine, RATES, CAPS, policy="round-robin")
+
+
+# ---------------------------------------------------------------------------
+# Bit-identical results, all policies, both completion modes
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy", VECTORIZED_POLICIES)
+@pytest.mark.parametrize("lam", [2.0, 5.3])           # light / near-saturated
+def test_cross_backend_bit_identical(policy, lam):
+    arrivals = poisson_arrivals(lam, 6_000, random.Random(0))
+    a = simulate_vectorized(policy, SERVERS, arrivals, seed=3,
+                            engine="vector")
+    b = simulate_vectorized(policy, SERVERS, arrivals, seed=3,
+                            engine="batched")
+    _identical(a, b)
+
+
+def test_cross_backend_priority_multiclass():
+    """Priority engine with real classes, aging, and an admission gate:
+    the batched backend must shed the same jobs at the same instants."""
+    classes = [RequestClass("interactive", "chat", 0, slo_target=2.0),
+               RequestClass("batch", "offline", 1, deadline=5.0)]
+    t, w, c = classed_poisson_mix([3.9, 1.8], 1_500.0, seed=5)
+    for aging in (0.0, 0.02):
+        a = simulate_vectorized("priority", SERVERS, (t, w, c), seed=5,
+                                classes=classes, aging_rate=aging,
+                                engine="vector")
+        b = simulate_vectorized("priority", SERVERS, (t, w, c), seed=5,
+                                classes=classes, aging_rate=aging,
+                                engine="batched")
+        _identical(a, b)
+        assert np.array_equal(a.rejected_class_ids, b.rejected_class_ids)
+
+
+def test_cross_backend_segmented_and_reconfigured():
+    """Pause / reconfigure mid-run on both backends: restart mode (chain
+    retired while saturated) then drain mode (voluntary re-tune), ending
+    bit-identical — the scenario engine's full surface."""
+    arrivals = poisson_arrivals(4.5, 6_000, random.Random(7))
+    horizon = arrivals[-1][0]
+    results = []
+    for engine in ("vector", "batched"):
+        sim = make_engine(engine, RATES, CAPS, policy="jffc", seed=8,
+                          keys=["a", "b", "c"])
+        sim.add_arrivals(arrivals)
+        sim.run_until(0.3 * horizon)
+        sim.reconfigure([1.0, 0.5], [2, 4], at_time=0.3 * horizon,
+                        keys=["a", "c"], mode="restart")
+        sim.run_until(0.6 * horizon)
+        sim.reconfigure(RATES, CAPS, at_time=0.6 * horizon,
+                        keys=["a", "b", "c"], mode="drain")
+        sim.run_to_completion()
+        assert sim.queue_len() == 0 and sim.in_flight == 0
+        results.append((sim.result(warmup_fraction=0.0), list(sim.comp),
+                        sim.restarts, sim.drains, sim.reconfigurations))
+    (res_v, comp_v, rst_v, drn_v, rec_v) = results[0]
+    (res_b, comp_b, rst_b, drn_b, rec_b) = results[1]
+    _identical(res_v, res_b)
+    assert comp_v == comp_b
+    assert (rst_v, drn_v, rec_v) == (rst_b, drn_b, rec_b)
+    assert res_v.n_completed == len(arrivals)
+
+
+@pytest.mark.parametrize("policy", ["jffs", "priority"])
+def test_cross_backend_reconfigure_dedicated_and_priority(policy):
+    arrivals = poisson_arrivals(4.5, 4_000, random.Random(13))
+    t_half = arrivals[2000][0]
+    results = []
+    for engine in ("vector", "batched"):
+        sim = make_engine(engine, RATES, CAPS, policy=policy, seed=14,
+                          keys=["a", "b", "c"])
+        sim.add_arrivals(arrivals)
+        sim.run_until(t_half)
+        sim.reconfigure([1.0, 0.5], [2, 4], at_time=t_half, keys=["a", "c"])
+        sim.run_to_completion()
+        results.append(sim.result(warmup_fraction=0.0))
+    _identical(results[0], results[1])
+    assert results[0].n_completed == len(arrivals)
+
+
+# ---------------------------------------------------------------------------
+# The compiled fast path (jax present): forced onto small traces
+# ---------------------------------------------------------------------------
+
+@needs_jax
+def test_scan_path_engaged_and_identical():
+    t, w = poisson_exponential_np(5.0, 3_000, seed=0)
+    v, b = _pair("jffc", scan_min=1)
+    v.add_arrivals(t, w)
+    b.add_arrivals(t, w)
+    assert b._scan_eligible()
+    v.run_to_completion()
+    b.run_to_completion()
+    _identical(v.result(), b.result())
+    assert v.comp == b.comp                  # completion order, exactly
+    assert b.i == b.n and b.in_flight == 0
+
+
+@needs_jax
+def test_scan_path_tie_breaking():
+    """Crafted integer-grid trace with identical works: bitwise-equal
+    finish times across slots force the (finish, seq) tie-break."""
+    n = 600
+    t = np.arange(n, dtype=np.float64) * 0.125
+    w = np.ones(n, dtype=np.float64)
+    servers = [(1.0, 2), (0.5, 2), (0.25, 1)]
+    a = simulate_vectorized("jffc", servers, (t, w), seed=1,
+                            warmup_fraction=0.0, engine="vector")
+    sim = BatchedEngine([m for m, _ in servers], [c for _, c in servers],
+                        policy="jffc", seed=2)
+    sim.scan_min_jobs = 1
+    sim.add_arrivals(t, w)
+    sim.run_to_completion()
+    _identical(a, sim.result(warmup_fraction=0.0))
+
+
+@needs_jax
+def test_scan_path_resumes_from_paused_state():
+    """run_until leaves in-flight work on the heap; the scan must seed its
+    slot state from it and still match the interpreter bit for bit."""
+    arrivals = poisson_arrivals(4.8, 5_000, random.Random(5))
+    horizon = arrivals[-1][0]
+    v, b = _pair("jffc", seed=6, scan_min=1)
+    v.add_arrivals(arrivals)
+    b.add_arrivals(arrivals)
+    v.run_until(0.4 * horizon)
+    b.run_until(0.4 * horizon)               # finite horizon: interpreter
+    assert b.in_flight > 0
+    v.run_to_completion()
+    b.run_to_completion()                    # resumes via the compiled path
+    _identical(v.result(), b.result())
+    assert v.comp == b.comp
+
+
+@needs_jax
+def test_run_seed_grid_matches_per_seed_engines():
+    """The one-pass vmapped grid == one engine per seed, bit for bit."""
+    lam, n, S = 4.8, 2_000, 6
+    traces = [poisson_exponential_np(lam, n, seed=s) for s in range(S)]
+    grid = run_seed_grid(RATES, CAPS,
+                         np.stack([t for t, _ in traces]),
+                         np.stack([w for _, w in traces]),
+                         warmup_fraction=0.1)
+    assert len(grid) == S
+    for (t, w), res in zip(traces, grid):
+        one = simulate_vectorized("jffc", SERVERS, (t, w), seed=9,
+                                  engine="vector")
+        _identical(one, res)
+
+
+def test_batched_without_scan_still_batched_engine():
+    """Below the scan threshold (or without jax) the batched backend is
+    the interpreter in disguise — same results, same telemetry taps."""
+    t, w = poisson_exponential_np(5.0, 500, seed=3)
+    v, b = _pair("jffc", seed=4)
+    assert b.scan_min_jobs > 500             # default threshold: fallback
+    v.add_arrivals(t, w)
+    b.add_arrivals(t, w)
+    v.run_to_completion()
+    b.run_to_completion()
+    _identical(v.result(), b.result())
+    assert v.total_capacity == b.total_capacity
+    assert v.completions_since(0) == b.completions_since(0)

@@ -17,6 +17,7 @@ from repro.autoscale import (
     Telemetry,
     TelemetryConfig,
 )
+from conftest import run_scenario_spec as run_scenario
 from repro.core import (
     DEFAULT_CLASS,
     RequestClass,
@@ -27,7 +28,6 @@ from repro.core import (
     classed_poisson_mix,
     interactive_batch_mix,
     label_classes,
-    run_scenario,
     simulate_vectorized,
 )
 from repro.core.simulator import poisson_arrivals

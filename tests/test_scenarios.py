@@ -6,13 +6,13 @@ import random
 import numpy as np
 import pytest
 
+from conftest import run_scenario_spec as run_scenario
 from repro.core import (
     Scenario,
     ScenarioEvent,
     Server,
     ServiceSpec,
     compose_or_degrade,
-    run_scenario,
 )
 
 SPEC = ServiceSpec(num_blocks=10, block_size_gb=1.32, cache_size_gb=0.11)

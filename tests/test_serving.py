@@ -174,7 +174,9 @@ def test_orchestrator_runs_scripted_scenario(tiny):
                 .slowdown(4.0, straggler, 1.6)
                 .recover(6.0, victim_server))
     reqs = [_mk_request(i, 8, 4) for i in range(6)]
-    summary = orch.run_scenario(scenario, reqs, dt=1.0)
+    from repro.api import drive_orchestrator
+
+    summary = drive_orchestrator(orch, scenario, reqs, dt=1.0)
     assert all(r.state == State.DONE for r in reqs)
     assert summary["finished"] == 6 and summary["failed"] == 0
     kinds = [e["kind"] for e in summary["events"]]
