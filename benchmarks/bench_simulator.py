@@ -7,9 +7,10 @@ Headline numbers (written to ``BENCH_simulator.json``):
     end (batched numpy generators vs. the scalar tuple-list path), i.e. the
     wall-clock cost of producing one ``SimResult``;
   * **backend legs** — ``engine="vector"`` vs ``engine="batched"`` jobs/s
-    (one spec, two backends, identical results) and a 16-seed
+    (one spec, two backends, identical results), a 16-seed
     ``repro.api.sweep`` executed as one compiled vmapped pass vs
-    sequential per-seed replay;
+    sequential per-seed replay, and the full **policy×seed grid** under
+    the counter RNG scheme (every dispatch policy compiled, one pass);
   * a million-job feasibility run through the vectorized engine;
   * a scenario-engine run (the ``failover_burst`` preset) at 5k+ jobs.
 
@@ -220,6 +221,74 @@ def sweep_records(n: int = 50_000, seeds: int = 16,
     return rows
 
 
+def policy_sweep_record(n: int = 20_000, seeds: int = 8,
+                        repeats: int = 3) -> dict:
+    """The full policy×seed grid in one compiled pass (PR 6): every
+    registered dispatch policy under the counter RNG scheme — including
+    the RNG-consuming ones, whose stateless per-job threefry uniforms are
+    what make them compilable at all.
+
+    The baseline is **sequential replay**: the same call ran point by
+    point through the batched engine before the multi-policy grid path
+    existed, paying the compiled kernel's dispatch cost once per point
+    instead of once per policy group.  The interpreter-backend sweep
+    rides along as a third leg (``interpreter_s``) for scale — on a
+    single CPU core its tuned event loop is the toughest comparison.
+    All three legs are checked bit-identical; interleaved median-of-N
+    CPU timing."""
+    lam = 0.8 * NU
+    spec = api.spec_replace(
+        _precomposed_spec(lam, n, engine="batched"), "rng_scheme", "counter")
+    grid = {"policy.name": list(VECTORIZED_POLICIES),
+            "seed": list(range(seeds))}
+    # sweep() enumerates the grid first-key-slowest: policy outer, seed
+    # inner — pt_specs below must match that order point for point
+    pt_specs = [
+        api.spec_replace(api.spec_replace(spec, "policy.name", pol),
+                         "seed", s)
+        for pol in VECTORIZED_POLICIES for s in range(seeds)]
+
+    def sequential_replay():
+        return [api.run(ps) for ps in pt_specs]
+
+    def one_pass_sweep():
+        return api.sweep(spec, grid)
+
+    fast = one_pass_sweep()
+    slow = sequential_replay()
+    interp = api.sweep(spec, grid, engine="vector")
+    identical = all(
+        np.array_equal(a.report.raw.result.response_times,
+                       b.raw.result.response_times)
+        and np.array_equal(a.report.raw.result.response_times,
+                           c.report.raw.result.response_times)
+        for a, b, c in zip(fast, slow, interp))
+    one_pass = all(p.report.extras.get("swept_one_pass") for p in fast)
+
+    s_seq, s_bat = timed_pair(sequential_replay, one_pass_sweep, repeats)
+    s_int, _ = timed_pair(
+        lambda: api.sweep(spec, grid, engine="vector"), one_pass_sweep,
+        repeats)
+    return {
+        "name": "simulator_sweep_policy_grid",
+        "n_jobs": n,
+        "seeds": seeds,
+        "policies": list(VECTORIZED_POLICIES),
+        "rng_scheme": "counter",
+        "timer": "process_time",
+        "repeats": repeats,
+        "compiled_kernel": jax_available(),
+        "one_pass": one_pass,
+        "bit_identical": identical,
+        "sequential_s": s_seq["median"],
+        "one_pass_s": s_bat["median"],
+        "interpreter_s": s_int["median"],
+        "sweep_speedup": s_seq["median"] / max(s_bat["median"], 1e-9),
+        "sweep_speedup_best": s_seq["best"] / max(s_bat["best"], 1e-9),
+        "interpreter_speedup": s_int["median"] / max(s_bat["median"], 1e-9),
+    }
+
+
 def million_job_record(n: int = 1_000_000) -> dict:
     """Feasibility: one million jobs through the vectorized engine."""
     lam = 0.9 * NU
@@ -261,6 +330,7 @@ def run(n_jobs: int = 100_000, million: bool = True) -> List[dict]:
     rows += throughput_records(n_jobs)
     rows += engine_records(max(n_jobs, 5_000))
     rows += sweep_records(n=max(n_jobs // 2, 2_500), seeds=16)
+    rows.append(policy_sweep_record(n=max(n_jobs // 5, 2_000)))
     if million:
         rows.append(million_job_record())
     rows.append(scenario_record())

@@ -145,7 +145,8 @@ def _execute_sim(
                       seed=spec.engine_seed(), keys=keys,
                       classes=classes,
                       aging_rate=spec.policy.aging_rate,
-                      admission_level=spec.admission.level)
+                      admission_level=spec.admission.level,
+                      rng_scheme=spec.rng_scheme)
     sim.add_arrivals(times, works, cls_ids)
     log: List[ScenarioLogEntry] = []
     composed_lam = base_rate          # load the current chain set targets
@@ -305,7 +306,8 @@ def build_simulator(spec: ExperimentSpec, scenario: Optional[Scenario] = None,
                       policy=spec.policy.name,
                       seed=spec.engine_seed(), classes=classes,
                       aging_rate=spec.policy.aging_rate,
-                      admission_level=spec.admission.level)
+                      admission_level=spec.admission.level,
+                      rng_scheme=spec.rng_scheme)
     sim.add_arrivals(times, works, cls_ids)
     return sim
 

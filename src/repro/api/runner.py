@@ -53,9 +53,10 @@ def run(spec: ExperimentSpec, plane: Union[str, object] = "sim", *,
     if use_store:
         key_spec = spec
         if getattr(p, "ignores_sim_engine", False):
-            # planes that never consult cluster.engine cache engine
-            # variants of one spec as a single entry
+            # planes that never consult cluster.engine (or the sim-only
+            # rng_scheme) cache those variants of one spec as one entry
             key_spec = spec_replace(spec, "cluster.engine", "vector")
+            key_spec = spec_replace(key_spec, "rng_scheme", "legacy")
         cached = store.load(key_spec, plane_key)
         if cached is not None:
             return cached
@@ -100,7 +101,8 @@ class SweepPoint:
 
 def sweep(spec: ExperimentSpec, grid: Mapping[str, Sequence],
           plane: Union[str, object] = "sim", *,
-          arrivals=None, engine: Optional[str] = None) -> List[SweepPoint]:
+          arrivals=None, engine: Optional[str] = None,
+          store=None, devices: Optional[int] = None) -> List[SweepPoint]:
     """Seeded grid sweep: run ``spec`` once per point of the cartesian
     product of ``grid`` (dotted-path field -> values, e.g.
     ``{"policy.name": ["jffc", "sed"], "seed": [0, 1]}``).
@@ -112,18 +114,28 @@ def sweep(spec: ExperimentSpec, grid: Mapping[str, Sequence],
 
     ``engine`` overrides ``spec.cluster.engine`` for every point.  With
     ``engine="batched"`` on the sim plane, a grid whose points are all
-    pre-composed class-blind JFFC specs (the canonical seed grid) executes
-    as **one compiled pass** — the traces stack into one array and a
-    vmapped ``jax.lax.scan`` runs every point simultaneously
-    (:func:`repro.core.engines.run_seed_grid`).  Results are bit-identical
-    to the sequential per-point path; grids that don't fit the fast path
-    (other policies, composed clusters, classes, jax absent) silently fall
-    back to sequential execution on the chosen engine.
+    pre-composed class-blind specs executes as **one compiled pass per
+    policy** — the traces stack into one array and a vmapped
+    ``jax.lax.scan`` runs every point simultaneously, sharded over
+    ``devices`` when more than one is visible
+    (:func:`repro.core.engines.run_grid`).  *Every* registered dispatch
+    policy takes this path; the RNG-consuming ones (``random`` / ``jsq``
+    / ``jiq``) additionally need ``spec.rng_scheme="counter"``.  Results
+    are bit-identical to the sequential per-point path; grids that don't
+    fit (composed clusters, classes, autoscale, legacy-scheme RNG
+    policies, jax absent) silently fall back to sequential execution on
+    the chosen engine.
+
+    ``store=`` (a :class:`repro.api.results.ResultsStore`) threads
+    through both paths: cached points load instead of re-running, fresh
+    points persist.  One-pass and per-point runs of the same spec are
+    bit-identical, so they share cache entries.
     """
     if engine is not None:
         spec = spec_replace(spec, "cluster.engine", engine)
     if not grid:
-        return [SweepPoint({}, spec, run(spec, plane, arrivals=arrivals))]
+        return [SweepPoint({}, spec, run(spec, plane, arrivals=arrivals,
+                                         store=store))]
     keys = list(grid)
     pts: List[Tuple[Dict[str, object], ExperimentSpec]] = []
     for values in itertools.product(*(grid[k] for k in keys)):
@@ -132,23 +144,28 @@ def sweep(spec: ExperimentSpec, grid: Mapping[str, Sequence],
         for path, value in overrides.items():
             pt_spec = spec_replace(pt_spec, path, value)
         pts.append((overrides, pt_spec))
-    fast = _sweep_one_pass(pts, plane, arrivals)
+    fast = _sweep_one_pass(pts, plane, arrivals, store, devices)
     if fast is not None:
         return fast
-    return [SweepPoint(o, s, run(s, plane, arrivals=arrivals))
+    return [SweepPoint(o, s, run(s, plane, arrivals=arrivals, store=store))
             for o, s in pts]
 
 
-def _sweep_one_pass(pts, plane, arrivals) -> Optional[List[SweepPoint]]:
-    """Try the vmapped seed-grid fast path; ``None`` = not applicable.
+def _sweep_one_pass(pts, plane, arrivals, store=None,
+                    devices=None) -> Optional[List[SweepPoint]]:
+    """Try the compiled policy×seed grid fast path; ``None`` = not
+    applicable.
 
     Applicability (each point): sim plane, ``engine="batched"`` with jax
     importable, pre-composed ``job_servers`` (identical across points,
-    positive capacity), class-blind ``jffc``, no explicit-arrivals
+    positive capacity), class-blind registered policy (RNG-consuming
+    policies additionally under the counter scheme), no explicit-arrivals
     override, one warmup fraction, and generator traces of equal length.
     These are exactly the conditions under which the per-point path would
-    itself run the compiled JFFC kernel per seed — batching them is a pure
-    wall-clock win with bit-identical results.
+    itself run a compiled kernel per point — batching them is a pure
+    wall-clock win with bit-identical results.  Points are grouped by
+    policy, one stacked :func:`repro.core.engines.run_grid` call per
+    group, sharded over ``devices``.
 
     The cheap per-spec-field checks run before any trace is generated.
     When ineligibility only surfaces after resolving the traces (unequal
@@ -156,8 +173,17 @@ def _sweep_one_pass(pts, plane, arrivals) -> Optional[List[SweepPoint]]:
     class-labeled output), the resolved traces are not thrown away: the
     sequential fallback replays each point with its own trace as the
     ``arrivals`` override, which resolves to the identical run.
+
+    ``store=`` short-circuits cached points before any trace resolution
+    (one-pass results are bit-identical to per-point runs, so the cache
+    key is shared) and persists the fresh grid results.
     """
-    from repro.core.engines import jax_available, run_seed_grid
+    from repro.core.engines import (
+        RNG_POLICIES,
+        VECTORIZED_POLICIES,
+        jax_available,
+        run_grid,
+    )
     from repro.core.scenarios import ScenarioResult, _resolve_arrivals
     from repro.core.workload import AZURE_STATS
 
@@ -172,51 +198,89 @@ def _sweep_one_pass(pts, plane, arrivals) -> Optional[List[SweepPoint]]:
     for _, s in pts:
         if (s.cluster.engine != "batched" or not s.cluster.job_servers
                 or s.cluster.job_servers != base.cluster.job_servers
-                or s.policy.name != "jffc" or s.autoscale is not None
+                or s.policy.name not in VECTORIZED_POLICIES
+                or s.autoscale is not None
                 or s.workload.classes or s.workload.class_rates is not None
                 or s.warmup_fraction != base.warmup_fraction):
+            return None
+        if s.policy.name in RNG_POLICIES and s.rng_scheme != "counter":
             return None
     caps = [c for _, c in base.cluster.job_servers]
     if sum(caps) <= 0 or not jax_available():
         return None
-    traces = []
+    p = get_plane(plane)
+    plane_key = getattr(p, "store_key", lambda: None)()
+    use_store = store is not None and plane_key is not None
+    reports: Dict[int, object] = {}
+    if use_store:
+        for idx, (_, s) in enumerate(pts):
+            cached = store.load(s, plane_key)
+            if cached is not None:
+                reports[idx] = cached
+    misses = [i for i in range(len(pts)) if i not in reports]
+    traces: Dict[int, tuple] = {}
     stackable = True
-    for _, s in pts:
+    n = None
+    for i in misses:
+        s = pts[i][1]
         scenario = s.scenario.to_scenario()
         arr = _resolve_workload(s, scenario, None)
         times, works, cls_ids = _resolve_arrivals(
             scenario, s.workload.resolved_base_rate(), s.workload_seed(),
             arr, s.workload.service_model,
             s.workload.trace_stats or AZURE_STATS, None)
-        if cls_ids is not None or len(times) == 0 \
-                or len(times) != len(traces[0][0] if traces else times):
+        if cls_ids is not None or len(times) == 0:
             stackable = False
-        traces.append((times, works, cls_ids))
+        if n is None:
+            n = len(times)
+        elif len(times) != n:
+            stackable = False
+        traces[i] = (times, works, cls_ids)
     if not stackable:
         # sequential, but reusing the traces just resolved (a work-model
         # column tuple is exactly what the arrivals override accepts;
         # token-model works were *derived* from the trace, so those
-        # points regenerate from the spec instead)
+        # points regenerate from the spec instead).  The arrivals
+        # override bypasses the store inside run(), so only the
+        # regenerated points pass it through.
         out = []
-        for (overrides, s), (t, w, c) in zip(pts, traces):
+        for idx, (overrides, s) in enumerate(pts):
+            if idx in reports:
+                out.append(SweepPoint(overrides, s, reports[idx]))
+                continue
+            t, w, c = traces[idx]
             arr = None
             if s.workload.service_model == "work":
                 arr = (t, w) if c is None else (t, w, c)
-            out.append(SweepPoint(overrides, s, run(s, plane, arrivals=arr)))
+            out.append(SweepPoint(overrides, s, run(
+                s, plane, arrivals=arr,
+                store=store if arr is None else None)))
         return out
-    n = len(traces[0][0])
+    # one stacked compiled pass per policy present in the grid
+    groups: Dict[str, List[int]] = {}
+    for i in misses:
+        groups.setdefault(pts[i][1].policy.name, []).append(i)
     rates = [m for m, _ in base.cluster.job_servers]
-    results = run_seed_grid(rates, caps,
-                            np.stack([t for t, _, _ in traces]),
-                            np.stack([w for _, w, _ in traces]),
-                            base.warmup_fraction)
-    out = []
-    for (overrides, s), res in zip(pts, results):
-        sres = ScenarioResult(result=res, log=[], n_jobs=n,
-                              completed_all=True, reconfigurations=0,
-                              restarts=0, n_rejected=0)
-        extras = {"n_servers_final": len(s.cluster.job_servers),
-                  "swept_one_pass": True}
-        out.append(SweepPoint(overrides, s, report_from_scenario_result(
-            s, sres, plane="sim", extras=extras)))
-    return out
+    for pol, idxs in groups.items():
+        results = run_grid(
+            pol, rates, caps,
+            np.stack([traces[i][0] for i in idxs]),
+            np.stack([traces[i][1] for i in idxs]),
+            engine_seeds=[pts[i][1].engine_seed() for i in idxs],
+            rng_scheme=pts[idxs[0]][1].rng_scheme,
+            warmup_fraction=base.warmup_fraction,
+            devices=devices)
+        for i, res in zip(idxs, results):
+            s = pts[i][1]
+            sres = ScenarioResult(result=res, log=[], n_jobs=n,
+                                  completed_all=True, reconfigurations=0,
+                                  restarts=0, n_rejected=0)
+            extras = {"n_servers_final": len(s.cluster.job_servers),
+                      "swept_one_pass": True}
+            rep = report_from_scenario_result(s, sres, plane="sim",
+                                              extras=extras)
+            if use_store:
+                store.save(s, plane_key, rep)
+            reports[i] = rep
+    return [SweepPoint(o, s, reports[i])
+            for i, (o, s) in enumerate(pts)]

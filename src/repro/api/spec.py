@@ -22,6 +22,22 @@ silently seeding the simulator at ``seed + 1`` is written down):
 
 ``ENGINE_SEED_OFFSET = 1`` keeps every spec-driven run bit-identical to the
 pre-API entry points on the same ``seed``.
+
+**RNG-scheme rule** — *how* the engine seed turns into policy randomness is
+the spec's ``rng_scheme`` field (one of :data:`RNG_SCHEMES`):
+
+* ``"legacy"`` (default) — a stateful ``random.Random(engine_seed)``
+  stream whose call sequence replays the scalar oracle exactly; bit-
+  compatible with every pre-existing result, but inherently sequential;
+* ``"counter"`` — the stateless per-job derivation
+  ``u_j = threefry2x32(key=engine_seed, counter=job_index) * 2**-32``
+  (:mod:`repro.core.engines.counter_rng`): each RNG-consuming dispatch
+  decision is a pure function of ``(engine_seed, j)``, which is what lets
+  *every* dispatch policy run as a compiled ``lax.scan`` horizon and
+  whole policy×seed grids execute in one sharded pass
+  (``repro.api.sweep``).  Cross-engine bit-parity holds within each
+  scheme; results across schemes differ for ``random``/``jsq``/``jiq``
+  (deterministic policies are scheme-invariant).
 """
 from __future__ import annotations
 
@@ -41,6 +57,10 @@ from .registry import (
 
 #: engine RNG = spec.seed + this (see the module docstring's seed rule)
 ENGINE_SEED_OFFSET = 1
+
+#: how the engine seed becomes policy randomness (module docstring rule);
+#: canonical home: repro.core.engines.counter_rng.RNG_SCHEMES
+from repro.core.engines.counter_rng import RNG_SCHEMES  # noqa: E402
 
 SPEC_VERSION = 1
 
@@ -618,6 +638,7 @@ class ExperimentSpec:
     autoscale: Optional[AutoscaleSpec] = None
     seed: int = 0
     warmup_fraction: float = 0.0
+    rng_scheme: str = "legacy"
     name: str = ""
 
     def __post_init__(self):
@@ -633,6 +654,10 @@ class ExperimentSpec:
             raise SpecError("autoscale", "expected an AutoscaleSpec or None")
         if not 0.0 <= self.warmup_fraction < 1.0:
             raise SpecError("warmup_fraction", "must be in [0, 1)")
+        if self.rng_scheme not in RNG_SCHEMES:
+            raise SpecError("rng_scheme",
+                            f"unknown scheme {self.rng_scheme!r} "
+                            f"(known: {', '.join(RNG_SCHEMES)})")
         # rate must be resolvable up front, not at run time
         self.workload.resolved_base_rate()
         if self.cluster.job_servers:
@@ -665,6 +690,7 @@ class ExperimentSpec:
             "name": self.name,
             "seed": self.seed,
             "warmup_fraction": self.warmup_fraction,
+            "rng_scheme": self.rng_scheme,
             "cluster": self.cluster.to_dict(),
             "scenario": self.scenario.to_dict(),
             "workload": self.workload.to_dict(),
@@ -677,9 +703,9 @@ class ExperimentSpec:
     @classmethod
     def from_dict(cls, d) -> "ExperimentSpec":
         d = _take(d, "spec",
-                  ("version", "name", "seed", "warmup_fraction", "cluster",
-                   "scenario", "workload", "policy", "admission",
-                   "autoscale"))
+                  ("version", "name", "seed", "warmup_fraction",
+                   "rng_scheme", "cluster", "scenario", "workload", "policy",
+                   "admission", "autoscale"))
         version = d.get("version", SPEC_VERSION)
         if version != SPEC_VERSION:
             raise SpecError("spec.version",
@@ -701,6 +727,8 @@ class ExperimentSpec:
             seed=_dec_int(d.get("seed", 0), "spec.seed"),
             warmup_fraction=_dec_float(d.get("warmup_fraction", 0.0),
                                        "spec.warmup_fraction"),
+            rng_scheme=_dec_str(d.get("rng_scheme", "legacy"),
+                                "spec.rng_scheme"),
             name=_dec_str(d.get("name", ""), "spec.name"))
 
     def to_json(self, **kwargs) -> str:

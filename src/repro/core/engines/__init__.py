@@ -8,17 +8,24 @@ The simulator splits into three layers:
   carry-over, telemetry taps, result construction: shared by every backend.
 * **policy kernels** (:mod:`repro.core.engines.kernels`) — stateless
   array-in/array-out dispatch decisions (jffc / jffs / random / jsq /
-  sa-jsq / sed / jiq / priority), bit-identical to the scalar policies.
+  sa-jsq / sed / jiq / priority), bit-identical to the scalar policies,
+  runnable under either RNG scheme (:mod:`repro.core.engines.counter_rng`:
+  the legacy ``random.Random`` replay, or the stateless counter scheme
+  whose per-job threefry uniforms make every kernel a pure function).
 * **backends** — :class:`VectorEngine` (``engine="vector"``: the
   interpreter event loop, the parity anchor) and :class:`BatchedEngine`
-  (``engine="batched"``: compiled batched-horizon execution with a
-  ``jax.lax.scan`` JFFC kernel + vmap-over-seeds grid runner, interpreter
-  fallback elsewhere).
+  (``engine="batched"``: compiled batched-horizon execution — a
+  ``jax.lax.scan`` slot-race kernel for jffc/class-blind priority, a
+  per-event scan for every dedicated-queue policy, and a sharded
+  policy×seed grid runner (:func:`run_grid`) — interpreter fallback
+  elsewhere).
 
 Select a backend by name through :data:`ENGINES` / :func:`make_engine`,
-or declaratively via ``ClusterSpec(engine=...)`` in the experiment API.
-Every backend produces bit-identical :class:`SimResult`\\ s on fixed seeds
-— the cross-backend parity suite (``tests/test_engines.py``) enforces it.
+or declaratively via ``ClusterSpec(engine=...)`` +
+``ExperimentSpec(rng_scheme=...)`` in the experiment API.  Every backend
+produces bit-identical :class:`SimResult`\\ s on fixed seeds *per RNG
+scheme* — the cross-backend parity suite (``tests/test_engines.py``)
+enforces it.
 """
 from __future__ import annotations
 
@@ -35,15 +42,17 @@ except ImportError:                      # pragma: no cover
         return cls
 
 from .result import SimResult, _quantile_stats
+from .counter_rng import RNG_SCHEMES, counter_uniforms
 from .kernels import (
     CENTRAL_QUEUE_POLICIES,
     POLICY_KERNELS,
+    RNG_POLICIES,
     VECTORIZED_POLICIES,
     get_kernel,
 )
 from .core import EngineCore
 from .vector import VectorEngine
-from .batched import BatchedEngine, jax_available, run_seed_grid
+from .batched import BatchedEngine, jax_available, run_grid, run_seed_grid
 
 
 @runtime_checkable
@@ -115,5 +124,6 @@ __all__ = [
     "SimEngine", "EngineCore", "VectorEngine", "BatchedEngine",
     "SimResult", "ENGINES", "DEFAULT_ENGINE", "engine_names", "make_engine",
     "POLICY_KERNELS", "VECTORIZED_POLICIES", "CENTRAL_QUEUE_POLICIES",
-    "get_kernel", "jax_available", "run_seed_grid", "_quantile_stats",
+    "RNG_POLICIES", "RNG_SCHEMES", "counter_uniforms", "get_kernel",
+    "jax_available", "run_grid", "run_seed_grid", "_quantile_stats",
 ]

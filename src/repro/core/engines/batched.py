@@ -1,24 +1,37 @@
 """The compiled batched-horizon backend (``engine="batched"``).
 
 :class:`BatchedEngine` advances the system a horizon of events per step
-instead of one event at a time: for the JFFC central-queue policy the
-whole remaining trace is one horizon, executed by the compiled
-``jax.lax.scan`` slot-race kernel (:mod:`repro.core.engines.jax_scan`) —
-the per-job recurrence runs inside XLA and the epilogue reconstructs
-per-job starts/finishes and the completion order with numpy-vectorized
-``lexsort``/slice assignments rather than per-event Python.  Measured on
-the shared container this is ~3x the interpreter backend on a 100k-job
-trace and, ``vmap``-ed over seeds (:func:`run_seed_grid`), ~5x a
-sequential 16-seed replay.
+instead of one event at a time: the whole remaining trace is one horizon,
+executed by a compiled ``jax.lax.scan`` kernel
+(:mod:`repro.core.engines.jax_scan`).  **Every registered dispatch policy
+has a compiled path**:
+
+* ``jffc`` — the per-arrival slot-race kernel (any RNG scheme: the
+  policy is deterministic), epilogue via numpy ``lexsort``;
+* ``priority`` with a single default class — degenerates to the jffc
+  trajectory bit for bit, so it rides the same kernel;
+* the dedicated-queue policies (``jffs`` / ``random`` / ``jsq`` /
+  ``sa-jsq`` / ``sed`` / ``jiq``) — the per-event kernel, whose emitted
+  departure sequence *is* the completion order.  RNG-consuming policies
+  (``random``/``jsq``/``jiq``) need ``rng_scheme="counter"`` (the
+  stateless per-job threefry derivation); under the legacy
+  ``random.Random`` stream their draws are inherently sequential and the
+  engine falls back to the interpreter.
+
+Measured on the shared container the slot-race path is ~3x the
+interpreter on a 100k-job trace and, ``vmap``-ed over a grid
+(:func:`run_grid` / :func:`run_seed_grid`), one-pass sweeps run several
+times faster than sequential replay.
 
 **Parity is non-negotiable**: outputs are bit-identical to
-``engine="vector"`` (and hence the scalar oracle) on fixed seeds.  Where
-the compiled horizon path does not apply — RNG-consuming or priority
-policies, paused runs (``run_until`` with a finite horizon), explicit
-overflow queues left by :meth:`reconfigure`, pending drains, jax absent —
-the engine *falls back to the interpreter loops it inherits*, so every
-policy and scenario feature keeps working on this backend with identical
-results, just without the speedup.
+``engine="vector"`` (and hence, under the legacy scheme, the scalar
+oracle) on fixed seeds — *per RNG scheme*.  Where a compiled path does
+not apply — legacy-scheme RNG policies, multiclass priority, paused runs
+(``run_until`` with a finite horizon), explicit overflow queues left by
+:meth:`reconfigure`, pending drains, jax absent — the engine *falls back
+to the interpreter loops it inherits*, so every policy and scenario
+feature keeps working on this backend with identical results, just
+without the speedup.
 
 The fallback is not an afterthought: mid-run reconfiguration works by
 pausing (interpreter), swapping chains (shared core), then resuming — and
@@ -32,6 +45,8 @@ from typing import List, Optional, Sequence
 
 import numpy as np
 
+from .counter_rng import counter_uniforms
+from .kernels import CENTRAL_QUEUE_POLICIES, RNG_POLICIES
 from .result import SimResult
 from .vector import VectorEngine
 
@@ -79,11 +94,7 @@ class BatchedEngine(VectorEngine):
             ca = np.asarray(classes, dtype=np.int64)
             if len(ca) != len(ta):
                 raise ValueError("classes must match times in length")
-            if len(ca) and (ca.min() < 0 or ca.max() >= len(self.classes)):
-                raise ValueError(
-                    f"class indices must be in [0, {len(self.classes)})")
-        if len(ta) > 1 and np.any(np.diff(ta) < 0):
-            raise ValueError("arrival times must be non-decreasing")
+        self._validate_batch(ta, ca)      # shared core checks, identical
         self.times = ta
         self.works = wa
         self.cls = ca
@@ -104,16 +115,36 @@ class BatchedEngine(VectorEngine):
             self.fin = self.fin.tolist()
 
     def _scan_eligible(self) -> bool:
-        return (self.policy == "jffc"
-                and self.n - self.i >= self.scan_min_jobs
+        if not (self.n - self.i >= self.scan_min_jobs
                 and self.qh >= len(self.queue)        # no overflow queue
                 and not self._drain_pending
                 and self.total_capacity > 0
-                and _jax_available())
+                and _jax_available()):
+            return False
+        if self.policy == "jffc":
+            return True
+        if self.policy == "priority":
+            # class-blind degenerate: one default class, no finite
+            # deadline (admission can never shed), empty priority queue —
+            # the trajectory is jffc's bit for bit (aging only shifts the
+            # single tier monotonically in arrival time, i.e. FIFO)
+            return (len(self.classes) == 1
+                    and self._deadlines[0] == _INF
+                    and not self.pq)
+        # dedicated-queue policies: the event kernel needs empty dedicated
+        # queues (paused-with-backlog resumes fall back) and, for
+        # RNG-consuming kernels, the stateless counter scheme
+        if any(len(q) - h for q, h in zip(self.dq, self.dqh)):
+            return False
+        return (self.policy not in RNG_POLICIES
+                or self.rng_scheme == "counter")
 
     def run_until(self, until: float = _INF):
         if until == _INF and self._scan_eligible():
-            self._run_scan()
+            if self.policy in CENTRAL_QUEUE_POLICIES:
+                self._run_scan()
+            else:
+                self._run_event_scan()
             return self
         return super().run_until(until)
 
@@ -183,53 +214,186 @@ class BatchedEngine(VectorEngine):
         self.i = self.n
         self.seq += n_new
 
+    def _arrival_uniforms(self) -> np.ndarray:
+        """Counter-scheme per-job uniforms for the remaining arrivals
+        (zeros when the policy never draws — the kernel ignores them)."""
+        if self.rng_scheme == "counter" and self.policy in RNG_POLICIES:
+            return counter_uniforms(self.seed, np.arange(self.i, self.n))
+        return np.zeros(self.n - self.i)
+
+    def _run_event_scan(self) -> None:
+        """The compiled per-event horizon for dedicated-queue policies."""
+        from . import jax_scan
+
+        i0 = self.i
+        n_new = self.n - i0
+        times, works = self._arrival_arrays()
+        us = self._arrival_uniforms()
+        slot_rate, _, slot_chain = jax_scan.slot_layout(
+            self.rates, self.caps, self.chain_order)
+        C = len(slot_rate)
+        # seed slot state from the in-flight heap; seeded jobs get local
+        # pseudo-ids n_new + slot so the kernel can emit their departures
+        f0 = np.full(C, np.inf)
+        sseq0 = np.full(C, np.inf)
+        sjid0 = np.full(C, -1.0)
+        pseudo = np.full(C, -1, dtype=np.int64)     # slot -> global jid
+        free_slots: List[List[int]] = [[] for _ in range(self.K)]
+        for s_idx in range(C - 1, -1, -1):
+            free_slots[slot_chain[s_idx]].append(s_idx)
+        for (t, s, jid, k) in self.heap:
+            slot = free_slots[k].pop()
+            f0[slot] = t
+            sseq0[slot] = float(s)
+            sjid0[slot] = float(n_new + slot)
+            pseudo[slot] = jid
+            self.fin[jid] = t            # completes as already scheduled
+        run0 = np.asarray(self.running, dtype=np.float64)
+        ys, st, fin, qhead, qnext, seqc = jax_scan.run_event_scan(
+            self.policy, times, works, us, slot_rate, slot_chain,
+            self.rates, self.caps, self.chain_order, f0, sseq0, sjid0,
+            run0, float(self.seq))
+        if isinstance(self.st, np.ndarray):
+            self.st[i0:] = st[:n_new]
+            self.fin[i0:] = fin[:n_new]
+        else:
+            self.st[i0:] = st[:n_new].tolist()
+            self.fin[i0:] = fin[:n_new].tolist()
+        # the emitted departure sequence IS the completion order; map the
+        # heap-seeded pseudo-ids back to their global jids
+        dep = ys[ys >= 0]
+        glob = np.where(dep < n_new, dep + i0,
+                        pseudo[np.maximum(dep - n_new, 0)])
+        self.comp.extend(glob.tolist())
+        # the interpreter's clock ends on the last processed event — the
+        # final departure or, when jobs are stuck on a zero-capacity
+        # chain, the last arrival
+        last = times[-1] if n_new else -_INF
+        if len(dep):
+            last = max(last, float(np.max(fin[dep])))
+        self.now = max(self.now, last)
+        # jobs still queued at the end (a chain that can never serve
+        # them): rebuild the dedicated FIFOs from the kernel's linked list
+        self.dq = [[] for _ in range(self.K)]
+        self.dqh = [0] * self.K
+        for k in range(self.K):
+            j = int(qhead[k])
+            while j >= 0:
+                self.dq[k].append(i0 + j)
+                j = int(qnext[j])
+        self.heap = []
+        self.running = [0] * self.K
+        self.total_free = sum(self.caps)
+        self.i = self.n
+        self.seq = int(seqc)
+
+
+def _grid_result(times_row: np.ndarray, st_row: np.ndarray,
+                 fin_row: np.ndarray, order: np.ndarray,
+                 warmup_fraction: float, sim_time: float) -> SimResult:
+    """One grid row -> :class:`SimResult`, given its completion order
+    (same trimming as :meth:`EngineCore.result`: the warmup skip counts
+    completions, not arrivals)."""
+    skip = int(len(order) * warmup_fraction)
+    kept = order[skip:]
+    resp = fin_row[kept] - times_row[kept]
+    wait = st_row[kept] - times_row[kept]
+    serv = fin_row[kept] - st_row[kept]
+    return SimResult(
+        resp, wait, serv, len(kept), sim_time,
+        class_ids=np.zeros(len(kept), dtype=np.int64) if len(kept)
+        else np.empty(0, dtype=np.int64),
+        n_rejected=0,
+        rejected_class_ids=np.empty(0, dtype=np.int64))
+
+
+def run_grid(
+    policy: str,
+    rates: Sequence[float],
+    caps: Sequence[int],
+    times: np.ndarray,
+    works: np.ndarray,
+    engine_seeds: Optional[Sequence[int]] = None,
+    rng_scheme: str = "legacy",
+    warmup_fraction: float = 0.0,
+    devices: Optional[int] = None,
+) -> List[SimResult]:
+    """Execute a whole policy/seed grid in one compiled pass (fresh state).
+
+    ``times``/``works`` are (S, n) stacks — one row per grid point — as
+    produced by the batched workload generators.  Any registered dispatch
+    policy (plus ``priority``, whose class-blind default degenerates to
+    jffc) runs here; RNG-consuming policies (``random``/``jsq``/``jiq``)
+    additionally need ``rng_scheme="counter"`` and per-row
+    ``engine_seeds`` to derive their stateless uniforms.  The grid shards
+    over ``devices`` (default: all visible; 1 forces single-device vmap).
+
+    Returns one :class:`SimResult` per row, each bit-identical to running
+    that row through any engine alone under the same scheme.  This is the
+    ``repro.api.sweep`` one-pass fast path; callers must check
+    :func:`jax_available` first.
+    """
+    from . import jax_scan
+
+    chain_order = sorted(range(len(rates)),
+                         key=lambda k: (-float(rates[k]), k))
+    times = np.asarray(times, dtype=np.float64)
+    works = np.asarray(works, dtype=np.float64)
+    S, n = times.shape
+    if policy in CENTRAL_QUEUE_POLICIES:
+        slot_rate, slot_prio, _ = jax_scan.slot_layout(
+            rates, caps, chain_order)
+        starts, finishes = jax_scan.run_jffc_scan_grid(
+            times, works, slot_rate, slot_prio, devices=devices)
+        # completion order for every row in one call: a stable argsort
+        # over finishes tie-breaks by position = jid, exactly the
+        # departure heap's (finish, seq) order (seq is monotone in jid)
+        orders = np.argsort(finishes, axis=1, kind="stable")
+        return [_grid_result(times[r], starts[r], finishes[r], orders[r],
+                             warmup_fraction,
+                             float(finishes[r].max()) if n else 0.0)
+                for r in range(S)]
+    if policy in RNG_POLICIES:
+        if rng_scheme != "counter":
+            raise ValueError(
+                f"policy {policy!r} draws randomness; a one-pass grid "
+                "needs rng_scheme='counter' (the legacy random.Random "
+                "stream is inherently sequential)")
+        if engine_seeds is None:
+            raise ValueError("engine_seeds required for RNG policies")
+        us = np.stack([counter_uniforms(int(s), np.arange(n))
+                       for s in engine_seeds])
+    else:
+        us = np.zeros((S, n))
+    slot_rate, _, slot_chain = jax_scan.slot_layout(
+        rates, caps, chain_order)
+    ys, st, fin = jax_scan.run_event_scan_grid(
+        policy, times, works, us, slot_rate, slot_chain, rates, caps,
+        chain_order, devices=devices)
+    out: List[SimResult] = []
+    for r in range(S):
+        order = ys[r][ys[r] >= 0]       # emitted departures, in order
+        # the engine clock ends on the last processed event — the final
+        # departure or, when jobs are stuck, the last arrival
+        sim_time = float(times[r][-1]) if n else 0.0
+        if len(order):
+            sim_time = max(sim_time, float(fin[r][order].max()))
+        out.append(_grid_result(times[r], st[r][:n], fin[r][:n], order,
+                                warmup_fraction, sim_time))
+    return out
+
 
 def run_seed_grid(
     rates: Sequence[float],
     caps: Sequence[int],
     times: np.ndarray,
     works: np.ndarray,
-    warmup_fraction: float = 0.1,
+    warmup_fraction: float = 0.0,
 ) -> List[SimResult]:
-    """Execute a whole seed grid in one compiled pass (JFFC, fresh state).
-
-    ``times``/``works`` are (S, n) stacks — one row per seed — as produced
-    by the batched workload generators.  Returns one :class:`SimResult`
-    per row, each bit-identical to running that row through any engine
-    alone.  This is the ``repro.api.sweep(..., engine="batched")`` fast
-    path; callers must check :func:`jax_available` first.
-    """
-    from . import jax_scan
-
-    chain_order = sorted(range(len(rates)),
-                         key=lambda k: (-float(rates[k]), k))
-    slot_rate, slot_prio, _ = jax_scan.slot_layout(rates, caps, chain_order)
-    times = np.asarray(times, dtype=np.float64)
-    works = np.asarray(works, dtype=np.float64)
-    starts, finishes = jax_scan.run_jffc_scan_batch(
-        times, works, slot_rate, slot_prio)
-    S, n = times.shape
-    # completion order for every seed in one call: a stable argsort over
-    # finishes tie-breaks by position = jid, exactly the departure heap's
-    # (finish, seq) order (seq is monotone in jid for JFFC)
-    orders = np.argsort(finishes, axis=1, kind="stable")
-    out: List[SimResult] = []
-    for r in range(S):
-        fin = finishes[r]
-        order = orders[r]
-        skip = int(n * warmup_fraction)
-        kept = order[skip:]
-        resp = fin[kept] - times[r][kept]
-        wait = starts[r][kept] - times[r][kept]
-        serv = fin[kept] - starts[r][kept]
-        out.append(SimResult(
-            resp, wait, serv, len(kept),
-            float(fin.max()) if n else 0.0,
-            class_ids=np.zeros(len(kept), dtype=np.int64) if len(kept)
-            else np.empty(0, dtype=np.int64),
-            n_rejected=0,
-            rejected_class_ids=np.empty(0, dtype=np.int64)))
-    return out
+    """Back-compat wrapper: the original JFFC-only seed grid is now the
+    ``policy="jffc"`` case of :func:`run_grid`."""
+    return run_grid("jffc", rates, caps, times, works,
+                    warmup_fraction=warmup_fraction)
 
 
 def jax_available() -> bool:

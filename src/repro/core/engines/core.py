@@ -47,6 +47,7 @@ from typing import List, Optional, Sequence, Tuple, Union
 import numpy as np
 
 from ..workload import DEFAULT_CLASS, RequestClass
+from .counter_rng import RNG_SCHEMES, CounterDraw, counter_uniforms
 from .kernels import (
     POLICY_KERNELS,
     get_kernel,
@@ -78,6 +79,7 @@ class EngineCore:
         classes: Optional[Sequence[RequestClass]] = None,
         aging_rate: float = 0.0,
         admission_level: float = 1.0,
+        rng_scheme: str = "legacy",
     ):
         if policy not in POLICY_KERNELS:
             get_kernel(policy)          # raises the canonical ValueError
@@ -85,9 +87,22 @@ class EngineCore:
             raise ValueError("rates and caps must have equal length")
         if any(r <= 0 for r in rates) or any(c < 0 for c in caps):
             raise ValueError("rates must be positive, caps non-negative")
+        if rng_scheme not in RNG_SCHEMES:
+            raise ValueError(
+                f"unknown rng_scheme {rng_scheme!r} (known: "
+                f"{', '.join(RNG_SCHEMES)})")
         self.policy = policy
         self._kernel = get_kernel(policy)
+        # policy randomness: "legacy" replays a stateful random.Random
+        # stream (bit-faithful to the scalar oracle); "counter" derives a
+        # stateless per-job uniform threefry2x32(seed, jid) so every
+        # dispatch decision is a pure function of (jid, queue state) — the
+        # property the compiled all-policy scan paths need.
+        self.rng_scheme = rng_scheme
+        self.seed = int(seed)
         self.rng = random.Random(seed)
+        self._draw = CounterDraw() if rng_scheme == "counter" else None
+        self._us: Optional[np.ndarray] = None   # per-job uniforms (counter)
         # multi-tenant request classes (single default class = legacy path)
         self.classes = list(classes) if classes else [DEFAULT_CLASS]
         self._tiers = [c.priority for c in self.classes]
@@ -234,14 +249,8 @@ class EngineCore:
             cl = [0] * len(tl)
         if len(cl) != len(tl):
             raise ValueError("classes must match times in length")
-        if cl and (min(cl) < 0 or max(cl) >= len(self.classes)):
-            raise ValueError(
-                f"class indices must be in [0, {len(self.classes)})")
         ta = np.asarray(tl, dtype=np.float64)
-        if len(ta) > 1 and np.any(np.diff(ta) < 0):
-            raise ValueError("arrival times must be non-decreasing")
-        if tl and self.times and tl[0] < self.times[-1]:
-            raise ValueError("arrival batch precedes existing arrivals")
+        self._validate_batch(ta, np.asarray(cl, dtype=np.int64))
         if not self.times:                              # cache first batch
             self._times_np = ta
             self._works_np = np.asarray(wl, dtype=np.float64)
@@ -256,6 +265,19 @@ class EngineCore:
         self.fin.extend([0.0] * m)
         self.n += m
 
+    def _validate_batch(self, ta: np.ndarray, ca: np.ndarray) -> None:
+        """Shared ingest validation: every engine and every ingest form
+        (tuple-list, list pair, array-native) rejects a bad batch with the
+        identical ``ValueError`` — backends must not diverge on errors any
+        more than on results."""
+        if len(ca) and (ca.min() < 0 or ca.max() >= len(self.classes)):
+            raise ValueError(
+                f"class indices must be in [0, {len(self.classes)})")
+        if len(ta) > 1 and np.any(np.diff(ta) < 0):
+            raise ValueError("arrival times must be non-decreasing")
+        if len(ta) and self.n and ta[0] < self.times[-1]:
+            raise ValueError("arrival batch precedes existing arrivals")
+
     # -- dispatch helpers ------------------------------------------------------
     def _fastest_free(self) -> int:
         for k in self.chain_order:
@@ -263,12 +285,26 @@ class EngineCore:
                 return k
         raise AssertionError("no free chain (caller must check total_free)")
 
-    def _choose(self, ded_fastest: int) -> int:
-        """Dedicated-queue policy choice for one arrival, delegated to the
-        stateless kernel bound at construction (kernels replay the scalar
-        policies' exact float operations and RNG call sequences, so any
-        backend using them stays bit-identical to the oracle)."""
-        return self._kernel(self.rng, self.rates, self.caps, self.running,
+    def _u(self, jid: int) -> float:
+        """The counter scheme's per-job uniform ``u_jid`` (lazily computed
+        for the whole arrival array in one vectorized threefry pass)."""
+        if self._us is None or jid >= len(self._us):
+            self._us = counter_uniforms(self.seed, np.arange(self.n))
+        return self._us[jid]
+
+    def _choose(self, jid: int) -> int:
+        """Dedicated-queue policy choice for the arrival (or re-dispatch)
+        of job ``jid``, delegated to the stateless kernel bound at
+        construction.  Under the legacy scheme the kernel replays the
+        scalar policies' exact float operations and RNG call sequence;
+        under the counter scheme it draws from the pure per-job uniform
+        ``u_jid`` — either way the decision is identical across backends
+        running the same scheme."""
+        rng = self.rng
+        if self._draw is not None:
+            self._draw.u = self._u(jid)
+            rng = self._draw
+        return self._kernel(rng, self.rates, self.caps, self.running,
                             self.chain_order, self.total_free, self.dq,
                             self.dqh)
 
@@ -436,7 +472,7 @@ class EngineCore:
                 else:
                     self.queue.append(jid)       # limbo during a total outage
             else:
-                k = self._choose(self.chain_order[0])
+                k = self._choose(jid)
                 if self.running[k] < self.caps[k]:
                     self._start(jid, k, t0)
                 else:
@@ -464,8 +500,13 @@ class EngineCore:
         return len(evicted)
 
     # -- results ----------------------------------------------------------------
-    def result(self, warmup_fraction: float = 0.1) -> SimResult:
-        """SimResult over completions so far (same trimming as the oracle)."""
+    def result(self, warmup_fraction: float = 0.0) -> SimResult:
+        """SimResult over completions so far (same trimming as the oracle).
+
+        The default matches ``ExperimentSpec.warmup_fraction`` (0.0 — keep
+        every completion); the oracle-comparison wrappers in
+        :mod:`repro.core.simulator` pass their own 0.1 explicitly.
+        """
         dp = self._drain_pending
         while dp and dp[0][0] <= self.now:
             self.comp.append(heapq.heappop(dp)[1])

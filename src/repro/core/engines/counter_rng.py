@@ -1,0 +1,109 @@
+"""Counter-based policy RNG: stateless per-job uniforms via Threefry-2x32.
+
+The legacy RNG scheme replays a stateful ``random.Random`` call sequence —
+bit-faithful to the scalar oracle, but impossible to vectorize: the k-th
+draw depends on every draw before it, so a compiled kernel would have to
+replay the Mersenne Twister step by step.  The **counter** scheme replaces
+the stream with a pure derivation keyed on ``(engine_seed, job_index)``:
+
+    u_j = threefry2x32(key=engine_seed, counter=(0, j))[0] * 2**-32
+
+Every dispatch policy consumes **at most one uniform per arrival** (the
+``random``/``jsq``/``jiq`` choice), so ``u_j`` fully determines the
+policy's decision given the queue state — kernels become pure
+array-in/array-out functions, and any backend (interpreter loop or
+``jax.lax.scan`` horizon) that evaluates the same float operations on the
+same ``u_j`` is bit-identical by construction.
+
+Threefry-2x32 is the same ARX cipher family jax's PRNG is built on
+(Salmon et al., "Parallel random numbers: as easy as 1, 2, 3", SC'11); it
+is implemented here in pure vectorized numpy ``uint32`` arithmetic so the
+derivation exists with or without jax, and the compiled backends consume
+the identical ``u`` arrays as scan inputs.  Known-answer tests pin the
+implementation to the Random123 reference vectors.
+
+Index-based draws (``randrange(n)`` -> ``floor(u * n)``; ``choice(seq)``
+-> ``seq[floor(u * len(seq))]``) are exact: ``u`` is a dyadic rational
+``m * 2**-32`` with ``m < 2**32``, so ``u * n`` for any candidate count
+that fits in 21 bits is computed exactly in float64 and never rounds up
+to ``n``.
+"""
+from __future__ import annotations
+
+from typing import Sequence, Union
+
+import numpy as np
+
+#: the RNG schemes an engine can run under (``EngineCore(rng_scheme=...)``)
+RNG_SCHEMES = ("legacy", "counter")
+
+#: Threefry-2x32 rotation constants and key-schedule parity word
+_ROTATIONS = ((13, 15, 26, 6), (17, 29, 16, 24))
+_PARITY = np.uint32(0x1BD11BDA)
+
+
+def _rotl(x: np.ndarray, d: int) -> np.ndarray:
+    return (x << np.uint32(d)) | (x >> np.uint32(32 - d))
+
+
+def threefry2x32(key0: int, key1: int,
+                 c0: Union[int, np.ndarray],
+                 c1: Union[int, np.ndarray]) -> tuple:
+    """The 20-round Threefry-2x32 block cipher, vectorized over counters.
+
+    ``key0``/``key1`` are the two 32-bit key words; ``c0``/``c1`` the two
+    counter words (scalars or equal-shaped integer arrays).  Returns the
+    two output words as ``uint32`` arrays.
+    """
+    k0 = np.uint32(key0 & 0xFFFFFFFF)
+    k1 = np.uint32(key1 & 0xFFFFFFFF)
+    with np.errstate(over="ignore"):      # uint32 wraparound is the cipher
+        ks = (k0, k1, k0 ^ k1 ^ _PARITY)
+        x0 = np.asarray(c0, dtype=np.uint32) + ks[0]
+        x1 = np.asarray(c1, dtype=np.uint32) + ks[1]
+        for i in range(5):
+            for d in _ROTATIONS[i % 2]:
+                x0 = x0 + x1
+                x1 = _rotl(x1, d) ^ x0
+            x0 = x0 + ks[(i + 1) % 3]
+            x1 = x1 + ks[(i + 2) % 3] + np.uint32(i + 1)
+    return x0, x1
+
+
+def counter_uniforms(seed: int,
+                     jids: Union[int, Sequence[int], np.ndarray]
+                     ) -> np.ndarray:
+    """The per-job uniforms ``u_j`` of the counter scheme, vectorized.
+
+    ``seed`` is the engine seed (any Python int; reduced to two 32-bit key
+    words), ``jids`` the job indices.  Returns float64 values in
+    ``[0, 1)``; each is an exact dyadic rational ``m * 2**-32``.
+    """
+    j = np.asarray(jids, dtype=np.int64)
+    key0 = seed & 0xFFFFFFFF
+    key1 = (seed >> 32) & 0xFFFFFFFF
+    hi = ((j >> 32) & 0xFFFFFFFF).astype(np.uint32)
+    lo = (j & 0xFFFFFFFF).astype(np.uint32)
+    x0, _ = threefry2x32(key0, key1, hi, lo)
+    return x0.astype(np.float64) * (2.0 ** -32)
+
+
+class CounterDraw:
+    """Adapter exposing the draw surface the policy kernels use
+    (``randrange``/``choice``) as pure functions of one uniform ``u``.
+
+    The interpreter binds one instance per engine and rebinds ``u`` per
+    arrival, so the legacy kernels run unchanged under the counter scheme
+    — same code path, different (stateless) randomness source.
+    """
+
+    __slots__ = ("u",)
+
+    def __init__(self, u: float = 0.0):
+        self.u = u
+
+    def randrange(self, n: int) -> int:
+        return int(self.u * n)
+
+    def choice(self, seq):
+        return seq[int(self.u * len(seq))]

@@ -1,7 +1,31 @@
-"""Compiled JFFC slot-race kernel: ``jax.lax.scan`` over arrivals.
+"""Compiled policy kernels: ``jax.lax.scan`` horizons for every dispatch
+policy, plus sharded grid dispatch.
 
-The JFFC trajectory admits a *per-job* recurrence over service slots
-(the batched backend's compiled fast path):
+Two kernel families live here:
+
+* the **slot-race** kernel (JFFC and the class-blind ``priority``
+  degenerate): one scan step per *arrival*, exploiting the central FIFO
+  queue's G/G/c recurrence ``start_i = max(a_i, min_s f_s)``;
+* the **event** kernel (jffs / random / jsq / sa-jsq / sed / jiq): one
+  scan step per *event* — arrival or departure — over a carry of slot
+  finish times, per-chain running/in-system counters, and linked-list
+  dedicated FIFO queues.  Each step replays exactly one interpreter
+  event (ties resolved identically: arrival wins ``t_arr <= t_dep``;
+  simultaneous departures by scheduling ``seq``), so the emitted
+  departure sequence *is* the interpreter's completion order and
+  bit-parity needs no epilogue sort.  RNG-consuming policies read the
+  counter scheme's per-job uniform ``u_j``
+  (:mod:`repro.core.engines.counter_rng`) — the same float64 value the
+  interpreter kernel consumes — which is what makes their decisions pure
+  and therefore compilable.
+
+Grid entry points (:func:`run_jffc_scan_grid`,
+:func:`run_event_scan_grid`) shard a stacked (S, n) point grid over the
+host's devices with ``pmap(vmap(kernel))`` when more than one device is
+visible (or when ``devices=`` forces it), falling back to a plain
+``vmap`` on a single device — the ``repro.api.sweep`` one-pass path.
+
+The JFFC slot-race recurrence in detail:
 
 * jobs start in arrival order (the central queue is FIFO and an arrival
   either starts immediately or queues behind everything older);
@@ -178,3 +202,360 @@ def run_jffc_scan_batch(times: np.ndarray, works: np.ndarray,
         starts = np.asarray(starts)
         finishes = np.asarray(finishes)
     return starts, finishes
+
+
+# ---------------------------------------------------------------------------
+# The event kernel: every dedicated-queue policy as one lax.scan horizon
+# ---------------------------------------------------------------------------
+
+#: event-scan unroll — 1 measures fastest on CPU: each step is already a
+#: heavy op graph (gathers + scatters), so unrolling only bloats the loop
+#: body past the icache sweet spot without removing any per-step work
+_EVENT_UNROLL = 1
+
+#: chain-rank sentinel dominating every real rank in the choose argmins
+_BIGRANK = 1e9
+
+
+def _make_choose(policy: str):
+    """The policy's dispatch decision as a pure jnp function.
+
+    ``choose(u, running, nsys, capsf, rank, c_mu, inv_mu, K) -> k`` —
+    each replays the matching interpreter kernel's float operations and
+    index-based uniform draws (``floor(u * count)``) exactly, so decisions
+    are bit-identical to the counter-scheme interpreter.  ``rank[k]`` is
+    chain k's position in fastest-first order; ``c_mu``/``inv_mu`` the
+    SED estimate's precomputed ``caps*rates`` / ``1/rates``.
+    """
+    if policy == "jffs":
+        def choose(u, running, nsys, capsf, rank, c_mu, inv_mu, K):
+            free = running < capsf
+            kf = jnp.argmin(jnp.where(free, rank, _BIGRANK))
+            return jnp.where(free.any(), kf, jnp.argmin(rank))
+    elif policy == "random":
+        def choose(u, running, nsys, capsf, rank, c_mu, inv_mu, K):
+            return jnp.floor(u * K).astype(jnp.int32)
+    elif policy == "jsq":
+        def choose(u, running, nsys, capsf, rank, c_mu, inv_mu, K):
+            ism = nsys == jnp.min(nsys)
+            idx = jnp.floor(u * ism.sum()).astype(jnp.int32)
+            return jnp.argmax(jnp.cumsum(ism) > idx)
+    elif policy == "sa-jsq":
+        def choose(u, running, nsys, capsf, rank, c_mu, inv_mu, K):
+            return jnp.argmin(jnp.where(nsys == jnp.min(nsys), rank,
+                                        _BIGRANK))
+    elif policy == "sed":
+        def choose(u, running, nsys, capsf, rank, c_mu, inv_mu, K):
+            wait = jnp.maximum(0.0, nsys + 1.0 - capsf) / c_mu
+            return jnp.argmin(wait + inv_mu)
+    elif policy == "jiq":
+        def choose(u, running, nsys, capsf, rank, c_mu, inv_mu, K):
+            free = running < capsf
+            nf = free.sum()
+            kf = jnp.argmax(jnp.cumsum(free)
+                            > jnp.floor(u * nf).astype(jnp.int32))
+            return jnp.where(nf > 0, kf,
+                             jnp.floor(u * K).astype(jnp.int32))
+    else:                                            # pragma: no cover
+        raise ValueError(f"no event-scan decision for policy {policy!r}")
+    return choose
+
+
+def _event_kernel(choose, times, works, us, slot_rate, slot_chain, capsf,
+                  rank, c_mu, inv_mu, f0, sseq0, sjid0, run0, nsys0, seqc0):
+    """One compiled pass over every remaining *event* (see module doc).
+
+    Local job ids: arrivals are ``0..n-1``; heap-seeded in-flight jobs are
+    ``n + slot``.  Returns ``(ys, st, fin, qhead, qnext, seqc)`` — ``ys``
+    is the per-step departed local id (or -1), i.e. the completion order;
+    ``st``/``fin`` are scatter arrays of length ``n + C``; ``qhead`` /
+    ``qnext`` encode jobs still queued at the end (only when some chain
+    can never serve them); ``seqc`` the final scheduling-seq counter.
+    """
+    n = times.shape[0]
+    C = slot_rate.shape[0]
+    K = capsf.shape[0]
+    arangeC = jnp.arange(C)
+    inf = jnp.inf
+    init = (
+        jnp.stack([f0, sseq0, sjid0]),           # (3, C) f / seq / local jid
+        run0, nsys0,                             # (K,) running / in-system
+        jnp.full((K,), -1, jnp.int32),           # qhead
+        jnp.full((K,), -1, jnp.int32),           # qtail
+        jnp.full((n,), -1, jnp.int32),           # qnext (FIFO linked list)
+        jnp.zeros((n + C,), jnp.float64),        # st
+        jnp.zeros((n + C,), jnp.float64),        # fin
+        jnp.int32(0),                            # arrival cursor
+        seqc0,                                   # next scheduling seq
+    )
+
+    def step(carry, _):
+        fsj, running, nsys, qhead, qtail, qnext, st, fin, i, seqc = carry
+        f, sseq, sjid = fsj[0], fsj[1], fsj[2]
+        ii = jnp.minimum(i, n - 1)
+        a = jnp.where(i < n, times[ii], inf)
+        w = works[ii]
+        u = us[ii]
+        # next departure: min (finish, seq) over busy slots (idle = +inf)
+        fmin = jnp.min(f)
+        sdep = jnp.argmin(jnp.where(f == fmin, sseq, inf)).astype(jnp.int32)
+        is_arr = a <= fmin                       # arrival wins ties
+        real_arr = is_arr & (a < inf)
+        dep = ~is_arr                            # implies fmin finite
+        # ---- arrival: policy decision on the pre-arrival state
+        k = choose(u, running, nsys, capsf, rank, c_mu, inv_mu, K) \
+            .astype(jnp.int32)
+        can_start = running[k] < capsf[k]
+        arr_start = real_arr & can_start
+        arr_queue = real_arr & ~can_start
+        sfree = jnp.argmin(jnp.where((f == inf) & (slot_chain == k),
+                                     arangeC, C + 1)).astype(jnp.int32)
+        fin_new = a + w / slot_rate[sfree]
+        # ---- departure: pull the chain's FIFO head, else free the slot
+        kd = slot_chain[sdep]
+        t_dep = fmin
+        qh = qhead[kd]
+        dep_pull = dep & (qh >= 0)
+        dep_free = dep & (qh < 0)
+        nxt = jnp.maximum(qh, 0)
+        fin_pull = t_dep + works[nxt] / slot_rate[sdep]
+        djid = sjid[sdep].astype(jnp.int32)
+        # ---- the one touched slot (guarded identity write otherwise)
+        s_t = jnp.where(is_arr, sfree, sdep)
+        upd = arr_start | dep
+        new_col = jnp.stack([
+            jnp.where(arr_start, fin_new, jnp.where(dep_pull, fin_pull,
+                                                    inf)),
+            jnp.where(dep_free, inf, seqc),
+            jnp.where(arr_start, i.astype(jnp.float64),
+                      jnp.where(dep_pull, nxt.astype(jnp.float64), -1.0)),
+        ])
+        col = jnp.where(upd, new_col, fsj[:, s_t])
+        fsj = lax.dynamic_update_slice(fsj, col[:, None],
+                                       (jnp.int32(0), s_t))
+        # ---- chain counters
+        running = running.at[k].add(jnp.where(arr_start, 1.0, 0.0))
+        running = running.at[kd].add(jnp.where(dep_free, -1.0, 0.0))
+        nsys = nsys.at[k].add(jnp.where(real_arr, 1.0, 0.0))
+        nsys = nsys.at[kd].add(jnp.where(dep, -1.0, 0.0))
+        # ---- FIFO linked list: append on queue, advance head on pull
+        tailk = qtail[k]
+        tl = jnp.maximum(tailk, 0)
+        qnext = qnext.at[tl].set(
+            jnp.where(arr_queue & (tailk >= 0), i, qnext[tl]))
+        qhead = qhead.at[k].set(
+            jnp.where(arr_queue & (tailk < 0), i, qhead[k]))
+        qtail = qtail.at[k].set(jnp.where(arr_queue, i, qtail[k]))
+        newh = qnext[nxt]
+        qhead = qhead.at[kd].set(jnp.where(dep_pull, newh, qhead[kd]))
+        qtail = qtail.at[kd].set(
+            jnp.where(dep_pull & (newh < 0), jnp.int32(-1), qtail[kd]))
+        # ---- per-job scatter
+        st_idx = jnp.where(is_arr, i, nxt)
+        st = st.at[st_idx].set(
+            jnp.where(arr_start | dep_pull, jnp.where(is_arr, a, t_dep),
+                      st[st_idx]))
+        dj = jnp.maximum(djid, 0)
+        fin = fin.at[dj].set(jnp.where(dep, t_dep, fin[dj]))
+        i = i + jnp.where(real_arr, 1, 0).astype(jnp.int32)
+        seqc = seqc + jnp.where(arr_start | dep_pull, 1.0, 0.0)
+        ys = jnp.where(dep, djid, jnp.int32(-1))
+        return ((fsj, running, nsys, qhead, qtail, qnext, st, fin, i,
+                 seqc), ys)
+
+    # n arrivals + at most n + C departures; surplus steps no-op
+    carry, ys = lax.scan(step, init, None, length=2 * n + C,
+                         unroll=_EVENT_UNROLL)
+    (_, _, _, qhead, _, qnext, st, fin, _, seqc) = carry
+    return ys, st, fin, qhead, qnext, seqc
+
+
+_event_cache: dict = {}
+
+
+def _event_compiled(policy: str):
+    """(jit, jit(vmap)) pair for one policy's event kernel."""
+    if policy not in _event_cache:
+        choose = _make_choose(policy)
+
+        def kern(times, works, us, slot_rate, slot_chain, capsf, rank, c_mu,
+                 inv_mu, f0, sseq0, sjid0, run0, nsys0, seqc0):
+            return _event_kernel(choose, times, works, us, slot_rate,
+                                 slot_chain, capsf, rank, c_mu, inv_mu, f0,
+                                 sseq0, sjid0, run0, nsys0, seqc0)
+
+        _event_cache[policy] = (
+            jax.jit(kern),
+            jax.jit(jax.vmap(kern, in_axes=(0, 0, 0) + (None,) * 12)),
+        )
+    return _event_cache[policy]
+
+
+def _chain_consts(rates: Sequence[float], caps: Sequence[int],
+                  chain_order: Sequence[int]):
+    """The per-chain constant arrays of the event kernel's decisions."""
+    K = len(rates)
+    ratesf = np.asarray(rates, np.float64)
+    capsf = np.asarray(caps, np.float64)
+    rank = np.empty(K, np.float64)
+    rank[np.asarray(chain_order, np.int64)] = np.arange(K, dtype=np.float64)
+    return capsf, rank, capsf * ratesf, 1.0 / ratesf
+
+
+def run_event_scan(policy: str, times: np.ndarray, works: np.ndarray,
+                   us: np.ndarray, slot_rate: np.ndarray,
+                   slot_chain: np.ndarray, rates: Sequence[float],
+                   caps: Sequence[int], chain_order: Sequence[int],
+                   f0: np.ndarray, sseq0: np.ndarray, sjid0: np.ndarray,
+                   run0: np.ndarray, seqc0: float):
+    """Run one trace through the compiled event kernel (resume-capable:
+    ``f0``/``sseq0``/``sjid0``/``run0`` seed the slot state from the
+    departure heap).  Returns numpy ``(ys, st, fin, qhead, qnext, seqc)``
+    — see :func:`_event_kernel`."""
+    kern, _ = _event_compiled(policy)
+    capsf, rank, c_mu, inv_mu = _chain_consts(rates, caps, chain_order)
+    with jax.experimental.enable_x64():
+        ys, st, fin, qhead, qnext, seqc = kern(
+            jnp.asarray(times, jnp.float64), jnp.asarray(works, jnp.float64),
+            jnp.asarray(us, jnp.float64),
+            jnp.asarray(slot_rate, jnp.float64),
+            jnp.asarray(slot_chain, jnp.int32),
+            jnp.asarray(capsf, jnp.float64), jnp.asarray(rank, jnp.float64),
+            jnp.asarray(c_mu, jnp.float64), jnp.asarray(inv_mu, jnp.float64),
+            jnp.asarray(f0, jnp.float64), jnp.asarray(sseq0, jnp.float64),
+            jnp.asarray(sjid0, jnp.float64), jnp.asarray(run0, jnp.float64),
+            jnp.asarray(run0, jnp.float64), jnp.float64(seqc0))
+        out = (np.asarray(ys), np.asarray(st), np.asarray(fin),
+               np.asarray(qhead), np.asarray(qnext), float(seqc))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Sharded grid dispatch (the sweep one-pass path)
+# ---------------------------------------------------------------------------
+
+def grid_devices(devices: Optional[int] = None) -> int:
+    """Shard count for a grid call: ``devices`` override (clamped to the
+    visible device count), else every visible local device (1 = plain
+    vmap, no pmap)."""
+    avail = jax.local_device_count() if HAS_JAX else 1
+    if devices is not None:
+        return min(max(1, int(devices)), avail)
+    return avail
+
+
+def _run_sharded(vmapped, pmapped, row_args, const_args, S: int,
+                 devices: Optional[int]):
+    """Dispatch a stacked grid: ``pmap(vmap(kernel))`` over ``D`` shards
+    when more than one device is requested/visible (rows padded to a
+    multiple of ``D`` by repeating row 0, trimmed after), else one plain
+    ``vmap``.  ``row_args`` carry the mapped (S, ...) leading axis;
+    ``const_args`` are broadcast."""
+    D = grid_devices(devices)
+    if D <= 1 or S < 1:
+        return [np.asarray(o) for o in vmapped(*row_args, *const_args)]
+    rows = -(-S // D)                            # ceil(S / D)
+    pad = rows * D - S
+
+    def shard(a):
+        a = jnp.asarray(a)
+        if pad:
+            a = jnp.concatenate([a, jnp.repeat(a[:1], pad, axis=0)])
+        return a.reshape((D, rows) + a.shape[1:])
+
+    outs = pmapped(*[shard(a) for a in row_args], *const_args)
+    return [np.asarray(o).reshape((-1,) + np.asarray(o).shape[2:])[:S]
+            for o in outs]
+
+
+_grid_cache: dict = {}
+
+
+def _jffc_grid_compiled():
+    if "jffc" not in _grid_cache:
+        axes = (0, None, None, None, None)
+        _grid_cache["jffc"] = (
+            jax.jit(jax.vmap(_scan_kernel, in_axes=axes)),
+            jax.pmap(jax.vmap(_scan_kernel, in_axes=axes), in_axes=axes),
+        )
+    return _grid_cache["jffc"]
+
+
+def _event_grid_compiled(policy: str):
+    key = ("event", policy)
+    if key not in _grid_cache:
+        _, vmapped = _event_compiled(policy)   # reuse the jitted vmap
+        choose = _make_choose(policy)
+
+        def fn(times, works, us, slot_rate, slot_chain, capsf, rank, c_mu,
+               inv_mu, f0, sseq0, sjid0, run0, nsys0, seqc0):
+            return _event_kernel(choose, times, works, us, slot_rate,
+                                 slot_chain, capsf, rank, c_mu, inv_mu, f0,
+                                 sseq0, sjid0, run0, nsys0, seqc0)
+
+        axes = (0, 0, 0) + (None,) * 12
+        _grid_cache[key] = (
+            vmapped,
+            jax.pmap(jax.vmap(fn, in_axes=axes), in_axes=axes),
+        )
+    return _grid_cache[key]
+
+
+def run_jffc_scan_grid(times: np.ndarray, works: np.ndarray,
+                       slot_rate: np.ndarray, slot_prio: np.ndarray,
+                       devices: Optional[int] = None
+                       ) -> Tuple[np.ndarray, np.ndarray]:
+    """:func:`run_jffc_scan_batch` with device sharding: the stacked
+    (S, n) grid splits over ``D`` devices (``pmap`` of the vmapped
+    kernel), one shard per device; ``devices=None`` uses every visible
+    device, 1 forces the single-device ``vmap`` fallback."""
+    vmapped, pmapped = _jffc_grid_compiled()
+    C = len(slot_rate)
+    S = times.shape[0]
+    with jax.experimental.enable_x64():
+        tw = jnp.stack([jnp.asarray(times, jnp.float64),
+                        jnp.asarray(works, jnp.float64)], axis=2)
+        fs0 = jnp.stack([jnp.full((C,), -jnp.inf, jnp.float64),
+                         jnp.zeros((C,), jnp.float64)])
+        const = (jnp.asarray(slot_rate, jnp.float64),
+                 jnp.asarray(slot_prio, jnp.float64), fs0,
+                 jnp.float64(0.0))
+        starts, finishes = _run_sharded(vmapped, pmapped, (tw,), const, S,
+                                        devices)
+    return starts, finishes
+
+
+def run_event_scan_grid(policy: str, times: np.ndarray, works: np.ndarray,
+                        us: np.ndarray, slot_rate: np.ndarray,
+                        slot_chain: np.ndarray, rates: Sequence[float],
+                        caps: Sequence[int], chain_order: Sequence[int],
+                        devices: Optional[int] = None):
+    """Fresh-state event kernel over a stacked (S, n) policy/seed grid,
+    sharded over devices like :func:`run_jffc_scan_grid`.  ``us`` is the
+    (S, n) stack of counter-scheme uniforms (zeros for deterministic
+    policies).  Returns numpy ``(ys, st, fin)`` with leading axis S."""
+    vmapped, pmapped = _event_grid_compiled(policy)
+    capsf, rank, c_mu, inv_mu = _chain_consts(rates, caps, chain_order)
+    C = len(slot_rate)
+    K = len(rates)
+    S = times.shape[0]
+    with jax.experimental.enable_x64():
+        row_args = (jnp.asarray(times, jnp.float64),
+                    jnp.asarray(works, jnp.float64),
+                    jnp.asarray(us, jnp.float64))
+        const = (jnp.asarray(slot_rate, jnp.float64),
+                 jnp.asarray(slot_chain, jnp.int32),
+                 jnp.asarray(capsf, jnp.float64),
+                 jnp.asarray(rank, jnp.float64),
+                 jnp.asarray(c_mu, jnp.float64),
+                 jnp.asarray(inv_mu, jnp.float64),
+                 jnp.full((C,), jnp.inf, jnp.float64),     # f0: all idle
+                 jnp.full((C,), jnp.inf, jnp.float64),     # sseq0
+                 jnp.full((C,), -1.0, jnp.float64),        # sjid0
+                 jnp.zeros((K,), jnp.float64),             # run0
+                 jnp.zeros((K,), jnp.float64),             # nsys0
+                 jnp.float64(0.0))                         # seqc0
+        ys, st, fin, _qh, _qn, _sq = _run_sharded(vmapped, pmapped,
+                                                  row_args, const, S,
+                                                  devices)
+    return ys, st, fin

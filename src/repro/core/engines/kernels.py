@@ -4,10 +4,22 @@ Each kernel answers one question — *which chain takes this arrival?* — from
 flat arrays of engine state, without owning any of it.  The event core
 (:class:`repro.core.engines.core.EngineCore`) holds the arrays; backends
 (interpreter or batched) call the kernel bound at construction.  Every
-kernel replays the exact float operations and RNG call sequence
-(``random.Random.choice`` / ``randrange``) of the scalar policies in
-:mod:`repro.core.load_balance`, so any backend built on them stays
-bit-identical to the oracle on fixed seeds.
+kernel replays the exact float operations of the scalar policies in
+:mod:`repro.core.load_balance`; the randomness source behind the ``rng``
+argument is per-scheme:
+
+* ``rng_scheme="legacy"`` passes the engine's ``random.Random`` — the
+  kernel replays the scalar oracle's exact RNG *call sequence*
+  (``choice`` / ``randrange``), so backends stay bit-identical to
+  ``simulate()`` on fixed seeds, at the price of statefulness (draw k
+  depends on every earlier draw — impossible to vectorize);
+* ``rng_scheme="counter"`` passes a
+  :class:`repro.core.engines.counter_rng.CounterDraw` bound to the pure
+  per-job uniform ``u = threefry2x32(engine_seed, jid)``, making every
+  kernel a pure function of ``(u, queue state)`` — exactly what the
+  compiled all-policy ``lax.scan`` horizons in
+  :mod:`repro.core.engines.jax_scan` replicate, so cross-engine
+  bit-parity holds per scheme (the suites assert it for both).
 
 Kernel signature::
 
@@ -40,6 +52,11 @@ POLICY_KERNELS: Dict[str, Kernel] = {}
 #: kernel only ever picks among *free* chains; queued jobs are pulled by
 #: departures, not dispatched.
 CENTRAL_QUEUE_POLICIES = ("jffc", "priority")
+
+#: policies whose kernel consumes randomness: exactly one uniform per
+#: dispatch under the counter scheme (a ``random.Random`` call sequence
+#: under legacy).  Everything else is fully deterministic.
+RNG_POLICIES = ("random", "jsq", "jiq")
 
 
 def register_kernel(name: str):

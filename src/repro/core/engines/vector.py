@@ -164,7 +164,6 @@ class VectorEngine(EngineCore):
             self.i = stop
             return
         choose = self._choose
-        ded_fastest = self.chain_order[0]
         try:
             while True:
                 t_arr = times[i] if i < stop else _INF
@@ -175,7 +174,7 @@ class VectorEngine(EngineCore):
                     jid = i
                     i += 1
                     self.total_free = total_free          # choose() reads it
-                    k = choose(ded_fastest)
+                    k = choose(jid)
                     if running[k] < caps[k]:
                         running[k] += 1
                         total_free -= 1

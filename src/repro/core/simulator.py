@@ -181,6 +181,7 @@ def simulate_vectorized(
     aging_rate: float = 0.0,
     admission_level: float = 1.0,
     engine: str = "vector",
+    rng_scheme: str = "legacy",
 ) -> SimResult:
     """Array-engine counterpart of ``simulate(POLICIES[name](...), ...)``.
 
@@ -190,13 +191,16 @@ def simulate_vectorized(
     :func:`simulate_policy_name` (``seed + 1`` for the policy RNG) so the two
     wrappers are directly comparable.  ``engine`` selects the backend from
     :data:`repro.core.engines.ENGINES` — results are bit-identical across
-    backends on the same seed.
+    backends on the same seed; ``rng_scheme`` selects the policy
+    randomness source (``"legacy"`` replays the scalar oracle's
+    ``random.Random`` stream, ``"counter"`` the stateless per-job
+    derivation that the compiled multi-policy paths require).
     """
     rates = [m for m, _ in job_servers]
     caps = [c for _, c in job_servers]
     sim = make_engine(engine, rates, caps, policy=policy_name, seed=seed + 1,
                       classes=classes, aging_rate=aging_rate,
-                      admission_level=admission_level)
+                      admission_level=admission_level, rng_scheme=rng_scheme)
     if isinstance(arrivals, tuple) and len(arrivals) in (2, 3) \
             and isinstance(arrivals[0], np.ndarray):
         sim.add_arrivals(*arrivals)

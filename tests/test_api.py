@@ -727,8 +727,9 @@ def test_sweep_engine_override_and_parity():
 
 
 def test_sweep_one_pass_only_when_eligible():
-    """Grids that cannot stack (multi-policy) must take the per-point
-    path and still agree with per-point runs."""
+    """Grids that cannot run compiled (legacy-scheme RNG policies) must
+    take the per-point path and still agree with per-point runs;
+    multi-policy deterministic grids now stack into the one-pass path."""
     from repro.core.engines import jax_available
 
     spec = api.ExperimentSpec(
@@ -737,15 +738,22 @@ def test_sweep_one_pass_only_when_eligible():
         workload=api.WorkloadSpec(generator="poisson", base_rate=8.0,
                                   params={"n": 1500}),
         seed=0)
-    pts = api.sweep(spec, {"policy.name": ["jffc", "sed"]})
+    # legacy scheme + an RNG-consuming policy: sequential fallback
+    pts = api.sweep(spec, {"policy.name": ["jffc", "random"]})
     assert not any(p.report.extras.get("swept_one_pass") for p in pts)
     for p in pts:
         solo = api.run(p.spec)
         assert np.array_equal(p.report.raw.result.response_times,
                               solo.raw.result.response_times)
     if jax_available():
-        one = api.sweep(spec, {"seed": [0, 1]})
+        # deterministic multi-policy grids stack (PR 6), seeds always did
+        one = api.sweep(spec, {"policy.name": ["jffc", "sed"],
+                               "seed": [0, 1]})
         assert all(p.report.extras.get("swept_one_pass") for p in one)
+        for p in one:
+            solo = api.run(p.spec)
+            assert np.array_equal(p.report.raw.result.response_times,
+                                  solo.raw.result.response_times)
 
 
 # ---------------------------------------------------------------------------
@@ -907,3 +915,117 @@ def test_results_store_live_plane_ignores_sim_engine(tmp_path):
                   plane=api.LivePlane(dt=1.0), store=store)
     assert store.hits == 1 and len(store) == 1
     assert hit.plane == "live"
+    # rng_scheme is likewise sim-only: its variants share the entry too
+    api.run(api.spec_replace(spec, "rng_scheme", "counter"),
+            plane=api.LivePlane(dt=1.0), store=store)
+    assert store.hits == 2 and len(store) == 1
+
+
+# ---------------------------------------------------------------------------
+# Counter-based policy RNG through the spec (PR 6)
+# ---------------------------------------------------------------------------
+
+def _grid_spec(rng_scheme="legacy", n=1500):
+    return api.ExperimentSpec(
+        cluster=api.ClusterSpec(job_servers=JOB_SERVERS, engine="batched"),
+        scenario=api.ScenarioSpec(horizon=400.0),
+        workload=api.WorkloadSpec(generator="poisson", base_rate=8.0,
+                                  params={"n": n}),
+        seed=0, warmup_fraction=0.1, rng_scheme=rng_scheme)
+
+
+def test_rng_scheme_round_trips_and_validates():
+    spec = _grid_spec("counter")
+    back = api.ExperimentSpec.from_json(spec.to_json())
+    assert back == spec and back.rng_scheme == "counter"
+    # pre-scheme-field records (no "rng_scheme" key) read as legacy
+    d = spec.to_dict()
+    del d["rng_scheme"]
+    assert api.ExperimentSpec.from_dict(d).rng_scheme == "legacy"
+    with pytest.raises(api.SpecError, match="rng_scheme"):
+        _grid_spec("philox")
+    # a different scheme is a different experiment: replace re-validates
+    assert api.spec_replace(spec, "rng_scheme", "legacy") != spec
+
+
+def test_spec_rng_scheme_reaches_both_engines():
+    """The spec field must actually change RNG-policy trajectories (the
+    schemes draw differently) on either backend."""
+    spec = api.spec_replace(_grid_spec("legacy", n=800),
+                            "policy.name", "random")
+    for engine in ("vector", "batched"):
+        s = api.spec_replace(spec, "cluster.engine", engine)
+        legacy = api.run(s)
+        counter = api.run(api.spec_replace(s, "rng_scheme", "counter"))
+        assert not np.array_equal(legacy.raw.result.response_times,
+                                  counter.raw.result.response_times)
+
+
+def test_sweep_counter_policy_grid_one_pass_matches_sequential():
+    """The tentpole gate at the API level: a full policy×seed grid under
+    the counter scheme runs one-pass on the batched engine and matches
+    the sequential vector-engine replay bit for bit."""
+    from repro.core.engines import jax_available
+
+    if not jax_available():
+        pytest.skip("jax required for the one-pass grid")
+    grid = {"policy.name": list(VECTORIZED_POLICIES), "seed": [0, 3]}
+    fast = api.sweep(_grid_spec("counter"), grid)
+    assert all(p.report.extras.get("swept_one_pass") for p in fast)
+    slow = api.sweep(_grid_spec("counter"), grid, engine="vector")
+    for pf, ps in zip(fast, slow):
+        assert pf.overrides == ps.overrides
+        assert np.array_equal(pf.report.raw.result.response_times,
+                              ps.report.raw.result.response_times)
+        assert pf.report.sim_time == ps.report.sim_time
+
+
+def test_sweep_store_threads_both_paths(tmp_path):
+    """sweep(store=) caches every point on the one-pass path and the
+    sequential path alike; a re-sweep is all hits, and one-pass entries
+    are directly reusable by per-point run()s (bit-identical results)."""
+    from repro.core.engines import jax_available
+
+    grid = {"policy.name": ["jffc", "sed"], "seed": [0, 1]}
+    # sequential path (vector engine)
+    store = api.ResultsStore(str(tmp_path / "seq"))
+    spec = api.spec_replace(_grid_spec(), "cluster.engine", "vector")
+    api.sweep(spec, grid, store=store)
+    assert store.hits == 0 and len(store) == 4
+    api.sweep(spec, grid, store=store)
+    assert store.hits == 4 and len(store) == 4
+    if not jax_available():
+        return
+    # one-pass path (batched engine)
+    store = api.ResultsStore(str(tmp_path / "fast"))
+    pts = api.sweep(_grid_spec(), grid, store=store)
+    assert all(p.report.extras.get("swept_one_pass") for p in pts)
+    assert store.hits == 0 and len(store) == 4
+    again = api.sweep(_grid_spec(), grid, store=store)
+    assert store.hits == 4 and len(store) == 4
+    for a, b in zip(pts, again):
+        assert a.report.response == b.report.response
+    # a per-point run shares the cache entry the one-pass sweep wrote
+    solo = api.run(pts[1].spec, store=store)
+    assert store.hits == 5
+    assert solo.response == pts[1].report.response
+
+
+def test_warmup_default_matches_spec_default():
+    """Regression pin (PR 6): EngineCore.result() defaulted to 0.1 while
+    ExperimentSpec.warmup_fraction defaults to 0.0 — a bare result() call
+    must now keep every completion, exactly like the spec path."""
+    from repro.core.engines import make_engine
+    from repro.core.workload import poisson_exponential_np
+
+    assert api.ExperimentSpec.__dataclass_fields__[
+        "warmup_fraction"].default == 0.0
+    t, w = poisson_exponential_np(5.0, 400, seed=2)
+    sim = make_engine("vector", [m for m, _ in JOB_SERVERS],
+                      [c for _, c in JOB_SERVERS])
+    sim.add_arrivals(t, w)
+    sim.run_to_completion()
+    assert sim.result().n_completed == sim.result(0.0).n_completed == 400
+    spec = _grid_spec(n=400)                    # warmup_fraction spec'd 0.1
+    rep = api.run(api.spec_replace(spec, "warmup_fraction", 0.0))
+    assert rep.n_completed == 400

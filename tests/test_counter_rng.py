@@ -1,0 +1,108 @@
+"""The counter-based policy RNG: Threefry-2x32 known-answer vectors,
+uniform derivation invariants, the draw adapter, and scheme selection /
+validation on the engines."""
+import numpy as np
+import pytest
+
+from repro.core.engines import RNG_SCHEMES, counter_uniforms, make_engine
+from repro.core.engines.counter_rng import CounterDraw, threefry2x32
+
+
+# Random123 reference vectors (Salmon et al., SC'11 release, kat_vectors)
+THREEFRY_KATS = [
+    ((0x00000000, 0x00000000), (0x00000000, 0x00000000),
+     (0x6B200159, 0x99BA4EFE)),
+    ((0xFFFFFFFF, 0xFFFFFFFF), (0xFFFFFFFF, 0xFFFFFFFF),
+     (0x1CB996FC, 0xBB002BE7)),
+    ((0x13198A2E, 0x03707344), (0x243F6A88, 0x85A308D3),
+     (0xC4923A9C, 0x483DF7A0)),
+]
+
+
+@pytest.mark.parametrize("key,ctr,expect", THREEFRY_KATS)
+def test_threefry_known_answers(key, ctr, expect):
+    x0, x1 = threefry2x32(key[0], key[1], ctr[0], ctr[1])
+    assert (int(x0), int(x1)) == expect
+
+
+def test_threefry_vectorizes_over_counters():
+    c0 = np.array([0x00000000, 0xFFFFFFFF, 0x243F6A88], dtype=np.uint32)
+    c1 = np.array([0x00000000, 0xFFFFFFFF, 0x85A308D3], dtype=np.uint32)
+    # rows 0 and 1 match the all-zero / all-ones KATs under their keys
+    x0, _ = threefry2x32(0, 0, c0[:1], c1[:1])
+    assert int(x0[0]) == 0x6B200159
+    x0, x1 = threefry2x32(0x13198A2E, 0x03707344, c0[2:], c1[2:])
+    assert (int(x0[0]), int(x1[0])) == (0xC4923A9C, 0x483DF7A0)
+
+
+def test_counter_uniforms_range_dtype_and_determinism():
+    u = counter_uniforms(12345, np.arange(10_000))
+    assert u.dtype == np.float64
+    assert np.all((0.0 <= u) & (u < 1.0))
+    # exact dyadic rationals m * 2**-32: scaling back is lossless
+    m = u * 2.0 ** 32
+    assert np.array_equal(m, np.round(m))
+    # stateless: any slice equals the full derivation restricted
+    assert np.array_equal(u[137:731], counter_uniforms(12345,
+                                                       np.arange(137, 731)))
+    # key sensitivity: a different seed decorrelates every draw
+    assert not np.any(u == counter_uniforms(12346, np.arange(10_000)))
+
+
+def test_counter_uniforms_wide_seeds_and_jids():
+    # seeds wider than 32 bits use both key words
+    a = counter_uniforms(1, [0, 1, 2])
+    b = counter_uniforms(1 + (1 << 32), [0, 1, 2])
+    assert not np.array_equal(a, b)
+    # jids wider than 32 bits use both counter words
+    wide = counter_uniforms(7, [1 << 33])
+    assert wide.shape == (1,) and 0.0 <= wide[0] < 1.0
+
+
+def test_counter_draw_matches_index_formula():
+    d = CounterDraw()
+    d.u = 0.999999999
+    assert d.randrange(3) == 2
+    assert d.choice("abc") == "c"
+    d.u = 0.0
+    assert d.randrange(3) == 0
+    assert d.choice([10, 20]) == 10
+    # floor(u * n) never reaches n for u < 1 (dyadic u, small n)
+    d.u = (2 ** 32 - 1) * 2.0 ** -32
+    for n in (1, 2, 3, 7, 1000):
+        assert d.randrange(n) == n - 1
+
+
+def test_engines_validate_rng_scheme():
+    assert RNG_SCHEMES == ("legacy", "counter")
+    for engine in ("vector", "batched"):
+        for scheme in RNG_SCHEMES:
+            e = make_engine(engine, [1.0], [2], policy="jffc",
+                            rng_scheme=scheme)
+            assert e.rng_scheme == scheme
+        with pytest.raises(ValueError, match="rng_scheme"):
+            make_engine(engine, [1.0], [2], policy="jffc",
+                        rng_scheme="philox")
+
+
+def test_deterministic_policies_are_scheme_invariant():
+    """Policies that never draw produce identical trajectories under both
+    schemes; RNG-consuming ones genuinely re-randomize."""
+    import random
+
+    from repro.core.simulator import poisson_arrivals, simulate_vectorized
+
+    servers = [(1.0, 2), (0.8, 2), (0.5, 4)]
+    arrivals = poisson_arrivals(4.0, 2_000, random.Random(3))
+    for policy in ("jffc", "jffs", "sa-jsq", "sed", "priority"):
+        a = simulate_vectorized(policy, servers, arrivals, seed=3,
+                                rng_scheme="legacy")
+        b = simulate_vectorized(policy, servers, arrivals, seed=3,
+                                rng_scheme="counter")
+        assert np.array_equal(a.response_times, b.response_times), policy
+    for policy in ("random", "jsq", "jiq"):
+        a = simulate_vectorized(policy, servers, arrivals, seed=3,
+                                rng_scheme="legacy")
+        b = simulate_vectorized(policy, servers, arrivals, seed=3,
+                                rng_scheme="counter")
+        assert not np.array_equal(a.response_times, b.response_times), policy

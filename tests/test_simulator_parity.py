@@ -68,7 +68,7 @@ def test_segmented_run_equals_one_shot():
     for frac in (0.1, 0.25, 0.5, 0.9):
         sim.run_until(frac * horizon)
     sim.run_to_completion()
-    _identical(one, sim.result())
+    _identical(one, sim.result(warmup_fraction=0.1))
 
 
 def test_noop_reconfigure_preserves_trajectory():
@@ -86,7 +86,7 @@ def test_noop_reconfigure_preserves_trajectory():
                                    keys=keys)
         assert requeued == 0
     sim.run_to_completion()
-    _identical(one, sim.result())
+    _identical(one, sim.result(warmup_fraction=0.1))
 
 
 def test_reconfigure_restarts_lose_no_jobs():
