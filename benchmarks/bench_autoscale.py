@@ -30,11 +30,12 @@ or:   PYTHONPATH=src python -m benchmarks.run --only autoscale
 from __future__ import annotations
 
 import argparse
-import json
 import time
 from typing import List
 
 from repro import api
+
+from .common import write_bench
 from repro.core import Server, ServiceSpec
 from repro.autoscale import servers_needed, static_baseline_cost
 
@@ -204,9 +205,7 @@ def main() -> None:
         print(row["name"] + ": "
               + ", ".join(f"{k}={row[k]:.2f}" if isinstance(row[k], float)
                           else f"{k}={row[k]}" for k in keys))
-    with open(args.out, "w") as f:
-        json.dump(rows, f, indent=1, default=float)
-    print(f"wrote {args.out}")
+    write_bench(args.out, rows)
 
 
 if __name__ == "__main__":

@@ -27,7 +27,6 @@ or via the suite driver: PYTHONPATH=src python -m benchmarks.run --only multiten
 from __future__ import annotations
 
 import argparse
-import json
 import random
 import time
 from typing import List
@@ -35,6 +34,8 @@ from typing import List
 import numpy as np
 
 from repro import api
+
+from .common import write_bench
 from repro.core import (
     RequestClass,
     Scenario,
@@ -234,9 +235,7 @@ def main() -> None:
         print(row["name"] + ": "
               + ", ".join(f"{k}={row[k]:.2f}" if isinstance(row[k], float)
                           else f"{k}={row[k]}" for k in keys))
-    with open(args.out, "w") as f:
-        json.dump(rows, f, indent=1, default=float)
-    print(f"wrote {args.out}")
+    write_bench(args.out, rows)
 
 
 if __name__ == "__main__":

@@ -21,7 +21,6 @@ or via the suite driver: PYTHONPATH=src python -m benchmarks.run --only simulato
 from __future__ import annotations
 
 import argparse
-import json
 import random
 import time
 from typing import List
@@ -39,7 +38,7 @@ from repro.core.engines import jax_available
 from repro.core.simulator import poisson_arrivals
 from repro.core.workload import poisson_exponential_np
 
-from .common import timed_pair
+from .common import timed_pair, write_bench
 
 # A composed system representative of the paper's GCA outputs: 3 job-server
 # classes, 16 concurrent slots, nu = 11.2.
@@ -325,12 +324,72 @@ def scenario_record(n_target: int = 5_000) -> dict:
     }
 
 
+def obs_overhead_record(n: int = 100_000, repeats: int = 5) -> dict:
+    """The flight recorder's cost, measured three ways on the identical
+    trace through the vector engine:
+
+      * **baseline** — the engine exactly as the pre-obs callers drove it;
+      * **disabled** — ``tracer=None, metrics=None`` passed explicitly
+        (the default-off path every untraced run takes).  The CI
+        ``obs-smoke`` job gates ``disabled_overhead`` < 2%: tracing off
+        must stay structurally free, not just cheap;
+      * **traced** — a live :class:`repro.obs.Tracer` + registry plus the
+        full post-hoc span decode (``traced_overhead``, informational —
+        this is the price of turning the recorder ON).
+
+    Each comparison is an interleaved median-of-N pair, so both sides see
+    the same thermal/quota envelope."""
+    from repro.core import make_engine
+    from repro.obs import MetricsRegistry, Tracer, decode_sim_trace
+
+    lam = 0.7 * NU
+    tt, ww = poisson_exponential_np(lam, n, seed=0)
+
+    def _drive(**kw):
+        sim = make_engine("vector", RATES, CAPS, policy="jffc", seed=1, **kw)
+        sim.add_arrivals(tt, ww)
+        sim.run_to_completion()
+        sim.result()
+        return sim
+
+    def baseline():
+        _drive()
+
+    def disabled():
+        _drive(tracer=None, metrics=None)
+
+    def traced():
+        tr = Tracer()
+        sim = _drive(tracer=tr, metrics=MetricsRegistry())
+        decode_sim_trace(sim, tr)
+
+    s_base_d, s_dis = timed_pair(baseline, disabled, repeats)
+    s_base_t, s_tr = timed_pair(baseline, traced, repeats)
+
+    def safe(x: float) -> float:
+        return max(x, 1e-9)
+
+    return {
+        "name": "simulator_obs_overhead",
+        "n_jobs": n,
+        "timer": "process_time",
+        "repeats": repeats,
+        "baseline_s": s_base_d["median"],
+        "disabled_s": s_dis["median"],
+        "traced_s": s_tr["median"],
+        "disabled_overhead": s_dis["median"] / safe(s_base_d["median"]) - 1.0,
+        "traced_overhead": s_tr["median"] / safe(s_base_t["median"]) - 1.0,
+        "snapshot": s_dis["snapshot"],
+    }
+
+
 def run(n_jobs: int = 100_000, million: bool = True) -> List[dict]:
     rows = [parity_record()]
     rows += throughput_records(n_jobs)
     rows += engine_records(max(n_jobs, 5_000))
     rows += sweep_records(n=max(n_jobs // 2, 2_500), seeds=16)
     rows.append(policy_sweep_record(n=max(n_jobs // 5, 2_000)))
+    rows.append(obs_overhead_record(n_jobs))
     if million:
         rows.append(million_job_record())
     rows.append(scenario_record())
@@ -351,14 +410,13 @@ def main() -> None:
         keys = [k for k in ("bit_identical", "cross_engine_bit_identical",
                             "engine_speedup", "pipeline_speedup",
                             "batched_speedup", "sweep_speedup",
-                            "jobs_per_s", "completed_all")
+                            "jobs_per_s", "completed_all",
+                            "disabled_overhead", "traced_overhead")
                 if k in row]
         print(row["name"] + ": "
               + ", ".join(f"{k}={row[k]:.2f}" if isinstance(row[k], float)
                           else f"{k}={row[k]}" for k in keys))
-    with open(args.out, "w") as f:
-        json.dump(rows, f, indent=1, default=float)
-    print(f"wrote {args.out}")
+    write_bench(args.out, rows)
 
 
 if __name__ == "__main__":

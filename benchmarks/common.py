@@ -17,18 +17,43 @@ envelope.
 from __future__ import annotations
 
 import gc
+import json
 import random
 import time
 from typing import Callable, Dict, List, Tuple
 
 from repro.core import Server, ServiceSpec
+from repro.obs import MetricsRegistry
 
 
-def _timing_stats(ts: List[float]) -> Dict[str, float]:
+def _timing_stats(ts: List[float]) -> Dict[str, object]:
+    """Fold raw trial times into ``{median, best, mean, n}`` plus a
+    ``snapshot`` — a :class:`repro.obs.MetricsSnapshot` dict of the same
+    trials — so every ``BENCH_*.json`` row shares one nested schema that
+    :meth:`repro.obs.MetricsSnapshot.diff` can compare run-to-run."""
     s = sorted(ts)
     n = len(s)
     med = s[n // 2] if n % 2 else 0.5 * (s[n // 2 - 1] + s[n // 2])
-    return {"median": med, "best": s[0], "mean": sum(s) / n, "n": float(n)}
+    reg = MetricsRegistry()
+    reg.histogram("time_s", lo=1e-9, hi=1e4).record_many(s)
+    reg.gauge("median_s").set(med)
+    reg.gauge("best_s").set(s[0])
+    return {"median": med, "best": s[0], "mean": sum(s) / n, "n": float(n),
+            "snapshot": reg.snapshot().as_dict()}
+
+
+def write_bench(path: str, rows: List[dict]) -> None:
+    """The one writer behind every ``BENCH_*.json``: a JSON list of row
+    dicts, each with a unique ``name`` (the CI smoke jobs index rows by
+    it; timing rows nest their ``snapshot`` from :func:`_timing_stats`)."""
+    names = [r.get("name") for r in rows]
+    if None in names:
+        raise ValueError("every bench row needs a 'name'")
+    if len(set(names)) != len(names):
+        raise ValueError(f"duplicate bench row names: {sorted(names)}")
+    with open(path, "w") as f:
+        json.dump(rows, f, indent=1, default=float)
+    print(f"wrote {path}")
 
 
 def timed(

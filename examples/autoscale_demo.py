@@ -46,7 +46,8 @@ def queueing_plane() -> None:
                              trace_seed=3, name="static"))
     srep = static_baseline_cost(n_static, rep.sim_time,
                                 rep.raw.result.response_times, 3.0)
-    print(f"static x{n_static} (peak-provisioned): p99 {rep.p99():.2f} s, "
+    print(rep.summary_line())
+    print(f"static x{n_static} (peak-provisioned): "
           f"{srep.server_seconds:.0f} server-s, "
           f"{srep.slo_violations} SLO violations")
 
@@ -81,9 +82,8 @@ def live_plane() -> None:
         amplitude=0.8, trace_seed=7, cooldown=10.0, warmup_lag=8.0,
         max_servers=12, slo_response_time=60.0, name="live-predictive")
     rep = api.run(spec, plane=api.LivePlane(dt=0.5, prompt_tokens=4))
-    print(f"requests: {rep.n_completed}/{rep.n_jobs} finished, "
-          f"{rep.n_failed} failed, {rep.reconfigurations} recompositions "
-          f"({rep.extras['idle_skipped']} idle rounds fast-forwarded)")
+    print(rep.summary_line()
+          + f" ({rep.extras['idle_skipped']} idle rounds fast-forwarded)")
     print(f"controller: {rep.cost['n_actions']} actions, "
           f"peak {rep.cost['peak_servers']} servers, "
           f"{rep.cost['server_seconds']:.0f} server-s")

@@ -46,14 +46,11 @@ def overload_triage() -> None:
         "priority": {"batch_deadline": inf},
         "priority + admission": {},          # the preset's full gate
     }
-    print(f"{'engine':22s} {'int p99':>9s} {'batch p99':>10s} "
-          f"{'batch done':>10s} {'shed':>6s}")
+    # per-class p99 + shed live in the report itself now: one
+    # summary_line() per leg replaces the old hand-rolled table
     for name, knobs in legs.items():
         rep = api.run(api.preset("overloaded_70_30", name=name, **knobs))
-        pc = rep.per_class
-        print(f"{name:22s} {pc[0]['response']['p99']:9.2f} "
-              f"{pc[1]['response']['p99']:10.2f} {pc[1]['n']:10d} "
-              f"{rep.n_rejected:6d}")
+        print(rep.summary_line())
     print("-> priority protects the interactive tenant; the admission gate")
     print("   additionally sheds only the batch excess (goodput ~intact).\n")
 
@@ -109,12 +106,10 @@ def closed_loop() -> None:
     rep = api.run(spec)
     baseline = api.run(spec.replace(policy=api.PolicySpec(name="jffc"),
                                     autoscale=None))
-    pc = rep.per_class
     shed_cls = set(rep.raw.result.rejected_class_ids.tolist())
-    print(f"completed_all={rep.completed_all}  shed={rep.n_rejected} "
-          f"(batch only: {shed_cls <= {1}})")
-    print(f"interactive p99: {pc[0]['response']['p99']:.2f} s  "
-          f"(class-blind FIFO baseline: "
+    print(rep.summary_line())
+    print(f"shed batch-only: {shed_cls <= {1}}  "
+          f"(class-blind FIFO baseline interactive p99: "
           f"{baseline.per_class[0]['response']['p99']:.2f} s)")
     for r in rep.extras["scaling_records"]:
         print(f"  t={r['time']:6.1f}  {r['action']:9s}  {r['reason']}")

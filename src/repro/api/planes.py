@@ -22,7 +22,12 @@ fidelities and return one :class:`repro.api.report.RunReport` schema.
 ``arrivals=`` overrides the spec's generated workload with a pre-built
 trace (the benchmarks' identical-trace-across-legs pattern);
 ``controller=`` injects an existing stateful controller instead of building
-one from ``spec.autoscale`` (the deprecation shims use both).
+one from ``spec.autoscale`` (the deprecation shims use both);
+``trace=True`` attaches the flight recorder (:mod:`repro.obs`) — the
+report comes back with a decoded ``RunReport.trace`` timeline and a
+metrics snapshot in ``extras["metrics"]``, with results bit-identical to
+the untraced run (trace config is deliberately *not* part of the spec, so
+results-store keys are unaffected).
 """
 from __future__ import annotations
 
@@ -117,6 +122,8 @@ def _execute_sim(
     scenario: Scenario,
     arrivals,
     controller,
+    tracer=None,
+    metrics=None,
 ) -> Tuple[ScenarioResult, int]:
     """Drive the vectorized simulator through the scenario; returns the
     plane-native :class:`ScenarioResult` plus the final cluster size.
@@ -146,7 +153,8 @@ def _execute_sim(
                       classes=classes,
                       aging_rate=spec.policy.aging_rate,
                       admission_level=spec.admission.level,
-                      rng_scheme=spec.rng_scheme)
+                      rng_scheme=spec.rng_scheme,
+                      tracer=tracer, metrics=metrics)
     sim.add_arrivals(times, works, cls_ids)
     log: List[ScenarioLogEntry] = []
     composed_lam = base_rate          # load the current chain set targets
@@ -264,11 +272,13 @@ def _execute_sim(
 
 
 def _execute_precomposed(spec: ExperimentSpec, scenario: Scenario,
-                         arrivals) -> Tuple[ScenarioResult, int]:
+                         arrivals, tracer=None,
+                         metrics=None) -> Tuple[ScenarioResult, int]:
     """Pre-composed (``cluster.job_servers``) runs: a fixed chain set, no
     recomposition — the ``simulate_vectorized`` regime behind the same
     spec/report schema."""
-    sim = build_simulator(spec, scenario=scenario, arrivals=arrivals)
+    sim = build_simulator(spec, scenario=scenario, arrivals=arrivals,
+                          tracer=tracer, metrics=metrics)
     sim.run_to_completion()
     res = sim.result(spec.warmup_fraction)
     n = sim.n
@@ -285,10 +295,11 @@ def _execute_precomposed(spec: ExperimentSpec, scenario: Scenario,
 
 
 def build_simulator(spec: ExperimentSpec, scenario: Optional[Scenario] = None,
-                    arrivals=None) -> SimEngine:
+                    arrivals=None, tracer=None, metrics=None) -> SimEngine:
     """A loaded-but-not-run simulation backend (``spec.cluster.engine``)
     for a pre-composed spec — the benchmarks' engine-timing hook (build
-    through the spec, time only ``run_to_completion``)."""
+    through the spec, time only ``run_to_completion``).  ``tracer`` /
+    ``metrics`` attach a flight recorder (:mod:`repro.obs`)."""
     if not spec.cluster.job_servers:
         raise SpecError("cluster.job_servers",
                         "build_simulator needs a pre-composed cluster")
@@ -307,9 +318,34 @@ def build_simulator(spec: ExperimentSpec, scenario: Optional[Scenario] = None,
                       seed=spec.engine_seed(), classes=classes,
                       aging_rate=spec.policy.aging_rate,
                       admission_level=spec.admission.level,
-                      rng_scheme=spec.rng_scheme)
+                      rng_scheme=spec.rng_scheme,
+                      tracer=tracer, metrics=metrics)
     sim.add_arrivals(times, works, cls_ids)
     return sim
+
+
+def _run_markers(log_entries, controller):
+    """Run-level instant markers for the flight recorder: scenario /
+    recompose log entries (dataclass entries on the sim plane, applied
+    event dicts on the live plane) plus the controller's scaling audit
+    log."""
+    from repro.obs.trace import Marker
+
+    out = []
+    for e in log_entries:
+        d = dataclasses.asdict(e) if dataclasses.is_dataclass(e) else dict(e)
+        t = d.pop("time", 0.0)
+        kind = d.pop("kind", "event")
+        out.append(Marker(float(t), str(kind), "scenario",
+                          args={k: v for k, v in d.items()
+                                if v is not None}))
+    if controller is not None:
+        for r in controller.records:
+            out.append(Marker(float(r.time), f"autoscale-{r.action}",
+                              "autoscale",
+                              args={"count": r.count, "sids": list(r.sids),
+                                    "reason": r.reason}))
+    return out
 
 
 class SimPlane:
@@ -324,17 +360,25 @@ class SimPlane:
         return self.name
 
     def run(self, spec: ExperimentSpec, *, arrivals=None,
-            controller=None) -> RunReport:
+            controller=None, trace: bool = False) -> RunReport:
+        tracer = metrics = None
+        if trace:
+            from repro.obs import MetricsRegistry, Tracer
+            tracer, metrics = Tracer(), MetricsRegistry()
         scenario = spec.scenario.to_scenario()
         ctl = _resolve_controller(spec, controller)
+        if ctl is not None and metrics is not None:
+            ctl.metrics = metrics
         if spec.cluster.job_servers:
             if ctl is not None:
                 raise SpecError("autoscale",
                                 "autoscaling needs a composable cluster")
-            res, n_final = _execute_precomposed(spec, scenario, arrivals)
+            res, n_final = _execute_precomposed(spec, scenario, arrivals,
+                                               tracer, metrics)
         else:
             arr = _resolve_workload(spec, scenario, arrivals)
-            res, n_final = _execute_sim(spec, scenario, arr, ctl)
+            res, n_final = _execute_sim(spec, scenario, arr, ctl,
+                                        tracer, metrics)
         cost = None
         extras = {"n_servers_final": n_final}
         if ctl is not None:
@@ -343,8 +387,17 @@ class SimPlane:
             extras["scaling_records"] = [dataclasses.asdict(r)
                                          for r in ctl.records]
             extras["controller"] = ctl
-        return report_from_scenario_result(spec, res, plane=self.name,
-                                           cost=cost, extras=extras)
+        report = report_from_scenario_result(spec, res, plane=self.name,
+                                             cost=cost, extras=extras)
+        if trace:
+            from repro.obs import decode_sim_trace
+            report.trace = decode_sim_trace(
+                tracer.engine, tracer,
+                markers=_run_markers(res.log, ctl),
+                meta={"spec": spec.name, "policy": spec.policy.name,
+                      "rng_scheme": spec.rng_scheme})
+            report.extras["metrics"] = metrics.snapshot().as_dict()
+        return report
 
 
 # ---------------------------------------------------------------------------
@@ -501,7 +554,7 @@ class LivePlane:
         return reqs
 
     def run(self, spec: ExperimentSpec, *, arrivals=None,
-            controller=None) -> RunReport:
+            controller=None, trace: bool = False) -> RunReport:
         if spec.cluster.job_servers:
             raise SpecError("cluster.job_servers",
                             "the live plane needs physical servers "
@@ -524,9 +577,16 @@ class LivePlane:
             spec.workload.class_rates)
         orch = self._build_orchestrator(spec)
         orch.set_admission_level(spec.admission.level)
+        metrics = None
+        if trace:
+            from repro.obs import MetricsRegistry
+            metrics = MetricsRegistry()
+            orch.metrics = metrics
         ctl = _resolve_controller(spec, controller)
         if ctl is not None:
             ctl.bind_orchestrator(orch)
+            if metrics is not None:
+                ctl.metrics = metrics
         reqs = self._requests(spec, times, works, cls_ids)
         summary = drive_orchestrator(orch, scenario, reqs, dt=self.dt,
                                      max_rounds=self.max_rounds)
@@ -544,9 +604,17 @@ class LivePlane:
                                          for r in ctl.records]
             extras["controller"] = ctl
         extras["orchestrator"] = orch
-        return report_from_orchestrator(spec, orch, summary, self.dt,
-                                        plane=self.name, cost=cost,
-                                        extras=extras)
+        report = report_from_orchestrator(spec, orch, summary, self.dt,
+                                          plane=self.name, cost=cost,
+                                          extras=extras)
+        if trace:
+            from repro.obs import decode_orchestrator_trace
+            report.trace = decode_orchestrator_trace(
+                orch, markers=_run_markers(summary.get("events", []), ctl),
+                meta={"spec": spec.name, "engine": self.engine,
+                      "dt": self.dt})
+            report.extras["metrics"] = metrics.snapshot().as_dict()
+        return report
 
 
 PLANES.register("sim", SimPlane)

@@ -74,6 +74,11 @@ class RunReport:
     restarts: int
     cost: Optional[dict] = None
     extras: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    #: decoded run timeline (:class:`repro.obs.RunTrace`) when the run was
+    #: executed with ``trace=True``; serialize it with
+    #: :func:`repro.obs.export_chrome_trace` — like ``raw`` it is a live
+    #: object and never round-trips through :meth:`to_dict`
+    trace: Any = None
     raw: Any = None
 
     def p99(self) -> float:
@@ -83,9 +88,13 @@ class RunReport:
         return float(self.response.get("mean", math.nan))
 
     def to_dict(self) -> dict:
-        """JSON-safe dict (drops ``raw``; coerces extras)."""
-        d = dataclasses.asdict(self)
+        """JSON-safe dict (drops ``raw`` and ``trace``; coerces extras)."""
+        # null the live objects before asdict so it never deep-copies a
+        # span timeline or a plane-native result
+        d = dataclasses.asdict(dataclasses.replace(self, raw=None,
+                                                   trace=None))
         d.pop("raw")
+        d.pop("trace")
         return _jsonable(d)
 
     @classmethod
@@ -96,6 +105,7 @@ class RunReport:
         controller/orchestrator objects were reduced to reprs)."""
         d = dict(d)
         d.pop("raw", None)
+        d.pop("trace", None)
         d["per_class"] = {int(k): v
                           for k, v in (d.get("per_class") or {}).items()}
         known = {f.name for f in dataclasses.fields(cls) if f.name != "raw"}
@@ -132,13 +142,26 @@ class RunReport:
         return out
 
     def summary_line(self) -> str:
+        """One-line human summary; with more than one request class it
+        appends each class's p99 + shed count (the multi-tenant demos'
+        per-class print blocks, folded into the report itself)."""
         r = self.response
-        return (f"[{self.plane}] {self.name or 'experiment'}: "
+        line = (f"[{self.plane}] {self.name or 'experiment'}: "
                 f"{self.n_completed}/{self.n_jobs} completed "
                 f"(+{self.n_rejected} gated, {self.n_failed} failed), "
                 f"mean {r.get('mean', math.nan):.3f}s "
                 f"p99 {r.get('p99', math.nan):.3f}s, "
                 f"{self.reconfigurations} recompositions")
+        if len(self.per_class) > 1:
+            parts = []
+            for c in sorted(self.per_class):
+                e = self.per_class[c]
+                name = e.get("name") or f"class{c}"
+                p99 = float((e.get("response") or {}).get("p99", math.nan))
+                parts.append(f"{name} p99 {p99:.3f}s"
+                             f" shed {int(e.get('rejected', 0) or 0)}")
+            line += " | " + ", ".join(parts)
+        return line
 
 
 def _normalize_per_class(per_class: dict, classes) -> Dict[int, dict]:

@@ -25,7 +25,8 @@ def get_plane(plane: Union[str, object] = "sim"):
 
 
 def run(spec: ExperimentSpec, plane: Union[str, object] = "sim", *,
-        arrivals=None, controller=None, store=None) -> RunReport:
+        arrivals=None, controller=None, store=None,
+        trace: bool = False) -> RunReport:
     """Execute one :class:`ExperimentSpec` on the chosen plane.
 
     ``arrivals=`` pins a pre-generated trace (identical-trace comparisons
@@ -35,6 +36,12 @@ def run(spec: ExperimentSpec, plane: Union[str, object] = "sim", *,
     to the cached report when this exact (spec, plane, engine) has already
     run, and persists the report otherwise; the escape hatches bypass the
     store (their outcome is not a function of the spec alone).
+    ``trace=True`` asks the plane for a flight-recorder run: the report
+    gains ``.trace`` (a :class:`repro.obs.RunTrace`) and a metrics
+    snapshot in ``extras["metrics"]``.  Traced runs are bit-identical to
+    untraced ones, so the store *key* is unaffected — but a cached load
+    cannot resurrect the live trace object, so ``trace=True`` skips the
+    cache-load path (the trace-stripped report is still persisted).
     """
     if not isinstance(spec, ExperimentSpec):
         raise SpecError("spec",
@@ -57,10 +64,14 @@ def run(spec: ExperimentSpec, plane: Union[str, object] = "sim", *,
             # rng_scheme) cache those variants of one spec as one entry
             key_spec = spec_replace(spec, "cluster.engine", "vector")
             key_spec = spec_replace(key_spec, "rng_scheme", "legacy")
-        cached = store.load(key_spec, plane_key)
-        if cached is not None:
-            return cached
-    report = p.run(spec, arrivals=arrivals, controller=controller)
+        # trace=True must re-execute (a cached report has no live trace),
+        # but the key and the saved payload are trace-independent
+        if not trace:
+            cached = store.load(key_spec, plane_key)
+            if cached is not None:
+                return cached
+    report = p.run(spec, arrivals=arrivals, controller=controller,
+                   **({"trace": True} if trace else {}))
     if use_store:
         store.save(key_spec, plane_key, report)
     return report

@@ -121,6 +121,23 @@ class AutoscaleController:
         self._bill_n: Optional[int] = None
         self.peak_servers = 0
         self._finalized = False
+        # optional repro.obs.MetricsRegistry; every ScalingRecord is
+        # mirrored into it by _record() when attached
+        self.metrics = None
+
+    def _record(self, rec: ScalingRecord) -> None:
+        """Append one scaling record, mirroring it into the metrics
+        registry (per-action counters + actuation gauges) when one is
+        attached by the execution plane."""
+        self.records.append(rec)
+        if self.metrics is not None:
+            m = self.metrics
+            m.counter(f"autoscale.{rec.action}").inc()
+            m.counter("autoscale.servers_added").inc(
+                rec.count if rec.action == "add" else 0)
+            m.counter("autoscale.servers_removed").inc(
+                rec.count if rec.action == "remove" else 0)
+            m.gauge("autoscale.admission_level").set(self.admission_level)
 
     # -- provisioning ---------------------------------------------------------
     def _mint(self) -> Server:
@@ -241,7 +258,7 @@ class AutoscaleController:
                 and action.admission_level != self.admission_level:
             # free and reversible: does not start the scaling cooldown
             self.admission_level = action.admission_level
-            self.records.append(ScalingRecord(now, "admission", 0, [],
+            self._record(ScalingRecord(now, "admission", 0, [],
                                               action.reason))
         if action.add:
             sids = []
@@ -250,7 +267,7 @@ class AutoscaleController:
                 sids.append(srv.sid)
                 self.pending.append((now + self.cfg.warmup_lag, srv))
                 self.added_sids.append(srv.sid)
-            self.records.append(ScalingRecord(now, "add", action.add, sids,
+            self._record(ScalingRecord(now, "add", action.add, sids,
                                               action.reason))
             self.last_action_time = now
         elif action.remove:
@@ -258,7 +275,7 @@ class AutoscaleController:
             if victims:
                 for sid in victims:
                     events.append(ScenarioEvent(now, "fail", sid=sid))
-                self.records.append(ScalingRecord(
+                self._record(ScalingRecord(
                     now, "remove", len(victims), victims, action.reason))
                 self.last_action_time = now
         return events
@@ -315,7 +332,7 @@ class AutoscaleController:
                 # free and reversible, so no scaling cooldown starts
                 self.admission_level = action.admission_level
                 o.set_admission_level(action.admission_level)
-                self.records.append(ScalingRecord(now, "admission", 0, [],
+                self._record(ScalingRecord(now, "admission", 0, [],
                                                   action.reason))
             if action.add:
                 # retarget o.lam so the warm-join recompose sizes for the
@@ -329,7 +346,7 @@ class AutoscaleController:
                     self.added_sids.append(srv.sid)
                     o.add_server(srv, now,
                                  warmup_until=now + self.cfg.warmup_lag)
-                self.records.append(ScalingRecord(now, "add", action.add,
+                self._record(ScalingRecord(now, "add", action.add,
                                                   sids, action.reason))
                 self.last_action_time = now
             elif action.remove:
@@ -338,7 +355,7 @@ class AutoscaleController:
                     o.lam = self.compose_rate(o.lam)
                     o.retire_servers(victims, now)   # graceful, not a crash
                     self._orch_composed_lam = o.lam
-                    self.records.append(ScalingRecord(
+                    self._record(ScalingRecord(
                         now, "remove", len(victims), victims, action.reason))
                     self.last_action_time = now
             elif self.needs_retune(self._orch_composed_lam, o.lam):

@@ -23,6 +23,16 @@ Two feeders are provided for the repo's two execution planes:
 
 Everything here is numpy-only — no jax — so the control plane runs in the
 minimal-dependency environment.
+
+Memory bound: the completion buffer is capped at
+``TelemetryConfig.max_completions`` records.  Below the cap quantiles are
+exact (interpolated percentiles over the raw window, the behaviour the
+policy tests pin).  When a burst overflows the cap the *oldest* records
+spill out (never the newest — the window wants recent data) and
+:meth:`Telemetry.response_quantile` transparently falls back to a pair of
+rotating per-class :class:`repro.obs.LogHistogram` sketches covering the
+last one-to-two windows, so tail estimates stay meaningful at any
+completion rate in O(buckets) memory.
 """
 from __future__ import annotations
 
@@ -30,9 +40,11 @@ import bisect
 import dataclasses
 import math
 from collections import deque
-from typing import Deque, List, Optional, Tuple
+from typing import Deque, Dict, List, Optional, Tuple
 
 import numpy as np
+
+from repro.obs.metrics import LogHistogram
 
 
 @dataclasses.dataclass
@@ -66,6 +78,13 @@ class Telemetry:
         self.now: float = 0.0
         self.n_arrivals = 0
         self.n_completions = 0
+        # histogram fallback state: per-class rotating (previous, current)
+        # sketch pair; _cap_evict_t is the newest timestamp ever spilled by
+        # the cap — quantiles are exact while every spilled record would
+        # have aged out of the window anyway
+        self._hists: Dict[int, Tuple[LogHistogram, LogHistogram]] = {}
+        self._hist_start: float = 0.0
+        self._cap_evict_t: float = -math.inf
 
     # -- ingestion -----------------------------------------------------------
     def _advance(self, t: float) -> None:
@@ -100,9 +119,28 @@ class Telemetry:
     def record_completion(self, t: float, response_time: float,
                           cls: int = 0) -> None:
         self.n_completions += 1
-        if len(self._completions) < self.cfg.max_completions:
-            self._completions.append((t, response_time, cls))
+        self._completions.append((t, response_time, cls))
+        # spill the OLDEST records past the cap (the window wants recent
+        # data); remember the newest spilled timestamp so quantiles know
+        # when the exact buffer stopped covering the whole window
+        while len(self._completions) > self.cfg.max_completions:
+            old_t, _, _ = self._completions.popleft()
+            self._cap_evict_t = max(self._cap_evict_t, old_t)
+        self._rotate_hists(t)
+        cur = self._hists.setdefault(
+            int(cls), (LogHistogram(), LogHistogram()))[1]
+        cur.record(response_time)
         self._advance(t)
+
+    def _rotate_hists(self, t: float) -> None:
+        """Age the sketch pair: once a full window has accumulated in the
+        current sketches they become the previous generation.  prev+cur
+        together always cover the last one-to-two windows."""
+        if t - self._hist_start < self.cfg.window:
+            return
+        self._hists = {c: (cur, LogHistogram())
+                       for c, (_, cur) in self._hists.items()}
+        self._hist_start = t
 
     def record_sample(
         self,
@@ -177,10 +215,28 @@ class Telemetry:
             return 0.0
         return s.in_flight / s.capacity if s.capacity else 1.0
 
+    def _exact_covers_window(self) -> bool:
+        """True while no record spilled by the cap is still inside the
+        window — i.e. the raw buffer holds every windowed completion."""
+        return self._cap_evict_t <= self.now - self.cfg.window
+
     def response_quantile(self, q: float, cls: Optional[int] = None) -> float:
         """q-th percentile (0..100) of windowed response times (nan if
         none); ``cls`` restricts to one SLO class — the per-class p99 the
-        SLO-aware admission policy watches."""
+        SLO-aware admission policy watches.
+
+        Exact (interpolated over the raw buffer) below the completion cap;
+        past it, a bucketed :class:`~repro.obs.LogHistogram` estimate over
+        the last one-to-two windows."""
+        if not self._exact_covers_window():
+            merged = LogHistogram()
+            for c, (prev, cur) in self._hists.items():
+                if cls is None or c == cls:
+                    merged.merge(prev)
+                    merged.merge(cur)
+            if merged.count:
+                return merged.quantile(q)
+            return math.nan
         rts = [r for _, r, c in self._completions
                if cls is None or c == cls]
         if not rts:

@@ -185,8 +185,13 @@ class BatchedEngine(VectorEngine):
             f0[slot] = t
             seq0[slot] = float(s)
             self.fin[jid] = t            # completes as already scheduled
-        starts, finishes = jax_scan.run_jffc_scan(
+        starts, finishes, slots = jax_scan.run_jffc_scan(
             times, works, slot_rate, slot_prio, f0, seq0, float(self.seq))
+        if self.tracer is not None:
+            # native chain attribution: the kernel's chosen-slot output,
+            # mapped slot -> chain (the flight recorder's compiled-path
+            # channel — no host callbacks, no recompilation when off)
+            self._record_chain_hints(np.arange(i0, self.n), slot_chain[slots])
         if isinstance(self.st, np.ndarray):
             self.st[i0:] = starts             # vectorized slice assignment
             self.fin[i0:] = finishes
@@ -249,7 +254,7 @@ class BatchedEngine(VectorEngine):
             pseudo[slot] = jid
             self.fin[jid] = t            # completes as already scheduled
         run0 = np.asarray(self.running, dtype=np.float64)
-        ys, st, fin, qhead, qnext, seqc = jax_scan.run_event_scan(
+        ys, sl, st, fin, qhead, qnext, seqc = jax_scan.run_event_scan(
             self.policy, times, works, us, slot_rate, slot_chain,
             self.rates, self.caps, self.chain_order, f0, sseq0, sjid0,
             run0, float(self.seq))
@@ -265,6 +270,9 @@ class BatchedEngine(VectorEngine):
         glob = np.where(dep < n_new, dep + i0,
                         pseudo[np.maximum(dep - n_new, 0)])
         self.comp.extend(glob.tolist())
+        if self.tracer is not None:
+            # native chain attribution from the departed-slot channel
+            self._record_chain_hints(glob, slot_chain[sl[ys >= 0]])
         # the interpreter's clock ends on the last processed event — the
         # final departure or, when jobs are stuck on a zero-capacity
         # chain, the last arrival

@@ -64,6 +64,15 @@ class EngineCore:
     / ``_run_priority``); everything else — arrivals, queues, the
     departure heap, reconfiguration, telemetry taps, results — lives here
     and is therefore identical across backends by construction.
+
+    ``tracer=`` (a :class:`repro.obs.Tracer`) turns on the flight
+    recorder: the engine reports composition epochs and recompose-displaced
+    service from its non-hot paths (construction, ``reconfigure``) and
+    per-request spans are decoded post-hoc by
+    :func:`repro.obs.decode_sim_trace`; the event loops are untouched, so
+    traced runs are bit-identical to untraced ones.  ``metrics=`` (a
+    :class:`repro.obs.MetricsRegistry`) publishes run counters and
+    response/waiting histograms once, inside :meth:`result`.
     """
 
     #: registry name of the backend (subclasses set it)
@@ -80,6 +89,8 @@ class EngineCore:
         aging_rate: float = 0.0,
         admission_level: float = 1.0,
         rng_scheme: str = "legacy",
+        tracer=None,
+        metrics=None,
     ):
         if policy not in POLICY_KERNELS:
             get_kernel(policy)          # raises the canonical ValueError
@@ -145,6 +156,21 @@ class EngineCore:
         self._drain_pending: List[Tuple[float, int]] = []
         self._times_np: Optional[np.ndarray] = None
         self._works_np: Optional[np.ndarray] = None
+        # observability (repro.obs): the tracer records composition epochs
+        # and displaced service from the *non-hot* paths (construction,
+        # reconfigure); per-request spans are decoded post-hoc from the
+        # st/fin/comp arrays, so the event loops carry no instrumentation
+        # and tracing is structurally free when disabled.  ``metrics`` is
+        # an optional MetricsRegistry published to by result().
+        self.tracer = tracer
+        self.metrics = metrics
+        # optional per-job chain indices a backend recorded natively (the
+        # batched engine stashes the scan kernel's chosen slot); -1 or
+        # None = decoder falls back to exact-arithmetic chain matching
+        self.trace_chain_of: Optional[np.ndarray] = None
+        if tracer is not None:
+            tracer.bind_engine(self)
+            tracer.on_epoch(0.0, self.rates, self.caps, self.keys)
 
     # -- chain bookkeeping ---------------------------------------------------
     def _set_chains(self, rates: List[float], caps: List[int]) -> None:
@@ -308,6 +334,23 @@ class EngineCore:
                             self.chain_order, self.total_free, self.dq,
                             self.dqh)
 
+    def _record_chain_hints(self, jids, chains) -> None:
+        """Stash native per-job chain attributions for the flight
+        recorder (``trace_chain_of``).  Backends with a compiled path
+        call this with the kernel's chosen-slot output; the decoder
+        treats the hints as authoritative only when they replay the
+        job's finish time exactly, so stale hints (a job re-dispatched
+        under a different composition) degrade to arithmetic matching
+        instead of mis-attributing."""
+        tco = self.trace_chain_of
+        if tco is None or len(tco) < self.n:
+            new = np.full(self.n, -1, dtype=np.int64)
+            if tco is not None:
+                new[:len(tco)] = tco
+            self.trace_chain_of = tco = new
+        tco[np.asarray(jids, dtype=np.int64)] = \
+            np.asarray(chains, dtype=np.int64)
+
     def _start(self, jid: int, k: int, t: float) -> None:
         self.running[k] += 1
         self.total_free -= 1
@@ -408,6 +451,8 @@ class EngineCore:
                 remap[ok] = pool[old_ids[ok]].pop(0)
         # split in-flight jobs into survivors and displaced; enforce the new
         # capacities by spilling the latest-finishing overflow
+        tr = self.tracer
+        rev = {nk: ok for ok, nk in remap.items()}
         per_new: dict = {}
         displaced: List[Tuple[float, int]] = []      # (scheduled finish, jid)
         for (t, s, jid, ok) in self.heap:
@@ -415,12 +460,17 @@ class EngineCore:
                 per_new.setdefault(remap[ok], []).append((t, s, jid))
             else:
                 displaced.append((t, jid))
+                if tr is not None and mode == "restart":
+                    tr.on_lost_service(jid, self.st[jid], t0, ok)
         kept: List[Tuple[float, int, int, int]] = []
         for nk, entries in per_new.items():
             entries.sort()
             cap = new_caps[nk]
             kept.extend((t, s, jid, nk) for (t, s, jid) in entries[:cap])
             displaced.extend((t, jid) for (t, _, jid) in entries[cap:])
+            if tr is not None and mode == "restart":
+                for (_, _, jid) in entries[cap:]:
+                    tr.on_lost_service(jid, self.st[jid], t0, rev[nk])
         evicted: List[int] = []
         if mode == "drain":
             # committed service completes as scheduled, out of band — these
@@ -449,6 +499,8 @@ class EngineCore:
             self.qh = 0
         self._set_chains(new_rates, new_caps)
         self.keys = new_keys
+        if tr is not None:
+            tr.on_epoch(t0, new_rates, new_caps, new_keys)
         self.dq = [[] for _ in new_caps]
         self.dqh = [0] * self.K
         for ok, nk in old_remap.items():
@@ -497,6 +549,10 @@ class EngineCore:
         self.now = max(self.now, t0)
         self.reconfigurations += 1
         self.restarts += len(evicted)
+        if tr is not None:
+            tr.on_marker(t0, "reconfigure", "recompose", mode=mode,
+                         chains=self.K, evicted=len(evicted),
+                         drained=len(displaced) if mode == "drain" else 0)
         return len(evicted)
 
     # -- results ----------------------------------------------------------------
@@ -526,10 +582,32 @@ class EngineCore:
         else:
             resp = wait = serv = np.empty(0, dtype=np.float64)
         rej = np.asarray(self.rejected, dtype=np.int64)
-        return SimResult(resp, wait, serv, len(kept),
-                         max(self.now, self._drain_horizon),
-                         class_ids=cls[kept] if len(kept)
-                         else np.empty(0, dtype=np.int64),
-                         n_rejected=len(rej),
-                         rejected_class_ids=cls[rej] if len(rej)
-                         else np.empty(0, dtype=np.int64))
+        res = SimResult(resp, wait, serv, len(kept),
+                        max(self.now, self._drain_horizon),
+                        class_ids=cls[kept] if len(kept)
+                        else np.empty(0, dtype=np.int64),
+                        n_rejected=len(rej),
+                        rejected_class_ids=cls[rej] if len(rej)
+                        else np.empty(0, dtype=np.int64))
+        if self.metrics is not None:
+            self._publish_metrics(res)
+        return res
+
+    def _publish_metrics(self, res: SimResult) -> None:
+        """Publish run counters + streaming latency histograms to the
+        attached MetricsRegistry.  Idempotent (counter values are set, not
+        incremented) so calling result() twice doesn't double-count."""
+        m = self.metrics
+        m.counter("engine.jobs").value = self.n
+        m.counter("engine.completed").value = len(self.comp)
+        m.counter("engine.rejected").value = len(self.rejected)
+        m.counter("engine.reconfigurations").value = self.reconfigurations
+        m.counter("engine.restarts").value = self.restarts
+        m.counter("engine.drains").value = self.drains
+        m.gauge("engine.sim_time_s").set(res.sim_time)
+        m.gauge("engine.capacity").set(self.total_capacity)
+        m.gauge("engine.queue_len").set(self.queue_len())
+        resp_h = m.histogram("engine.response_s")
+        resp_h.record_many(res.response_times)
+        wait_h = m.histogram("engine.waiting_s")
+        wait_h.record_many(res.waiting_times)

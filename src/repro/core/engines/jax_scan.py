@@ -113,7 +113,11 @@ def _scan_kernel(times_works, slot_rate, slot_prio, fs0, nxt0):
     ``times_works``: (n, 2) float64; ``fs0``: (2, C) float64 — row 0 the
     per-slot free-up times (``-inf`` = idle since forever), row 1 the seq
     keys of the occupying jobs; ``nxt0``: the next seq value (float64).
-    Returns two (n,) float64 arrays: per-job ``(starts, finishes)``.
+    Returns per-job ``(starts, finishes, slots)`` — two (n,) float64
+    arrays plus the chosen slot index per job, the flight recorder's
+    native chain-attribution channel (:mod:`repro.obs.decode` maps slot →
+    chain through the layout; the extra output is dead weight XLA drops
+    when nobody consumes it).
     """
 
     def step(carry, aw):
@@ -135,7 +139,7 @@ def _scan_kernel(times_works, slot_rate, slot_prio, fs0, nxt0):
         finish = start + w / slot_rate[s]
         fs = lax.dynamic_update_slice(
             fs, jnp.stack([finish, nxt])[:, None], (0, s))
-        return (fs, nxt + 1.0), (start, finish)
+        return (fs, nxt + 1.0), (start, finish, s.astype(jnp.int32))
 
     _, outs = lax.scan(step, (fs0, nxt0), times_works, unroll=_UNROLL)
     return outs
@@ -158,10 +162,12 @@ def run_jffc_scan(times: np.ndarray, works: np.ndarray,
                   slot_rate: np.ndarray, slot_prio: np.ndarray,
                   f0: Optional[np.ndarray] = None,
                   seq0: Optional[np.ndarray] = None,
-                  nxt0: float = 0.0) -> Tuple[np.ndarray, np.ndarray]:
+                  nxt0: float = 0.0
+                  ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
     """Run one trace through the compiled kernel; returns ``(starts,
-    finishes)`` as float64 numpy arrays.  ``f0``/``seq0`` seed the slot
-    state (resume-from-heap support); defaults are the fresh state."""
+    finishes, slots)`` as numpy arrays (``slots`` int32 = the chosen
+    service slot per job).  ``f0``/``seq0`` seed the slot state
+    (resume-from-heap support); defaults are the fresh state."""
     kern, _ = _compiled()
     C = len(slot_rate)
     if f0 is None:
@@ -173,12 +179,13 @@ def run_jffc_scan(times: np.ndarray, works: np.ndarray,
                         jnp.asarray(works, jnp.float64)], axis=1)
         fs0 = jnp.stack([jnp.asarray(f0, jnp.float64),
                          jnp.asarray(seq0, jnp.float64)])
-        starts, finishes = kern(tw, jnp.asarray(slot_rate, jnp.float64),
-                                jnp.asarray(slot_prio, jnp.float64), fs0,
-                                jnp.float64(nxt0))
+        starts, finishes, slots = kern(
+            tw, jnp.asarray(slot_rate, jnp.float64),
+            jnp.asarray(slot_prio, jnp.float64), fs0, jnp.float64(nxt0))
         starts = np.asarray(starts)
         finishes = np.asarray(finishes)
-    return starts, finishes
+        slots = np.asarray(slots)
+    return starts, finishes, slots
 
 
 def run_jffc_scan_batch(times: np.ndarray, works: np.ndarray,
@@ -196,9 +203,9 @@ def run_jffc_scan_batch(times: np.ndarray, works: np.ndarray,
                         jnp.asarray(works, jnp.float64)], axis=2)
         fs0 = jnp.stack([jnp.full((C,), -jnp.inf, jnp.float64),
                          jnp.zeros((C,), jnp.float64)])
-        starts, finishes = kern(tw, jnp.asarray(slot_rate, jnp.float64),
-                                jnp.asarray(slot_prio, jnp.float64), fs0,
-                                jnp.float64(0.0))
+        starts, finishes, _slots = kern(
+            tw, jnp.asarray(slot_rate, jnp.float64),
+            jnp.asarray(slot_prio, jnp.float64), fs0, jnp.float64(0.0))
         starts = np.asarray(starts)
         finishes = np.asarray(finishes)
     return starts, finishes
@@ -266,8 +273,10 @@ def _event_kernel(choose, times, works, us, slot_rate, slot_chain, capsf,
     """One compiled pass over every remaining *event* (see module doc).
 
     Local job ids: arrivals are ``0..n-1``; heap-seeded in-flight jobs are
-    ``n + slot``.  Returns ``(ys, st, fin, qhead, qnext, seqc)`` — ``ys``
-    is the per-step departed local id (or -1), i.e. the completion order;
+    ``n + slot``.  Returns ``(ys, sl, st, fin, qhead, qnext, seqc)`` —
+    ``ys`` is the per-step departed local id (or -1), i.e. the completion
+    order, and ``sl`` the slot it departed from (the flight recorder's
+    native chain-attribution channel; -1 on non-departure steps);
     ``st``/``fin`` are scatter arrays of length ``n + C``; ``qhead`` /
     ``qnext`` encode jobs still queued at the end (only when some chain
     can never serve them); ``seqc`` the final scheduling-seq counter.
@@ -360,14 +369,15 @@ def _event_kernel(choose, times, works, us, slot_rate, slot_chain, capsf,
         i = i + jnp.where(real_arr, 1, 0).astype(jnp.int32)
         seqc = seqc + jnp.where(arr_start | dep_pull, 1.0, 0.0)
         ys = jnp.where(dep, djid, jnp.int32(-1))
+        sl = jnp.where(dep, sdep, jnp.int32(-1))
         return ((fsj, running, nsys, qhead, qtail, qnext, st, fin, i,
-                 seqc), ys)
+                 seqc), (ys, sl))
 
     # n arrivals + at most n + C departures; surplus steps no-op
-    carry, ys = lax.scan(step, init, None, length=2 * n + C,
-                         unroll=_EVENT_UNROLL)
+    carry, (ys, sl) = lax.scan(step, init, None, length=2 * n + C,
+                               unroll=_EVENT_UNROLL)
     (_, _, _, qhead, _, qnext, st, fin, _, seqc) = carry
-    return ys, st, fin, qhead, qnext, seqc
+    return ys, sl, st, fin, qhead, qnext, seqc
 
 
 _event_cache: dict = {}
@@ -410,12 +420,12 @@ def run_event_scan(policy: str, times: np.ndarray, works: np.ndarray,
                    run0: np.ndarray, seqc0: float):
     """Run one trace through the compiled event kernel (resume-capable:
     ``f0``/``sseq0``/``sjid0``/``run0`` seed the slot state from the
-    departure heap).  Returns numpy ``(ys, st, fin, qhead, qnext, seqc)``
-    — see :func:`_event_kernel`."""
+    departure heap).  Returns numpy ``(ys, sl, st, fin, qhead, qnext,
+    seqc)`` — see :func:`_event_kernel`."""
     kern, _ = _event_compiled(policy)
     capsf, rank, c_mu, inv_mu = _chain_consts(rates, caps, chain_order)
     with jax.experimental.enable_x64():
-        ys, st, fin, qhead, qnext, seqc = kern(
+        ys, sl, st, fin, qhead, qnext, seqc = kern(
             jnp.asarray(times, jnp.float64), jnp.asarray(works, jnp.float64),
             jnp.asarray(us, jnp.float64),
             jnp.asarray(slot_rate, jnp.float64),
@@ -425,8 +435,9 @@ def run_event_scan(policy: str, times: np.ndarray, works: np.ndarray,
             jnp.asarray(f0, jnp.float64), jnp.asarray(sseq0, jnp.float64),
             jnp.asarray(sjid0, jnp.float64), jnp.asarray(run0, jnp.float64),
             jnp.asarray(run0, jnp.float64), jnp.float64(seqc0))
-        out = (np.asarray(ys), np.asarray(st), np.asarray(fin),
-               np.asarray(qhead), np.asarray(qnext), float(seqc))
+        out = (np.asarray(ys), np.asarray(sl), np.asarray(st),
+               np.asarray(fin), np.asarray(qhead), np.asarray(qnext),
+               float(seqc))
     return out
 
 
@@ -520,8 +531,8 @@ def run_jffc_scan_grid(times: np.ndarray, works: np.ndarray,
         const = (jnp.asarray(slot_rate, jnp.float64),
                  jnp.asarray(slot_prio, jnp.float64), fs0,
                  jnp.float64(0.0))
-        starts, finishes = _run_sharded(vmapped, pmapped, (tw,), const, S,
-                                        devices)
+        starts, finishes, _slots = _run_sharded(vmapped, pmapped, (tw,),
+                                                const, S, devices)
     return starts, finishes
 
 
@@ -555,7 +566,7 @@ def run_event_scan_grid(policy: str, times: np.ndarray, works: np.ndarray,
                  jnp.zeros((K,), jnp.float64),             # run0
                  jnp.zeros((K,), jnp.float64),             # nsys0
                  jnp.float64(0.0))                         # seqc0
-        ys, st, fin, _qh, _qn, _sq = _run_sharded(vmapped, pmapped,
-                                                  row_args, const, S,
-                                                  devices)
+        ys, _sl, st, fin, _qh, _qn, _sq = _run_sharded(vmapped, pmapped,
+                                                       row_args, const, S,
+                                                       devices)
     return ys, st, fin

@@ -15,6 +15,15 @@ gate sheds best-effort arrivals whose estimated wait exceeds the class
 deadline (scaled by ``admission_level`` — the autoscaler's throttle knob).
 With a single default class everything degenerates to the class-blind
 engines bit for bit.
+
+Observability contract: the event loops below carry **zero**
+instrumentation — no tracer calls, no metric increments, no conditionals
+on a trace flag.  A run traced through :mod:`repro.obs` executes these
+loops byte for byte as an untraced run does; per-request spans are decoded
+afterwards from the ``times``/``st``/``fin`` arrays the loops already
+maintain (plus the epoch history ``reconfigure`` records).  Keep it that
+way: any per-event hook added here would both cost hot-loop time and
+threaten the traced == untraced bit-parity gate in ``tests/test_obs.py``.
 """
 from __future__ import annotations
 

@@ -1,0 +1,312 @@
+"""Post-hoc span decoding: engine arrays / orchestrator requests → RunTrace.
+
+The sim engines already hold everything a per-request timeline needs —
+``times`` (arrival), ``st`` (last dispatch), ``fin`` (completion), ``comp``
+(completion order), ``rejected`` — because the result layer needs the same
+arrays.  Tracing therefore instruments *nothing* in the dispatch loops; this
+module reconstructs the timeline afterwards:
+
+* **epoch**: which composition era dispatched a job = the last tracer epoch
+  whose start is ≤ ``st[j]`` (reconfigure re-dispatches displaced work at
+  the recompose instant, so the boundary belongs to the new epoch; jobs a
+  drain lets finish keep their old ``st`` and stay in the old epoch).
+* **chain**: exact IEEE-754 replay.  Every engine computes
+  ``fin = st + work / rate`` in double precision, so the serving chain is
+  the unique chain of the job's epoch with
+  ``st[j] + works[j] / rate_k == fin[j]`` — a bit-exact test, not a
+  tolerance match.  Chains with *equal* rates are indistinguishable by
+  arithmetic, so they form one slot pool and greedy interval packing
+  splits jobs across them (lane choice within an equal-rate group is
+  presentational; rates, timestamps and durations are exact either way).
+  The batched engine can bypass matching entirely: when traced, it stashes
+  the scan kernel's chosen-slot output (``trace_chain_of``) and the decoder
+  uses that natively.
+* **slot (tid)**: greedy interval packing per chain lane — reuse the
+  earliest-freed slot, allocate a new one when all are busy.  Drain-mode
+  overlap can legitimately exceed a lane's declared cap; overflow slots
+  are allowed and counted in ``meta``.
+
+The live plane is simpler still: each ``Request`` records its own
+``chain_idx``/``slot``/``start_time``/``finish_time``, so spans read off
+directly.
+"""
+from __future__ import annotations
+
+import heapq
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .trace import (FIRST_CHAIN_LANE, QUEUE_LANE, RUN_LANE, Marker, RunTrace,
+                    Span, Tracer)
+
+__all__ = ["decode_sim_trace", "decode_orchestrator_trace"]
+
+
+def _lane_label(key: Any, rate: float, cap: int, idx: int) -> str:
+    base = f"chain[{idx}]" if key is None else f"chain[{idx}] {key!r}"
+    return f"{base} rate={rate:g} x{cap}"
+
+
+class _LanePacker:
+    """Greedy interval packing onto slots of one lane."""
+
+    __slots__ = ("cap", "free", "n_slots")
+
+    def __init__(self, cap: int) -> None:
+        self.cap = int(cap)
+        self.free: List[Tuple[float, int]] = []   # (free_at, tid) heap
+        self.n_slots = 0
+
+    def peek(self, t0: float) -> Optional[float]:
+        """Earliest free_at usable at t0, or None if nothing is free."""
+        if self.free and self.free[0][0] <= t0:
+            return self.free[0][0]
+        return None
+
+    def take_free(self, t1: float) -> int:
+        free_at, tid = heapq.heappop(self.free)
+        heapq.heappush(self.free, (t1, tid))
+        return tid
+
+    def take_new(self, t1: float) -> int:
+        tid = self.n_slots
+        self.n_slots += 1
+        heapq.heappush(self.free, (t1, tid))
+        return tid
+
+
+def decode_sim_trace(engine: Any, tracer: Tracer,
+                     markers: Sequence[Marker] = (),
+                     meta: Optional[Dict[str, Any]] = None) -> RunTrace:
+    """Decode a finished sim engine (+ its tracer's epoch history) into a
+    :class:`RunTrace`.  ``markers`` are extra run-level instants the plane
+    layer collected (scenario log entries, autoscale actions)."""
+    epochs = tracer.epochs
+    if not epochs:
+        raise ValueError("tracer recorded no epochs; was the engine "
+                         "constructed with tracer=?")
+    times = np.asarray(engine.times, dtype=np.float64)
+    works = np.asarray(engine.works, dtype=np.float64)
+    st = np.asarray(engine.st, dtype=np.float64)
+    fin = np.asarray(engine.fin, dtype=np.float64)
+    cls = (np.asarray(engine.cls, dtype=np.int64)
+           if len(engine.cls) else None)
+    comp = np.asarray(engine.comp, dtype=np.int64)
+    hints = getattr(engine, "trace_chain_of", None)
+
+    # ---- lane table: one lane per physical chain identity ----------------
+    # Chains carrying keys keep their lane across recompositions (a chain
+    # that survives a recompose is the same physical servers); keyless
+    # epochs get per-(epoch, position) lanes.
+    lane_of: Dict[Any, int] = {}
+    lanes: Dict[int, str] = {RUN_LANE: "run", QUEUE_LANE: "central queue"}
+    epoch_lanes: List[List[int]] = []   # epoch idx -> chain pos -> pid
+    for e_idx, ep in enumerate(epochs):
+        row: List[int] = []
+        for k, (rate, cap) in enumerate(zip(ep.rates, ep.caps)):
+            key = ep.keys[k] if ep.keys is not None else ("epoch", e_idx, k)
+            pid = lane_of.get(key)
+            if pid is None:
+                pid = FIRST_CHAIN_LANE + len(lane_of)
+                lane_of[key] = pid
+                lanes[pid] = _lane_label(
+                    ep.keys[k] if ep.keys is not None else None,
+                    rate, cap, pid - FIRST_CHAIN_LANE)
+            row.append(pid)
+        epoch_lanes.append(row)
+    epoch_starts = np.asarray([ep.t0 for ep in epochs])
+
+    # ---- epoch + chain attribution for every completed job ---------------
+    # records: (t0, t1, order, jid, candidate (pid, cap) list, args)
+    records: List[Tuple[float, float, int, int,
+                        List[Tuple[int, int]], Dict[str, Any]]] = []
+    unmatched = 0
+    e_of = (np.searchsorted(epoch_starts, st, side="right") - 1
+            if len(epochs) > 1 else np.zeros(len(st), dtype=np.int64))
+    for order, jid in enumerate(comp.tolist()):
+        e = int(e_of[jid])
+        ep = epochs[e]
+        t0, t1, w = st[jid], fin[jid], works[jid]
+        cand: List[Tuple[int, int]] = []
+        hint = int(hints[jid]) if hints is not None else -1
+        if (0 <= hint < len(ep.rates)
+                and t0 + w / ep.rates[hint] == t1):
+            # native backend attribution, validated by exact replay (a
+            # stale hint — job re-dispatched under a later composition —
+            # fails the replay and falls through to matching)
+            cand = [(epoch_lanes[e][hint], ep.caps[hint])]
+            rate = ep.rates[hint]
+        else:
+            rate = None
+            for k, r in enumerate(ep.rates):
+                if t0 + w / r == t1:           # exact IEEE-754 replay
+                    cand.append((epoch_lanes[e][k], ep.caps[k]))
+                    rate = r if rate is None else rate
+            if not cand:
+                # numerically closest chain (defensive; engines compute
+                # fin with exactly this expression, so this path should
+                # never fire on real runs)
+                unmatched += 1
+                k = int(np.argmin([abs(t0 + w / r - t1)
+                                   for r in ep.rates]))
+                cand = [(epoch_lanes[e][k], ep.caps[k])]
+                rate = ep.rates[k]
+        args: Dict[str, Any] = {"jid": jid, "rate": rate, "epoch": e}
+        if cls is not None:
+            args["cls"] = int(cls[jid])
+        records.append((float(t0), float(t1), order, jid, cand, args))
+
+    # lost-service segments from restart-mode recompositions: the chain
+    # is known directly (the tracer recorded it at eviction time)
+    for jid, t0, t1, k, e in tracer.lost:
+        ep = epochs[min(e, len(epochs) - 1)]
+        args = {"jid": jid, "lost": True, "epoch": e}
+        if 0 <= k < len(ep.rates):
+            args["rate"] = ep.rates[k]
+            cand = [(epoch_lanes[min(e, len(epochs) - 1)][k], ep.caps[k])]
+        else:
+            cand = [(epoch_lanes[min(e, len(epochs) - 1)][0], ep.caps[0])]
+        records.append((float(t0), float(t1), -1, int(jid), cand, args))
+
+    # ---- greedy slot packing (persistent per-lane across epochs) ---------
+    packers: Dict[int, _LanePacker] = {}
+    spans: List[Span] = []
+    records.sort(key=lambda r: (r[0], r[1], r[3]))
+    for t0, t1, order, jid, cand, args in records:
+        best: Optional[Tuple[float, int]] = None   # (free_at, pid)
+        for pid, cap in cand:
+            p = packers.get(pid)
+            if p is None:
+                p = packers[pid] = _LanePacker(cap)
+            free_at = p.peek(t0)
+            if free_at is not None and (best is None or free_at < best[0]):
+                best = (free_at, pid)
+        if best is not None:
+            pid = best[1]
+            tid = packers[pid].take_free(t1)
+        else:
+            # all candidate slots busy: open a slot on the least-loaded
+            # candidate lane (relative to its declared cap)
+            pid, _ = min(cand, key=lambda pc:
+                         (packers[pc[0]].n_slots - pc[1],
+                          packers[pc[0]].n_slots))
+            tid = packers[pid].take_new(t1)
+        cat = "lost" if args.get("lost") else "service"
+        args["chain"] = pid - FIRST_CHAIN_LANE
+        spans.append(Span(f"req {jid}", cat, t0, t1, pid, tid, args))
+
+    # ---- queue spans: arrival -> dispatch, packed on the queue lane ------
+    qp = _LanePacker(0)
+    q_records = sorted(
+        ((float(times[jid]), float(st[jid]), jid) for jid in comp.tolist()),
+        key=lambda r: (r[0], r[1], r[2]))
+    for t0, t1, jid in q_records:
+        tid = (qp.take_free(t1) if qp.peek(t0) is not None
+               else qp.take_new(t1))
+        args = {"jid": jid}
+        if cls is not None:
+            args["cls"] = int(cls[jid])
+        spans.append(Span(f"req {jid}", "queue", t0, t1, QUEUE_LANE,
+                          tid, args))
+
+    # ---- run-level markers ----------------------------------------------
+    all_markers: List[Marker] = list(tracer.markers)
+    for jid in engine.rejected:
+        m_args: Dict[str, Any] = {"jid": int(jid)}
+        if cls is not None:
+            m_args["cls"] = int(cls[jid])
+        all_markers.append(Marker(float(times[jid]), "shed", "admission",
+                                  RUN_LANE, m_args))
+    all_markers.extend(markers)
+    all_markers.sort(key=lambda m: m.t)
+
+    overflow = {pid: p.n_slots - p.cap for pid, p in packers.items()
+                if p.cap and p.n_slots > p.cap}
+    out_meta = {
+        "plane": "sim",
+        "engine": type(engine).__name__,
+        "policy": getattr(engine, "policy", None),
+        "n_jobs": len(times),
+        "n_completed": int(len(comp)),
+        "n_rejected": len(engine.rejected),
+        "n_epochs": len(epochs),
+        "unmatched_chain_jobs": unmatched,
+        "overflow_slots": overflow,
+    }
+    out_meta.update(meta or {})
+    return RunTrace(spans=spans, markers=all_markers, lanes=lanes,
+                    meta=out_meta)
+
+
+def decode_orchestrator_trace(orch: Any,
+                              markers: Sequence[Marker] = (),
+                              meta: Optional[Dict[str, Any]] = None
+                              ) -> RunTrace:
+    """Decode a driven live-plane :class:`Orchestrator` into a
+    :class:`RunTrace`.  Requests carry their own chain/slot/timestamps, so
+    no attribution is needed; chain lanes are labeled with the current
+    engines' server chains when available."""
+    lanes: Dict[int, str] = {RUN_LANE: "run", QUEUE_LANE: "central queue"}
+    for idx, eng in enumerate(getattr(orch, "engines", [])):
+        lanes[FIRST_CHAIN_LANE + idx] = (
+            f"chain[{idx}] {list(eng.chain.servers)!r} x{eng.capacity}")
+
+    spans: List[Span] = []
+    all_markers: List[Marker] = list(markers)
+
+    def lane_for(chain_idx: int) -> int:
+        pid = FIRST_CHAIN_LANE + int(chain_idx)
+        if pid not in lanes:
+            lanes[pid] = f"chain[{int(chain_idx)}]"
+        return pid
+
+    for req in list(orch.finished) + list(orch.failed):
+        args: Dict[str, Any] = {"jid": req.rid, "cls": req.cls}
+        if req.retries:
+            args["retries"] = req.retries
+        if req.start_time is not None:
+            spans.append(Span(f"req {req.rid}", "queue",
+                              float(req.arrival_time),
+                              float(req.start_time), QUEUE_LANE,
+                              0, dict(args)))
+        if req.start_time is not None and req.finish_time is not None:
+            pid = lane_for(req.chain_idx or 0)
+            s_args = dict(args)
+            s_args["chain"] = int(req.chain_idx or 0)
+            spans.append(Span(f"req {req.rid}", "service",
+                              float(req.start_time),
+                              float(req.finish_time), pid,
+                              int(req.slot or 0), s_args))
+        if req.state.value == "failed":
+            t = float(req.finish_time if req.finish_time is not None
+                      else req.arrival_time)
+            all_markers.append(Marker(t, "failed", "failure", RUN_LANE,
+                                      {"jid": req.rid, "cls": req.cls}))
+    for req in orch.deferred:
+        all_markers.append(Marker(float(req.arrival_time), "deferred",
+                                  "admission",
+                                  RUN_LANE, {"jid": req.rid,
+                                             "cls": req.cls}))
+    all_markers.sort(key=lambda m: m.t)
+
+    # pack the queue lane so concurrent waits don't overlap one track
+    q_spans = sorted((s for s in spans if s.cat == "queue"),
+                     key=lambda s: (s.t0, s.t1, s.args.get("jid", 0)))
+    qp = _LanePacker(0)
+    packed: List[Span] = [s for s in spans if s.cat != "queue"]
+    for s in q_spans:
+        tid = (qp.take_free(s.t1) if qp.peek(s.t0) is not None
+               else qp.take_new(s.t1))
+        packed.append(Span(s.name, s.cat, s.t0, s.t1, s.pid, tid, s.args))
+
+    out_meta = {
+        "plane": "live",
+        "n_finished": len(orch.finished),
+        "n_failed": len(orch.failed),
+        "n_deferred": len(orch.deferred),
+        "recompositions": getattr(orch, "recompositions", 0),
+    }
+    out_meta.update(meta or {})
+    return RunTrace(spans=packed, markers=all_markers, lanes=lanes,
+                    meta=out_meta)

@@ -150,6 +150,9 @@ class Orchestrator:
         # after every decode round
         self.submit_hooks: List[Callable] = []
         self.step_hooks: List[Callable] = []
+        # optional repro.obs.MetricsRegistry; publication happens at round
+        # granularity in step(), never inside the engines' decode loops
+        self.metrics = None
         self._compose()
 
     # -- composition (offline time scale) ---------------------------------------
@@ -279,6 +282,19 @@ class Orchestrator:
                 self.draining.remove(eng)
         self.finished.extend(done)
         self._readmit_deferred(now)
+        if self.metrics is not None:
+            m = self.metrics
+            m.counter("orch.rounds").inc()
+            m.counter("orch.completions").inc(len(done))
+            m.gauge("orch.queue_len").set(len(self.queue))
+            m.gauge("orch.deferred").set(len(self.deferred))
+            m.gauge("orch.active_slots").set(
+                sum(e.num_active for e in self.engines))
+            h = m.histogram("orch.response_s")
+            for req in done:
+                rt = req.response_time()
+                if rt is not None:
+                    h.record(rt)
         for hook in self.step_hooks:
             hook(self, now)
         return done

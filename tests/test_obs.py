@@ -1,0 +1,382 @@
+"""The flight recorder (repro.obs): metrics, span tracing, export.
+
+Four pillars, matching the observability PR's acceptance gates:
+
+* **metrics** — counters/gauges/log-scale histograms give streaming
+  quantiles with bounded error, snapshots diff cleanly, and the autoscale
+  telemetry window stays bounded past its completion cap;
+* **zero interference** — a traced run is bit-identical to its untraced
+  twin on every policy x engine x RNG-scheme combination, and the results
+  store addresses traced and untraced runs by the same key;
+* **span fidelity** — decoded timelines are self-consistent (queue end ==
+  dispatch) and span sums reproduce the engines' reported response times
+  bit for bit, on interpreter and compiled paths alike;
+* **export** — Chrome-trace JSON round-trips with valid ph/ts/pid fields
+  and one lane per serving chain.
+
+Numpy-only except the explicitly jax-marked compiled-path test (the CI
+``obs-smoke`` job runs this file in the minimal environment).
+"""
+import dataclasses
+import json
+import math
+import random
+
+import numpy as np
+import pytest
+
+from repro import api
+from repro.autoscale.telemetry import Telemetry, TelemetryConfig
+from repro.core import VECTORIZED_POLICIES, make_engine
+from repro.core.engines import jax_available
+from repro.core.simulator import poisson_arrivals
+from repro.obs import (
+    Counter,
+    Gauge,
+    LogHistogram,
+    MetricsRegistry,
+    RunTrace,
+    Tracer,
+    decode_sim_trace,
+    export_chrome_trace,
+    to_chrome_trace,
+)
+from repro.obs.trace import FIRST_CHAIN_LANE, QUEUE_LANE, RUN_LANE
+
+RATES = [1.0, 0.8, 0.5]
+CAPS = [2, 2, 4]
+
+needs_jax = pytest.mark.skipif(not jax_available(),
+                               reason="jax not installed")
+
+
+# ---------------------------------------------------------------------------
+# Metrics registry
+# ---------------------------------------------------------------------------
+
+def test_counter_and_gauge():
+    c = Counter()
+    c.inc()
+    c.inc(4)
+    assert c.value == 5
+    g = Gauge()
+    assert math.isnan(g.value)
+    g.set(2.5)
+    assert g.value == 2.5
+
+
+def test_log_histogram_streaming_quantiles():
+    rng = np.random.default_rng(7)
+    xs = rng.lognormal(mean=0.0, sigma=1.5, size=20_000)
+    h = LogHistogram()
+    h.record_many(xs)
+    # geometric buckets at 40/decade: any quantile is within one bucket
+    # ratio (10**(1/40) ~ 1.059) of the exact order statistic
+    step = 10 ** (1 / 40)
+    for q in (50.0, 90.0, 99.0):
+        exact = float(np.percentile(xs, q))
+        est = h.quantile(q)
+        assert exact / step <= est <= exact * step, (q, exact, est)
+    assert h.count == len(xs)
+    assert h.min == xs.min() and h.max == xs.max()
+    assert h.mean == pytest.approx(xs.mean())
+
+
+def test_log_histogram_empty_and_extremes():
+    h = LogHistogram()
+    assert math.isnan(h.quantile(50))
+    h.record(3.0)
+    assert h.quantile(0) == 3.0 and h.quantile(100) == 3.0
+    # out-of-range samples land in the clamp buckets but keep exact min/max
+    h.record(1e-12)
+    h.record(1e12)
+    assert h.min == 1e-12 and h.max == 1e12
+    assert h.quantile(100) == 1e12
+
+
+def test_log_histogram_record_many_matches_scalar_path():
+    xs = [0.01, 0.5, 2.0, 2.0, 77.0, 1e-9, 1e9]
+    a, b = LogHistogram(), LogHistogram()
+    for x in xs:
+        a.record(x)
+    b.record_many(xs)
+    assert a.to_dict() == b.to_dict()
+
+
+def test_log_histogram_merge():
+    a, b = LogHistogram(), LogHistogram()
+    a.record_many([1.0, 2.0])
+    b.record_many([4.0, 8.0])
+    a.merge(b)
+    assert a.count == 4
+    assert a.min == 1.0 and a.max == 8.0
+    assert a.mean == pytest.approx(15.0 / 4)
+
+
+def test_registry_get_or_create_and_type_guard():
+    m = MetricsRegistry()
+    assert m.counter("x") is m.counter("x")
+    m.counter("x").inc(3)
+    assert m.snapshot()["x"] == 3
+    with pytest.raises(TypeError):
+        m.gauge("x")
+
+
+def test_snapshot_diff():
+    m = MetricsRegistry()
+    m.counter("jobs").inc(10)
+    m.gauge("depth").set(float("nan"))
+    m.histogram("resp").record(1.0)
+    s0 = m.snapshot()
+    assert s0.diff(s0) == {}                       # NaN == NaN
+    m.counter("jobs").inc()
+    m.counter("fresh").inc()
+    d = m.snapshot().diff(s0)
+    assert d["jobs"] == (11, 10)
+    assert d["fresh"] == (1, None)
+    assert "depth" not in d
+
+
+def test_telemetry_buffer_bounded_with_histogram_fallback():
+    """Past the completion cap the oldest records spill (never the
+    newest) and quantiles fall back to the histogram sketch."""
+    tel = Telemetry(TelemetryConfig(window=100.0, max_completions=64))
+    n = 5_000
+    for i in range(n):
+        tel.record_completion(0.001 * i, 1.0 + (i % 100) / 100.0,
+                              cls=i % 2)
+    assert len(tel._completions) == 64
+    assert tel.n_completions == n
+    # newest records survive the spill
+    assert tel._completions[-1][0] == pytest.approx(0.001 * (n - 1))
+    p50, p99 = tel.response_quantile(50), tel.response_quantile(99)
+    assert 1.3 < p50 < 1.7
+    assert 1.8 < p99 <= 2.0 * (10 ** (1 / 40))
+    assert not math.isnan(tel.response_quantile(99, cls=1))
+    assert math.isnan(tel.response_quantile(99, cls=7))
+    # the exact path is untouched below the cap
+    tel2 = Telemetry(TelemetryConfig(window=100.0))
+    for i in range(100):
+        tel2.record_completion(1.0, float(i))
+    assert tel2.response_quantile(50) == float(
+        np.percentile(np.arange(100.0), 50))
+
+
+# ---------------------------------------------------------------------------
+# Span decode: self-consistency + bit-exact attribution
+# ---------------------------------------------------------------------------
+
+def _traced_run(policy="jffc", engine="vector", scheme="legacy", n=400,
+                lam=4.8, seed=11, reconfigure_at=None, mode="restart"):
+    arrivals = poisson_arrivals(lam, n, random.Random(seed))
+    tr = Tracer()
+    sim = make_engine(engine, RATES, CAPS, policy=policy, seed=seed,
+                      rng_scheme=scheme, tracer=tr)
+    sim.add_arrivals(arrivals)
+    if reconfigure_at is not None:
+        sim.run_until(reconfigure_at)
+        sim.reconfigure([1.1, 0.6], [3, 3], at_time=reconfigure_at,
+                        mode=mode)
+    sim.run_to_completion()
+    return sim, tr
+
+
+def test_span_timeline_self_consistent():
+    sim, tr = _traced_run(reconfigure_at=30.0)
+    trace = decode_sim_trace(sim, tr)
+    assert isinstance(trace, RunTrace)
+    trace.self_check()
+    assert trace.n_spans > 0
+    assert trace.meta["n_epochs"] == 2
+    assert trace.meta["unmatched_chain_jobs"] == 0
+    assert any(m.name == "reconfigure" for m in trace.markers)
+    # every request: queue span ends exactly where its service span starts
+    for jid, spans in trace.spans_by_request().items():
+        service = [s for s in spans if s.cat == "service"]
+        queue = [s for s in spans if s.cat == "queue"]
+        assert service, jid
+        if queue:
+            assert queue[-1].t1 == service[-1].t0
+
+
+@pytest.mark.parametrize("mode", ["restart", "drain"])
+def test_span_sums_reproduce_response_times_bitwise(mode):
+    """service.t1 - queue.t0 equals the engine's reported response time
+    bit for bit, for every completed job, through a recomposition."""
+    sim, tr = _traced_run(reconfigure_at=25.0, mode=mode)
+    res = sim.result()
+    trace = decode_sim_trace(sim, tr)
+    trace.self_check()
+    by_req = trace.spans_by_request()
+    assert len(by_req) == res.n_completed
+    for jid, spans in by_req.items():
+        t0 = min(s.t0 for s in spans)
+        t1 = max(s.t1 for s in spans if s.cat == "service")
+        assert t0 == sim.times[jid] and t1 == sim.fin[jid]
+        assert t1 - t0 == sim.fin[jid] - sim.times[jid]
+
+
+@pytest.mark.parametrize("scheme", ["legacy", "counter"])
+@pytest.mark.parametrize("engine", ["vector", "batched"])
+@pytest.mark.parametrize("policy", VECTORIZED_POLICIES)
+def test_traced_bit_identical_to_untraced(policy, engine, scheme):
+    """Tracing must never perturb the simulation: full SimResult parity
+    on every policy x engine x RNG scheme."""
+    arrivals = poisson_arrivals(4.8, 300, random.Random(13))
+    plain = make_engine(engine, RATES, CAPS, policy=policy, seed=13,
+                        rng_scheme=scheme)
+    traced = make_engine(engine, RATES, CAPS, policy=policy, seed=13,
+                         rng_scheme=scheme, tracer=Tracer())
+    for sim in (plain, traced):
+        sim.add_arrivals(arrivals)
+        sim.run_to_completion()
+    a, b = plain.result(), traced.result()
+    assert np.array_equal(a.response_times, b.response_times)
+    assert np.array_equal(a.waiting_times, b.waiting_times)
+    assert a.n_completed == b.n_completed
+    assert a.sim_time == b.sim_time
+    trace = decode_sim_trace(traced, traced.tracer)
+    trace.self_check()
+    assert trace.meta["unmatched_chain_jobs"] == 0
+
+
+@needs_jax
+def test_compiled_path_chain_attribution_matches_interpreter():
+    """The batched engine's native slot hints must agree with the
+    interpreter decode's exact-replay attribution, job for job."""
+    arrivals = poisson_arrivals(4.8, 3_000, random.Random(17))
+    t = np.array([a[0] for a in arrivals])
+    w = np.array([a[1] for a in arrivals])
+    tv, tb = Tracer(), Tracer()
+    v = make_engine("vector", RATES, CAPS, policy="jffc", seed=17,
+                    tracer=tv)
+    b = make_engine("batched", RATES, CAPS, policy="jffc", seed=17,
+                    tracer=tb)
+    b.scan_min_jobs = 1
+    v.add_arrivals(arrivals)
+    b.add_arrivals(t, w)
+    v.run_to_completion()
+    b.run_to_completion()
+    assert b.trace_chain_of is not None          # compiled hints captured
+    trv = decode_sim_trace(v, tv)
+    trb = decode_sim_trace(b, tb)
+    trv.self_check()
+    trb.self_check()
+    assert trb.meta["unmatched_chain_jobs"] == 0
+
+    def chain_of(trace):
+        return {jid: [s.args["chain"] for s in spans
+                      if s.cat == "service"][-1]
+                for jid, spans in trace.spans_by_request().items()}
+
+    assert chain_of(trv) == chain_of(trb)
+
+
+# ---------------------------------------------------------------------------
+# Export
+# ---------------------------------------------------------------------------
+
+def test_chrome_trace_round_trips(tmp_path):
+    sim, tr = _traced_run(reconfigure_at=30.0)
+    trace = decode_sim_trace(sim, tr)
+    path = tmp_path / "trace.json"
+    doc = export_chrome_trace(trace, path)
+    loaded = json.loads(path.read_text())
+    assert loaded == json.loads(json.dumps(doc))
+    events = loaded["traceEvents"]
+    assert events
+    phs = {e["ph"] for e in events}
+    assert phs <= {"X", "i", "M"}
+    names = {e["args"]["name"] for e in events
+             if e["ph"] == "M" and e["name"] == "process_name"}
+    # one metadata lane per serving chain, plus run + queue lanes
+    assert sum(1 for n in names if n.startswith("chain[")) >= 2
+    for e in events:
+        assert isinstance(e["pid"], int) and e["pid"] >= RUN_LANE
+        if e["ph"] == "X":
+            assert e["ts"] >= 0 and e["dur"] >= 0
+            assert e["pid"] >= QUEUE_LANE
+        if e["ph"] == "i":
+            assert e["s"] == "g"
+    # service events carry their chain lane
+    assert any(e["ph"] == "X" and e["pid"] >= FIRST_CHAIN_LANE
+               for e in events)
+    assert to_chrome_trace(trace)["otherData"]["n_epochs"] == 2
+
+
+def test_tail_attribution_names_slowest_requests():
+    sim, tr = _traced_run()
+    trace = decode_sim_trace(sim, tr)
+    top = trace.tail_attribution(k=3)
+    assert len(top) == 3
+    assert top[0]["response"] >= top[1]["response"] >= top[2]["response"]
+    for row in top:
+        assert row["response"] == pytest.approx(
+            row["queue_s"] + row["service_s"])
+        assert row["chain"] is not None
+
+
+# ---------------------------------------------------------------------------
+# API threading: planes, report, store keys
+# ---------------------------------------------------------------------------
+
+def _small_spec(**kw):
+    return api.preset("failover_burst", n_target=250, base_rate=4.0, **kw)
+
+
+def test_sim_plane_traced_run_is_identical_and_carries_trace():
+    spec = _small_spec()
+    r0 = api.run(spec)
+    r1 = api.run(spec, trace=True)
+    assert r0.diff(r1) == {}
+    assert r0.trace is None
+    r1.trace.self_check()
+    assert any(m.cat == "scenario" for m in r1.trace.markers)
+    assert "engine.completed" in r1.extras["metrics"]
+    assert r1.extras["metrics"]["engine.completed"] == r1.n_completed
+
+
+def test_live_plane_traced_smoke():
+    spec = _small_spec()
+    rep = api.run(spec, plane=api.LivePlane(engine="mock"), trace=True)
+    rep.trace.self_check()
+    assert rep.trace.meta["plane"] == "live"
+    m = rep.extras["metrics"]
+    assert m["orch.rounds"] > 0
+    assert 0 < m["orch.completions"] <= rep.n_completed
+    doc = to_chrome_trace(rep.trace)
+    assert any(e["ph"] == "X" for e in doc["traceEvents"])
+
+
+def test_store_key_unaffected_by_tracing(tmp_path):
+    from repro.api.results import ResultsStore
+    spec = _small_spec()
+    store = ResultsStore(tmp_path)
+    r1 = api.run(spec, store=store, trace=True)     # executes, saves
+    r2 = api.run(spec, store=store)                 # cache hit, same key
+    assert r2.trace is None
+    assert r1.diff(r2) == {}
+    # and a traced re-run bypasses the cache but hits the same key
+    r3 = api.run(spec, store=store, trace=True)
+    assert r3.trace is not None
+    assert r1.diff(r3) == {}
+
+
+def test_report_round_trip_strips_trace():
+    rep = api.run(_small_spec(), trace=True)
+    d = rep.to_dict()
+    assert "trace" not in d and "raw" not in d
+    json.dumps(d)                                   # JSON-safe
+    back = api.RunReport.from_dict(d)
+    assert back.trace is None
+    assert back.diff(rep) == {}
+
+
+def test_summary_line_per_class():
+    rep = api.run(api.preset("overloaded_70_30"))
+    line = rep.summary_line()
+    assert "interactive p99" in line and "batch p99" in line
+    assert "shed" in line
+    # class-blind runs keep the single-line form
+    line0 = api.run(_small_spec()).summary_line()
+    assert "shed" not in line0
