@@ -14,7 +14,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ref
-from repro.kernels.ops import decode_attention, flash_attention
+from repro.kernels.ops import (
+    decode_attention,
+    flash_attention,
+    paged_decode_attention,
+)
 
 
 def _time(fn, *args, reps=3, **kw):
@@ -60,5 +64,33 @@ def run() -> List[dict]:
         "us_ref_jnp": round(t_r, 1), "us_pallas_interpret": round(t_p, 1),
         "max_abs_err": float(jnp.abs(p_out - r_out).max()),
         "hbm_bytes_per_token_sweep": int(2048 * KV * hd * 2 * 2),
+    })
+
+    # paged flash-decode: the same sweep gathering K/V pages through a block
+    # table (the PagedCache layout) — scattered, non-contiguous pool rows
+    B2, P, PP, page = 4, 19, 4, 32
+    rng = np.random.default_rng(0)
+    kp = jax.random.normal(ks[1], (P, page, KV, hd), jnp.float32)
+    vp = jax.random.normal(ks[2], (P, page, KV, hd), jnp.float32)
+    qp = jax.random.normal(ks[0], (B2, H, hd), jnp.float32)
+    bt = np.full((B2, PP), -1, np.int32)
+    perm, off = rng.permutation(P), 0
+    lens = np.zeros((B2,), np.int32)
+    for b in range(B2):
+        n = int(rng.integers(1, PP + 1))
+        bt[b, :n] = perm[off:off + n]
+        off += n
+        lens[b] = int(rng.integers(1, n * page + 1))
+    bt, lens = jnp.asarray(bt), jnp.asarray(lens)
+    pr_out, t_pr = _time(paged_decode_attention, qp, kp, vp, bt, lens,
+                         use_pallas=False)
+    pp_out, t_pp = _time(paged_decode_attention, qp, kp, vp, bt, lens,
+                         use_pallas=True, interpret=True)
+    rows.append({
+        "name": "kernel_paged_decode_attention",
+        "us_ref_jnp": round(t_pr, 1), "us_pallas_interpret": round(t_pp, 1),
+        "max_abs_err": float(jnp.abs(pp_out - pr_out).max()),
+        "pool_pages": P, "page_size": page,
+        "note": "scalar-prefetch block-table gather; interpret mode on CPU",
     })
     return rows

@@ -1,0 +1,225 @@
+"""Serving data plane: slotted vs paged KV cache on the jax chain engines.
+
+Headline numbers (written to ``BENCH_serving.json``):
+  * **admit latency** — ``ChainEngine.admit`` pays an O(capacity * max_seq)
+    whole-cache copy per admission (plus two more for the bucketed-prefill
+    boundary fixup); ``PagedChainEngine.admit`` scatters O(prompt) pages
+    into donated pool buffers.  The acceptance gate is >= 5x at the paper
+    scale knobs capacity=16, max_seq=1024 (CPU, reduced 2-layer model);
+  * **decode-round throughput vs active fraction** — continuous batching
+    gathers only the k active slots (and only their used pages), where the
+    slotted engine always decodes all 16 slots over all 1024 positions.
+    Gate: paged tokens/s >= slotted at equal active slots;
+  * **effective capacity at equal cache memory** — with the page budget
+    fixed to exactly the s_c grant for ``capacity`` slots, oversubscribed
+    slots let short sequences pack into the same memory (admitted-request
+    count, slotted vs paged);
+  * **greedy parity** — identical requests through both engines produce
+    bit-identical token streams (the layout contract the CI gate holds).
+
+Run directly:  PYTHONPATH=src python -m benchmarks.bench_serving \
+                   [--smoke] [--out BENCH_serving.json]
+or via the suite driver: PYTHONPATH=src python -m benchmarks.run --only serving
+"""
+from __future__ import annotations
+
+import argparse
+from typing import List
+
+import numpy as np
+
+from .common import timed_pair, write_bench
+
+CAPACITY = 16
+MAX_SEQ = 1024
+
+
+def _setup():
+    import jax
+
+    from repro.configs import get
+    from repro.core.chains import Chain
+    from repro.models import Model
+
+    # float32 cache: XLA's CPU emitter lowers bf16 scatters/updates through a
+    # whole-operand f32 round-trip, which would charge BOTH engines an O(pool)
+    # conversion pass and mask the algorithmic difference under test (on the
+    # TPU target bf16 donation is native).  KV dims stay un-reduced-ish
+    # (8 heads x 64) so the cache footprint is cache-copy-dominated, as at
+    # paper scale.
+    cfg = get("stablelm-1.6b").reduced(num_layers=2, vocab_size=256,
+                                       dtype="float32", num_heads=8,
+                                       num_kv_heads=8, head_dim=64)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    chain = Chain(("s0",), (cfg.num_layers,), 1.0)
+    return cfg, model, params, chain
+
+
+def _req(rid: int, prompt_len: int, n_new: int = 100_000):
+    from repro.serving import Request
+
+    rng = np.random.default_rng(1000 + rid)
+    return Request(rid=rid, prompt=rng.integers(1, 200, prompt_len)
+                   .astype(np.int32), max_new_tokens=n_new)
+
+
+def admit_records(ctx, repeats: int = 5, n_admits: int = 4) -> List[dict]:
+    """Interleaved A/B admit bursts: ``n_admits`` admissions then
+    ``evict_all`` per trial, identical fresh requests on both sides.
+    prompt_len=128 hits the power-of-two bucket exactly (pure admit path);
+    prompt_len=100 adds the boundary fixup every non-bucket prompt pays —
+    two extra whole-cache copies on the slotted engine."""
+    from repro.serving import ChainEngine, PagedChainEngine
+
+    cfg, model, params, chain = ctx
+    rows = []
+    for prompt_len in (128, 100):
+        slotted = ChainEngine(model, params, chain, CAPACITY, MAX_SEQ)
+        paged = PagedChainEngine(model, params, chain, CAPACITY, MAX_SEQ)
+        rid = [0]
+
+        def burst(eng):
+            for _ in range(n_admits):
+                r = _req(rid[0], prompt_len)
+                rid[0] += 1
+                assert eng.admit(r)
+            eng.evict_all()
+
+        s, p = timed_pair(lambda: burst(slotted), lambda: burst(paged),
+                          repeats)
+        rows.append({
+            "name": f"serving_admit_prompt{prompt_len}",
+            "capacity": CAPACITY, "max_seq": MAX_SEQ,
+            "prompt_len": prompt_len, "admits_per_trial": n_admits,
+            "timer": "process_time", "repeats": repeats,
+            "slotted_admit_s": s["median"] / n_admits,
+            "paged_admit_s": p["median"] / n_admits,
+            "admit_speedup": s["median"] / max(p["median"], 1e-9),
+            "admit_speedup_best": s["best"] / max(p["best"], 1e-9),
+        })
+    return rows
+
+
+def decode_records(ctx, ks=(2, 8, 16), repeats: int = 8,
+                   prompt_len: int = 100) -> List[dict]:
+    """One decode round, k of 16 slots active.  The slotted engine decodes
+    the full (16, 1024) cache regardless of k; the paged engine gathers k
+    rows and only their used pages (~128 positions here)."""
+    from repro.serving import ChainEngine, PagedChainEngine
+
+    cfg, model, params, chain = ctx
+    rows = []
+    for k in ks:
+        slotted = ChainEngine(model, params, chain, CAPACITY, MAX_SEQ)
+        paged = PagedChainEngine(model, params, chain, CAPACITY, MAX_SEQ)
+        for i in range(k):
+            assert slotted.admit(_req(i, prompt_len))
+            assert paged.admit(_req(i, prompt_len))
+        # warmup(1) + repeats decode tokens stay within the npg page bucket
+        s, p = timed_pair(lambda: slotted.step(), lambda: paged.step(),
+                          repeats)
+        rows.append({
+            "name": f"serving_decode_round_k{k}",
+            "capacity": CAPACITY, "max_seq": MAX_SEQ, "active_slots": k,
+            "timer": "process_time", "repeats": repeats,
+            "slotted_tokens_per_s": k / max(s["median"], 1e-9),
+            "paged_tokens_per_s": k / max(p["median"], 1e-9),
+            "paged_speedup": s["median"] / max(p["median"], 1e-9),
+            "paged_ge_slotted": bool(s["median"] >= p["median"]),
+        })
+    return rows
+
+
+def capacity_record(ctx, capacity: int = 4, prompt_len: int = 24) -> dict:
+    """Admissions until refusal at equal cache memory: both engines hold
+    exactly the s_c grant for ``capacity`` slots; the paged engine's
+    oversubscribed slots let short prompts pack into it."""
+    from repro.serving import ChainEngine, PagedChainEngine
+
+    cfg, model, params, chain = ctx
+    slotted = ChainEngine(model, params, chain, capacity, MAX_SEQ)
+    paged = PagedChainEngine(model, params, chain, capacity, MAX_SEQ,
+                             oversubscribe=4.0)
+
+    def fill(eng):
+        n = 0
+        while eng.admit(_req(5000 + n, prompt_len)):
+            n += 1
+        return n
+
+    n_slotted, n_paged = fill(slotted), fill(paged)
+    return {
+        "name": "serving_effective_capacity",
+        "capacity": capacity, "max_seq": MAX_SEQ, "prompt_len": prompt_len,
+        "page_budget": paged.cache.total_pages,
+        "free_pages_after": paged.free_pages,
+        "slotted_admitted": n_slotted,
+        "paged_admitted": n_paged,
+        "effective_capacity_ratio": n_paged / max(n_slotted, 1),
+    }
+
+
+def parity_record(ctx, n_reqs: int = 6, n_new: int = 12) -> dict:
+    """Identical mixed-length requests through both engines, run to
+    completion: greedy token streams must be bit-identical."""
+    from repro.serving import ChainEngine, PagedChainEngine
+
+    cfg, model, params, chain = ctx
+    lens = [9, 33, 64, 17, 50, 5, 40, 21][:n_reqs]
+
+    def drive(eng):
+        queue = [_req(i, lens[i], n_new) for i in range(n_reqs)]
+        done = {}
+        while queue or eng.requests:
+            while queue and eng.admit(queue[0]):
+                r = queue.pop(0)
+                if r.done:
+                    done[r.rid] = list(r.output)
+            for r in eng.step():
+                done[r.rid] = list(r.output)
+            take = getattr(eng, "take_preempted", None)
+            if take:
+                queue.extend(take())
+        return done
+
+    streams_s = drive(ChainEngine(model, params, chain, 4, 256))
+    streams_p = drive(PagedChainEngine(model, params, chain, 4, 256))
+    return {
+        "name": "serving_greedy_parity",
+        "n_requests": n_reqs, "new_tokens": n_new,
+        "bit_identical": streams_s == streams_p,
+    }
+
+
+def run(smoke: bool = False) -> List[dict]:
+    ctx = _setup()
+    repeats = 3 if smoke else 5
+    rows = admit_records(ctx, repeats=repeats,
+                         n_admits=2 if smoke else 4)
+    rows += decode_records(ctx, ks=(2, 16) if smoke else (2, 8, 16),
+                           repeats=3 if smoke else 8)
+    rows.append(capacity_record(ctx))
+    rows.append(parity_record(ctx, n_reqs=4 if smoke else 6))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--out", default="BENCH_serving.json")
+    args = ap.parse_args()
+    rows = run(smoke=args.smoke)
+    for row in rows:
+        keys = [k for k in ("admit_speedup", "paged_speedup",
+                            "slotted_tokens_per_s", "paged_tokens_per_s",
+                            "effective_capacity_ratio", "bit_identical")
+                if k in row]
+        print(row["name"] + ": "
+              + ", ".join(f"{k}={row[k]:.2f}" if isinstance(row[k], float)
+                          else f"{k}={row[k]}" for k in keys))
+    write_bench(args.out, rows)
+
+
+if __name__ == "__main__":
+    main()

@@ -23,6 +23,7 @@ from . import (
     bench_multitenant,
     bench_overall,
     bench_placement,
+    bench_serving,
     bench_simulator,
     bench_table1,
     bench_tuning,
@@ -38,6 +39,7 @@ SUITES = {
     "model_validation": bench_model_validation.run,
     "kernels": bench_kernels.run,
     "simulator": bench_simulator.run,
+    "serving": bench_serving.run,
     "autoscale": bench_autoscale.run,
     "multitenant": bench_multitenant.run,
 }
@@ -50,13 +52,15 @@ FAST_OVERRIDES = {
     "fig8_overall": lambda: bench_overall.run(seeds=range(2)),
     "table1_trace": lambda: bench_table1.run(n_requests=1200),
     "simulator": lambda: bench_simulator.run(n_jobs=20_000, million=False),
+    "serving": lambda: bench_serving.run(smoke=True),
     "autoscale": lambda: bench_autoscale.run(horizon=300.0),
     "multitenant": lambda: bench_multitenant.run(n_jobs=20_000),
 }
 
 
 def _headline(row: dict) -> str:
-    for key in ("engine_speedup", "pipeline_speedup", "bit_identical",
+    for key in ("admit_speedup", "paged_speedup", "effective_capacity_ratio",
+                "engine_speedup", "pipeline_speedup", "bit_identical",
                 "interactive_p99_cut", "admission_fired_no_scaleout",
                 "predictive_dominates_static", "all_policies_complete",
                 "jobs_per_s", "completed_all",

@@ -495,17 +495,34 @@ class LivePlane:
     def __init__(self, engine: str = "mock", dt: float = 0.5,
                  max_rounds: int = 100_000, prompt_tokens: int = 8,
                  tokens_per_work: float = 6.0, max_seq: int = 256,
-                 model=None, params=None):
+                 kv_layout: str = "slotted", page_size: int = 16,
+                 oversubscribe: float = 1.0, model=None, params=None):
         if engine not in ("mock", "jax"):
             raise ValueError("engine must be 'mock' or 'jax'")
         if engine == "jax" and (model is None or params is None):
             raise ValueError("engine='jax' needs model= and params=")
+        if kv_layout not in ("slotted", "paged"):
+            raise SpecError("plane.kv_layout",
+                            f"must be 'slotted' or 'paged', got {kv_layout!r}")
+        page_size = int(page_size)
+        if page_size < 1 or (page_size & (page_size - 1)):
+            raise SpecError("plane.page_size",
+                            f"must be a power of two, got {page_size}")
+        if int(max_seq) % page_size:
+            raise SpecError("plane.page_size",
+                            f"must divide max_seq {max_seq}, got {page_size}")
+        if float(oversubscribe) < 1.0:
+            raise SpecError("plane.oversubscribe",
+                            f"must be >= 1.0, got {oversubscribe}")
         self.engine = engine
         self.dt = float(dt)
         self.max_rounds = int(max_rounds)
         self.prompt_tokens = int(prompt_tokens)
         self.tokens_per_work = float(tokens_per_work)
         self.max_seq = int(max_seq)
+        self.kv_layout = kv_layout
+        self.page_size = page_size
+        self.oversubscribe = float(oversubscribe)
         self.model = model
         self.params = params
 
@@ -520,17 +537,53 @@ class LivePlane:
                 f":max_rounds={self.max_rounds}"
                 f":prompt_tokens={self.prompt_tokens}"
                 f":tokens_per_work={self.tokens_per_work:g}"
-                f":max_seq={self.max_seq}")
+                f":max_seq={self.max_seq}"
+                f":kv_layout={self.kv_layout}:page_size={self.page_size}"
+                f":oversubscribe={self.oversubscribe:g}")
+
+    def to_dict(self) -> dict:
+        """JSON-serializable plane configuration (model/params excluded —
+        they are runtime objects; :meth:`from_dict` re-attaches them)."""
+        return {"plane": self.name, "engine": self.engine, "dt": self.dt,
+                "max_rounds": self.max_rounds,
+                "prompt_tokens": self.prompt_tokens,
+                "tokens_per_work": self.tokens_per_work,
+                "max_seq": self.max_seq, "kv_layout": self.kv_layout,
+                "page_size": self.page_size,
+                "oversubscribe": self.oversubscribe}
+
+    @classmethod
+    def from_dict(cls, d: dict, model=None, params=None) -> "LivePlane":
+        d = dict(d)
+        plane = d.pop("plane", cls.name)
+        if plane != cls.name:
+            raise SpecError("plane", f"expected {cls.name!r}, got {plane!r}")
+        unknown = set(d) - {"engine", "dt", "max_rounds", "prompt_tokens",
+                            "tokens_per_work", "max_seq", "kv_layout",
+                            "page_size", "oversubscribe"}
+        if unknown:
+            raise SpecError("plane", f"unknown fields: {sorted(unknown)}")
+        return cls(model=model, params=params, **d)
 
     def _build_orchestrator(self, spec: ExperimentSpec):
         from repro.serving import Orchestrator, OrchestratorConfig
         from repro.serving.mock import MockEngine
 
+        factory = None
+        if self.engine == "mock":
+            # the mock engine has no KV cache; kv_layout shapes jax runs only
+            factory = MockEngine
+        elif self.kv_layout == "paged":
+            from functools import partial as _partial
+
+            from repro.serving.engine import PagedChainEngine
+            factory = _partial(PagedChainEngine, page_size=self.page_size,
+                               oversubscribe=self.oversubscribe)
         cfg = OrchestratorConfig(
             rho_bar=spec.cluster.rho_bar,
             tuner=spec.cluster.tuner,
             max_seq=self.max_seq,
-            engine_factory=MockEngine if self.engine == "mock" else None,
+            engine_factory=factory,
             classes=tuple(spec.workload.classes) or None,
             aging_rate=spec.policy.aging_rate,
         )

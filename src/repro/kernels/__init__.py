@@ -1,11 +1,13 @@
-"""Pallas TPU kernels for the serving data plane's two hot spots:
+"""Pallas TPU kernels for the serving data plane's hot spots:
 
   * flash_attention — prefill/train attention (causal/SWA, GQA)
   * decode_attention — flash-decoding split-K sweep over the KV cache
+  * paged_decode_attention — the same sweep gathering K/V pages through a
+    block table (scalar-prefetch indexed, for the PagedCache layout)
 
 Each has a pure-jnp oracle in ref.py; ops.py exposes jit'd wrappers with a
 ``use_pallas`` switch (interpret=True validates the kernel body on CPU).
 """
-from .ops import decode_attention, flash_attention
+from .ops import decode_attention, flash_attention, paged_decode_attention
 
-__all__ = ["decode_attention", "flash_attention"]
+__all__ = ["decode_attention", "flash_attention", "paged_decode_attention"]

@@ -118,3 +118,115 @@ def decode_attention_pallas(
         interpret=interpret,
     )(qh, kh, vh, mask)
     return out.reshape(B, H, hd)
+
+
+def _paged_decode_kernel(
+    bt_ref,                       # (B, PP) int32 scalar-prefetch block table
+    len_ref,                      # (B,) int32 scalar-prefetch lengths
+    q_ref,                        # (G, hd)
+    k_ref, v_ref,                 # (page, hd) — the page bt[b, ip] of the pool
+    o_ref,                        # (G, hd)
+    m_ref, l_ref, acc_ref,        # scratch: (G, 1), (G, 1), (G, hd)
+    *, scale: float, num_pages: int, page_size: int, kv_groups: int,
+):
+    bk = pl.program_id(0)
+    ip = pl.program_id(1)
+
+    @pl.when(ip == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[...]
+    k = k_ref[...]
+    v = v_ref[...]
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32,
+    ) * scale                                                 # (G, page)
+    # validity from scalar-prefetched lengths: logical position of column j
+    # in this page is ip * page_size + j
+    pos = ip * page_size + jax.lax.broadcasted_iota(
+        jnp.int32, (1, page_size), 1)
+    valid = pos < len_ref[bk // kv_groups]
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    m_ref[...] = m_new
+
+    @pl.when(ip == num_pages - 1)
+    def _finalize():
+        o_ref[...] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def paged_decode_attention_pallas(
+    q: jnp.ndarray,               # (B, H, hd)
+    k_pool: jnp.ndarray,          # (P, page, KV, hd) pooled pages
+    v_pool: jnp.ndarray,          # (P, page, KV, hd)
+    block_tables: jnp.ndarray,    # (B, PP) int32 page ids (< 0 = unused)
+    lengths: jnp.ndarray,         # (B,) int32
+    *,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Flash decode gathering K/V pages through a block table.
+
+    Same split-K online-softmax sweep as :func:`decode_attention_pallas`,
+    but the sequential grid dimension walks block-table entries instead of
+    contiguous cache blocks: the table and lengths ride in scalar-prefetch
+    memory, and each step's K/V page is selected by ``bt[b, ip]`` in the
+    BlockSpec index map — the gather happens in the pipeline, no dense
+    copy of the cache is ever materialized.  Unused table entries (garbage
+    pages from batch padding) are masked by ``lengths`` exactly like the
+    dense kernel's tail positions.
+    """
+    B, H, hd = q.shape
+    P, page_size, KV = k_pool.shape[0], k_pool.shape[1], k_pool.shape[2]
+    PP = block_tables.shape[1]
+    G = H // KV
+
+    qh = q.reshape(B * KV, G, hd)
+    # negative (unused) entries must still index a real page; point them at
+    # page 0 — their columns are masked by lengths
+    bt = jnp.maximum(block_tables.astype(jnp.int32), 0)
+
+    kernel = functools.partial(
+        _paged_decode_kernel, scale=1.0 / math.sqrt(hd), num_pages=PP,
+        page_size=page_size, kv_groups=KV,
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B * KV, PP),
+        in_specs=[
+            pl.BlockSpec((None, G, hd), lambda bk, ip, bt, ln: (bk, 0, 0)),
+            pl.BlockSpec(
+                (None, page_size, None, hd),
+                lambda bk, ip, bt, ln, KV=KV: (bt[bk // KV, ip], 0, bk % KV, 0)),
+            pl.BlockSpec(
+                (None, page_size, None, hd),
+                lambda bk, ip, bt, ln, KV=KV: (bt[bk // KV, ip], 0, bk % KV, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, G, hd), lambda bk, ip, bt, ln: (bk, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B * KV, G, hd), q.dtype),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(bt, lengths, qh, k_pool, v_pool)
+    return out.reshape(B, H, hd)

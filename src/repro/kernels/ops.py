@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from . import ref
-from .decode_attention import decode_attention_pallas
+from .decode_attention import decode_attention_pallas, paged_decode_attention_pallas
 from .flash_attention import flash_attention_pallas
 
 
@@ -45,3 +45,18 @@ def decode_attention(
             q, k_cache, v_cache, lengths, block_s=block_s, interpret=interpret,
         )
     return ref.decode_attention_ref(q, k_cache, v_cache, lengths)
+
+
+@partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def paged_decode_attention(
+    q, k_pool, v_pool, block_tables, lengths, *,
+    use_pallas: bool = False, interpret: bool = False,
+):
+    """q: (B, H, hd); pools: (P, page, KV, hd); block_tables: (B, PP) int32
+    page ids (< 0 = unused); lengths: (B,) -> (B, H, hd)."""
+    if use_pallas:
+        return paged_decode_attention_pallas(
+            q, k_pool, v_pool, block_tables, lengths, interpret=interpret,
+        )
+    return ref.paged_decode_attention_ref(q, k_pool, v_pool, block_tables,
+                                          lengths)

@@ -40,6 +40,24 @@ def flash_attention_ref(
     return out.astype(q.dtype)
 
 
+def paged_decode_attention_ref(
+    q: jnp.ndarray,              # (B, H, hd)
+    k_pool: jnp.ndarray,         # (P, page, KV, hd)
+    v_pool: jnp.ndarray,         # (P, page, KV, hd)
+    block_tables: jnp.ndarray,   # (B, PP) int32 page ids (< 0 = unused)
+    lengths: jnp.ndarray,        # (B,)
+) -> jnp.ndarray:
+    """Gather the paged K/V into dense (B, PP*page, KV, hd) caches, then run
+    the dense oracle — the independent formulation of what the paged kernel
+    computes without materializing."""
+    bt = jnp.maximum(block_tables.astype(jnp.int32), 0)
+    B, PP = bt.shape
+    page, KV, hd = k_pool.shape[1], k_pool.shape[2], k_pool.shape[3]
+    k = k_pool[bt].reshape(B, PP * page, KV, hd)
+    v = v_pool[bt].reshape(B, PP * page, KV, hd)
+    return decode_attention_ref(q, k, v, lengths)
+
+
 def decode_attention_ref(
     q: jnp.ndarray,              # (B, H, hd)
     k_cache: jnp.ndarray,        # (B, S, KV, hd)

@@ -12,13 +12,18 @@ from .request import Request, State
 
 _LAZY = {
     "ChainEngine": "engine",
+    "PagedChainEngine": "engine",
     "SlotCache": "kv_cache",
+    "PagedCache": "kv_cache",
+    "PageAccounting": "kv_cache",
+    "PAGE_SIZE": "kv_cache",
     "service_spec_for": "kv_cache",
     "tau_estimates": "kv_cache",
 }
 
 __all__ = [
-    "ChainEngine", "SlotCache", "service_spec_for", "tau_estimates",
+    "ChainEngine", "PagedChainEngine", "SlotCache", "PagedCache",
+    "PageAccounting", "PAGE_SIZE", "service_spec_for", "tau_estimates",
     "Orchestrator", "OrchestratorConfig", "Request", "State",
     "MockEngine", "mock_orchestrator",
 ]

@@ -8,6 +8,16 @@ control-plane behaviour (the paper's contribution) is exercised end to end.
 
 Prefill lengths are bucketed to powers of two (bounded jit cache); decode
 runs one batched step over all capacity slots, masking idle ones.
+
+``PagedChainEngine`` is the continuously-batched variant over a
+``PagedCache``: admission scatters O(prompt) pages instead of copying the
+whole cache, decode gathers only the active slots into a dense batch
+(bucketed batch size and page count bound the jit cache), and page
+exhaustion preempts the youngest request instead of corrupting state.  Its
+greedy token streams are bit-identical to ``ChainEngine``'s — masked cache
+positions contribute exact float zeros to attention, and XLA's batched
+decode ops are row-independent — which the parity tests and the CI gate
+hold as a contract.
 """
 from __future__ import annotations
 
@@ -22,12 +32,23 @@ import numpy as np
 
 from repro.core.chains import Chain
 from repro.models import Model
-from .kv_cache import SlotCache
+from .kv_cache import PAGE_SIZE, PagedCache, SlotCache
 from .request import Request, State
 
 
 def _bucket(n: int) -> int:
     return max(16, 1 << (n - 1).bit_length())
+
+
+def _pow2(n: int) -> int:
+    return max(1, 1 << (n - 1).bit_length())
+
+
+# Live jit specializations an engine may hold before clearing its trace
+# caches (prefill buckets / decode batch shapes).  Power-of-two bucketing
+# already bounds growth to log2(max_seq) shapes; this is the backstop.
+PREFILL_BUCKET_LIMIT = 8
+DECODE_SHAPE_LIMIT = 16
 
 
 class ChainEngine:
@@ -42,6 +63,26 @@ class ChainEngine:
         self.requests: Dict[int, Request] = {}      # slot -> request
         self._prefill_jit = jax.jit(model.prefill)
         self._decode_jit = jax.jit(model.decode_step)
+        self._prefill_shapes: set = set()
+
+    # -- jit-cache hygiene -------------------------------------------------------
+    @property
+    def prefill_bucket_count(self) -> int:
+        """Live prefill-length specializations (gauged by the orchestrator)."""
+        return len(self._prefill_shapes)
+
+    def _prefill(self, cache_one, padded: np.ndarray):
+        """model.prefill with a bounded trace cache: when a new length bucket
+        would exceed PREFILL_BUCKET_LIMIT live specializations, drop them all
+        and retrace (rare — buckets are powers of two)."""
+        key = padded.shape
+        if key not in self._prefill_shapes \
+                and len(self._prefill_shapes) >= PREFILL_BUCKET_LIMIT:
+            self._prefill_jit.clear_cache()
+            self._prefill_shapes.clear()
+        self._prefill_shapes.add(key)
+        return self._prefill_jit(self.params, cache_one,
+                                 {"tokens": jnp.asarray(padded)})
 
     # -- admission --------------------------------------------------------------
     @property
@@ -65,8 +106,7 @@ class ChainEngine:
         padded = np.zeros((1, pad_to), np.int32)
         padded[0, :true_len] = tokens
         cache_one = self.model.init_cache(1, self.max_seq)
-        logits, cache_one = self._prefill_jit(self.params, cache_one,
-                                              {"tokens": jnp.asarray(padded)})
+        logits, cache_one = self._prefill(cache_one, padded)
         self.slots.write_prefill(slot, cache_one, true_len)
         req.slot = slot
         req.state = State.RUNNING
@@ -140,4 +180,219 @@ class ChainEngine:
             out.append(req)
             self.slots.release(slot)
         self.requests.clear()
+        return out
+
+
+class PagedChainEngine(ChainEngine):
+    """Chain engine over a :class:`PagedCache` with continuous batching.
+
+    Differences from the slotted base:
+      * ``admit`` prefills into a right-sized batch-1 buffer and scatters
+        O(prompt) pages (donated pool buffers), instead of the
+        O(capacity * max_seq) whole-cache copy;
+      * ``step`` gathers only the active slots into a dense batch — batch
+        size and per-row page count are bucketed to powers of two so the
+        decode trace cache stays bounded — and scatters exactly one written
+        position per row back into the pool;
+      * page exhaustion during decode preempts the youngest request (pages
+        freed, request requeued with its generated tokens preserved — the
+        orchestrator drains :meth:`take_preempted` each round); exhaustion
+        at admission refuses the request (JFFC falls through to the next
+        chain or queues).
+
+    ``oversubscribe > 1`` grants more slots than the page budget can hold at
+    full length — the paging win: short sequences pack into the same s_c
+    grant.  The page budget itself stays ``capacity * pages_per_slot``, i.e.
+    exactly the memory GCA allocated for ``capacity`` slots.
+    """
+
+    def __init__(self, model: Model, params, chain: Chain, capacity: int,
+                 max_seq: int, page_size: int = PAGE_SIZE,
+                 oversubscribe: float = 1.0):
+        self.model = model
+        self.params = params
+        self.chain = chain
+        self.capacity = capacity
+        self.max_seq = max_seq
+        self.page_size = page_size
+        num_slots = max(1, int(capacity * oversubscribe))
+        pages_per_slot = -(-max_seq // page_size)
+        self.cache = PagedCache(model, num_slots, max_seq,
+                                page_size=page_size,
+                                total_pages=capacity * pages_per_slot)
+        self.requests: Dict[int, Request] = {}      # slot -> request
+        self.preempted: List[Request] = []
+        self._admit_seq: Dict[int, int] = {}        # slot -> admission counter
+        self._seq = 0
+        self._prefill_jit = jax.jit(model.prefill)
+        self._decode_jit = jax.jit(model.decode_step)
+        self._step_jit = jax.jit(self._step_impl, donate_argnums=(1,))
+        self._prefill_shapes: set = set()
+        self._step_shapes: set = set()
+
+    # -- admission --------------------------------------------------------------
+    @property
+    def has_free_slot(self) -> bool:
+        return bool(self.cache.free)
+
+    @property
+    def num_active(self) -> int:
+        return len(self.requests)
+
+    @property
+    def free_pages(self) -> int:
+        return self.cache.free_pages
+
+    def admit(self, req: Request, now: float = 0.0) -> bool:
+        tokens = req.context_tokens
+        true_len = len(tokens)
+        slot = self.cache.acquire(true_len)
+        if slot is None:
+            return False                 # no slot, or page budget exhausted
+        pad_to = min(max(_bucket(true_len), self.page_size), self.max_seq)
+        padded = np.zeros((1, pad_to), np.int32)
+        padded[0, :true_len] = tokens
+        buf = self.cache.prefill_buffer(pad_to)
+        logits, buf = self._prefill(buf, padded)
+        if true_len == pad_to:
+            next_tok = int(jnp.argmax(logits[0]))
+        else:
+            # Bucketed-prefill boundary fixup, as in the slotted engine, but
+            # on the small batch-1 buffer: re-feed the true last token at its
+            # own position (identical k/v rewritten, bit-identical logits —
+            # masked positions past pad_to contribute exact zeros).
+            last = jnp.asarray([int(tokens[-1])], jnp.int32)
+            lpos = jnp.asarray([true_len - 1], jnp.int32)
+            d_logits, buf = self._decode_jit(self.params, buf, last, lpos)
+            next_tok = int(jnp.argmax(d_logits[0]))
+        self.cache.write_prefill(slot, buf, true_len)
+        req.slot = slot
+        req.state = State.RUNNING
+        if req.start_time is None:
+            req.start_time = now
+        self.requests[slot] = req
+        self._admit_seq[slot] = self._seq
+        self._seq += 1
+        req.output.append(next_tok)
+        if req.done:
+            req.state = State.DONE
+            req.finish_time = now
+            self._release(slot)
+        return True
+
+    def _release(self, slot: int) -> None:
+        self.requests.pop(slot, None)
+        self._admit_seq.pop(slot, None)
+        self.cache.release(slot)
+
+    def _preempt(self, slot: int) -> None:
+        req = self.requests[slot]
+        req.state = State.QUEUED
+        req.slot = None
+        req.chain_idx = None
+        req.retries += 1
+        self.preempted.append(req)
+        self._release(slot)
+
+    def take_preempted(self) -> List[Request]:
+        """Drain requests preempted by page exhaustion (orchestrator
+        resubmits them; generated tokens ride along in context_tokens)."""
+        out, self.preempted = self.preempted, []
+        return out
+
+    # -- decode ----------------------------------------------------------------
+    def _step_impl(self, params, leaves, page_ids, slot_idx, tokens, lengths,
+                   write_page, write_off):
+        """One dense decode over the gathered active rows; traced per
+        (batch-bucket, page-bucket) shape, pool buffers donated."""
+        nb = tokens.shape[0]
+        dense = []
+        for leaf, paged in zip(leaves, self.cache._paged):
+            if paged:
+                g = leaf[:, page_ids]          # (L, nb, npg, page, *tail)
+                dense.append(g.reshape(leaf.shape[0], nb, -1, *leaf.shape[3:]))
+            else:
+                dense.append(leaf[:, slot_idx])
+        cache = jax.tree_util.tree_unflatten(self.cache._treedef, dense)
+        logits, new_cache = self.model.decode_step(params, cache, tokens,
+                                                   lengths)
+        new_flat, _ = jax.tree_util.tree_flatten(new_cache)
+        rows = jnp.arange(nb)
+        out = []
+        for leaf, nd, paged in zip(leaves, new_flat, self.cache._paged):
+            if paged:
+                # only position `lengths` changed this step; scatter it back
+                val = nd[:, rows, lengths]     # (L, nb, *tail)
+                out.append(leaf.at[:, write_page, write_off].set(val))
+            else:
+                out.append(leaf.at[:, slot_idx].set(nd))
+        return logits, out
+
+    def _step(self, view):
+        key = (view["page_ids"].shape, view["slot_idx"].shape)
+        if key not in self._step_shapes \
+                and len(self._step_shapes) >= DECODE_SHAPE_LIMIT:
+            self._step_jit.clear_cache()
+            self._step_shapes.clear()
+        self._step_shapes.add(key)
+        logits, self.cache.leaves = self._step_jit(
+            self.params, self.cache.leaves,
+            jnp.asarray(view["page_ids"]), jnp.asarray(view["slot_idx"]),
+            jnp.asarray(view["tokens"]), jnp.asarray(view["lengths"]),
+            jnp.asarray(view["write_page"]), jnp.asarray(view["write_off"]))
+        return logits
+
+    def step(self, now: float = 0.0) -> List[Request]:
+        """One continuously-batched decode round; returns completions."""
+        if not self.requests:
+            return []
+        # Guarantee a write page for every active row, preempting the
+        # youngest request when the pool runs dry (its pages free the rest).
+        alive = sorted(self.requests, key=lambda s: self._admit_seq[s])
+        for slot in list(alive):
+            if slot not in alive:
+                continue
+            while slot in alive and not self.cache.ensure_decode_write(slot):
+                self._preempt(alive.pop())
+        if not alive:
+            return []
+        active = sorted(alive)
+        n = len(active)
+        nb = _pow2(n)
+        npg = _pow2(max(int(self.cache.pages_used[s]) for s in active))
+        view = self.cache.decode_view(active, nb, npg)
+        tokens = np.zeros((nb,), np.int32)
+        for i, slot in enumerate(active):
+            tokens[i] = self.requests[slot].output[-1]
+        tokens[n:] = tokens[0]                     # pad rows mirror row 0
+        view["tokens"] = tokens
+        logits = self._step(view)
+        next_tokens = np.asarray(jnp.argmax(logits[:n], axis=-1))
+        finished = []
+        for i, slot in enumerate(active):
+            self.cache.lengths[slot] += 1
+            req = self.requests[slot]
+            req.output.append(int(next_tokens[i]))
+            if req.done:
+                req.state = State.DONE
+                req.finish_time = now
+                finished.append(req)
+                self._release(slot)
+        return finished
+
+    # -- failover ----------------------------------------------------------------
+    def evict_all(self) -> List[Request]:
+        """All in-flight requests (for re-queue), including any preempted
+        ones not yet drained, and clear state + pages."""
+        out = []
+        for slot, req in list(self.requests.items()):
+            req.state = State.QUEUED
+            req.slot = None
+            req.chain_idx = None
+            req.retries += 1
+            out.append(req)
+            self.cache.release(slot)
+        self.requests.clear()
+        self._admit_seq.clear()
+        out.extend(self.take_preempted())
         return out

@@ -1,5 +1,5 @@
 """Bridge between model configs and the paper's (s_m, s_c) service spec, plus
-the slotted batched KV cache used by chain engines.
+the two KV-cache layouts used by chain engines: slotted and paged.
 
 The paper's memory model:  server memory = s_m * (#blocks) + s_c * (cache
 slots in use).  For a transformer served at max sequence length S_max with
@@ -7,6 +7,38 @@ TP degree t:  s_m = per-layer weight bytes / t;  s_c = per-layer KV bytes per
 token * S_max / t (static allocation, Section 2.1.2).  For recurrent layers
 (xLSTM / SSM) the "KV" is the recurrent state: size independent of S_max —
 the chain-composition algorithms are unchanged (DESIGN.md §4).
+
+Layouts
+-------
+``SlotCache`` is the paper's Section 2.1.2 allocation taken literally: one
+``(layers, capacity, S_max, ...)`` buffer per cache leaf, slot i owned by
+request i for its whole lifetime.  Admission pays an O(capacity * S_max)
+whole-cache copy per request and decode always computes all ``capacity``
+rows.
+
+``PagedCache`` keeps the *accounting* of that model while dropping its
+allocation granularity: every sequence-length-bearing leaf becomes one
+pooled buffer of fixed ``page_size``-token pages, and a per-slot block
+table maps logical positions to pages.  Prefill scatters O(prompt) pages
+into the pool (donated buffers — no copy of untouched pages), decode
+allocates one page on demand as a sequence crosses a page boundary, and
+release returns pages to a free stack without zeroing (stale keys are
+masked by per-slot lengths and overwritten by the next prefill).
+
+The paper's memory model is preserved exactly: a slot's ``s_c`` gigabytes
+shard into ``pages_per_slot = ceil(S_max / page_size)`` pages of
+``s_c / pages_per_slot`` GB each (:class:`PageAccounting`), so a
+``PagedCache`` with ``capacity * pages_per_slot`` pages occupies precisely
+the memory GCA granted for ``capacity`` slots — pages are the allocation
+unit, ``s_c`` stays the control-plane contract.  Oversubscription
+(``num_slots > capacity`` at the same page budget) is how paging converts
+short-sequence slack into effective capacity; exhaustion is handled by
+deferring admission and preempting the youngest request, never by UB.
+
+Leaves whose shape does not scale with S_max — recurrent/SSM state, and
+sliding-window rings smaller than S_max — stay slot-resident (a
+``(layers, num_slots, ...)`` buffer), matching the paper's treatment of
+recurrent state as seq-independent.
 """
 from __future__ import annotations
 
@@ -94,15 +126,19 @@ class SlotCache:
         self.max_seq = max_seq
         self.cache = model.init_cache(capacity, max_seq)
         self.free: List[int] = list(range(capacity))
+        self._active: set = set()
         self.lengths = np.zeros((capacity,), np.int32)
 
     def acquire(self) -> Optional[int]:
         if not self.free:
             return None
-        return self.free.pop()
+        slot = self.free.pop()
+        self._active.add(slot)
+        return slot
 
     def release(self, slot: int) -> None:
         self.lengths[slot] = 0
+        self._active.discard(slot)
         self.free.append(slot)
 
     def write_prefill(self, slot: int, cache_one: Any, prompt_len: int) -> None:
@@ -113,4 +149,263 @@ class SlotCache:
 
     @property
     def active_slots(self) -> List[int]:
-        return [i for i in range(self.capacity) if i not in self.free]
+        return sorted(self._active)
+
+
+# ---------------------------------------------------------------------------
+# Paged cache
+# ---------------------------------------------------------------------------
+
+PAGE_SIZE = 16
+
+
+@dataclasses.dataclass(frozen=True)
+class PageAccounting:
+    """Pages <-> s_c: the paper's cache-slot grant expressed in page units.
+
+    One slot's ``s_c`` gigabytes shard into ``pages_per_slot`` pages, so
+    ``gb_for_pages(pages_per_slot) == slot_gb`` *exactly* (the round-trip is
+    ``slot_gb * (p / pages_per_slot)``, and ``p / pages_per_slot == 1.0`` is
+    exact for ``p == pages_per_slot``) — GCA allocations stated in slots and
+    pool budgets stated in pages describe the same bytes.
+    """
+
+    slot_gb: float            # the paper's s_c for one slot at S_max
+    max_seq: int
+    page_size: int = PAGE_SIZE
+
+    @classmethod
+    def from_spec(cls, spec: ServiceSpec, max_seq: int,
+                  page_size: int = PAGE_SIZE) -> "PageAccounting":
+        return cls(slot_gb=spec.cache_size_gb, max_seq=max_seq,
+                   page_size=page_size)
+
+    @property
+    def pages_per_slot(self) -> int:
+        return -(-self.max_seq // self.page_size)
+
+    @property
+    def page_gb(self) -> float:
+        return self.slot_gb / self.pages_per_slot
+
+    def pages_for_tokens(self, n_tokens: int) -> int:
+        return -(-max(n_tokens, 0) // self.page_size)
+
+    def pages_for_slots(self, slots: int) -> int:
+        return slots * self.pages_per_slot
+
+    def gb_for_pages(self, pages: int) -> float:
+        return self.slot_gb * (pages / self.pages_per_slot)
+
+
+class PagedCache:
+    """Paged KV cache: pooled fixed-size token pages + per-slot block tables.
+
+    Every cache leaf whose axis 2 scales with ``max_seq`` (full-attention
+    K/V, MLA latent, window>=max_seq SWA rings) is stored as one pooled
+    buffer ``(layers, total_pages + 1, page_size, *tail)`` — the final page
+    is write-only scratch absorbing bucketed-prefill padding.  Leaves that do
+    not scale with ``max_seq`` (recurrent/SSM state, window<max_seq rings)
+    stay slot-resident as ``(layers, num_slots, *tail)``.
+
+    Host-side state (numpy, no device sync): a ``(num_slots,
+    pages_per_slot)`` block table, a LIFO free-page stack, per-slot lengths.
+    All device writes go through jitted functions with donated pool buffers,
+    so admission costs O(prompt) and a decode write costs O(active) — never
+    O(pool).  Freed pages are returned unzeroed: stale contents are masked
+    by lengths and fully overwritten by the next prefill into the page.
+    """
+
+    def __init__(self, model: Model, num_slots: int, max_seq: int,
+                 page_size: int = PAGE_SIZE,
+                 total_pages: Optional[int] = None):
+        if page_size < 1 or (page_size & (page_size - 1)):
+            raise ValueError(f"page_size must be a power of two, got {page_size}")
+        if max_seq % page_size:
+            raise ValueError(
+                f"max_seq {max_seq} must be a multiple of page_size {page_size}")
+        self.model = model
+        self.num_slots = num_slots
+        self.max_seq = max_seq
+        self.page_size = page_size
+        self.pages_per_slot = -(-max_seq // page_size)
+        if total_pages is None:
+            total_pages = num_slots * self.pages_per_slot
+        if total_pages < self.pages_per_slot:
+            raise ValueError(
+                f"total_pages={total_pages} cannot hold one full sequence "
+                f"({self.pages_per_slot} pages)")
+        self.total_pages = total_pages
+        self.scratch_page = total_pages          # index of the write-only page
+
+        # Classify leaves by probing init_cache at two sequence lengths:
+        # a leaf is paged iff its axis 2 tracks max_seq.  (window<max_seq SWA
+        # rings keep shape min(window, S) = window at both probes -> resident.)
+        probe = model.cache_specs(1, max_seq)
+        probe2 = model.cache_specs(1, max_seq + page_size)
+        flat, self._treedef = jax.tree_util.tree_flatten(probe)
+        flat2, _ = jax.tree_util.tree_flatten(probe2)
+        self._paged: Tuple[bool, ...] = tuple(
+            len(a.shape) > 2 and a.shape[2] == max_seq
+            and a.shape[2] != b.shape[2]
+            for a, b in zip(flat, flat2))
+        self._one_specs = flat
+        self.leaves: List[jnp.ndarray] = []
+        for spec, paged in zip(flat, self._paged):
+            if paged:
+                shape = (spec.shape[0], total_pages + 1, page_size,
+                         *spec.shape[3:])
+            else:
+                shape = (spec.shape[0], num_slots, *spec.shape[2:])
+            self.leaves.append(jnp.zeros(shape, spec.dtype))
+
+        self.block_table = np.full((num_slots, self.pages_per_slot), -1,
+                                   np.int32)
+        self.pages_used = np.zeros((num_slots,), np.int32)
+        self.lengths = np.zeros((num_slots,), np.int32)
+        self.free: List[int] = list(range(num_slots))
+        self._active: set = set()
+        self._free_pages: List[int] = list(range(total_pages))
+        self._write_jit = jax.jit(self._write_impl, donate_argnums=(0,))
+
+    # -- accounting ------------------------------------------------------------
+    @property
+    def free_pages(self) -> int:
+        return len(self._free_pages)
+
+    @property
+    def active_slots(self) -> List[int]:
+        return sorted(self._active)
+
+    @property
+    def num_active(self) -> int:
+        return len(self._active)
+
+    def pages_for(self, n_tokens: int) -> int:
+        return -(-max(n_tokens, 0) // self.page_size)
+
+    # -- slot lifecycle --------------------------------------------------------
+    def can_admit(self, true_len: int) -> bool:
+        """A free slot plus pages covering the prompt *and* its first decode
+        write (``true_len + 1`` tokens) — admissions that would immediately
+        preempt are refused up front."""
+        return bool(self.free) and \
+            len(self._free_pages) >= self.pages_for(true_len + 1)
+
+    def acquire(self, true_len: int) -> Optional[int]:
+        if not self.can_admit(true_len):
+            return None
+        slot = self.free.pop()
+        self._active.add(slot)
+        need = self.pages_for(true_len)
+        for i in range(need):
+            self.block_table[slot, i] = self._free_pages.pop()
+        self.pages_used[slot] = need
+        self.lengths[slot] = 0
+        return slot
+
+    def release(self, slot: int) -> None:
+        used = int(self.pages_used[slot])
+        # reversed: the stack hands pages back out lowest-allocated-first,
+        # keeping page reuse deterministic for the parity tests
+        for i in reversed(range(used)):
+            self._free_pages.append(int(self.block_table[slot, i]))
+        self.block_table[slot, :used] = -1
+        self.pages_used[slot] = 0
+        self.lengths[slot] = 0
+        self._active.discard(slot)
+        self.free.append(slot)
+
+    def ensure_decode_write(self, slot: int) -> bool:
+        """Guarantee the page holding this slot's next write position exists,
+        allocating on demand.  False = pool exhausted (caller preempts)."""
+        pos = int(self.lengths[slot])
+        pg = pos // self.page_size
+        if pg < int(self.pages_used[slot]):
+            return True
+        if not self._free_pages:
+            return False
+        self.block_table[slot, pg] = self._free_pages.pop()
+        self.pages_used[slot] = pg + 1
+        return True
+
+    # -- prefill ---------------------------------------------------------------
+    def prefill_buffer(self, pad_len: int) -> Any:
+        """A batch-1 cache pytree sized for a ``pad_len``-token prefill:
+        paged leaves truncated to ``pad_len`` positions, resident leaves at
+        their full shapes (prefill logits and written K/V are identical to a
+        full-``max_seq`` buffer — masked positions contribute exact zeros)."""
+        if pad_len % self.page_size:
+            raise ValueError(
+                f"pad_len {pad_len} must be a multiple of page_size "
+                f"{self.page_size}")
+        leaves = []
+        for spec, paged in zip(self._one_specs, self._paged):
+            shape = (spec.shape[0], 1, pad_len, *spec.shape[3:]) if paged \
+                else spec.shape
+            leaves.append(jnp.zeros(shape, spec.dtype))
+        return jax.tree_util.tree_unflatten(self._treedef, leaves)
+
+    def _write_impl(self, leaves, one_leaves, ids, slot):
+        out = []
+        for leaf, one, paged in zip(leaves, one_leaves, self._paged):
+            src = one[:, 0]
+            if paged:
+                n = ids.shape[0]
+                src = src.reshape(leaf.shape[0], n, self.page_size,
+                                  *leaf.shape[3:])
+                out.append(leaf.at[:, ids].set(src))
+            else:
+                out.append(leaf.at[:, slot].set(src))
+        return out
+
+    def write_prefill(self, slot: int, cache_one: Any, true_len: int) -> None:
+        """Scatter a batch-1 prefilled cache (from :meth:`prefill_buffer`)
+        into this slot's pages + resident row.  Chunks beyond the slot's
+        allocated pages (bucketed-prefill padding) land in the scratch page.
+        Cost: O(pad_len), not O(pool) — the pool buffers are donated.  (One
+        CPU-only caveat: XLA's CPU emitter lowers bfloat16 scatters through
+        a whole-operand float32 round-trip, so bf16 pools pay an O(pool)
+        conversion pass on CPU; float32 pools and the TPU target donate
+        truly in place.)"""
+        one_leaves, treedef = jax.tree_util.tree_flatten(cache_one)
+        if treedef != self._treedef:
+            raise ValueError("cache_one structure does not match the model cache")
+        pad_len = next(
+            one.shape[2] for one, paged in zip(one_leaves, self._paged) if paged)
+        n_chunks = pad_len // self.page_size
+        n_real = min(self.pages_for(true_len), n_chunks)
+        ids = np.full((n_chunks,), self.scratch_page, np.int32)
+        ids[:n_real] = self.block_table[slot, :n_real]
+        self.leaves = self._write_jit(
+            self.leaves, one_leaves, jnp.asarray(ids),
+            jnp.asarray(slot, jnp.int32))
+        self.lengths[slot] = true_len
+
+    # -- decode view -----------------------------------------------------------
+    def decode_view(self, slots: List[int], nb: int, npg: int
+                    ) -> Dict[str, np.ndarray]:
+        """Host-side index arrays for a dense decode batch over ``slots``,
+        padded to ``nb`` rows (duplicating row 0 — its decode is row-wise
+        bit-identical, so duplicate scatters write equal values) and ``npg``
+        pages per row (padding with the row's own first page; garbage there
+        is masked by lengths)."""
+        pad = list(slots) + [slots[0]] * (nb - len(slots))
+        page_ids = np.zeros((nb, npg), np.int32)
+        slot_idx = np.zeros((nb,), np.int32)
+        lengths = np.zeros((nb,), np.int32)
+        write_page = np.zeros((nb,), np.int32)
+        write_off = np.zeros((nb,), np.int32)
+        for i, s in enumerate(pad):
+            used = int(self.pages_used[s])
+            row = self.block_table[s, :used]
+            page_ids[i, :min(used, npg)] = row[:npg]
+            page_ids[i, used:] = row[0]
+            slot_idx[i] = s
+            pos = int(self.lengths[s])
+            lengths[i] = pos
+            write_page[i] = self.block_table[s, pos // self.page_size]
+            write_off[i] = pos % self.page_size
+        return {"page_ids": page_ids, "slot_idx": slot_idx,
+                "lengths": lengths, "write_page": write_page,
+                "write_off": write_off}

@@ -280,6 +280,19 @@ class Orchestrator:
             done.extend(eng.step(now))
             if not eng.requests:
                 self.draining.remove(eng)
+        # paged engines may have preempted requests on page exhaustion;
+        # resubmit them (context preserved — they re-prefill with their
+        # generated tokens) unless they are out of retries
+        for eng in list(self.engines) + list(self.draining):
+            take = getattr(eng, "take_preempted", None)
+            if take is None:
+                continue
+            for req in take():
+                if req.retries > self.cfg.max_retries:
+                    req.state = State.FAILED
+                    self.failed.append(req)
+                else:
+                    self._resubmit(req, now)
         self.finished.extend(done)
         self._readmit_deferred(now)
         if self.metrics is not None:
@@ -290,6 +303,20 @@ class Orchestrator:
             m.gauge("orch.deferred").set(len(self.deferred))
             m.gauge("orch.active_slots").set(
                 sum(e.num_active for e in self.engines))
+            # data-plane gauges, still round-granularity only (the PR 7
+            # zero-hot-loop contract): free pages across paged engines,
+            # per-engine batch occupancy, live prefill-jit specializations
+            pages = [e.free_pages for e in self.engines
+                     if hasattr(e, "free_pages")]
+            if pages:
+                m.gauge("orch.free_pages").set(sum(pages))
+            m.gauge("orch.prefill_buckets").set(
+                sum(getattr(e, "prefill_bucket_count", 0)
+                    for e in self.engines))
+            occ = m.histogram("orch.batch_occupancy")
+            for e in self.engines:
+                if e.capacity:
+                    occ.record(e.num_active / e.capacity)
             h = m.histogram("orch.response_s")
             for req in done:
                 rt = req.response_time()

@@ -60,3 +60,63 @@ def test_jax_plane_runs_spec_end_to_end(tiny_model):
 def test_jax_plane_requires_model_and_params():
     with pytest.raises(ValueError, match="model"):
         api.LivePlane(engine="jax")
+
+
+def _smoke_spec(service):
+    cfg_servers = tuple(
+        Server(f"srv{i}", service.block_size_gb * 2
+               + service.cache_size_gb * 2 * 5, 0.02, 0.01 * (1 + i % 2))
+        for i in range(3))
+    return api.ExperimentSpec(
+        cluster=api.ClusterSpec(servers=cfg_servers, service=service),
+        scenario=api.ScenarioSpec(horizon=8.0),
+        workload=api.WorkloadSpec(generator="poisson", base_rate=1.5,
+                                  params={"n": 5}),
+        seed=0, name="jax-plane-smoke")
+
+
+def test_jax_plane_paged_layout_bit_identical_to_slotted(tiny_model):
+    """The kv_layout parity contract through the full API path: identical
+    spec, identical workload, greedy token streams bit-identical between
+    the slotted and paged data planes."""
+    cfg, model, params, service = tiny_model
+    spec = _smoke_spec(service)
+    streams = {}
+    for layout in ("slotted", "paged"):
+        plane = api.LivePlane(engine="jax", model=model, params=params,
+                              dt=1.0, max_seq=64, prompt_tokens=6,
+                              tokens_per_work=4.0, kv_layout=layout)
+        rep = api.run(spec, plane=plane)
+        assert rep.completed_all, rep.summary_line()
+        orch = rep.extras["orchestrator"]
+        streams[layout] = {r.rid: list(r.output) for r in orch.finished}
+    assert streams["slotted"] == streams["paged"]
+
+
+def test_live_plane_kv_layout_knob():
+    """Spec validation, store-key visibility, and JSON round-trip."""
+    from repro.api.spec import SpecError
+
+    with pytest.raises(SpecError, match="kv_layout"):
+        api.LivePlane(kv_layout="interleaved")
+    with pytest.raises(SpecError, match="page_size"):
+        api.LivePlane(kv_layout="paged", page_size=24)
+    with pytest.raises(SpecError, match="page_size"):
+        api.LivePlane(kv_layout="paged", page_size=16, max_seq=200)
+    with pytest.raises(SpecError, match="oversubscribe"):
+        api.LivePlane(kv_layout="paged", oversubscribe=0.5)
+    slotted = api.LivePlane()
+    paged = api.LivePlane(kv_layout="paged", page_size=32, oversubscribe=2.0)
+    # distinct layouts must never share a results-store entry
+    assert slotted.store_key() != paged.store_key()
+    assert "kv_layout=paged" in paged.store_key()
+    assert "page_size=32" in paged.store_key()
+    # JSON round-trip preserves every knob
+    import json
+
+    d = json.loads(json.dumps(paged.to_dict()))
+    clone = api.LivePlane.from_dict(d)
+    assert clone.to_dict() == paged.to_dict()
+    assert clone.store_key() == paged.store_key()
+    with pytest.raises(SpecError, match="unknown"):
+        api.LivePlane.from_dict({"plane": "live", "kv_format": "paged"})

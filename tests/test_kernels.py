@@ -7,7 +7,11 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels import ref
-from repro.kernels.ops import decode_attention, flash_attention
+from repro.kernels.ops import (
+    decode_attention,
+    flash_attention,
+    paged_decode_attention,
+)
 
 TOL = {jnp.float32: dict(rtol=2e-4, atol=2e-4),
        jnp.bfloat16: dict(rtol=2e-2, atol=2e-2)}
@@ -91,6 +95,82 @@ def test_decode_attention_length_edge_cases():
         out = decode_attention(q, kc, vc, lengths, use_pallas=True,
                                block_s=128, interpret=True)
         expect = ref.decode_attention_ref(q, kc, vc, lengths)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                                   rtol=2e-4, atol=2e-4)
+
+
+def _mk_paged(seed, B, P, PP, page, KV, hd, H, dtype=jnp.float32):
+    """Random pools + a permuted block table: pages deliberately land in
+    scattered, non-contiguous pool rows; unused tail entries are -1."""
+    rng = np.random.default_rng(seed)
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (B, H, hd), jnp.float32).astype(dtype)
+    kp = jax.random.normal(ks[1], (P, page, KV, hd), jnp.float32).astype(dtype)
+    vp = jax.random.normal(ks[2], (P, page, KV, hd), jnp.float32).astype(dtype)
+    bt = np.full((B, PP), -1, np.int32)
+    lengths = np.zeros((B,), np.int32)
+    perm = rng.permutation(P)
+    k = 0
+    for b in range(B):
+        n = int(rng.integers(1, PP + 1))
+        bt[b, :n] = perm[k:k + n]
+        k += n
+        lengths[b] = int(rng.integers(1, n * page + 1))
+    return q, kp, vp, jnp.asarray(bt), jnp.asarray(lengths)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    B=st.sampled_from([1, 3]),
+    page=st.sampled_from([16, 32]),
+    PP=st.sampled_from([2, 4]),
+    heads=st.sampled_from([(4, 4), (8, 2), (4, 1)]),
+    hd=st.sampled_from([64, 128]),
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+    seed=st.integers(0, 99),
+)
+def test_paged_decode_attention_matches_ref(B, page, PP, heads, hd, dtype, seed):
+    H, KV = heads
+    P = B * PP + 3                       # pool larger than any one table
+    q, kp, vp, bt, lengths = _mk_paged(seed, B, P, PP, page, KV, hd, H, dtype)
+    out = paged_decode_attention(q, kp, vp, bt, lengths,
+                                 use_pallas=True, interpret=True)
+    expect = ref.paged_decode_attention_ref(q, kp, vp, bt, lengths)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(expect, np.float32), **TOL[dtype])
+
+
+def test_paged_decode_matches_dense_decode():
+    """Gathering pages through the block table computes the same attention
+    as the dense kernel over the gathered cache (the layout is invisible)."""
+    B, P, PP, page, KV, hd, H = 2, 12, 4, 32, 2, 64, 4
+    q, kp, vp, bt, lengths = _mk_paged(11, B, P, PP, page, KV, hd, H)
+    paged = paged_decode_attention(q, kp, vp, bt, lengths,
+                                   use_pallas=True, interpret=True)
+    btc = jnp.maximum(bt, 0)
+    k_dense = kp[btc].reshape(B, PP * page, KV, hd)
+    v_dense = vp[btc].reshape(B, PP * page, KV, hd)
+    dense = decode_attention(q, k_dense, v_dense, lengths,
+                             use_pallas=True, block_s=64, interpret=True)
+    np.testing.assert_allclose(np.asarray(paged), np.asarray(dense),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_paged_decode_length_edge_cases():
+    """lengths = 1, a single page, and a full table."""
+    B, P, page, KV, hd, H = 2, 6, 16, 2, 64, 4
+    ks = jax.random.split(jax.random.PRNGKey(5), 3)
+    q = jax.random.normal(ks[0], (B, H, hd))
+    kp = jax.random.normal(ks[1], (P, page, KV, hd))
+    vp = jax.random.normal(ks[2], (P, page, KV, hd))
+    for bt, lengths in [
+        (jnp.array([[3, -1], [5, 1]]), jnp.array([1, 2 * page])),
+        (jnp.array([[2], [4]]), jnp.array([page, 1])),
+        (jnp.array([[0, 1], [2, 3]]), jnp.array([2 * page, 2 * page])),
+    ]:
+        out = paged_decode_attention(q, kp, vp, bt, lengths,
+                                     use_pallas=True, interpret=True)
+        expect = ref.paged_decode_attention_ref(q, kp, vp, bt, lengths)
         np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
                                    rtol=2e-4, atol=2e-4)
 

@@ -186,6 +186,213 @@ def test_orchestrator_runs_scripted_scenario(tiny):
     assert victim in orch.servers
 
 
+# ---------------------------------------------------------------------------
+# Paged KV cache + continuous batching
+# ---------------------------------------------------------------------------
+
+def _paged_engine(tiny, capacity=3, max_seq=128, **kw):
+    from repro.core.chains import Chain
+    from repro.serving import PagedChainEngine
+
+    cfg, model, params = tiny
+    return PagedChainEngine(model, params,
+                            Chain(("s0",), (cfg.num_layers,), 1.0),
+                            capacity, max_seq, **kw)
+
+
+def test_paged_engine_generates_same_as_oracle(tiny):
+    cfg, model, params = tiny
+    eng = _paged_engine(tiny)
+    # non-pow2 prompts exercise the boundary fixup; 40 new tokens cross
+    # page boundaries (page_size 16) during decode
+    reqs = [_mk_request(i, 8 + 3 * i, 40) for i in range(3)]
+    for r in reqs:
+        assert eng.admit(r)
+    while eng.requests:
+        eng.step()
+    for r in reqs:
+        oracle = greedy_rollout(model, params, r.prompt, 40)
+        assert r.output == oracle, f"req {r.rid}: {r.output} vs {oracle}"
+
+
+def test_slotted_paged_greedy_parity(tiny):
+    """The layout contract: greedy token streams are bit-identical between
+    SlotCache and PagedCache engines, with staggered admissions (continuous
+    batching gathers different batch shapes round to round)."""
+    from repro.core.chains import Chain
+    from repro.serving import ChainEngine, PagedChainEngine
+
+    cfg, model, params = tiny
+    chain = Chain(("s0",), (cfg.num_layers,), 1.0)
+    outs = {}
+    for name, factory in [("slotted", ChainEngine), ("paged", PagedChainEngine)]:
+        eng = factory(model, params, chain, 4, 128)
+        reqs = [_mk_request(i, 5 + 7 * i, 25, seed=3) for i in range(7)]
+        pending = list(reqs)
+        while pending or eng.requests:
+            while pending and eng.has_free_slot and eng.admit(pending[0]):
+                pending.pop(0)
+            eng.step()
+        outs[name] = [r.output for r in reqs]
+    assert outs["slotted"] == outs["paged"]
+
+
+def test_paged_pool_exhaustion_defers_admission(tiny):
+    """Oversubscribed slots + a drained page pool: admit refuses (returns
+    False) instead of corrupting; freed pages make the request admissible."""
+    eng = _paged_engine(tiny, capacity=2, max_seq=128, oversubscribe=3.0)
+    # budget: 2 slots * 8 pages = 16 pages over 6 slots; each 50-token
+    # prompt takes 4 pages, so the 5th admission finds slots but no pages
+    reqs = [_mk_request(i, 50, 2) for i in range(5)]
+    admitted = [eng.admit(r) for r in reqs]
+    assert admitted == [True, True, True, True, False]
+    assert eng.has_free_slot            # a slot is free; pages are not
+    assert reqs[4].state == State.QUEUED
+    while eng.requests:
+        eng.step()
+    assert eng.admit(reqs[4])           # pages released -> admissible now
+    while eng.requests:
+        eng.step()
+    cfg, model, params = tiny
+    for r in reqs:
+        assert r.output == greedy_rollout(model, params, r.prompt, 2)
+
+
+def test_paged_released_pages_are_reusable(tiny):
+    """Admit/complete cycles return every page; the free stack refills and
+    reused (dirty) pages decode correctly."""
+    eng = _paged_engine(tiny, capacity=2, max_seq=64)
+    total = eng.cache.free_pages
+    cfg, model, params = tiny
+    for round_ in range(3):
+        reqs = [_mk_request(10 * round_ + i, 20, 4, seed=round_) for i in range(2)]
+        for r in reqs:
+            assert eng.admit(r)
+        while eng.requests:
+            eng.step()
+        assert eng.cache.free_pages == total
+        for r in reqs:
+            assert r.output == greedy_rollout(model, params, r.prompt, 4)
+
+
+def test_paged_preemption_requeues_youngest(tiny):
+    """Page exhaustion during decode preempts the youngest request with its
+    generated tokens preserved; the orchestrator-level resubmit completes it
+    with oracle-correct output (context re-prefilled)."""
+    eng = _paged_engine(tiny, capacity=1, max_seq=128, oversubscribe=3.0)
+    # 1 slot of budget = 8 pages; three 30-token prompts (2 pages each) fit,
+    # but decoding 40 tokens each needs more pages than the pool holds
+    reqs = [_mk_request(i, 30, 40) for i in range(3)]
+    for r in reqs:
+        assert eng.admit(r)
+    preempted = []
+    while eng.requests:
+        eng.step()
+        preempted += eng.take_preempted()
+    assert preempted, "pool pressure must preempt"
+    assert all(r.state == State.QUEUED and r.retries == 1 for r in preempted)
+    # youngest-first victim order: request 0 (oldest) is never preempted
+    assert all(r.rid != 0 for r in preempted)
+    cfg, model, params = tiny
+    for r in preempted:                  # progress preserved in context
+        assert list(r.context_tokens[:30]) == list(r.prompt)
+        assert len(r.output) > 0
+        eng.admit(r)
+        while eng.requests:
+            eng.step()
+    for r in reqs:
+        assert r.output == greedy_rollout(model, params, r.prompt, 40)
+
+
+def test_paged_orchestrator_end_to_end(tiny):
+    """Full orchestrator over paged engines: dispatch, preemption drain,
+    recompose survival, and the new data-plane metrics."""
+    from functools import partial
+
+    from repro.obs import MetricsRegistry
+    from repro.serving import PagedChainEngine
+
+    cfg, model, params = tiny
+    spec = service_spec_for(cfg, max_seq=128)
+    mem = (spec.block_size_gb * cfg.num_layers
+           + spec.cache_size_gb * cfg.num_layers * 6)
+    servers = [Server(f"s{i}", mem, 0.05, 0.02 * (1 + i % 2)) for i in range(4)]
+    orch = Orchestrator(
+        servers, spec, model, params, 0.5,
+        OrchestratorConfig(max_seq=128,
+                           engine_factory=partial(PagedChainEngine,
+                                                  page_size=16)))
+    orch.metrics = MetricsRegistry()
+    reqs = [_mk_request(i, 8, 6) for i in range(8)]
+    for r in reqs:
+        orch.submit(r)
+    orch.step(); orch.step()
+    # engines whose (chain, capacity) survive a recompose keep their block
+    # tables (same servers -> same composition -> every engine survives)
+    before = {tuple(e.chain.servers): (id(e), id(e.cache.block_table))
+              for e in orch.engines}
+    in_flight = sum(e.num_active for e in orch.engines)
+    orch._recompose_preserving(2.0, drain=True)
+    for e in orch.engines:
+        prev_id, prev_bt = before[tuple(e.chain.servers)]
+        assert id(e) == prev_id and id(e.cache.block_table) == prev_bt
+    assert sum(e.num_active for e in orch.engines) == in_flight
+    orch.drain()
+    assert all(r.state == State.DONE for r in reqs)
+    for r in reqs[:3]:
+        assert r.output == greedy_rollout(model, params, r.prompt, 6)
+    snap = orch.metrics.snapshot().as_dict()
+    assert "orch.free_pages" in snap
+    assert "orch.prefill_buckets" in snap
+    assert snap["orch.batch_occupancy"]["count"] > 0
+
+
+def test_page_accounting_round_trips_s_c():
+    """pages <-> s_c is exact: a full slot's pages occupy exactly the s_c
+    gigabytes GCA granted for that slot."""
+    from repro.serving import PAGE_SIZE, PageAccounting
+
+    cfg = get("qwen3-8b")
+    spec = service_spec_for(cfg, max_seq=4096)
+    acct = PageAccounting.from_spec(spec, max_seq=4096)
+    assert acct.page_size == PAGE_SIZE
+    assert acct.pages_per_slot == 4096 // PAGE_SIZE
+    assert acct.gb_for_pages(acct.pages_per_slot) == spec.cache_size_gb
+    assert acct.gb_for_pages(acct.pages_for_slots(3)) \
+        == pytest.approx(3 * spec.cache_size_gb)
+    assert acct.pages_for_tokens(1) == 1
+    assert acct.pages_for_tokens(PAGE_SIZE) == 1
+    assert acct.pages_for_tokens(PAGE_SIZE + 1) == 2
+
+
+def test_slot_cache_active_slots_tracks_set(tiny):
+    from repro.serving import SlotCache
+
+    cfg, model, params = tiny
+    sc = SlotCache(model, capacity=4, max_seq=32)
+    a, b = sc.acquire(), sc.acquire()
+    assert sorted([a, b]) == sc.active_slots
+    sc.release(a)
+    assert sc.active_slots == [b]
+    sc.release(b)
+    assert sc.active_slots == []
+
+
+def test_prefill_jit_cache_is_bounded(tiny):
+    """Admitting many distinct prompt-length buckets never holds more than
+    PREFILL_BUCKET_LIMIT live prefill specializations."""
+    from repro.serving.engine import PREFILL_BUCKET_LIMIT
+
+    eng = _paged_engine(tiny, capacity=1, max_seq=2048)
+    for plen in (3, 17, 33, 65, 129, 257, 513, 1025, 1500, 2000):
+        r = _mk_request(plen, plen, 1)
+        assert eng.admit(r)
+        assert eng.prefill_bucket_count <= PREFILL_BUCKET_LIMIT
+        while eng.requests:
+            eng.step()
+    assert eng.prefill_bucket_count <= PREFILL_BUCKET_LIMIT
+
+
 def test_service_spec_and_tau_estimates():
     cfg = get("qwen3-8b")
     spec = service_spec_for(cfg, max_seq=32768, tp_degree=16)
