@@ -17,6 +17,7 @@ import time
 from . import (
     bench_autoscale,
     bench_cache_alloc,
+    bench_geo,
     bench_kernels,
     bench_load_balance,
     bench_model_validation,
@@ -42,6 +43,7 @@ SUITES = {
     "serving": bench_serving.run,
     "autoscale": bench_autoscale.run,
     "multitenant": bench_multitenant.run,
+    "geo": bench_geo.run,
 }
 
 FAST_OVERRIDES = {
@@ -55,6 +57,7 @@ FAST_OVERRIDES = {
     "serving": lambda: bench_serving.run(smoke=True),
     "autoscale": lambda: bench_autoscale.run(horizon=300.0),
     "multitenant": lambda: bench_multitenant.run(n_jobs=20_000),
+    "geo": lambda: bench_geo.run(smoke=True),
 }
 
 
@@ -63,6 +66,8 @@ def _headline(row: dict) -> str:
                 "engine_speedup", "pipeline_speedup", "bit_identical",
                 "interactive_p99_cut", "admission_fired_no_scaleout",
                 "predictive_dominates_static", "all_policies_complete",
+                "latency_beats_rr_response", "p99_inflation_bounded",
+                "partition_lost_requests",
                 "jobs_per_s", "completed_all",
                 "reduction_vs_petals_pct", "proposed_improvement_vs_petals_pct",
                 "gbp_beats_or_ties_best_random", "gca_within_1_of_ilp",

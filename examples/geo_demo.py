@@ -1,0 +1,77 @@
+"""Geo-distributed serving demo: three regions, a partition, a recording.
+
+The ``region_partition`` preset drives the canonical ``us``/``eu``/``ap``
+ring through its partition-tolerance gauntlet — a regional burst on
+``eu``, then ``ap`` cut off by a network partition for 20% of the
+horizon (serving its own sources split-brain), then ``eu`` evacuated
+into the survivors — with the flight recorder on:
+
+  1. the partition timeline prints from the trace markers (cut, heal,
+     evacuate), with per-region routed/completed/p99 after the dust
+     settles and the conservation invariant checked
+     (``partition_lost_requests == 0``, nothing dropped on the floor);
+  2. the trace exports as Chrome-trace JSON with one lane group per
+     region (``us/chain …``, ``eu/queue``, …) — open it at
+     https://ui.perfetto.dev and the split-brain window is visible as
+     ``ap``'s lanes going quiet to outside traffic;
+  3. the same diurnal trace is replayed under the latency-aware router
+     and the region-blind round-robin baseline (shared arrivals via
+     ``api.resolve_arrivals``) to show why routing choice matters.
+
+Numpy-only; runs in seconds:
+
+    PYTHONPATH=src python examples/geo_demo.py
+"""
+import json
+
+from repro import api
+from repro.obs import export_chrome_trace
+
+OUT = "trace_region_partition.json"
+
+
+def main() -> None:
+    spec = api.preset("region_partition")
+    rep = api.run(spec, trace=True)
+    geo = rep.extras["geo"]
+    print(rep.summary_line())
+    print(f"regions: {', '.join(geo['regions'])}   router: {geo['router']}")
+
+    print("\npartition timeline:")
+    for m in rep.trace.markers:
+        if m.cat == "geo":
+            print(f"  t={m.t:7.1f}  {m.name}  {m.args or ''}")
+
+    print("\nper-region outcome:")
+    for name, stats in geo["per_region"].items():
+        print(f"  {name}: routed={stats['n_routed']:5d}  "
+              f"completed={stats['n_completed']:5d}  "
+              f"p99={stats['p99']:.2f}s  "
+              f"net={stats['mean_network_latency']*1e3:.0f}ms")
+    lost = geo["partition_lost_requests"]
+    print(f"\nconservation through split-brain + heal + evacuation: "
+          f"lost={lost} ({'OK' if lost == 0 else 'VIOLATED'}), "
+          f"completed_all={rep.completed_all}")
+
+    # one lane group per region in the exported timeline
+    doc = export_chrome_trace(rep.trace, OUT)
+    groups = sorted({name.split("/", 1)[0]
+                     for name in rep.trace.lanes.values() if "/" in name})
+    print(f"\nwrote {OUT} ({len(doc['traceEvents'])} events; lane groups: "
+          f"{', '.join(groups)}) — load it in https://ui.perfetto.dev")
+    json.loads(json.dumps(doc))      # valid JSON end to end
+
+    # routing matters: identical diurnal trace, two routers
+    base = api.preset("follow_the_sun")
+    ga = api.resolve_arrivals(base)
+    print("\nfollow-the-sun diurnal trace, identical arrivals:")
+    for router in ("latency", "round-robin"):
+        r = api.run(api.spec_replace(base, "cluster.regions.router", router),
+                    arrivals=ga)
+        net = r.extras["geo"]["mean_network_latency"]
+        print(f"  {router:12s} mean response {r.mean_response():.3f}s   "
+              f"p99 {r.p99():.2f}s   mean network latency {net*1e3:.0f}ms")
+
+
+if __name__ == "__main__":
+    main()

@@ -35,6 +35,7 @@ from .registry import (
     DISPATCH_POLICIES,
     ENGINES,
     EVENT_KINDS,
+    GEO_ROUTERS,
     PLANES,
     Registry,
     SCALERS,
@@ -49,6 +50,7 @@ from .spec import (
     ENGINE_SEED_OFFSET,
     ExperimentSpec,
     PolicySpec,
+    RegionSpec,
     ScenarioSpec,
     SpecError,
     WorkloadSpec,
@@ -56,19 +58,26 @@ from .spec import (
 from .report import RunReport
 from .results import ResultsStore, spec_key
 from .presets import PRESETS, preset
-from .planes import LivePlane, SimPlane, build_simulator, drive_orchestrator
+from .planes import (
+    LivePlane,
+    SimPlane,
+    build_simulator,
+    drive_orchestrator,
+    resolve_arrivals,
+)
 from .runner import SweepPoint, get_plane, run, spec_replace, sweep
 
 __all__ = [
     "Registry", "UnknownNameError",
     "DISPATCH_POLICIES", "TUNERS", "WORKLOADS", "EVENT_KINDS", "SCALERS",
-    "PLANES", "ENGINES",
+    "PLANES", "ENGINES", "GEO_ROUTERS",
     "ClusterSpec", "WorkloadSpec", "PolicySpec", "AdmissionSpec",
-    "AutoscaleSpec", "ScenarioSpec", "ExperimentSpec", "SpecError",
-    "ENGINE_SEED_OFFSET",
+    "AutoscaleSpec", "RegionSpec", "ScenarioSpec", "ExperimentSpec",
+    "SpecError", "ENGINE_SEED_OFFSET",
     "RunReport",
     "ResultsStore", "spec_key",
     "PRESETS", "preset",
     "SimPlane", "LivePlane", "build_simulator", "drive_orchestrator",
+    "resolve_arrivals",
     "run", "sweep", "spec_replace", "get_plane", "SweepPoint",
 ]

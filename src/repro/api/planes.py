@@ -105,6 +105,19 @@ def _resolve_workload(spec: ExperimentSpec, scenario: Scenario,
     return gen(spec.workload, scenario, spec.workload_seed())
 
 
+def resolve_arrivals(spec: ExperimentSpec):
+    """Materialize the spec's arrival trace exactly as :func:`run` would.
+
+    The replay-a-shared-trace escape hatch: resolve once, then pass the
+    result back through ``run(spec2, arrivals=...)`` to drive spec
+    variants (different routers, policies, engines) with bit-identical
+    arrivals.  Returns whatever the workload generator yields — a
+    ``(times, works)`` tuple, a :class:`~repro.geo.workload.GeoArrivals`
+    for the geo generators, or ``None`` for scenario-generated traces.
+    """
+    return _resolve_workload(spec, spec.scenario.to_scenario(), None)
+
+
 def _resolve_controller(spec: ExperimentSpec, controller):
     if controller is not None:
         return controller
@@ -303,6 +316,11 @@ def build_simulator(spec: ExperimentSpec, scenario: Optional[Scenario] = None,
     if not spec.cluster.job_servers:
         raise SpecError("cluster.job_servers",
                         "build_simulator needs a pre-composed cluster")
+    if spec.cluster.regions is not None:
+        raise SpecError("cluster.regions",
+                        "build_simulator builds one engine; multi-region "
+                        "specs run through repro.geo.execute_geo "
+                        "(plane='sim')")
     scenario = scenario if scenario is not None \
         else spec.scenario.to_scenario()
     arr = _resolve_workload(spec, scenario, arrivals)
@@ -361,6 +379,8 @@ class SimPlane:
 
     def run(self, spec: ExperimentSpec, *, arrivals=None,
             controller=None, trace: bool = False) -> RunReport:
+        if spec.cluster.regions is not None:
+            return self._run_geo(spec, arrivals, controller, trace)
         tracer = metrics = None
         if trace:
             from repro.obs import MetricsRegistry, Tracer
@@ -397,6 +417,40 @@ class SimPlane:
                 meta={"spec": spec.name, "policy": spec.policy.name,
                       "rng_scheme": spec.rng_scheme})
             report.extras["metrics"] = metrics.snapshot().as_dict()
+        return report
+
+    def _run_geo(self, spec: ExperimentSpec, arrivals, controller,
+                 trace: bool) -> RunReport:
+        """Multi-region execution: the geo executor owns the whole loop
+        (per-region engines + controllers), so a plane-injected stateful
+        ``controller=`` has no single cluster to bind to."""
+        from repro.geo import GeoArrivals, execute_geo
+
+        if controller is not None:
+            raise SpecError(
+                "autoscale",
+                "multi-region runs build one controller per region from "
+                "spec.autoscale; an injected controller= has no single "
+                "cluster to attach to")
+        scenario = spec.scenario.to_scenario()
+        if isinstance(arrivals, GeoArrivals):
+            arr = arrivals
+        else:
+            arr = _resolve_workload(spec, scenario, arrivals)
+        res, n_final, geo_extras, gtrace, gmetrics = execute_geo(
+            spec, scenario, arrivals=arr, trace=trace)
+        extras = {"n_servers_final": n_final, "geo": geo_extras}
+        cost = None
+        if spec.autoscale is not None:
+            cost = geo_extras.get("cost_per_region")
+            extras["scaling_records"] = geo_extras.pop("scaling_records", {})
+        report = report_from_scenario_result(spec, res, plane=self.name,
+                                             cost=None, extras=extras)
+        if cost is not None:
+            report.extras["cost_per_region"] = cost
+        if trace:
+            report.trace = gtrace
+            report.extras["metrics"] = gmetrics.snapshot().as_dict()
         return report
 
 
@@ -612,6 +666,10 @@ class LivePlane:
             raise SpecError("cluster.job_servers",
                             "the live plane needs physical servers "
                             "(cluster.servers) to compose engines over")
+        if spec.cluster.regions is not None:
+            raise SpecError("cluster.regions",
+                            "multi-region serving has no live-plane "
+                            "implementation; run it on plane='sim'")
         if spec.policy.name not in ("jffc", "priority"):
             # the orchestrator's online dispatch IS JFFC over a central
             # (priority) queue — silently running a different-named policy

@@ -31,6 +31,11 @@ Builtin presets:
   baseline, ``"priority"`` + a finite batch deadline for the full gate).
 * ``failover_burst`` — the resilience smoke: a heterogeneous 8-server
   cluster through a failure, a 6x burst, and a recovery.
+* ``mmc_queue`` — a textbook M/M/c queue as a spec, checkable against the
+  closed forms in :mod:`repro.core.queueing`.
+* ``follow_the_sun`` / ``region_partition`` — the geo-distributed
+  settings: three regions on a latency ring under a follow-the-sun
+  diurnal trace, and the partition/heal conservation gate.
 """
 from __future__ import annotations
 
@@ -47,6 +52,7 @@ from .spec import (
     ClusterSpec,
     ExperimentSpec,
     PolicySpec,
+    RegionSpec,
     ScenarioSpec,
     SpecError,
     WorkloadSpec,
@@ -160,6 +166,121 @@ def overloaded_70_30(
             classes=classes),
         policy=PolicySpec(name=policy, aging_rate=aging_rate),
         seed=seed, name=name or f"overloaded-70-30-{policy}")
+
+
+@PRESETS.register("mmc_queue")
+def mmc_queue(
+    mu: float = 1.0,
+    c: int = 8,
+    rho: float = 0.7,
+    n_jobs: int = 40_000,
+    seed: int = 0,
+    engine: str = "vector",
+    name: Optional[str] = None,
+) -> ExperimentSpec:
+    """A textbook M/M/c queue as a spec: one pre-composed chain of ``c``
+    slots at rate ``mu`` each, stationary Poisson arrivals at
+    ``lam = rho * c * mu`` with Exp(1) works.
+
+    A single chain makes the paper's occupancy bounds
+    (:func:`repro.core.queueing.occupancy_lower_bound` /
+    ``occupancy_upper_bound``) coincide with the exact M/M/c birth-death
+    closed form, so the simulated mean occupancy (via Little's law) is
+    directly checkable against theory — the queueing-preset test gate.
+    """
+    if not 0.0 < rho < 1.0:
+        raise SpecError("mmc_queue.rho",
+                        f"utilization must be in (0, 1), got {rho}")
+    lam = rho * mu * c
+    return ExperimentSpec(
+        cluster=ClusterSpec(job_servers=((mu, c),), engine=engine),
+        scenario=ScenarioSpec(horizon=n_jobs / lam,
+                              description=f"M/M/{c} at rho={rho:g}"),
+        workload=WorkloadSpec(generator="poisson", base_rate=lam,
+                              params={"n": n_jobs}),
+        warmup_fraction=0.1,
+        seed=seed, name=name or f"mmc-{c}-rho{rho:g}")
+
+
+#: the canonical three-region ring shared by the geo presets: latency is
+#: 0.12 s per ring hop, ap runs at 0.8x capacity and us/eu carry more of
+#: the source traffic than ap
+GEO_RING = dict(
+    names=("us", "eu", "ap"),
+    latency=((0.0, 0.12, 0.24), (0.12, 0.0, 0.12), (0.24, 0.12, 0.0)),
+    capacity=(1.0, 1.0, 0.8),
+    cost=(1.0, 1.15, 0.9),
+    source_weights=(0.4, 0.35, 0.25),
+)
+
+
+@PRESETS.register("follow_the_sun")
+def follow_the_sun(
+    router: str = "latency",
+    base_rate: float = 6.0,
+    horizon: float = 480.0,
+    amplitude: float = 0.8,
+    mu: float = 1.0,
+    c: int = 6,
+    trace_seed: int = 3,
+    seed: int = 0,
+    engine: str = "vector",
+    name: Optional[str] = None,
+) -> ExperimentSpec:
+    """The canonical geo setting: three regions on a ring, each serving a
+    pre-composed chain set scaled by its capacity multiplier, under a
+    follow-the-sun diurnal trace (every region's day/night curve is
+    phase-shifted a third of a period, so the global peak circles the
+    ring).
+
+    ``router`` selects the cross-region router (``repro.api.GEO_ROUTERS``)
+    — the benchmark runs ``"latency"`` vs region-blind ``"round-robin"``
+    on the identical trace (same ``trace_seed``)."""
+    return ExperimentSpec(
+        cluster=ClusterSpec(
+            job_servers=((mu, c),), engine=engine,
+            regions=RegionSpec(router=router, **GEO_RING)),
+        scenario=ScenarioSpec(horizon=horizon,
+                              description="follow-the-sun diurnal fleet"),
+        workload=WorkloadSpec(
+            generator="geo-follow-the-sun", base_rate=base_rate,
+            params={"n_regions": 3, "amplitude": amplitude,
+                    "weights": list(GEO_RING["source_weights"])},
+            seed=trace_seed),
+        seed=seed, name=name or f"follow-the-sun-{router}")
+
+
+@PRESETS.register("region_partition")
+def region_partition(
+    router: str = "latency",
+    base_rate: float = 6.0,
+    horizon: float = 300.0,
+    burst_scale: float = 2.5,
+    mu: float = 1.0,
+    c: int = 6,
+    trace_seed: int = 3,
+    seed: int = 0,
+    engine: str = "vector",
+    name: Optional[str] = None,
+) -> ExperimentSpec:
+    """The partition-tolerance gate on the canonical three-region ring:
+    ``eu`` takes a regional burst, then ``ap`` is cut off by a network
+    partition for 20% of the horizon (it serves its own sources
+    split-brain; nothing crosses the cut) and heals, and finally ``eu``
+    is evacuated into the survivors.  The conservation invariant —
+    ``extras["geo"]["partition_lost_requests"] == 0`` with
+    ``completed_all`` — must hold through all three."""
+    sc = (Scenario(horizon=horizon)
+          .region_burst(horizon * 0.15, horizon * 0.1, burst_scale, "eu")
+          .region_partition(horizon * 0.4, horizon * 0.2, ("ap",))
+          .region_evacuate(horizon * 0.75, "eu"))
+    return ExperimentSpec(
+        cluster=ClusterSpec(
+            job_servers=((mu, c),), engine=engine,
+            regions=RegionSpec(router=router, **GEO_RING)),
+        scenario=ScenarioSpec.from_scenario(sc),
+        workload=WorkloadSpec(base_rate=base_rate, seed=trace_seed),
+        seed=seed, name=name or f"region-partition-{router}")
 
 
 @PRESETS.register("failover_burst")

@@ -196,6 +196,22 @@ def _slo_admission(template, params):
 
 
 # ---------------------------------------------------------------------------
+# Cross-region geo routers — write-through to repro.geo.routing.ROUTERS so a
+# router registered here is also constructible by the geo executor, and
+# ``RegionSpec(router=...)`` validates against one list of names.
+# ---------------------------------------------------------------------------
+
+from repro.geo.routing import ROUTERS as _GEO_ROUTERS  # noqa: E402
+
+GEO_ROUTERS = Registry(
+    "geo router",
+    on_register=lambda name, obj: _GEO_ROUTERS.__setitem__(name, obj))
+
+for _name, _factory in list(_GEO_ROUTERS.items()):
+    GEO_ROUTERS.register(_name, _factory)
+
+
+# ---------------------------------------------------------------------------
 # Workload generators (builtins registered by repro.api.workloads) and
 # execution planes (registered by repro.api.planes).
 # ---------------------------------------------------------------------------

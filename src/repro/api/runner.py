@@ -162,6 +162,29 @@ def sweep(spec: ExperimentSpec, grid: Mapping[str, Sequence],
             for o, s in pts]
 
 
+def _one_pass_residual(s: ExperimentSpec) -> str:
+    """The spec's canonical JSON with every field the one-pass fast path
+    legitimately varies per point normalized out: ``seed`` / ``name``
+    (per-point engine seeds), ``policy.name`` (one stacked pass per
+    policy), ``rng_scheme`` (bit-neutral for RNG-free policies; RNG
+    policies are separately required to be uniformly ``counter``), and
+    ``workload`` / ``scenario`` (resolved into per-point stacked traces).
+    Any *other* difference between two points — including fields added to
+    the spec after the fast path's eligibility checklist was written,
+    whose defaults are simply absent from ``to_dict()`` — makes their
+    residuals differ and forces the lossless per-point fallback."""
+    import json
+
+    d = s.to_dict()
+    d["name"] = ""
+    d["seed"] = 0
+    d["rng_scheme"] = ""
+    d["workload"] = None
+    d["scenario"] = None
+    d["policy"] = {**d["policy"], "name": ""}
+    return json.dumps(d, sort_keys=True)
+
+
 def _sweep_one_pass(pts, plane, arrivals, store=None,
                     devices=None) -> Optional[List[SweepPoint]]:
     """Try the compiled policy×seed grid fast path; ``None`` = not
@@ -206,15 +229,27 @@ def _sweep_one_pass(pts, plane, arrivals, store=None,
     if not (plane == "sim" or isinstance(plane, SimPlane)):
         return None
     base = pts[0][1]
+    base_residual = _one_pass_residual(base)
     for _, s in pts:
         if (s.cluster.engine != "batched" or not s.cluster.job_servers
                 or s.cluster.job_servers != base.cluster.job_servers
                 or s.policy.name not in VECTORIZED_POLICIES
                 or s.autoscale is not None
+                or s.cluster.regions is not None
+                or s.admission.level != 1.0
+                or s.policy.aging_rate != 0.0
                 or s.workload.classes or s.workload.class_rates is not None
                 or s.warmup_fraction != base.warmup_fraction):
             return None
         if s.policy.name in RNG_POLICIES and s.rng_scheme != "counter":
+            return None
+        if _one_pass_residual(s) != base_residual:
+            # a spec field the fast path does not model varies across the
+            # grid (e.g. an optional field added after this checklist was
+            # written).  The stacked kernel would silently run every point
+            # identically — and the results store would then cache wrong
+            # reports under correct keys.  Fall back to per-point runs,
+            # which honor every field by construction.
             return None
     caps = [c for _, c in base.cluster.job_servers]
     if sum(caps) <= 0 or not jax_available():

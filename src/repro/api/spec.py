@@ -46,13 +46,16 @@ import json
 import math
 from typing import Dict, Mapping, Optional, Sequence, Tuple
 
-from repro.core.scenarios import Scenario, ScenarioEvent
+from repro.core.scenarios import (
+    BURST_KINDS, REGION_KINDS, Scenario, ScenarioEvent,
+)
 from repro.core.servers import Server, ServiceSpec
 from repro.core.workload import RequestClass, TraceStats
 
 from . import workloads as _workloads  # noqa: F401  (registers builtins)
 from .registry import (
-    DISPATCH_POLICIES, ENGINES, SCALERS, TUNERS, UnknownNameError, WORKLOADS,
+    DISPATCH_POLICIES, ENGINES, GEO_ROUTERS, SCALERS, TUNERS,
+    UnknownNameError, WORKLOADS,
 )
 
 #: engine RNG = spec.seed + this (see the module docstring's seed rule)
@@ -240,6 +243,118 @@ def _event_from_dict(d, field: str) -> ScenarioEvent:
 # ---------------------------------------------------------------------------
 
 @dataclasses.dataclass(frozen=True)
+class RegionSpec:
+    """A fleet of serving regions: the declarative twin of
+    :class:`repro.geo.topology.RegionTopology`.
+
+    Attaching one to :class:`ClusterSpec` replicates the cluster template
+    into every named region (each region composes and dispatches
+    independently, with its chain service rates scaled by that region's
+    ``capacity`` multiplier) and routes arrivals across regions with the
+    registry-named ``router`` (``repro.api.GEO_ROUTERS``) before
+    per-cluster dispatch.  ``latency[i][j]`` — one-way network latency
+    from source region ``i`` to serving region ``j`` — is added to the
+    response time of every request routed that way.  ``source_weights``
+    is the share of globally generated traffic originating in each
+    region (uniform when omitted); ``routing_epoch`` is how often
+    load-aware routers refresh their per-region load snapshot.
+    """
+
+    names: Tuple[str, ...] = ()
+    latency: Tuple[Tuple[float, ...], ...] = ()
+    capacity: Tuple[float, ...] = ()
+    cost: Tuple[float, ...] = ()
+    source_weights: Tuple[float, ...] = ()
+    router: str = "latency"
+    routing_epoch: float = 5.0
+
+    def __post_init__(self):
+        from repro.geo import RegionTopology
+
+        try:
+            topo = RegionTopology(
+                names=tuple(self.names),
+                latency=tuple(tuple(row) for row in self.latency),
+                capacity=tuple(self.capacity),
+                cost=tuple(self.cost),
+                source_weights=tuple(self.source_weights))
+        except (TypeError, ValueError) as e:
+            raise SpecError("cluster.regions", str(e)) from None
+        # store the normalized values (defaults filled in), so equal
+        # topologies spell identically in to_dict()/store keys
+        object.__setattr__(self, "names", topo.names)
+        object.__setattr__(self, "latency", topo.latency)
+        object.__setattr__(self, "capacity", topo.capacity)
+        object.__setattr__(self, "cost", topo.cost)
+        object.__setattr__(self, "source_weights", topo.source_weights)
+        try:
+            GEO_ROUTERS.validate(self.router)
+        except UnknownNameError as e:
+            raise SpecError("cluster.regions.router", str(e)) from None
+        if not self.routing_epoch > 0:
+            raise SpecError("cluster.regions.routing_epoch", "must be > 0")
+
+    @property
+    def n(self) -> int:
+        return len(self.names)
+
+    def topology(self):
+        """The executor-facing :class:`repro.geo.topology.RegionTopology`."""
+        from repro.geo import RegionTopology
+
+        return RegionTopology(names=self.names, latency=self.latency,
+                              capacity=self.capacity, cost=self.cost,
+                              source_weights=self.source_weights)
+
+    def to_dict(self) -> dict:
+        return {
+            "names": list(self.names),
+            "latency": [list(row) for row in self.latency],
+            "capacity": list(self.capacity),
+            "cost": list(self.cost),
+            "source_weights": list(self.source_weights),
+            "router": self.router,
+            "routing_epoch": self.routing_epoch,
+        }
+
+    @classmethod
+    def from_dict(cls, d) -> "RegionSpec":
+        field = "cluster.regions"
+        d = _take(d, field, ("names", "latency", "capacity", "cost",
+                             "source_weights", "router", "routing_epoch"))
+        names = d.get("names", [])
+        if not isinstance(names, (list, tuple)):
+            raise SpecError(f"{field}.names", "expected a list")
+        latency = d.get("latency", [])
+        if not isinstance(latency, (list, tuple)):
+            raise SpecError(f"{field}.latency", "expected a list of rows")
+        rows = []
+        for i, row in enumerate(latency):
+            if not isinstance(row, (list, tuple)):
+                raise SpecError(f"{field}.latency[{i}]", "expected a list")
+            rows.append(tuple(_dec_float(x, f"{field}.latency[{i}][{j}]")
+                              for j, x in enumerate(row)))
+
+        def _floats(key):
+            vals = d.get(key, [])
+            if not isinstance(vals, (list, tuple)):
+                raise SpecError(f"{field}.{key}", "expected a list")
+            return tuple(_dec_float(v, f"{field}.{key}[{i}]")
+                         for i, v in enumerate(vals))
+
+        return cls(
+            names=tuple(_dec_str(s, f"{field}.names[{i}]")
+                        for i, s in enumerate(names)),
+            latency=tuple(rows),
+            capacity=_floats("capacity"),
+            cost=_floats("cost"),
+            source_weights=_floats("source_weights"),
+            router=_dec_str(d.get("router", "latency"), f"{field}.router"),
+            routing_epoch=_dec_float(d.get("routing_epoch", 5.0),
+                                     f"{field}.routing_epoch"))
+
+
+@dataclasses.dataclass(frozen=True)
 class ClusterSpec:
     """The serving hardware: either physical ``servers`` composed through
     the paper's tuned-c -> GBP-CR -> GCA pipeline, or pre-composed
@@ -250,7 +365,13 @@ class ClusterSpec:
     (``repro.api.ENGINES``): ``"vector"`` — the interpreter event loop,
     the parity anchor — or ``"batched"`` — the compiled batched-horizon
     backend (bit-identical results, faster where its compiled paths
-    apply).  The live plane ignores it."""
+    apply).  The live plane ignores it.
+
+    ``regions`` (optional) lifts the cluster to a fleet: the same
+    cluster template is replicated into every region the
+    :class:`RegionSpec` names, scaled by its per-region capacity
+    multiplier, and arrivals are routed across regions before
+    per-cluster dispatch (see :mod:`repro.geo`)."""
 
     servers: Tuple[Server, ...] = ()
     service: Optional[ServiceSpec] = None
@@ -258,6 +379,7 @@ class ClusterSpec:
     rho_bar: float = 0.7
     tuner: str = "bound-lower"
     engine: str = "vector"
+    regions: Optional[RegionSpec] = None
 
     def __post_init__(self):
         object.__setattr__(self, "servers", tuple(self.servers))
@@ -287,9 +409,13 @@ class ClusterSpec:
             ENGINES.validate(self.engine)
         except UnknownNameError as e:
             raise SpecError("cluster.engine", str(e)) from None
+        if self.regions is not None \
+                and not isinstance(self.regions, RegionSpec):
+            raise SpecError("cluster.regions",
+                            "expected a RegionSpec or None")
 
     def to_dict(self) -> dict:
-        return {
+        out = {
             "servers": [_server_to_dict(s) for s in self.servers],
             "service": None if self.service is None
             else _service_to_dict(self.service),
@@ -298,12 +424,17 @@ class ClusterSpec:
             "tuner": self.tuner,
             "engine": self.engine,
         }
+        # emitted only when set: every pre-geo spec's dict/JSON spelling —
+        # and therefore its content-addressed store key — is unchanged
+        if self.regions is not None:
+            out["regions"] = self.regions.to_dict()
+        return out
 
     @classmethod
     def from_dict(cls, d) -> "ClusterSpec":
         d = _take(d, "cluster",
                   ("servers", "service", "job_servers", "rho_bar", "tuner",
-                   "engine"))
+                   "engine", "regions"))
         servers = d.get("servers", [])
         if not isinstance(servers, (list, tuple)):
             raise SpecError("cluster.servers", "expected a list")
@@ -318,6 +449,7 @@ class ClusterSpec:
             js.append((_dec_float(pair[0], f"cluster.job_servers[{i}]"),
                        _dec_int(pair[1], f"cluster.job_servers[{i}]")))
         service = d.get("service")
+        regions = d.get("regions")
         return cls(
             servers=tuple(_server_from_dict(s, f"cluster.servers[{i}]")
                           for i, s in enumerate(servers)),
@@ -326,7 +458,9 @@ class ClusterSpec:
             job_servers=tuple(js),
             rho_bar=_dec_float(d.get("rho_bar", 0.7), "cluster.rho_bar"),
             tuner=_dec_str(d.get("tuner", "bound-lower"), "cluster.tuner"),
-            engine=_dec_str(d.get("engine", "vector"), "cluster.engine"))
+            engine=_dec_str(d.get("engine", "vector"), "cluster.engine"),
+            regions=None if regions is None
+            else RegionSpec.from_dict(regions))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -662,17 +796,84 @@ class ExperimentSpec:
         self.workload.resolved_base_rate()
         if self.cluster.job_servers:
             cluster_events = [e for e in self.scenario.events
-                              if e.kind not in ("burst", "tenant_burst")]
+                              if e.kind not in BURST_KINDS
+                              and e.kind not in REGION_KINDS]
             if cluster_events:
                 raise SpecError(
                     "scenario.events",
                     "cluster events need a composable cluster "
                     "(cluster.servers), not pre-composed job_servers")
-            if self.autoscale is not None:
+            if self.autoscale is not None and self.cluster.regions is None:
                 raise SpecError(
                     "autoscale",
                     "autoscaling needs a composable cluster "
                     "(cluster.servers), not pre-composed job_servers")
+        self._validate_geo()
+
+    def _validate_geo(self) -> None:
+        regions = self.cluster.regions
+        region_events = [(i, e) for i, e in enumerate(self.scenario.events)
+                         if e.kind in REGION_KINDS]
+        if regions is None:
+            if region_events:
+                i, e = region_events[0]
+                raise SpecError(
+                    f"scenario.events[{i}]",
+                    f"{e.kind} events need cluster.regions (a RegionSpec)")
+            if self.workload.generator.startswith("geo-"):
+                raise SpecError(
+                    "workload.generator",
+                    f"{self.workload.generator!r} emits source-labeled "
+                    f"multi-region arrivals; set cluster.regions")
+            return
+        if self.autoscale is not None and self.cluster.job_servers:
+            raise SpecError(
+                "autoscale",
+                "per-region autoscaling needs a composable cluster "
+                "(cluster.servers), not pre-composed job_servers")
+        for i, e in enumerate(self.scenario.events):
+            if e.kind not in REGION_KINDS and e.kind not in BURST_KINDS:
+                # plain cluster events name a server sid, which is ambiguous
+                # when every region replicates the cluster — region-scoped
+                # events are the geo vocabulary
+                raise SpecError(
+                    f"scenario.events[{i}]",
+                    f"{e.kind!r} targets a single cluster; with "
+                    f"cluster.regions use region_burst / region_evacuate / "
+                    f"region_partition (or autoscale for capacity changes)")
+        known = set(regions.names)
+        evacuated = set()
+        for i, e in region_events:
+            field = f"scenario.events[{i}]"
+            if e.kind == "region_partition":
+                bad = [s for s in e.sids if s not in known]
+                if bad:
+                    raise SpecError(f"{field}.sids",
+                                    f"unknown region {bad[0]!r} "
+                                    f"(known: {', '.join(regions.names)})")
+                if len(set(e.sids)) >= regions.n:
+                    raise SpecError(
+                        f"{field}.sids",
+                        "a partition group must be a strict subset of the "
+                        "regions (the cut separates it from the rest)")
+            else:
+                if e.sid not in known:
+                    raise SpecError(f"{field}.sid",
+                                    f"unknown region {e.sid!r} "
+                                    f"(known: {', '.join(regions.names)})")
+                if e.kind == "region_evacuate":
+                    evacuated.add(e.sid)
+                if e.kind == "region_burst" \
+                        and self.workload.generator != "scenario":
+                    raise SpecError(
+                        f"{field}.kind",
+                        "region_burst shapes the arrival-rate profile, "
+                        "which only the 'scenario' workload generator "
+                        "honors")
+        if evacuated >= known:
+            raise SpecError(
+                "scenario.events",
+                "cannot evacuate every region (no survivor to drain into)")
 
     # -- seed derivation (the one place the rule lives) ---------------------
     def workload_seed(self) -> int:

@@ -106,6 +106,38 @@ def classed_mix_workload(workload, scenario, seed):
                                seed=seed)
 
 
+@WORKLOADS.register("geo-follow-the-sun")
+def geo_follow_the_sun_workload(workload, scenario, seed):
+    """Follow-the-sun diurnal arrivals, one phase-shifted stream per
+    region, source-labeled (:func:`repro.geo.workload.follow_the_sun`);
+    ``params: n_regions, amplitude, n_segments, period, weights``.
+
+    ``n_regions``/``weights`` default to the spec's
+    ``cluster.regions`` at plane-resolution time — a generator only sees
+    the workload, so multi-region specs normally omit both and the
+    executor validates the source labels against the topology."""
+    from .spec import SpecError
+
+    p = _params(workload,
+                ("n_regions", "amplitude", "n_segments", "period", "weights"))
+    if "n_regions" not in p and "weights" not in p:
+        raise SpecError(
+            "workload.params.n_regions",
+            "required by generator 'geo-follow-the-sun' (or pass weights, "
+            "one per region)")
+    from repro.geo.workload import follow_the_sun
+
+    weights = p.get("weights")
+    n_regions = int(p.get("n_regions",
+                          len(weights) if weights is not None else 0))
+    return follow_the_sun(
+        _rate(workload), scenario.horizon, n_regions,
+        amplitude=float(p.get("amplitude", 0.6)),
+        period=p.get("period"),
+        n_segments=int(p.get("n_segments", 48)),
+        weights=weights, seed=seed)
+
+
 @WORKLOADS.register("azure-trace")
 def azure_trace_workload(workload, scenario, seed):
     """Bursty azure-like MMPP trace with token counts;

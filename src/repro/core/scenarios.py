@@ -64,10 +64,16 @@ from .workload import (
 #: known event kinds — a mutable list so the declarative API's event-kind
 #: registry (``repro.api.EVENT_KINDS``) can extend it without core edits
 EVENT_KINDS = ["fail", "add", "slowdown", "burst", "fail_group",
-               "tenant_burst"]
+               "tenant_burst", "region_burst", "region_evacuate",
+               "region_partition"]
 
 #: event kinds that shape the arrival process rather than the cluster
 BURST_KINDS = ("burst", "tenant_burst")
+
+#: event kinds scoped to a geo region fleet (``repro.geo``): they are
+#: executed by the cross-region layer, never by the per-cluster membership
+#: machinery (``cluster_events`` excludes them like it excludes bursts)
+REGION_KINDS = ("region_burst", "region_evacuate", "region_partition")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -77,7 +83,15 @@ class ScenarioEvent:
     ``tenant_burst``; ``duration`` is only meaningful for bursts; ``sids``
     names the member set of a correlated ``fail_group`` (a rack, a power
     domain); ``cls`` names the request class a ``tenant_burst`` multiplies
-    (one tenant's traffic spikes, the others' stays flat)."""
+    (one tenant's traffic spikes, the others' stays flat).
+
+    Region-scoped kinds (executed by :mod:`repro.geo`) reuse the same
+    fields: ``region_burst`` multiplies one *source region's* arrival rate
+    (``sid`` = region name, ``scale``/``duration`` as for ``burst``);
+    ``region_evacuate`` drains a region out of the routing target set
+    (``sid`` = region name); ``region_partition`` cuts the named region
+    group (``sids``) off from the rest of the fleet for ``duration``
+    seconds — each side serves split-brain and reconciles on heal."""
     time: float
     kind: str
     sid: str = ""
@@ -98,6 +112,17 @@ class ScenarioEvent:
             raise ValueError("fail_group event needs a non-empty sid set")
         if self.kind == "tenant_burst" and self.cls < 0:
             raise ValueError("tenant_burst event needs a class index")
+        if self.kind in ("region_burst", "region_evacuate") and not self.sid:
+            raise ValueError(f"{self.kind} event needs a region name (sid)")
+        if self.kind == "region_partition":
+            if not self.sids:
+                raise ValueError(
+                    "region_partition event needs a non-empty region group "
+                    "(sids)")
+            if self.duration <= 0:
+                raise ValueError(
+                    "region_partition event needs a positive duration "
+                    "(partitions heal at time + duration)")
 
 
 @dataclasses.dataclass
@@ -145,10 +170,43 @@ class Scenario:
                                          duration=duration, cls=cls))
         return self
 
+    def region_burst(self, time: float, duration: float, scale: float,
+                     region: str) -> "Scenario":
+        """One source region's arrival rate spikes (a regional product
+        launch) while the other regions' traffic stays flat."""
+        self.events.append(ScenarioEvent(time, "region_burst", sid=region,
+                                         scale=scale, duration=duration))
+        return self
+
+    def region_evacuate(self, time: float, region: str) -> "Scenario":
+        """Drain a region out of the routing target set: from ``time`` on,
+        no new work is routed there (its own sources route to survivors);
+        in-queue work finishes locally."""
+        self.events.append(ScenarioEvent(time, "region_evacuate",
+                                         sid=region))
+        return self
+
+    def region_partition(self, time: float, duration: float,
+                         sids: Sequence[str]) -> "Scenario":
+        """Network partition: the named region group loses connectivity to
+        the rest of the fleet for ``duration`` seconds.  Each side routes
+        and serves split-brain; unroutable arrivals defer and reconcile at
+        ``time + duration`` (the heal)."""
+        self.events.append(ScenarioEvent(time, "region_partition",
+                                         sids=tuple(sids),
+                                         duration=duration))
+        return self
+
     # -- views ------------------------------------------------------------------
     def cluster_events(self) -> List[ScenarioEvent]:
         """fail/add/slowdown events, time-sorted (stable)."""
-        evs = [e for e in self.events if e.kind not in BURST_KINDS]
+        evs = [e for e in self.events
+               if e.kind not in BURST_KINDS and e.kind not in REGION_KINDS]
+        return sorted(evs, key=lambda e: e.time)
+
+    def region_events(self) -> List[ScenarioEvent]:
+        """Region-scoped events (``REGION_KINDS``), time-sorted (stable)."""
+        evs = [e for e in self.events if e.kind in REGION_KINDS]
         return sorted(evs, key=lambda e: e.time)
 
     def _overlay(self, base_rate: float,
@@ -186,6 +244,33 @@ class Scenario:
             bursts = [e for e in self.events
                       if e.kind == "burst"
                       or (e.kind == "tenant_burst" and e.cls == c)]
+            out.append(self._overlay(base, bursts))
+        return out
+
+    def region_arrival_phases(
+        self, base_rate: float, region: str
+    ) -> List[Tuple[float, float, float]]:
+        """One source region's rate profile: every global ``burst`` plus
+        the ``region_burst`` events addressed to it.  With no region bursts
+        this is exactly :meth:`arrival_phases` — the geo layer's
+        single-region parity anchor."""
+        bursts = [e for e in self.events
+                  if e.kind == "burst"
+                  or (e.kind == "region_burst" and e.sid == region)]
+        return self._overlay(base_rate, bursts)
+
+    def region_class_arrival_phases(
+        self, class_rates: Sequence[float], region: str
+    ) -> List[List[Tuple[float, float, float]]]:
+        """Per-class rate profiles for one source region: class ``c`` sees
+        global bursts, its own ``tenant_burst`` events, and the region's
+        ``region_burst`` events."""
+        out = []
+        for c, base in enumerate(class_rates):
+            bursts = [e for e in self.events
+                      if e.kind == "burst"
+                      or (e.kind == "tenant_burst" and e.cls == c)
+                      or (e.kind == "region_burst" and e.sid == region)]
             out.append(self._overlay(base, bursts))
         return out
 

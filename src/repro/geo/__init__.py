@@ -1,0 +1,32 @@
+"""Geo-distributed multi-region serving.
+
+Lifts the single-cluster stack to a fleet of regions: a
+:class:`RegionTopology` (names, inter-region latency matrix, capacity /
+cost multipliers), cross-region routers (:mod:`repro.geo.routing`) that
+assign arrivals to regions before per-cluster dispatch, follow-the-sun
+workloads (:mod:`repro.geo.workload`), and the executor
+(:mod:`repro.geo.executor`) that runs one engine per region under
+region-scoped scenario events — per-region bursts, evacuations, and
+network partitions with split-brain local serving and reconciliation on
+heal.
+
+Import-light by design: this package depends only on the core layers
+(numpy, ``repro.core``, ``repro.autoscale``, ``repro.obs``) so the api
+registries can write through into it without a cycle.
+"""
+from .executor import execute_geo, resolve_geo_arrivals
+from .routing import ROUTERS, make_router, register_router
+from .topology import GeoArrivals, RegionTopology
+from .workload import follow_the_sun, merge_region_streams
+
+__all__ = [
+    "GeoArrivals",
+    "RegionTopology",
+    "ROUTERS",
+    "execute_geo",
+    "follow_the_sun",
+    "make_router",
+    "merge_region_streams",
+    "register_router",
+    "resolve_geo_arrivals",
+]

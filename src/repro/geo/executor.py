@@ -1,0 +1,672 @@
+"""The geo execution loop: one cluster engine per region, one router above.
+
+``execute_geo`` lifts the sim plane's recompose loop to a fleet: each
+region runs its own composed cluster (tuned-c -> GBP-CR -> GCA, scaled
+by its capacity multiplier) or pre-composed chain set on the
+spec-selected backend, while the cross-region router assigns every
+arrival to a serving region *before* per-cluster dispatch.  A request
+originating in region ``s`` and served in region ``r`` reaches the
+serving engine at ``t + latency[s][r]`` — the latency-matrix term is in
+the engine's arrival time, so queueing/response dynamics downstream of
+routing are exact, and the *reported* response time is measured from the
+source time (network + any deferral wait included).
+
+Region-scoped scenario events:
+
+* ``region_burst`` — shapes the region's arrival-rate profile (handled
+  at workload generation via ``Scenario.region_arrival_phases``);
+* ``region_evacuate`` — cordon-and-drain: the region stops receiving
+  new work (the router drops it from every candidate set) and serves
+  out what it already accepted; future load drains into the survivors;
+* ``region_partition`` — split-brain: while the partition is active, a
+  request can only be served on its source's side of the cut.  A source
+  whose side has no serving region left defers its requests; on heal
+  they are rerouted with delivery at ``max(t + latency, heal_time)``.
+  Nothing is ever dropped — the conservation accounting
+  (``extras["partition_lost_requests"] == 0``) is a test + CI gate.
+
+Single-region parity anchor: with one region, a zero latency matrix and
+no region events, every array this module feeds the engine is bitwise
+the arrays the plain single-cluster path feeds it (same seeds, same
+composition, ``t + 0.0 == t``), so results are bit-identical on both
+engines and both RNG schemes — also a CI gate.
+
+Import-light: core layers only (numpy, ``repro.core``,
+``repro.autoscale``, ``repro.obs``) — the api plane calls in, never the
+other way around.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import math
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from ..core.engines import make_engine
+from ..core.engines.counter_rng import counter_uniforms
+from ..core.engines.result import SimResult
+from ..core.scenarios import (
+    Scenario,
+    ScenarioLogEntry,
+    ScenarioResult,
+    _apply_membership,
+    _effective,
+    _resolve_arrivals,
+    compose_or_degrade,
+)
+from ..core.servers import Server
+from ..core.workload import AZURE_STATS, classed_phased_poisson, phased_poisson
+from .routing import make_router
+from .topology import GeoArrivals, RegionTopology
+from .workload import REGION_SEED_STRIDE, merge_region_streams
+
+_INF = math.inf
+
+#: workload_seed offset of the source-labeling stream (single-stream
+#: generators get i.i.d. source regions by weight; independent of both
+#: the arrival stream and the engine RNG)
+SOURCE_SEED_OFFSET = 2
+
+
+# ---------------------------------------------------------------------------
+# Arrival resolution
+# ---------------------------------------------------------------------------
+
+def resolve_geo_arrivals(spec, scenario: Scenario, arr,
+                         topo: RegionTopology) -> GeoArrivals:
+    """The fleet's source-labeled arrival trace.
+
+    * a :class:`GeoArrivals` (geo-aware generator or explicit override)
+      passes through;
+    * the ``"scenario"`` generator becomes one phased-Poisson stream per
+      region — base rate split by ``source_weights``, global +
+      per-region bursts applied, independent seeds
+      (``workload_seed + REGION_SEED_STRIDE * r``);
+    * any single-stream generator output resolves exactly like the
+      non-geo path, then sources are labeled i.i.d. by weight from a
+      counter-RNG stream (skipped when there is a single region, so the
+      parity anchor feeds the engine untouched arrays).
+    """
+    R = topo.n
+    if isinstance(arr, GeoArrivals):
+        if len(arr) and int(arr.sources.max()) >= R:
+            raise ValueError(
+                f"arrivals name source region {int(arr.sources.max())} "
+                f"but the topology has {R} regions")
+        return arr
+    wl = spec.workload
+    seed = spec.workload_seed()
+    if arr is None and wl.generator == "scenario":
+        ws = topo.weights()
+        if wl.class_rates is not None:
+            chunks, cls_chunks = [], []
+            for r, name in enumerate(topo.names):
+                rates_r = [c * float(ws[r]) for c in wl.class_rates]
+                t, w, c = classed_phased_poisson(
+                    scenario.region_class_arrival_phases(rates_r, name),
+                    seed=seed + REGION_SEED_STRIDE * r)
+                chunks.append((t, w, r))
+                cls_chunks.append(c)
+            return merge_region_streams(chunks, cls_chunks)
+        base = wl.resolved_base_rate()
+        chunks = []
+        for r, name in enumerate(topo.names):
+            t, w = phased_poisson(
+                scenario.region_arrival_phases(base * float(ws[r]), name),
+                seed=seed + REGION_SEED_STRIDE * r)
+            chunks.append((t, w, r))
+        return merge_region_streams(chunks)
+    times, works, cls = _resolve_arrivals(
+        scenario, wl.resolved_base_rate(), seed, arr, wl.service_model,
+        wl.trace_stats or AZURE_STATS, wl.class_rates)
+    times = np.asarray(times, dtype=np.float64)
+    works = np.asarray(works, dtype=np.float64)
+    n = len(times)
+    if R == 1:
+        sources = np.zeros(n, dtype=np.int64)
+    else:
+        u = counter_uniforms(seed + SOURCE_SEED_OFFSET, np.arange(n))
+        cum = np.cumsum(topo.weights())
+        cum[-1] = 1.0            # guard the top edge against rounding
+        sources = np.searchsorted(cum, u, side="right").astype(np.int64)
+    return GeoArrivals(times, works, sources, cls)
+
+
+# ---------------------------------------------------------------------------
+# Per-region state
+# ---------------------------------------------------------------------------
+
+class _Region:
+    """One region's cluster + engine + delivery bookkeeping."""
+
+    def __init__(self, idx: int, name: str):
+        self.idx = idx
+        self.name = name
+        self.sim = None
+        self.heap: List[Tuple[float, int]] = []   # (delivery_time, jid)
+        self.jids: List[int] = []                 # engine index -> global jid
+        self.src_t: List[float] = []              # engine index -> source time
+        self.lat: List[float] = []                # engine index -> net latency
+        # composed-cluster state (None for pre-composed job_servers)
+        self.cluster: Optional[Dict[str, Server]] = None
+        self.tau: Optional[Dict[str, float]] = None
+        self.rates: List[float] = []
+        self.caps: List[int] = []
+        self.keys = None
+        self.degraded = False
+        self.base_lam = 0.0                       # source-weighted base rate
+        self.lam = 0.0                            # composition target rate
+        # autoscale state
+        self.ctl = None
+        self.tel_cursor = (0, 0.0)
+
+    @property
+    def provisioned(self) -> int:
+        base = len(self.cluster) if self.cluster is not None else 0
+        return base + (len(self.ctl.pending) if self.ctl is not None else 0)
+
+    def deliver(self, until: float) -> int:
+        """Feed every routed request with delivery time < ``until`` to the
+        engine (sorted — the heap order is (delivery, jid), so batches are
+        non-decreasing and never precede earlier batches), then advance the
+        engine to ``until``."""
+        bt: List[float] = []
+        bw: List[float] = []
+        bc: List[int] = []
+        while self.heap and self.heap[0][0] < until:
+            d, jid = heapq.heappop(self.heap)
+            bt.append(d)
+            bw.append(_WORKS[jid])
+            bc.append(_CLS[jid] if _CLS is not None else 0)
+            self.jids.append(jid)
+            self.src_t.append(_TIMES[jid])
+            self.lat.append(d - _TIMES[jid])
+        if bt:
+            self.sim.add_arrivals(
+                np.asarray(bt, dtype=np.float64),
+                np.asarray(bw, dtype=np.float64),
+                np.asarray(bc, dtype=np.int64) if _CLS is not None else None)
+        if until == _INF:
+            self.sim.run_to_completion()
+        else:
+            self.sim.run_until(until)
+        return len(bt)
+
+    def drained(self) -> bool:
+        s = self.sim
+        return (not self.heap and s.queue_len() == 0 and s.in_flight == 0
+                and len(s.comp) + s.n_rejected == s.n)
+
+
+# module-level views set by execute_geo for _Region.deliver (avoids
+# threading three arrays through every call; executor runs are reentrant
+# per call, not concurrent)
+_TIMES = _WORKS = _CLS = None
+
+
+# ---------------------------------------------------------------------------
+# The executor
+# ---------------------------------------------------------------------------
+
+def execute_geo(spec, scenario: Scenario, arrivals=None, trace: bool = False):
+    """Run a multi-region spec; returns
+    ``(ScenarioResult, n_servers_final, geo_extras, run_trace, metrics)``
+    (the last two ``None`` unless ``trace=True``).
+
+    ``arrivals`` is the already-resolved workload (a :class:`GeoArrivals`,
+    a column-array tuple, or ``None`` for scenario-generated) — the api
+    plane resolves the registry generator before calling in.
+    """
+    global _TIMES, _WORKS, _CLS
+    rspec = spec.cluster.regions
+    topo: RegionTopology = rspec.topology()
+    R = topo.n
+    router = make_router(rspec.router, topo)
+    ga = resolve_geo_arrivals(spec, scenario, arrivals, topo)
+    _TIMES, _WORKS, _CLS = ga.times, ga.works, ga.cls
+    n = len(ga)
+    lat = topo.latency_matrix()
+    classes = list(spec.workload.classes) if spec.workload.classes else None
+    warmup = spec.warmup_fraction
+
+    tracers = [None] * R
+    metrics = None
+    if trace:
+        from repro.obs import MetricsRegistry, Tracer
+        tracers = [Tracer() for _ in range(R)]
+        metrics = MetricsRegistry()
+
+    # ---- per-region clusters + engines ------------------------------------
+    regions = [_Region(r, topo.names[r]) for r in range(R)]
+    base_rate = spec.workload.resolved_base_rate()
+    composed = not spec.cluster.job_servers
+    for r, reg in enumerate(regions):
+        kappa = topo.capacity[r]
+        if composed:
+            # a capacity-kappa region's hardware is kappa-times faster:
+            # every per-block/cache time scales by 1/kappa, which scales
+            # every composed chain's service rate by exactly kappa
+            reg.cluster = {
+                s.sid: Server(s.sid, s.memory_gb, s.tau_c / kappa,
+                              s.tau_p / kappa)
+                for s in spec.cluster.servers}
+            reg.tau = {sid: 1.0 for sid in reg.cluster}
+            reg.base_lam = reg.lam = base_rate * float(topo.weights()[r])
+            reg.rates, reg.caps, reg.keys, reg.degraded = compose_or_degrade(
+                _effective(reg.cluster, reg.tau), spec.cluster.service,
+                reg.lam, spec.cluster.rho_bar, spec.cluster.tuner)
+        else:
+            reg.rates = [m * kappa for m, _ in spec.cluster.job_servers]
+            reg.caps = [c for _, c in spec.cluster.job_servers]
+            reg.base_lam = reg.lam = base_rate * float(topo.weights()[r])
+        reg.sim = make_engine(
+            spec.cluster.engine, reg.rates, reg.caps,
+            policy=spec.policy.name, seed=spec.engine_seed() + r,
+            keys=reg.keys, classes=classes,
+            aging_rate=spec.policy.aging_rate,
+            admission_level=spec.admission.level,
+            rng_scheme=spec.rng_scheme, tracer=tracers[r])
+
+    # ---- the vmap-over-regions fast path ----------------------------------
+    # with a static router, no region timeline and no controllers the
+    # regions never interact after routing: stack them as grid-kernel rows
+    # (bit-identical to the sequential loop below — pinned in tests)
+    from .grid import try_geo_grid
+
+    fast = try_geo_grid(spec, scenario, ga, topo, router, regions, trace)
+    if fast is not None:
+        merged, per_region, routed_to, mean_lat = fast
+        sourced = np.zeros(R, dtype=np.int64)
+        if n:
+            np.add.at(sourced, ga.sources, 1)
+        result = ScenarioResult(
+            result=merged, log=[], n_jobs=n, completed_all=True,
+            reconfigurations=0, restarts=0, n_rejected=0)
+        extras = {
+            "regions": list(topo.names),
+            "router": rspec.router,
+            "sourced": {topo.names[r]: int(sourced[r]) for r in range(R)},
+            "routed": {topo.names[r]: int(routed_to[r]) for r in range(R)},
+            "per_region": per_region,
+            "n_deferred": 0,
+            "mean_network_latency": mean_lat,
+            "partition_lost_requests": 0,
+            "fast_path": True,
+        }
+        n_final = sum(len(reg.cluster) if reg.cluster is not None
+                      else len(reg.caps) for reg in regions)
+        _TIMES = _WORKS = _CLS = None
+        return result, n_final, extras, None, None
+
+    # ---- autoscale: one controller per region, a global budget ------------
+    controllers = False
+    if spec.autoscale is not None:
+        controllers = True
+        global_max = spec.autoscale.max_servers
+        for reg in regions:
+            reg.ctl = spec.autoscale.build_controller()
+            if metrics is not None:
+                reg.ctl.metrics = metrics
+            reg.ctl.admission_level = reg.sim.admission_level
+            reg.ctl.bill(0.0, reg.provisioned)
+
+    # ---- routing state -----------------------------------------------------
+    evacuated: set = set()
+    partitions: List[frozenset] = []
+    deferred: List[int] = []
+    n_deferred_total = 0
+    routed_to = np.zeros(R, dtype=np.int64)
+    sourced = np.zeros(R, dtype=np.int64)
+    log: List[ScenarioLogEntry] = []
+    geo_markers: List[Tuple[float, str, dict]] = []
+
+    all_regions = list(range(R))
+
+    def candidates(src: int) -> List[int]:
+        out = []
+        for r in all_regions:
+            if r in evacuated:
+                continue
+            if any((src in g) != (r in g) for g in partitions):
+                continue
+            out.append(r)
+        return out
+
+    cand_cache = [candidates(s) for s in all_regions]
+    loads = None
+
+    def refresh_loads() -> None:
+        nonlocal loads
+        if getattr(router, "needs_load", False):
+            loads = np.asarray(
+                [(reg.sim.queue_len() + reg.sim.in_flight)
+                 / max(1, reg.sim.total_capacity) for reg in regions])
+
+    def route(jid: int, not_before: Optional[float] = None) -> None:
+        nonlocal n_deferred_total
+        src = int(ga.sources[jid])
+        cand = cand_cache[src]
+        if not cand:
+            deferred.append(jid)
+            n_deferred_total += 1
+            return
+        r = router.pick(src, cand, loads)
+        d = float(ga.times[jid]) + float(lat[src][r])
+        if not_before is not None and d < not_before:
+            d = not_before           # deferral wait: rerouted on heal
+        heapq.heappush(regions[r].heap, (d, jid))
+        routed_to[r] += 1
+
+    def reroute_deferred(at: float) -> int:
+        """State changed: retry everything waiting for a reachable region."""
+        if not deferred:
+            return 0
+        waiting, deferred[:] = list(deferred), []
+        moved = 0
+        for jid in waiting:
+            before = len(deferred)
+            route(jid, not_before=at)
+            moved += len(deferred) == before
+        return moved
+
+    # ---- the scripted region timeline -------------------------------------
+    acts: List[Tuple[float, int, str, object]] = []
+    for e in scenario.region_events():
+        if e.kind == "region_evacuate":
+            acts.append((e.time, len(acts), "evacuate", topo.index(e.sid)))
+        elif e.kind == "region_partition":
+            g = frozenset(topo.index(s) for s in e.sids)
+            acts.append((e.time, len(acts), "partition", g))
+            acts.append((e.time + e.duration, len(acts), "heal", g))
+    acts.sort(key=lambda a: (a[0], a[1]))
+
+    def apply_action(t: float, kind: str, payload) -> None:
+        if kind == "evacuate":
+            evacuated.add(payload)
+            sid = topo.names[payload]
+        elif kind == "partition":
+            partitions.append(payload)
+            sid = ",".join(topo.names[i] for i in sorted(payload))
+        else:                         # heal
+            partitions.remove(payload)
+            sid = ",".join(topo.names[i] for i in sorted(payload))
+        cand_cache[:] = [candidates(s) for s in all_regions]
+        moved = reroute_deferred(t)
+        log.append(ScenarioLogEntry(
+            time=t, kind=f"region_{kind}" if kind != "heal"
+            else "region_heal", sid=sid, requeued=moved,
+            n_chains=sum(len(reg.rates) for reg in regions),
+            total_rate=float(sum(m * c for reg in regions
+                                 for m, c in zip(reg.rates, reg.caps))),
+            degraded=any(reg.degraded for reg in regions)))
+        geo_markers.append((t, f"region-{kind}",
+                            {"regions": sid, "rerouted": moved,
+                             "deferred": len(deferred)}))
+
+    # ---- per-region recompose (autoscale actuation) ------------------------
+    def recompose_region(reg: _Region, at: float, kind: str, sid_str: str,
+                         requeue_lam: float, mode: str = "drain") -> None:
+        reg.rates, reg.caps, reg.keys, reg.degraded = compose_or_degrade(
+            _effective(reg.cluster, reg.tau), spec.cluster.service,
+            requeue_lam, spec.cluster.rho_bar, spec.cluster.tuner)
+        reg.lam = requeue_lam
+        drains_before = reg.sim.drains
+        requeued = reg.sim.reconfigure(reg.rates, reg.caps, at_time=at,
+                                       keys=reg.keys, mode=mode)
+        log.append(ScenarioLogEntry(
+            time=at, kind=kind, sid=f"{reg.name}:{sid_str}",
+            requeued=requeued, n_chains=len(reg.rates),
+            total_rate=float(sum(m * c
+                                 for m, c in zip(reg.rates, reg.caps))),
+            degraded=reg.degraded, drained=reg.sim.drains - drains_before))
+
+    def control_tick_all(t: float) -> None:
+        from repro.autoscale import ClusterView
+        from repro.autoscale.telemetry import sample_simulator
+
+        for reg in regions:
+            reg.tel_cursor = sample_simulator(
+                reg.ctl.telemetry, reg.sim, t, len(reg.cluster),
+                reg.tel_cursor)
+        for reg in regions:
+            # the global budget: this region may grow only into whatever
+            # headroom the *fleet* has left (first-come in region order —
+            # deterministic, and re-evaluated every tick)
+            fleet = sum(r2.provisioned for r2 in regions)
+            headroom = max(0, global_max - fleet)
+            reg.ctl.cfg = dataclasses.replace(
+                reg.ctl.cfg, max_servers=reg.provisioned + headroom)
+            view = ClusterView(
+                servers=_effective(reg.cluster, reg.tau),
+                pending=[s for _, s in reg.ctl.pending],
+                spec=spec.cluster.service, rho_bar=spec.cluster.rho_bar,
+                total_rate=float(sum(m * c
+                                     for m, c in zip(reg.rates, reg.caps))),
+                admission_level=reg.sim.admission_level)
+            events = reg.ctl.control_tick(view, t, list(reg.cluster))
+            lvl = getattr(reg.ctl, "admission_level", None)
+            if lvl is not None and lvl != reg.sim.admission_level:
+                reg.sim.set_admission_level(lvl)
+                log.append(ScenarioLogEntry(
+                    time=t, kind="auto-admission", sid=f"{reg.name}:{lvl:g}",
+                    requeued=0, n_chains=len(reg.rates),
+                    total_rate=float(sum(m * c for m, c
+                                         in zip(reg.rates, reg.caps))),
+                    degraded=reg.degraded))
+            if events:
+                sids = [_apply_membership(reg.cluster, reg.tau, ev)
+                        for ev in events]
+                recompose_region(
+                    reg, t, "auto-" + "+".join(e.kind for e in events),
+                    ",".join(sids), reg.ctl.compose_rate(reg.base_lam),
+                    mode="drain")
+            elif reg.ctl.needs_retune(reg.lam, reg.base_lam):
+                recompose_region(
+                    reg, t, "auto-retune", "",
+                    reg.ctl.compose_rate(reg.base_lam), mode="drain")
+            reg.ctl.bill(t, reg.provisioned)
+
+    # ---- the window loop ---------------------------------------------------
+    cursor = 0                       # next unrouted arrival (jid order)
+    ai = 0
+    epoch = rspec.routing_epoch
+    next_epoch = epoch
+    tick = _INF
+    if controllers:
+        interval = regions[0].ctl.cfg.interval
+        tick = interval
+        max_t = scenario.horizon * 3.0 + interval
+    refresh_loads()
+    if n:
+        np.add.at(sourced, ga.sources, 1)
+
+    while True:
+        t_act = acts[ai][0] if ai < len(acts) else _INF
+        t_epoch = next_epoch if (getattr(router, "needs_load", False)
+                                 and cursor < n) else _INF
+        t_tick = tick if controllers else _INF
+        T = min(t_act, t_epoch, t_tick)
+        if T == _INF:
+            break
+        while cursor < n and ga.times[cursor] < T:
+            route(cursor)
+            cursor += 1
+        for reg in regions:
+            reg.deliver(T)
+        while ai < len(acts) and acts[ai][0] == T:
+            _, _, kind, payload = acts[ai]
+            apply_action(T, kind, payload)
+            ai += 1
+        if t_epoch == T:
+            next_epoch += epoch
+        if controllers and t_tick == T:
+            control_tick_all(T)
+            tick += interval
+            done = (cursor >= n and not deferred
+                    and all(reg.drained() for reg in regions))
+            if tick > max_t or (done and tick > scenario.horizon
+                                and ai >= len(acts)):
+                controllers = False          # stop ticking; final drain next
+        refresh_loads()
+
+    # ---- final drain: route the tail, deliver everything, run dry ---------
+    while cursor < n:
+        route(cursor)
+        cursor += 1
+    # every region reachable again (validation guarantees a survivor and
+    # all partitions heal), so the deferred tail must route now
+    last_t = float(ga.times[-1]) if n else 0.0
+    reroute_deferred(max(last_t,
+                         acts[-1][0] if acts else 0.0))
+    for reg in regions:
+        reg.deliver(_INF)
+    if spec.autoscale is not None:
+        for reg in regions:
+            reg.ctl.finalize(reg.sim.now)
+
+    # ---- merge results -----------------------------------------------------
+    merged, per_region, resp_by_region = _merge_results(regions, warmup)
+    n_delivered = sum(len(reg.jids) for reg in regions)
+    n_completed = sum(len(reg.sim.comp) for reg in regions)
+    n_rejected = sum(reg.sim.n_rejected for reg in regions)
+    lost = n - n_completed - n_rejected
+    completed_all = (n_delivered == n and not deferred
+                     and all(reg.drained() for reg in regions))
+    result = ScenarioResult(
+        result=merged,
+        log=sorted(log, key=lambda e: e.time),
+        n_jobs=n,
+        completed_all=completed_all,
+        reconfigurations=sum(reg.sim.reconfigurations for reg in regions),
+        restarts=sum(reg.sim.restarts for reg in regions),
+        n_rejected=n_rejected,
+    )
+    mean_lat = float(np.mean(np.concatenate(
+        [np.asarray(reg.lat) for reg in regions if reg.lat]))) \
+        if n_delivered else 0.0
+    extras = {
+        "regions": list(topo.names),
+        "router": rspec.router,
+        "sourced": {topo.names[r]: int(sourced[r]) for r in all_regions},
+        "routed": {topo.names[r]: int(routed_to[r]) for r in all_regions},
+        "per_region": per_region,
+        "n_deferred": int(n_deferred_total),
+        "mean_network_latency": mean_lat,
+        "partition_lost_requests": int(lost),
+        "fast_path": False,
+    }
+    if spec.autoscale is not None:
+        extras["cost_per_region"] = {
+            reg.name: reg.ctl.report(
+                resp_by_region[reg.idx],
+                final_servers=len(reg.cluster)).as_dict()
+            for reg in regions}
+        extras["fleet_servers_final"] = sum(
+            len(reg.cluster) for reg in regions)
+        extras["scaling_records"] = {
+            reg.name: [dataclasses.asdict(rec) for rec in reg.ctl.records]
+            for reg in regions}
+    if metrics is not None:
+        _publish_geo_metrics(metrics, topo, routed_to, sourced,
+                             n_deferred_total, lost, regions)
+    run_trace = None
+    if trace:
+        run_trace = _decode_geo_trace(spec, topo, regions, tracers,
+                                      geo_markers, log)
+    n_final = sum(len(reg.cluster) if reg.cluster is not None
+                  else len(reg.caps) for reg in regions)
+    _TIMES = _WORKS = _CLS = None
+    return result, n_final, extras, run_trace, metrics
+
+
+def _merge_results(regions: List[_Region],
+                   warmup: float) -> Tuple[SimResult, dict, List[np.ndarray]]:
+    """Concatenate per-region results (region order) with response/waiting
+    measured from each request's *source* time — engine trimming semantics
+    mirrored exactly, so a single zero-latency region reproduces the plain
+    engine result bit for bit."""
+    resp_all, wait_all, serv_all, cls_all = [], [], [], []
+    rej_cls_all = []
+    resp_by_region: List[np.ndarray] = []
+    sim_time = 0.0
+    n_completed = 0
+    per_region = {}
+    for reg in regions:
+        res = reg.sim.result(warmup)      # flushes pending drains into comp
+        sim_time = max(sim_time, res.sim_time)
+        comp = np.asarray(reg.sim.comp, dtype=np.int64)
+        skip = int(len(comp) * warmup)
+        kept = comp[skip:]
+        src_t = np.asarray(reg.src_t, dtype=np.float64)
+        st = np.asarray(reg.sim.st, dtype=np.float64)
+        fin = np.asarray(reg.sim.fin, dtype=np.float64)
+        cls = np.asarray(reg.sim.cls, dtype=np.int64)
+        resp = fin[kept] - src_t[kept] if len(kept) \
+            else np.empty(0, dtype=np.float64)
+        resp_by_region.append(resp)
+        if len(kept):
+            resp_all.append(resp)
+            wait_all.append(st[kept] - src_t[kept])
+            serv_all.append(fin[kept] - st[kept])
+            cls_all.append(cls[kept])
+        rej = np.asarray(reg.sim.rejected, dtype=np.int64)
+        if len(rej):
+            rej_cls_all.append(cls[rej])
+        n_completed += len(kept)
+        per_region[reg.name] = {
+            "n_routed": len(reg.jids),
+            "n_completed": len(reg.sim.comp),
+            "n_rejected": reg.sim.n_rejected,
+            "p99": float(np.percentile(resp, 99)) if len(resp) else math.nan,
+            "mean_network_latency": float(np.mean(reg.lat))
+            if reg.lat else 0.0,
+        }
+    cat = (lambda parts: np.concatenate(parts) if parts
+           else np.empty(0, dtype=np.float64))
+    cat_i = (lambda parts: np.concatenate(parts) if parts
+             else np.empty(0, dtype=np.int64))
+    merged = SimResult(
+        cat(resp_all), cat(wait_all), cat(serv_all), n_completed, sim_time,
+        class_ids=cat_i(cls_all),
+        n_rejected=sum(reg.sim.n_rejected for reg in regions),
+        rejected_class_ids=cat_i(rej_cls_all))
+    return merged, per_region, resp_by_region
+
+
+def _publish_geo_metrics(metrics, topo, routed_to, sourced, n_deferred,
+                         lost, regions) -> None:
+    metrics.counter("geo.deferred").value = int(n_deferred)
+    metrics.counter("geo.lost").value = int(lost)
+    for r, name in enumerate(topo.names):
+        metrics.counter(f"geo.sourced.{name}").value = int(sourced[r])
+        metrics.counter(f"geo.routed.{name}").value = int(routed_to[r])
+        metrics.counter(f"geo.completed.{name}").value = \
+            len(regions[r].sim.comp)
+
+
+def _decode_geo_trace(spec, topo, regions, tracers, geo_markers, log):
+    """Decode each region's engine trace and merge into one timeline —
+    one lane group (process) per region, plus fleet-level markers for
+    partitions / heals / evacuations."""
+    from repro.obs import decode_sim_trace
+    from repro.obs.decode import merge_region_traces
+    from repro.obs.trace import Marker
+
+    traces = {}
+    for r, reg in enumerate(regions):
+        markers = [Marker(float(e.time), e.kind, "scenario",
+                          args={"sid": e.sid, "requeued": e.requeued})
+                   for e in log if e.sid.startswith(f"{reg.name}:")]
+        traces[reg.name] = decode_sim_trace(
+            tracers[r].engine, tracers[r], markers=markers,
+            meta={"region": reg.name})
+    fleet_markers = [Marker(t, kind, "geo", args=args)
+                     for (t, kind, args) in geo_markers]
+    return merge_region_traces(
+        traces, markers=fleet_markers,
+        meta={"spec": spec.name, "router": spec.cluster.regions.router,
+              "regions": list(topo.names),
+              "policy": spec.policy.name,
+              "rng_scheme": spec.rng_scheme})

@@ -1,0 +1,206 @@
+"""The vmap-over-regions fast path for the batched backend.
+
+Between partition/evacuation boundaries the regions are *independent*:
+once the router has assigned every arrival, each region's trajectory is
+a function of its own delivery stream alone.  With a static router, no
+region timeline and no autoscale controller there are no boundaries at
+all — so instead of running one compiled scan per region sequentially,
+the per-region event kernels stack into the same grid kernels the
+one-pass sweep uses (:func:`~repro.core.engines.batched.run_grid`'s
+machinery): regions with identical composed chains become rows of one
+``vmap``-ed call, exactly the way seeds already do.
+
+Padding: rows are right-padded to the widest region with zero-work
+arrivals strictly after every real completion, so pads start and finish
+instantly at the tail and never perturb a real job's trajectory, RNG
+draw (counter draws are indexed by position, and pads sit after every
+real index) or completion order.  The pads are then dropped from the
+accounting.
+
+Bit-parity is inherited, not re-derived: the grid kernels are pinned
+bit-identical to the single-run kernels by the sweep one-pass tests, the
+single-run kernels to the interpreter by the engine parity tests, and
+the routing/delivery/trimming arithmetic here mirrors the sequential
+executor operation for operation (same float64 ops, same lexsort order,
+same warmup trim).  ``extras["fast_path"]`` reports which path ran;
+``tests/test_geo.py`` pins the two paths equal.
+"""
+from __future__ import annotations
+
+import math
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from ..core.engines.counter_rng import counter_uniforms
+from ..core.engines.kernels import CENTRAL_QUEUE_POLICIES, RNG_POLICIES
+from ..core.engines.result import SimResult
+
+_INF = math.inf
+
+__all__ = ["try_geo_grid"]
+
+
+def _eligible(spec, scenario, ga, router, regions, trace) -> bool:
+    if trace or spec.autoscale is not None:
+        return False
+    if spec.cluster.engine != "batched":
+        return False
+    if len(ga) == 0 or ga.cls is not None or spec.workload.classes:
+        return False
+    if spec.admission.level != 1.0 or spec.policy.aging_rate != 0.0:
+        return False
+    if any(reg.keys is not None for reg in regions):
+        return False
+    # a load-aware router re-freezes its snapshot every epoch — those
+    # epochs are boundaries, so it stays on the sequential path
+    if getattr(router, "needs_load", False) or \
+            not getattr(router, "static", False):
+        return False
+    for e in scenario.region_events():
+        if e.kind in ("region_evacuate", "region_partition"):
+            return False
+    # class-blind "priority" with default admission degenerates to jffc
+    # (the eligibility gates above pin exactly that), so every central-
+    # queue policy rides the jffc grid kernel; RNG-consuming dedicated-
+    # queue kernels need the stateless counter draws
+    if spec.policy.name in RNG_POLICIES and spec.rng_scheme != "counter":
+        return False
+    from ..core.engines.batched import jax_available
+
+    return jax_available()
+
+
+def try_geo_grid(spec, scenario, ga, topo, router, regions, trace):
+    """Run the whole fleet as stacked grid-kernel rows; ``None`` when any
+    eligibility condition fails (the caller falls back to the sequential
+    per-region loop, bit-identical either way).
+
+    Returns ``(merged SimResult, per_region dict, routed_to, mean_lat)``.
+    """
+    if not _eligible(spec, scenario, ga, router, regions, trace):
+        return None
+    from ..core.engines import jax_scan
+
+    n = len(ga)
+    R = topo.n
+    lat = topo.latency_matrix()
+    sources = ga.sources
+    warmup = spec.warmup_fraction
+    policy = spec.policy.name
+
+    # ---- route everything up front (no boundaries => one assignment) ------
+    r_of = router.assign(sources, list(range(R)))
+    routed_to = np.bincount(r_of, minlength=R).astype(np.int64)
+
+    # per-region delivery streams in the heap's (delivery, jid) order
+    jids: List[np.ndarray] = []
+    deliv: List[np.ndarray] = []
+    for r in range(R):
+        idx = np.nonzero(r_of == r)[0]
+        d = ga.times[idx] + lat[sources[idx], r]
+        perm = np.lexsort((idx, d))
+        jids.append(idx[perm])
+        deliv.append(d[perm])
+
+    # ---- stack regions with identical chains into one kernel call ---------
+    groups = {}
+    for reg in regions:
+        key = (tuple(float(m) for m in reg.rates), tuple(reg.caps))
+        groups.setdefault(key, []).append(reg.idx)
+
+    st_by: List[Optional[np.ndarray]] = [None] * R
+    fin_by: List[Optional[np.ndarray]] = [None] * R
+    order_by: List[Optional[np.ndarray]] = [None] * R
+    for (rates, caps), rows in groups.items():
+        widths = [len(jids[r]) for r in rows]
+        width = max(widths)
+        if width == 0:
+            continue
+        # pads start strictly after any real completion can occur: last
+        # delivery plus all real work serialized on the slowest chain
+        pad0 = max(float(deliv[r][-1]) for r in rows if len(deliv[r])) \
+            + sum(float(ga.works[jids[r]].sum()) for r in rows) \
+            / min(rates) + 1.0
+        times = np.empty((len(rows), width))
+        works = np.empty((len(rows), width))
+        for i, r in enumerate(rows):
+            k = widths[i]
+            times[i, :k] = deliv[r]
+            times[i, k:] = pad0 + np.arange(width - k)
+            works[i, :k] = ga.works[jids[r]]
+            works[i, k:] = 0.0
+        chain_order = sorted(range(len(rates)),
+                             key=lambda c: (-rates[c], c))
+        if policy in CENTRAL_QUEUE_POLICIES:
+            slot_rate, slot_prio, _ = jax_scan.slot_layout(
+                rates, caps, chain_order)
+            starts, finishes = jax_scan.run_jffc_scan_grid(
+                times, works, slot_rate, slot_prio)
+            orders = np.argsort(finishes, axis=1, kind="stable")
+            for i, r in enumerate(rows):
+                st_by[r] = starts[i]
+                fin_by[r] = finishes[i]
+                order_by[r] = orders[i][orders[i] < widths[i]]
+        else:
+            if policy in RNG_POLICIES:
+                us = np.stack(
+                    [counter_uniforms(spec.engine_seed() + r,
+                                      np.arange(width)) for r in rows])
+            else:
+                us = np.zeros((len(rows), width))
+            slot_rate, _, slot_chain = jax_scan.slot_layout(
+                rates, caps, chain_order)
+            ys, st, fin = jax_scan.run_event_scan_grid(
+                policy, times, works, us, slot_rate, slot_chain,
+                rates, caps, chain_order)
+            for i, r in enumerate(rows):
+                dep = ys[i][ys[i] >= 0]
+                st_by[r] = st[i][:width]
+                fin_by[r] = fin[i][:width]
+                order_by[r] = dep[dep < widths[i]]
+
+    # ---- per-region accounting: the sequential merge, vectorized ----------
+    resp_all, wait_all, serv_all = [], [], []
+    lat_all: List[np.ndarray] = []
+    per_region = {}
+    sim_time = 0.0
+    n_completed = 0
+    for r, reg in enumerate(regions):
+        jr = jids[r]
+        k = len(jr)
+        if k == 0:
+            per_region[reg.name] = {
+                "n_routed": 0, "n_completed": 0, "n_rejected": 0,
+                "p99": math.nan, "mean_network_latency": 0.0}
+            continue
+        comp = order_by[r]
+        skip = int(k * warmup)
+        kept = comp[skip:]
+        src_t = ga.times[jr]
+        st_r, fin_r = st_by[r], fin_by[r]
+        resp = fin_r[kept] - src_t[kept]
+        resp_all.append(resp)
+        wait_all.append(st_r[kept] - src_t[kept])
+        serv_all.append(fin_r[kept] - st_r[kept])
+        net = deliv[r] - src_t
+        lat_all.append(net)
+        sim_time = max(sim_time, float(fin_r[:k].max()))
+        n_completed += len(kept)
+        per_region[reg.name] = {
+            "n_routed": k,
+            "n_completed": k,
+            "n_rejected": 0,
+            "p99": float(np.percentile(resp, 99)) if len(resp) else math.nan,
+            "mean_network_latency": float(np.mean(net)),
+        }
+    cat = (lambda parts: np.concatenate(parts) if parts
+           else np.empty(0, dtype=np.float64))
+    merged = SimResult(
+        cat(resp_all), cat(wait_all), cat(serv_all), n_completed, sim_time,
+        class_ids=np.zeros(n_completed, dtype=np.int64) if n_completed
+        else np.empty(0, dtype=np.int64),
+        n_rejected=0,
+        rejected_class_ids=np.empty(0, dtype=np.int64))
+    mean_lat = float(np.mean(np.concatenate(lat_all))) if lat_all else 0.0
+    return merged, per_region, routed_to, mean_lat

@@ -1,0 +1,162 @@
+"""Cross-region routers: assign each arrival to a serving region.
+
+Routers sit *above* per-cluster dispatch: the geo executor asks the
+router to pick a region for every request (given its source region and
+the set of regions currently reachable from it), then the chosen
+region's own engine + dispatch policy take over.  The request pays the
+one-way latency ``lat[source][region]`` on top of whatever the region's
+cluster does with it.
+
+The registry here is a plain dict so this module stays import-light
+(numpy only, no spec/api machinery — the api layer write-throughs into
+it via ``repro.api.registry.GEO_ROUTERS``).  A router *factory* takes
+the :class:`~repro.geo.topology.RegionTopology` and returns an object
+with::
+
+    pick(source: int, candidates: Sequence[int], loads) -> int
+
+``candidates`` is the non-empty, sorted tuple of region indices the
+request may legally be served in (same side of every active partition,
+not evacuated).  ``loads`` is a per-region load snapshot (queue depth +
+in-flight, normalised by provisioned servers) frozen at the last
+routing epoch, or ``None`` for routers that don't ask for one
+(``needs_load`` is False).  Ties break deterministically on the lowest
+region index so both engines and all RNG schemes agree bit-for-bit.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional, Sequence
+
+import numpy as np
+
+from .topology import RegionTopology
+
+__all__ = ["ROUTERS", "register_router", "make_router"]
+
+ROUTERS: Dict[str, Callable[[RegionTopology], "object"]] = {}
+
+
+def register_router(name: str):
+    """Decorator: register a router factory under ``name``."""
+
+    def deco(factory):
+        ROUTERS[name] = factory
+        return factory
+
+    return deco
+
+
+def make_router(name: str, topology: RegionTopology):
+    try:
+        factory = ROUTERS[name]
+    except KeyError:
+        raise ValueError(f"unknown geo router {name!r} "
+                         f"(known: {', '.join(sorted(ROUTERS))})") from None
+    return factory(topology)
+
+
+class _RouterBase:
+    """Shared shape: cache the latency matrix, default to no load feed."""
+
+    needs_load = False
+    #: True when pick() depends only on (source, candidates) — lets the
+    #: batched fast path precompute the whole assignment as one gather.
+    static = True
+    #: True when pick() depends on the *source alone* (given a fixed
+    #: candidate set) — assign() becomes a table gather.
+    source_only = False
+
+    def __init__(self, topology: RegionTopology):
+        self.topology = topology
+        self.lat = topology.latency_matrix()
+
+    def pick(self, source: int, candidates: Sequence[int],
+             loads: Optional[np.ndarray]) -> int:  # pragma: no cover
+        raise NotImplementedError
+
+    def assign(self, sources: np.ndarray,
+               candidates: Sequence[int]) -> np.ndarray:
+        """Vectorized pick() over a whole arrival stream against one fixed
+        candidate set (the batched fast path: no partitions/evacuations in
+        flight, so every request sees the same candidates).  Must be
+        element-for-element identical to calling pick() in stream order."""
+        if self.source_only:
+            table = np.asarray(
+                [self.pick(s, candidates, None)
+                 for s in range(self.topology.n)], dtype=np.int64)
+            return table[np.asarray(sources, dtype=np.int64)]
+        return np.asarray([self.pick(int(s), candidates, None)
+                           for s in sources], dtype=np.int64)
+
+
+@register_router("round-robin")
+class RoundRobinRouter(_RouterBase):
+    """Region-blind baseline: cycle through candidate regions in index
+    order, ignoring both latency and load.  The counter persists across
+    picks (and across partition boundaries) so the stream really is a
+    global round-robin, not per-candidate-set."""
+
+    def __init__(self, topology: RegionTopology):
+        super().__init__(topology)
+        self._next = 0
+
+    def pick(self, source, candidates, loads):
+        choice = candidates[self._next % len(candidates)]
+        self._next += 1
+        return int(choice)
+
+    def assign(self, sources, candidates):
+        n = len(sources)
+        cand = np.asarray(candidates, dtype=np.int64)
+        out = cand[(self._next + np.arange(n)) % len(cand)]
+        self._next += n
+        return out
+
+
+@register_router("latency")
+class LatencyRouter(_RouterBase):
+    """Serve where the network is closest: argmin of one-way latency
+    from the request's source region, ties to the lowest index.  With a
+    zero diagonal this keeps traffic home whenever home is reachable."""
+
+    source_only = True
+
+    def pick(self, source, candidates, loads):
+        row = self.lat[source]
+        best = min(candidates, key=lambda r: (row[r], r))
+        return int(best)
+
+
+@register_router("load")
+class LoadRouter(_RouterBase):
+    """Load-aware: argmin of the frozen per-region load snapshot
+    (queue + in-flight per provisioned server), latency as the
+    tiebreak, index as the final tiebreak.  Load snapshots refresh at
+    routing epochs, so between epochs the choice is deterministic."""
+
+    needs_load = True
+    static = False
+
+    def pick(self, source, candidates, loads):
+        row = self.lat[source]
+        if loads is None:
+            best = min(candidates, key=lambda r: (row[r], r))
+        else:
+            best = min(candidates, key=lambda r: (loads[r], row[r], r))
+        return int(best)
+
+
+@register_router("cost")
+class CostRouter(_RouterBase):
+    """Cost-aware: serve in the cheapest reachable region ($/server-s
+    multiplier from the topology), latency as the tiebreak.  Models the
+    follow-the-cheap-energy placement of the geo-distributed follow-up
+    paper."""
+
+    source_only = True
+
+    def pick(self, source, candidates, loads):
+        row = self.lat[source]
+        cost = self.topology.cost
+        best = min(candidates, key=lambda r: (cost[r], row[r], r))
+        return int(best)

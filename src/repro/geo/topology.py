@@ -1,0 +1,141 @@
+"""Region/zone topology: the geo layer's core value type.
+
+A :class:`RegionTopology` describes a fleet of serving regions — names,
+the inter-region latency matrix (seconds, one-way), per-region capacity
+and cost multipliers, and the fraction of global traffic that *originates*
+in each region.  It is deliberately numpy-plain (no spec machinery): the
+declarative twin, :class:`repro.api.spec.RegionSpec`, validates/serializes
+and hands the executor a ``RegionTopology`` via ``RegionSpec.topology()``.
+
+Validation raises plain :class:`ValueError`; the spec layer converts to
+``SpecError`` with dotted field paths.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+__all__ = ["RegionTopology", "GeoArrivals"]
+
+
+def _as_multipliers(values: Sequence[float], n: int, what: str,
+                    default: float = 1.0) -> Tuple[float, ...]:
+    if not values:
+        return (default,) * n
+    out = tuple(float(v) for v in values)
+    if len(out) != n:
+        raise ValueError(f"{what} needs {n} entries (one per region), "
+                         f"got {len(out)}")
+    for v in out:
+        if not (v > 0.0) or not math.isfinite(v):
+            raise ValueError(f"{what} entries must be positive finite, "
+                             f"got {v!r}")
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class RegionTopology:
+    """A fleet of regions.
+
+    ``latency[i][j]`` is the one-way network latency (seconds) a request
+    originating in region ``i`` pays to be served in region ``j`` — zero
+    on the diagonal, non-negative everywhere (asymmetric matrices are
+    allowed: real WAN paths are).  ``capacity`` multiplies every chain's
+    service rate in that region (a region of faster or more plentiful
+    hardware); ``cost`` is the relative $/server-second the cost-aware
+    router minimizes; ``source_weights`` is the share of globally
+    generated traffic that originates in each region (uniform when
+    omitted)."""
+
+    names: Tuple[str, ...]
+    latency: Tuple[Tuple[float, ...], ...]
+    capacity: Tuple[float, ...] = ()
+    cost: Tuple[float, ...] = ()
+    source_weights: Tuple[float, ...] = ()
+
+    def __post_init__(self):
+        names = tuple(str(s) for s in self.names)
+        object.__setattr__(self, "names", names)
+        if not names:
+            raise ValueError("needs at least one region name")
+        if len(set(names)) != len(names):
+            raise ValueError(f"region names must be unique: {names}")
+        n = len(names)
+        lat = tuple(tuple(float(x) for x in row) for row in self.latency)
+        object.__setattr__(self, "latency", lat)
+        if len(lat) != n or any(len(row) != n for row in lat):
+            raise ValueError(f"latency must be a {n}x{n} matrix "
+                             f"(one row per region)")
+        for i, row in enumerate(lat):
+            for j, x in enumerate(row):
+                if not math.isfinite(x) or x < 0.0:
+                    raise ValueError(
+                        f"latency[{i}][{j}] must be finite and >= 0, "
+                        f"got {x!r}")
+            if row[i] != 0.0:
+                raise ValueError(
+                    f"latency[{i}][{i}] must be 0 (a region is local "
+                    f"to itself), got {row[i]!r}")
+        object.__setattr__(self, "capacity",
+                           _as_multipliers(self.capacity, n, "capacity"))
+        object.__setattr__(self, "cost",
+                           _as_multipliers(self.cost, n, "cost"))
+        weights = _as_multipliers(self.source_weights, n, "source_weights",
+                                  default=1.0 / n)
+        total = sum(weights)
+        if not math.isclose(total, 1.0, rel_tol=1e-9):
+            weights = tuple(w / total for w in weights)
+        object.__setattr__(self, "source_weights", weights)
+
+    @property
+    def n(self) -> int:
+        return len(self.names)
+
+    def index(self, name: str) -> int:
+        try:
+            return self.names.index(name)
+        except ValueError:
+            raise ValueError(f"unknown region {name!r} "
+                             f"(known: {', '.join(self.names)})") from None
+
+    def latency_matrix(self) -> np.ndarray:
+        return np.asarray(self.latency, dtype=np.float64)
+
+    def weights(self) -> np.ndarray:
+        return np.asarray(self.source_weights, dtype=np.float64)
+
+
+@dataclasses.dataclass
+class GeoArrivals:
+    """A source-labeled arrival trace: ``(times, works, sources[, cls])``
+    with ``sources[j]`` the region index where request ``j`` originates.
+    Geo-aware workload generators (``"geo-follow-the-sun"``) return this;
+    the executor also accepts it via the ``arrivals=`` escape hatch for
+    identical-trace comparisons across routers."""
+
+    times: np.ndarray
+    works: np.ndarray
+    sources: np.ndarray
+    cls: Optional[np.ndarray] = None
+
+    def __post_init__(self):
+        self.times = np.asarray(self.times, dtype=np.float64)
+        self.works = np.asarray(self.works, dtype=np.float64)
+        self.sources = np.asarray(self.sources, dtype=np.int64)
+        if self.cls is not None:
+            self.cls = np.asarray(self.cls, dtype=np.int64)
+        n = len(self.times)
+        if len(self.works) != n or len(self.sources) != n or \
+                (self.cls is not None and len(self.cls) != n):
+            raise ValueError("times/works/sources (and cls, when given) "
+                             "must have equal length")
+        if n and np.any(np.diff(self.times) < 0):
+            raise ValueError("times must be non-decreasing")
+        if n and (self.sources.min() < 0):
+            raise ValueError("sources must be >= 0 region indices")
+
+    def __len__(self) -> int:
+        return len(self.times)

@@ -21,12 +21,13 @@ without jax installed.
 from .metrics import (Counter, Gauge, LogHistogram, MetricsRegistry,
                       MetricsSnapshot)
 from .trace import Epoch, Marker, RunTrace, Span, Tracer
-from .decode import decode_orchestrator_trace, decode_sim_trace
+from .decode import (decode_orchestrator_trace, decode_sim_trace,
+                     merge_region_traces)
 from .export import export_chrome_trace, to_chrome_trace
 
 __all__ = [
     "Counter", "Gauge", "LogHistogram", "MetricsRegistry", "MetricsSnapshot",
     "Epoch", "Marker", "RunTrace", "Span", "Tracer",
     "decode_orchestrator_trace", "decode_sim_trace",
-    "export_chrome_trace", "to_chrome_trace",
+    "export_chrome_trace", "merge_region_traces", "to_chrome_trace",
 ]

@@ -40,7 +40,8 @@ import numpy as np
 from .trace import (FIRST_CHAIN_LANE, QUEUE_LANE, RUN_LANE, Marker, RunTrace,
                     Span, Tracer)
 
-__all__ = ["decode_sim_trace", "decode_orchestrator_trace"]
+__all__ = ["decode_sim_trace", "decode_orchestrator_trace",
+           "merge_region_traces"]
 
 
 def _lane_label(key: Any, rate: float, cap: int, idx: int) -> str:
@@ -234,6 +235,45 @@ def decode_sim_trace(engine: Any, tracer: Tracer,
         "unmatched_chain_jobs": unmatched,
         "overflow_slots": overflow,
     }
+    out_meta.update(meta or {})
+    return RunTrace(spans=spans, markers=all_markers, lanes=lanes,
+                    meta=out_meta)
+
+
+def merge_region_traces(traces: Dict[str, RunTrace],
+                        markers: Sequence[Marker] = (),
+                        meta: Optional[Dict[str, Any]] = None) -> RunTrace:
+    """Merge per-region :class:`RunTrace`\\ s into one fleet timeline.
+
+    Lane 0 becomes the fleet-level ``geo`` lane (cross-region markers:
+    partitions, heals, evacuations); each region's lanes follow as one
+    contiguous group with labels prefixed ``"<region>/"``, so a Perfetto
+    export shows one process group per region.  Spans and markers are
+    re-pid'd but otherwise untouched (timestamps stay the engines' raw
+    values)."""
+    import dataclasses as _dc
+
+    lanes: Dict[int, str] = {RUN_LANE: "geo"}
+    spans: List[Span] = []
+    all_markers: List[Marker] = [
+        m if m.pid == RUN_LANE else _dc.replace(m, pid=RUN_LANE)
+        for m in markers]
+    region_meta: Dict[str, Any] = {}
+    next_pid = RUN_LANE + 1
+    for name, tr in traces.items():
+        remap: Dict[int, int] = {}
+        for pid in sorted(tr.lanes):
+            remap[pid] = next_pid
+            lanes[next_pid] = f"{name}/{tr.lanes[pid]}"
+            next_pid += 1
+        for s in tr.spans:
+            spans.append(_dc.replace(s, pid=remap.get(s.pid, remap[RUN_LANE])))
+        for m in tr.markers:
+            all_markers.append(
+                _dc.replace(m, pid=remap.get(m.pid, remap[RUN_LANE])))
+        region_meta[name] = dict(tr.meta)
+    all_markers.sort(key=lambda m: m.t)
+    out_meta: Dict[str, Any] = {"plane": "geo", "per_region": region_meta}
     out_meta.update(meta or {})
     return RunTrace(spans=spans, markers=all_markers, lanes=lanes,
                     meta=out_meta)

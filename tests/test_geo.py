@@ -1,0 +1,520 @@
+"""Geo-distributed serving: topology, routing, partitions, parity gates.
+
+The two CI-gated invariants live here:
+
+* **single-region parity anchor** — a one-region ``RegionSpec`` with a
+  zero latency matrix feeds the engine bitwise the arrays the plain
+  single-cluster path feeds it, on both engines and both RNG schemes;
+* **conservation** — any partition/heal (+ burst/evacuation) timeline
+  loses no request: ``partition_lost_requests == 0`` and
+  ``completed_all``, with deferred work rerouted on heal.
+"""
+import json
+import math
+import random
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import repro.api as api
+from repro.api import (
+    ClusterSpec,
+    PolicySpec,
+    ExperimentSpec,
+    RegionSpec,
+    ResultsStore,
+    ScenarioSpec,
+    SpecError,
+    WorkloadSpec,
+    preset,
+    spec_replace,
+)
+from repro.core.scenarios import Scenario
+from repro.geo import GeoArrivals, RegionTopology, execute_geo
+from repro.geo.routing import make_router
+
+RING = dict(names=("us", "eu", "ap"),
+            latency=((0.0, 0.1, 0.2), (0.1, 0.0, 0.1), (0.2, 0.1, 0.0)))
+
+
+def _servers(n, seed=1234):
+    from repro.core.servers import Server
+    rng = random.Random(seed)
+    return tuple(Server(f"s{i}", rng.uniform(15, 40), rng.uniform(0.02, 0.2),
+                        rng.uniform(0.02, 0.2)) for i in range(n))
+
+
+def _service():
+    from repro.core.servers import ServiceSpec
+    return ServiceSpec(num_blocks=10, block_size_gb=1.32, cache_size_gb=0.11)
+
+
+def _geo_spec(sc: Scenario, router: str = "latency", base_rate: float = 5.0,
+              engine: str = "vector", **spec_kw) -> ExperimentSpec:
+    return ExperimentSpec(
+        cluster=ClusterSpec(job_servers=((1.0, 6),), engine=engine,
+                            regions=RegionSpec(router=router, **RING)),
+        scenario=ScenarioSpec.from_scenario(sc),
+        workload=WorkloadSpec(base_rate=base_rate),
+        **spec_kw)
+
+
+def _raw_geo(spec):
+    return execute_geo(spec, spec.scenario.to_scenario())
+
+
+# ---------------------------------------------------------------------------
+# Topology + spec validation
+# ---------------------------------------------------------------------------
+
+def test_topology_validation():
+    with pytest.raises(ValueError, match="diag|local"):
+        RegionTopology(names=("a", "b"), latency=((1.0, 0.0), (0.0, 0.0)))
+    with pytest.raises(ValueError, match="matrix"):
+        RegionTopology(names=("a", "b"), latency=((0.0,),))
+    with pytest.raises(ValueError, match="unique"):
+        RegionTopology(names=("a", "a"), latency=((0.0, 0.0), (0.0, 0.0)))
+    with pytest.raises(ValueError, match="finite"):
+        RegionTopology(names=("a", "b"),
+                       latency=((0.0, -1.0), (1.0, 0.0)))
+    with pytest.raises(ValueError, match="capacity"):
+        RegionTopology(names=("a", "b"),
+                       latency=((0.0, 1.0), (1.0, 0.0)), capacity=(1.0,))
+
+
+def test_topology_weights_normalize():
+    topo = RegionTopology(names=("a", "b"),
+                          latency=((0.0, 1.0), (1.0, 0.0)),
+                          source_weights=(3.0, 1.0))
+    assert np.allclose(topo.weights(), [0.75, 0.25])
+    assert math.isclose(sum(topo.source_weights), 1.0)
+    # default: uniform
+    topo = RegionTopology(names=("a", "b"), latency=((0.0, 1.0), (1.0, 0.0)))
+    assert np.allclose(topo.weights(), [0.5, 0.5])
+
+
+def test_region_spec_json_roundtrip():
+    spec = preset("region_partition")
+    d = spec.to_dict()
+    assert d["cluster"]["regions"]["names"] == ["us", "eu", "ap"]
+    assert ExperimentSpec.from_dict(d) == spec
+    assert ExperimentSpec.from_json(spec.to_json()) == spec
+    # the field is optional: non-geo specs don't emit it (old JSON loads)
+    plain = preset("mmc_queue")
+    assert "regions" not in plain.to_dict()["cluster"]
+    assert ExperimentSpec.from_dict(plain.to_dict()) == plain
+
+
+def test_geo_spec_validation():
+    # partition must cut a strict subset
+    with pytest.raises(SpecError, match="partition"):
+        _geo_spec(Scenario(horizon=50.0)
+                  .region_partition(10.0, 5.0, ("us", "eu", "ap")))
+    # unknown region names are caught at spec build
+    with pytest.raises(SpecError, match="unknown"):
+        _geo_spec(Scenario(horizon=50.0).region_burst(5.0, 5.0, 2.0, "mars"))
+    # evacuating every region leaves no survivor
+    with pytest.raises(SpecError, match="evacuat"):
+        _geo_spec(Scenario(horizon=50.0)
+                  .region_evacuate(5.0, "us").region_evacuate(5.0, "eu")
+                  .region_evacuate(5.0, "ap"))
+    # single-cluster events target one cluster, not a fleet
+    servers = _servers(4)
+    service = _service()
+    with pytest.raises(SpecError, match="single cluster"):
+        ExperimentSpec(
+            cluster=ClusterSpec(
+                servers=servers, service=service,
+                regions=RegionSpec(names=("us", "eu"),
+                                   latency=((0.0, 0.1), (0.1, 0.0)))),
+            scenario=ScenarioSpec.from_scenario(
+                Scenario(horizon=50.0).fail(5.0, "s0")),
+            workload=WorkloadSpec(base_rate=2.0))
+    # region events need a topology to name regions in
+    with pytest.raises(SpecError, match="regions"):
+        ExperimentSpec(
+            cluster=ClusterSpec(job_servers=((1.0, 4),)),
+            scenario=ScenarioSpec.from_scenario(
+                Scenario(horizon=50.0).region_burst(5.0, 5.0, 2.0, "us")),
+            workload=WorkloadSpec(base_rate=2.0))
+    # ... and so do geo workload generators
+    with pytest.raises(SpecError, match="generator"):
+        ExperimentSpec(
+            cluster=ClusterSpec(job_servers=((1.0, 4),)),
+            scenario=ScenarioSpec(horizon=50.0),
+            workload=WorkloadSpec(generator="geo-follow-the-sun",
+                                  base_rate=2.0,
+                                  params={"n_regions": 3}))
+
+
+# ---------------------------------------------------------------------------
+# Routers
+# ---------------------------------------------------------------------------
+
+def _ring_topo():
+    return RegionTopology(**RING, cost=(1.0, 2.0, 0.5))
+
+
+def test_latency_router_keeps_traffic_home():
+    r = make_router("latency", _ring_topo())
+    for src in range(3):
+        assert r.pick(src, [0, 1, 2], None) == src
+    # home unreachable: nearest survivor
+    assert r.pick(0, [1, 2], None) == 1
+    assert r.pick(2, [0, 1], None) == 1
+
+
+def test_cost_router_prefers_cheap():
+    r = make_router("cost", _ring_topo())
+    assert r.pick(0, [0, 1, 2], None) == 2          # ap is cheapest
+    assert r.pick(0, [0, 1], None) == 0
+
+
+def test_round_robin_cycles_globally():
+    r = make_router("round-robin", _ring_topo())
+    assert [r.pick(0, [0, 1, 2], None) for _ in range(4)] == [0, 1, 2, 0]
+    # the counter persists across candidate-set changes
+    assert r.pick(0, [0, 1], None) == 0
+
+
+def test_load_router_follows_snapshot():
+    r = make_router("load", _ring_topo())
+    assert r.needs_load and not r.static
+    loads = np.asarray([5.0, 0.5, 5.0])
+    assert r.pick(0, [0, 1, 2], loads) == 1
+    assert r.pick(0, [0, 1, 2], None) == 0          # no snapshot: latency
+
+
+def test_router_assign_matches_pick_stream():
+    sources = np.asarray([0, 2, 1, 1, 0, 2, 2, 0], dtype=np.int64)
+    cand = [0, 1, 2]
+    for name in ("latency", "cost", "round-robin"):
+        va = make_router(name, _ring_topo()).assign(sources, cand)
+        seq_router = make_router(name, _ring_topo())
+        seq = [seq_router.pick(int(s), cand, None) for s in sources]
+        assert va.tolist() == seq, name
+
+
+def test_unknown_router_rejected():
+    with pytest.raises(ValueError, match="unknown geo router"):
+        make_router("teleport", _ring_topo())
+    with pytest.raises(SpecError, match="router"):
+        _geo_spec(Scenario(horizon=50.0), router="teleport")
+
+
+# ---------------------------------------------------------------------------
+# The single-region parity anchor (CI gate)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine", ["vector", "batched"])
+@pytest.mark.parametrize("rng_scheme", ["legacy", "counter"])
+def test_single_region_bit_parity(engine, rng_scheme):
+    """One region + zero latency + no region events == the plain
+    single-cluster path, array for array."""
+    from repro.api.planes import _execute_precomposed, _resolve_workload
+
+    policy = PolicySpec(name="jsq" if rng_scheme == "counter" else "jffc")
+    plain = ExperimentSpec(
+        cluster=ClusterSpec(job_servers=((1.0, 5),), engine=engine),
+        scenario=ScenarioSpec.from_scenario(
+            Scenario(horizon=120.0).burst(30.0, 20.0, 2.0)),
+        workload=WorkloadSpec(base_rate=4.0),
+        policy=policy, rng_scheme=rng_scheme, warmup_fraction=0.1)
+    geo = spec_replace(plain, "cluster.regions",
+                       RegionSpec(names=("solo",), latency=((0.0,),)))
+    scenario = plain.scenario.to_scenario()
+    arr = _resolve_workload(plain, scenario, None)
+    res_plain, _ = _execute_precomposed(plain, scenario, arr)
+    res_geo, _, extras, _, _ = _raw_geo(geo)
+    a, b = res_plain.result, res_geo.result
+    assert np.array_equal(a.response_times, b.response_times)
+    assert np.array_equal(a.waiting_times, b.waiting_times)
+    assert np.array_equal(a.service_times, b.service_times)
+    assert np.array_equal(a.class_ids, b.class_ids)
+    assert a.sim_time == b.sim_time
+    assert a.n_completed == b.n_completed > 0
+    assert extras["partition_lost_requests"] == 0
+    assert extras["mean_network_latency"] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Arrival generation
+# ---------------------------------------------------------------------------
+
+def test_region_burst_shapes_only_its_region():
+    from repro.geo.executor import resolve_geo_arrivals
+
+    topo = RegionTopology(**RING)
+    quiet = _geo_spec(Scenario(horizon=200.0))
+    burst = _geo_spec(Scenario(horizon=200.0)
+                      .region_burst(50.0, 100.0, 4.0, "eu"))
+    ga_q = resolve_geo_arrivals(quiet, quiet.scenario.to_scenario(),
+                                None, topo)
+    ga_b = resolve_geo_arrivals(burst, burst.scenario.to_scenario(),
+                                None, topo)
+    per_q = {r: ga_q.times[ga_q.sources == r] for r in range(3)}
+    per_b = {r: ga_b.times[ga_b.sources == r] for r in range(3)}
+    # the burst region gets more arrivals; the others' streams are
+    # untouched (independent per-region seeds)
+    assert len(per_b[1]) > 1.5 * len(per_q[1])
+    assert np.array_equal(per_q[0], per_b[0])
+    assert np.array_equal(per_q[2], per_b[2])
+
+
+def test_follow_the_sun_generator_sources_all_regions():
+    spec = preset("follow_the_sun", horizon=120.0)
+    rep = api.run(spec)
+    ex = rep.extras["geo"]
+    assert rep.completed_all and ex["partition_lost_requests"] == 0
+    assert sum(ex["sourced"].values()) == rep.n_jobs
+    assert sum(ex["routed"].values()) == rep.n_jobs
+    assert all(v > 0 for v in ex["sourced"].values())
+    # latency routing with every region up serves everything locally
+    assert ex["mean_network_latency"] == 0.0
+    assert ex["sourced"] == ex["routed"]
+
+
+def test_geo_arrivals_override_roundtrip():
+    """The arrivals= escape hatch: the same GeoArrivals trace through two
+    routers — source labels validated, per-router routing differs."""
+    spec = preset("follow_the_sun", horizon=120.0)
+    from repro.api.planes import _resolve_workload
+    ga = _resolve_workload(spec, spec.scenario.to_scenario(), None)
+    assert isinstance(ga, GeoArrivals)
+    rep_lat = api.run(spec, arrivals=ga)
+    rep_rr = api.run(preset("follow_the_sun", router="round-robin",
+                            horizon=120.0), arrivals=ga)
+    assert rep_lat.n_jobs == rep_rr.n_jobs == len(ga)
+    assert rep_lat.extras["geo"]["sourced"] == rep_rr.extras["geo"]["sourced"]
+    assert rep_lat.extras["geo"]["mean_network_latency"] < \
+        rep_rr.extras["geo"]["mean_network_latency"]
+    bad = GeoArrivals(ga.times, ga.works,
+                      np.full(len(ga), 7, dtype=np.int64))
+    with pytest.raises(ValueError, match="region"):
+        api.run(spec, arrivals=bad)
+
+
+# ---------------------------------------------------------------------------
+# Partitions, evacuation, conservation (CI gate)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine", ["vector", "batched"])
+def test_partition_preset_conserves_requests(engine):
+    spec = preset("region_partition", horizon=150.0, engine=engine)
+    res, _, extras, _, _ = _raw_geo(spec)
+    assert res.completed_all
+    assert extras["partition_lost_requests"] == 0
+    assert res.n_jobs == sum(r["n_completed"]
+                             for r in extras["per_region"].values())
+    kinds = [e.kind for e in res.log]
+    assert kinds.count("region_partition") == 1
+    assert kinds.count("region_heal") == 1
+    assert kinds.count("region_evacuate") == 1
+
+
+def test_partition_defers_and_reroutes_on_heal():
+    """Evacuate eu, then cut it off entirely: eu's sources have nowhere
+    to go until heal — deferred, then delivered no earlier than the heal
+    boundary, none lost."""
+    sc = (Scenario(horizon=120.0)
+          .region_evacuate(10.0, "eu")
+          .region_partition(30.0, 40.0, ("eu",)))
+    spec = _geo_spec(sc, base_rate=4.0)
+    res, _, extras, _, _ = _raw_geo(spec)
+    assert extras["n_deferred"] > 0
+    assert extras["partition_lost_requests"] == 0
+    assert res.completed_all
+    assert extras["per_region"]["eu"]["n_routed"] < extras["sourced"]["eu"]
+
+
+def test_evacuated_region_receives_nothing():
+    sc = Scenario(horizon=100.0).region_evacuate(0.0, "ap")
+    spec = _geo_spec(sc, base_rate=4.0)
+    res, _, extras, _, _ = _raw_geo(spec)
+    assert extras["routed"]["ap"] == 0
+    assert extras["sourced"]["ap"] > 0
+    assert res.completed_all and extras["partition_lost_requests"] == 0
+
+
+def _conservation_case(start, duration, cut, seed):
+    sc = Scenario(horizon=100.0).region_partition(
+        start, duration, cut)
+    spec = _geo_spec(sc, base_rate=4.0, seed=seed)
+    res, _, extras, _, _ = _raw_geo(spec)
+    assert res.completed_all, (start, duration, cut, seed)
+    assert extras["partition_lost_requests"] == 0, (start, duration, cut,
+                                                    seed)
+    assert res.n_rejected == 0
+
+
+@settings(max_examples=15, deadline=None)
+@given(start=st.floats(0.0, 80.0), duration=st.floats(1.0, 60.0),
+       cut=st.sampled_from([("us",), ("eu",), ("ap",), ("us", "eu"),
+                            ("eu", "ap"), ("us", "ap")]),
+       seed=st.integers(0, 20))
+def test_partition_conservation_property(start, duration, cut, seed):
+    """Any partition/heal timeline conserves requests."""
+    _conservation_case(start, duration, cut, seed)
+
+
+def test_partition_conservation_sampled():
+    """Deterministic twin of the property test (hypothesis optional)."""
+    rng = random.Random(7)
+    cuts = [("us",), ("eu",), ("ap",), ("us", "eu"), ("eu", "ap")]
+    for _ in range(6):
+        _conservation_case(rng.uniform(0.0, 80.0), rng.uniform(1.0, 60.0),
+                           rng.choice(cuts), rng.randrange(20))
+
+
+def test_overlapping_partitions_conserve():
+    sc = (Scenario(horizon=120.0)
+          .region_partition(20.0, 50.0, ("us",))
+          .region_partition(40.0, 50.0, ("ap",)))
+    spec = _geo_spec(sc, base_rate=4.0)
+    res, _, extras, _, _ = _raw_geo(spec)
+    assert res.completed_all and extras["partition_lost_requests"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Composed clusters, capacity multipliers
+# ---------------------------------------------------------------------------
+
+def test_composed_cluster_per_region():
+    """Regions compose their own chains (tuned-c -> GBP-CR -> GCA); a
+    capacity multiplier scales the composed total rate by exactly that
+    factor."""
+    servers = _servers(8)
+    service = _service()
+    spec = ExperimentSpec(
+        cluster=ClusterSpec(
+            servers=servers, service=service,
+            regions=RegionSpec(names=("big", "small"),
+                               latency=((0.0, 0.1), (0.1, 0.0)),
+                               capacity=(1.0, 0.5))),
+        scenario=ScenarioSpec(horizon=100.0),
+        workload=WorkloadSpec(base_rate=2.0))
+    res, n_final, extras, _, _ = _raw_geo(spec)
+    assert res.completed_all and extras["partition_lost_requests"] == 0
+    assert n_final == 16                    # every region owns a full copy
+
+
+# ---------------------------------------------------------------------------
+# Autoscale: per-region controllers, one global budget
+# ---------------------------------------------------------------------------
+
+def test_autoscale_global_budget():
+    from repro.api import AutoscaleSpec
+    from repro.core.servers import Server
+
+    spec = ExperimentSpec(
+        cluster=ClusterSpec(
+            servers=_servers(4), service=_service(),
+            regions=RegionSpec(router="latency", **RING)),
+        scenario=ScenarioSpec(horizon=150.0),
+        workload=WorkloadSpec(base_rate=2.0),
+        autoscale=AutoscaleSpec(policy="target-util",
+                                template=Server("tmpl", 30.0, 0.05, 0.05),
+                                max_servers=8, min_servers=1,
+                                interval=10.0))
+    res, n_final, extras, _, _ = _raw_geo(spec)
+    assert extras["partition_lost_requests"] == 0
+    # growth is capped by the fleet-wide budget (the initial fleet may
+    # already exceed it; the budget gates growth, not the starting state)
+    assert extras["fleet_servers_final"] <= max(8, 3 * 4)
+    assert set(extras["cost_per_region"]) == {"us", "eu", "ap"}
+    assert set(extras["scaling_records"]) == {"us", "eu", "ap"}
+
+
+# ---------------------------------------------------------------------------
+# Observability: merged trace lanes + metrics
+# ---------------------------------------------------------------------------
+
+def test_geo_trace_and_metrics():
+    spec = preset("region_partition", horizon=100.0)
+    rep = api.run(spec, trace=True)
+    lanes = rep.trace.lanes
+    labels = list(lanes.values())
+    assert any(l.startswith("us/") for l in labels)
+    assert any(l.startswith("eu/") for l in labels)
+    assert any(l.startswith("ap/") for l in labels)
+    marker_names = {m.name for m in rep.trace.markers}
+    assert "region-partition" in marker_names
+    assert "region-heal" in marker_names
+    assert "region-evacuate" in marker_names
+    metrics = rep.extras["metrics"]
+    assert metrics["geo.lost"] == 0
+    n_routed = sum(metrics[f"geo.routed.{r}"] for r in ("us", "eu", "ap"))
+    assert n_routed == rep.n_jobs
+
+
+# ---------------------------------------------------------------------------
+# The batched vmap-over-regions fast path
+# ---------------------------------------------------------------------------
+
+def test_fast_path_bit_identical(monkeypatch):
+    import repro.geo.grid as gg
+    from repro.core.engines.batched import jax_available
+
+    if not jax_available():
+        pytest.skip("the grid fast path needs the compiled kernels")
+    spec = preset("follow_the_sun", horizon=120.0, engine="batched")
+    res_f, _, ex_f, _, _ = _raw_geo(spec)
+    monkeypatch.setattr(gg, "try_geo_grid", lambda *a, **k: None)
+    res_s, _, ex_s, _, _ = _raw_geo(spec)
+    monkeypatch.undo()
+    a, b = res_f.result, res_s.result
+    assert ex_f["fast_path"] and not ex_s["fast_path"]
+    assert np.array_equal(a.response_times, b.response_times)
+    assert np.array_equal(a.waiting_times, b.waiting_times)
+    assert np.array_equal(a.service_times, b.service_times)
+    assert a.sim_time == b.sim_time
+    assert ex_f["per_region"] == ex_s["per_region"]
+    assert ex_f["routed"] == ex_s["routed"]
+
+
+def test_fast_path_falls_back_when_regions_interact():
+    spec = preset("region_partition", horizon=100.0, engine="batched")
+    _, _, extras, _, _ = _raw_geo(spec)
+    assert extras["fast_path"] is False     # partitions are boundaries
+    spec = preset("follow_the_sun", horizon=100.0, router="load",
+                  engine="batched")
+    _, _, extras, _, _ = _raw_geo(spec)
+    assert extras["fast_path"] is False     # load snapshots re-freeze
+
+
+# ---------------------------------------------------------------------------
+# Sweep grouping over optional spec fields (the ResultsStore regression)
+# ---------------------------------------------------------------------------
+
+def test_sweep_regionspec_field_roundtrips_store(tmp_path):
+    """A grid over a RegionSpec field must not collapse into the one-pass
+    stacked kernel (which cannot model it) and must round-trip losslessly
+    through the ResultsStore."""
+    spec = preset("follow_the_sun", horizon=100.0, engine="batched")
+    store = ResultsStore(str(tmp_path / "store"))
+    grid = {"cluster.regions.router": ["latency", "round-robin"]}
+    pts = api.sweep(spec, grid, store=store)
+    assert len(pts) == 2
+    for p in pts:
+        assert "swept_one_pass" not in p.report.extras
+        assert p.report.extras["geo"]["router"] == \
+            p.overrides["cluster.regions.router"]
+    assert pts[0].report.p99() != pts[1].report.p99()
+    # second pass: every point served from the cache, values preserved
+    pts2 = api.sweep(spec, grid, store=store)
+    for p, q in zip(pts, pts2):
+        assert q.report.p99() == p.report.p99()
+        assert q.report.extras["geo"]["router"] == \
+            p.report.extras["geo"]["router"]
+
+
+def test_sweep_seed_grid_still_one_pass(tmp_path):
+    """The residual guard must not regress the eligible fast path."""
+    from repro.core.engines.batched import jax_available
+
+    if not jax_available():
+        pytest.skip("jax unavailable; one-pass sweep cannot compile")
+    spec = preset("mmc_queue", n_jobs=3000, engine="batched")
+    pts = api.sweep(spec, {"seed": [0, 1]})
+    assert all(p.report.extras.get("swept_one_pass") for p in pts)

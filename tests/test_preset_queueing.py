@@ -1,0 +1,75 @@
+"""The queueing-theory preset gate: ``mmc_queue`` vs closed forms.
+
+A single pre-composed chain of ``c`` slots at rate ``mu`` is a textbook
+M/M/c queue, where the paper's occupancy bounds
+(:func:`repro.core.queueing.occupancy_lower_bound` /
+``occupancy_upper_bound``) coincide with the exact birth-death closed
+form.  Little's law converts the simulated mean response time into a
+mean occupancy directly comparable against that closed form — the
+ROADMAP's "assert the queueing presets against theory" leftover.
+"""
+import math
+
+import pytest
+
+import repro.api as api
+from repro.api import preset
+from repro.core.queueing import (
+    occupancy_lower_bound,
+    occupancy_upper_bound,
+    response_time_bounds,
+)
+
+
+def test_mmc_preset_spec_shape():
+    spec = preset("mmc_queue", mu=2.0, c=4, rho=0.5, n_jobs=1000)
+    assert spec.cluster.job_servers == ((2.0, 4),)
+    assert spec.workload.base_rate == pytest.approx(0.5 * 2.0 * 4)
+    assert spec.workload.generator == "poisson"
+    assert spec.warmup_fraction == 0.1
+    # lossless round trip like every preset
+    assert api.ExperimentSpec.from_dict(spec.to_dict()) == spec
+
+
+def test_mmc_preset_rejects_unstable_rho():
+    from repro.api import SpecError
+
+    with pytest.raises(SpecError, match="rho"):
+        preset("mmc_queue", rho=1.0)
+    with pytest.raises(SpecError, match="rho"):
+        preset("mmc_queue", rho=-0.1)
+
+
+@pytest.mark.parametrize("mu,c,rho,n_jobs", [
+    (1.0, 8, 0.7, 30_000),
+    (2.0, 4, 0.5, 30_000),
+    (1.0, 4, 0.8, 60_000),       # heavier traffic mixes slower
+    (1.5, 6, 0.85, 60_000),
+])
+def test_mmc_preset_matches_closed_form(mu, c, rho, n_jobs):
+    """Simulated mean occupancy (Little's law) within 10% of the exact
+    M/M/c birth-death value; the one-chain bounds must coincide."""
+    js = ((mu, c),)
+    lam = rho * mu * c
+    lower = occupancy_lower_bound(js, lam)
+    upper = occupancy_upper_bound(js, lam)
+    assert lower == pytest.approx(upper, rel=1e-12)   # single chain: exact
+
+    spec = preset("mmc_queue", mu=mu, c=c, rho=rho, n_jobs=n_jobs)
+    rep = api.run(spec)
+    assert rep.completed_all
+    occ_sim = lam * rep.mean_response()               # Little's law
+    assert occ_sim == pytest.approx(lower, rel=0.10), \
+        f"M/M/{c} rho={rho}: simulated occupancy {occ_sim:.3f} vs " \
+        f"closed form {lower:.3f}"
+    # mean response inside the (coinciding) theoretical response bounds
+    t_lo, t_hi = response_time_bounds(js, lam)
+    assert t_lo == pytest.approx(t_hi, rel=1e-12)
+    assert rep.mean_response() == pytest.approx(t_lo, rel=0.10)
+
+
+def test_mmc_preset_engines_agree():
+    v = api.run(preset("mmc_queue", n_jobs=5000))
+    b = api.run(preset("mmc_queue", n_jobs=5000, engine="batched"))
+    assert v.mean_response() == b.mean_response()
+    assert v.p99() == b.p99()
