@@ -23,6 +23,7 @@ from . import (
     bench_model_validation,
     bench_multitenant,
     bench_overall,
+    bench_pipeline,
     bench_placement,
     bench_serving,
     bench_simulator,
@@ -41,6 +42,7 @@ SUITES = {
     "kernels": bench_kernels.run,
     "simulator": bench_simulator.run,
     "serving": bench_serving.run,
+    "pipeline": bench_pipeline.run,
     "autoscale": bench_autoscale.run,
     "multitenant": bench_multitenant.run,
     "geo": bench_geo.run,
@@ -55,6 +57,7 @@ FAST_OVERRIDES = {
     "table1_trace": lambda: bench_table1.run(n_requests=1200),
     "simulator": lambda: bench_simulator.run(n_jobs=20_000, million=False),
     "serving": lambda: bench_serving.run(smoke=True),
+    "pipeline": lambda: bench_pipeline.run(smoke=True),
     "autoscale": lambda: bench_autoscale.run(horizon=300.0),
     "multitenant": lambda: bench_multitenant.run(n_jobs=20_000),
     "geo": lambda: bench_geo.run(smoke=True),

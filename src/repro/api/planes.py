@@ -550,7 +550,9 @@ class LivePlane:
                  max_rounds: int = 100_000, prompt_tokens: int = 8,
                  tokens_per_work: float = 6.0, max_seq: int = 256,
                  kv_layout: str = "slotted", page_size: int = 16,
-                 oversubscribe: float = 1.0, model=None, params=None):
+                 oversubscribe: float = 1.0, parallelism: str = "single",
+                 pipeline_stages: Optional[int] = None, microbatches: int = 1,
+                 model=None, params=None):
         if engine not in ("mock", "jax"):
             raise ValueError("engine must be 'mock' or 'jax'")
         if engine == "jax" and (model is None or params is None):
@@ -568,6 +570,22 @@ class LivePlane:
         if float(oversubscribe) < 1.0:
             raise SpecError("plane.oversubscribe",
                             f"must be >= 1.0, got {oversubscribe}")
+        if parallelism not in ("single", "pipeline"):
+            raise SpecError(
+                "plane.parallelism",
+                f"must be 'single' or 'pipeline', got {parallelism!r}")
+        if int(microbatches) < 1:
+            raise SpecError("plane.microbatches",
+                            f"must be >= 1, got {microbatches}")
+        if pipeline_stages is not None and int(pipeline_stages) < 1:
+            raise SpecError("plane.pipeline_stages",
+                            f"must be >= 1 (or None for one stage per "
+                            f"chain hop), got {pipeline_stages}")
+        if parallelism == "single" and (int(microbatches) != 1
+                                        or pipeline_stages is not None):
+            raise SpecError(
+                "plane.parallelism",
+                "microbatches/pipeline_stages require parallelism='pipeline'")
         self.engine = engine
         self.dt = float(dt)
         self.max_rounds = int(max_rounds)
@@ -577,6 +595,10 @@ class LivePlane:
         self.kv_layout = kv_layout
         self.page_size = page_size
         self.oversubscribe = float(oversubscribe)
+        self.parallelism = parallelism
+        self.pipeline_stages = (None if pipeline_stages is None
+                                else int(pipeline_stages))
+        self.microbatches = int(microbatches)
         self.model = model
         self.params = params
 
@@ -593,7 +615,10 @@ class LivePlane:
                 f":tokens_per_work={self.tokens_per_work:g}"
                 f":max_seq={self.max_seq}"
                 f":kv_layout={self.kv_layout}:page_size={self.page_size}"
-                f":oversubscribe={self.oversubscribe:g}")
+                f":oversubscribe={self.oversubscribe:g}"
+                f":parallelism={self.parallelism}"
+                f":pipeline_stages={self.pipeline_stages}"
+                f":microbatches={self.microbatches}")
 
     def to_dict(self) -> dict:
         """JSON-serializable plane configuration (model/params excluded —
@@ -604,7 +629,10 @@ class LivePlane:
                 "tokens_per_work": self.tokens_per_work,
                 "max_seq": self.max_seq, "kv_layout": self.kv_layout,
                 "page_size": self.page_size,
-                "oversubscribe": self.oversubscribe}
+                "oversubscribe": self.oversubscribe,
+                "parallelism": self.parallelism,
+                "pipeline_stages": self.pipeline_stages,
+                "microbatches": self.microbatches}
 
     @classmethod
     def from_dict(cls, d: dict, model=None, params=None) -> "LivePlane":
@@ -614,12 +642,13 @@ class LivePlane:
             raise SpecError("plane", f"expected {cls.name!r}, got {plane!r}")
         unknown = set(d) - {"engine", "dt", "max_rounds", "prompt_tokens",
                             "tokens_per_work", "max_seq", "kv_layout",
-                            "page_size", "oversubscribe"}
+                            "page_size", "oversubscribe", "parallelism",
+                            "pipeline_stages", "microbatches"}
         if unknown:
             raise SpecError("plane", f"unknown fields: {sorted(unknown)}")
         return cls(model=model, params=params, **d)
 
-    def _build_orchestrator(self, spec: ExperimentSpec):
+    def _build_orchestrator(self, spec: ExperimentSpec, trace: bool = False):
         from repro.serving import Orchestrator, OrchestratorConfig
         from repro.serving.mock import MockEngine
 
@@ -627,6 +656,16 @@ class LivePlane:
         if self.engine == "mock":
             # the mock engine has no KV cache; kv_layout shapes jax runs only
             factory = MockEngine
+        elif self.parallelism == "pipeline":
+            from functools import partial as _partial
+
+            from repro.serving.pipeline import PipelineChainEngine
+            factory = _partial(PipelineChainEngine, kv_layout=self.kv_layout,
+                               page_size=self.page_size,
+                               oversubscribe=self.oversubscribe,
+                               num_stages=self.pipeline_stages,
+                               microbatches=self.microbatches,
+                               trace_schedule=trace)
         elif self.kv_layout == "paged":
             from functools import partial as _partial
 
@@ -670,6 +709,11 @@ class LivePlane:
             raise SpecError("cluster.regions",
                             "multi-region serving has no live-plane "
                             "implementation; run it on plane='sim'")
+        if self.parallelism == "pipeline" and self.engine != "jax":
+            raise SpecError(
+                "plane.parallelism",
+                "pipeline parallelism needs engine='jax' (the mock engine "
+                "has no block stack to split into stages)")
         if spec.policy.name not in ("jffc", "priority"):
             # the orchestrator's online dispatch IS JFFC over a central
             # (priority) queue — silently running a different-named policy
@@ -686,7 +730,7 @@ class LivePlane:
             spec.workload_seed(), arr, spec.workload.service_model,
             spec.workload.trace_stats or AZURE_STATS,
             spec.workload.class_rates)
-        orch = self._build_orchestrator(spec)
+        orch = self._build_orchestrator(spec, trace=trace)
         orch.set_admission_level(spec.admission.level)
         metrics = None
         if trace:

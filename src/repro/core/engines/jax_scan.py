@@ -21,9 +21,16 @@ Two kernel families live here:
 
 Grid entry points (:func:`run_jffc_scan_grid`,
 :func:`run_event_scan_grid`) shard a stacked (S, n) point grid over the
-host's devices with ``pmap(vmap(kernel))`` when more than one device is
-visible (or when ``devices=`` forces it), falling back to a plain
-``vmap`` on a single device — the ``repro.api.sweep`` one-pass path.
+host's devices when more than one device is visible (or when
+``devices=`` forces it), falling back to a plain ``vmap`` on a single
+device — the ``repro.api.sweep`` one-pass path.  The default dispatch
+is ``shard_map`` over a 1-D ``Mesh`` (axis ``"grid"``): rows pad to a
+multiple of ``D`` by repeating row 0 and the mesh partitions the leading
+axis, so shard ``d`` sees the same contiguous row block the legacy
+``pmap(vmap(kernel))`` path fed it — per-row programs are identical and
+the two paths are **bit-equal** (the multi-device CI host pins
+``impl="shard_map"`` against ``impl="pmap"``).  The pmap variant stays
+behind ``impl="pmap"`` purely as that parity anchor.
 
 The JFFC slot-race recurrence in detail:
 
@@ -445,36 +452,88 @@ def run_event_scan(policy: str, times: np.ndarray, works: np.ndarray,
 # Sharded grid dispatch (the sweep one-pass path)
 # ---------------------------------------------------------------------------
 
+#: default multi-device grid dispatch; ``"pmap"`` keeps the legacy
+#: ``pmap(vmap(kernel))`` path alive as the bit-parity anchor
+GRID_IMPL = "shard_map"
+
+
 def grid_devices(devices: Optional[int] = None) -> int:
     """Shard count for a grid call: ``devices`` override (clamped to the
     visible device count), else every visible local device (1 = plain
-    vmap, no pmap)."""
+    vmap, no sharding)."""
     avail = jax.local_device_count() if HAS_JAX else 1
     if devices is not None:
         return min(max(1, int(devices)), avail)
     return avail
 
 
-def _run_sharded(vmapped, pmapped, row_args, const_args, S: int,
-                 devices: Optional[int]):
-    """Dispatch a stacked grid: ``pmap(vmap(kernel))`` over ``D`` shards
-    when more than one device is requested/visible (rows padded to a
-    multiple of ``D`` by repeating row 0, trimmed after), else one plain
-    ``vmap``.  ``row_args`` carry the mapped (S, ...) leading axis;
-    ``const_args`` are broadcast."""
+_mesh_cache: dict = {}
+
+
+def _grid_mesh(D: int):
+    """1-D ``Mesh`` over the first ``D`` local devices, axis ``"grid"``."""
+    if D not in _mesh_cache:
+        from jax.sharding import Mesh
+
+        _mesh_cache[D] = Mesh(np.array(jax.devices()[:D]), ("grid",))
+    return _mesh_cache[D]
+
+
+_shmap_cache: dict = {}
+
+
+def _shmap_compiled(family_key, shard_fn, n_row: int, n_const: int, D: int):
+    """jit(shard_map(vmap(kernel))) over ``D`` devices: row args split on
+    axis 0 (``P("grid")``), consts replicated (``P()``).  Each shard runs
+    the same vmapped per-row program as the pmap path, so outputs are
+    bit-identical."""
+    key = (family_key, D)
+    if key not in _shmap_cache:
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+
+        specs = (P("grid"),) * n_row + (P(),) * n_const
+        fn = shard_map(shard_fn, mesh=_grid_mesh(D), in_specs=specs,
+                       out_specs=P("grid"), check_rep=False)
+        _shmap_cache[key] = jax.jit(fn)
+    return _shmap_cache[key]
+
+
+def _run_sharded(vmapped, pmapped, shard_fn, family_key, row_args,
+                 const_args, S: int, devices: Optional[int],
+                 impl: Optional[str] = None):
+    """Dispatch a stacked grid over ``D`` shards when more than one device
+    is requested/visible, else one plain ``vmap``.  Rows pad to a multiple
+    of ``D`` by repeating row 0 (trimmed after); both impls hand shard
+    ``d`` the contiguous row block ``[d*rows, (d+1)*rows)``.  ``row_args``
+    carry the mapped (S, ...) leading axis; ``const_args`` are broadcast.
+
+    ``impl``: ``"shard_map"`` (default — 1-D mesh partition of axis 0) or
+    ``"pmap"`` (legacy ``pmap(vmap(kernel))`` reshape path, kept as the
+    bit-parity anchor)."""
+    impl = impl or GRID_IMPL
+    if impl not in ("shard_map", "pmap"):
+        raise ValueError(f"unknown grid impl {impl!r}")
     D = grid_devices(devices)
     if D <= 1 or S < 1:
         return [np.asarray(o) for o in vmapped(*row_args, *const_args)]
     rows = -(-S // D)                            # ceil(S / D)
     pad = rows * D - S
 
-    def shard(a):
+    def padded(a):
         a = jnp.asarray(a)
         if pad:
             a = jnp.concatenate([a, jnp.repeat(a[:1], pad, axis=0)])
-        return a.reshape((D, rows) + a.shape[1:])
+        return a
 
-    outs = pmapped(*[shard(a) for a in row_args], *const_args)
+    if impl == "shard_map":
+        fn = _shmap_compiled(family_key, shard_fn, len(row_args),
+                             len(const_args), D)
+        outs = fn(*[padded(a) for a in row_args], *const_args)
+        return [np.asarray(o)[:S] for o in outs]
+
+    outs = pmapped(*[padded(a).reshape((D, rows) + jnp.shape(a)[1:])
+                     for a in row_args], *const_args)
     return [np.asarray(o).reshape((-1,) + np.asarray(o).shape[2:])[:S]
             for o in outs]
 
@@ -483,11 +542,15 @@ _grid_cache: dict = {}
 
 
 def _jffc_grid_compiled():
+    """(jit(vmap), pmap(vmap), raw vmap) triple for the slot-race kernel;
+    the raw vmap is what :func:`_shmap_compiled` wraps per device count."""
     if "jffc" not in _grid_cache:
         axes = (0, None, None, None, None)
+        shard_fn = jax.vmap(_scan_kernel, in_axes=axes)
         _grid_cache["jffc"] = (
-            jax.jit(jax.vmap(_scan_kernel, in_axes=axes)),
+            jax.jit(shard_fn),
             jax.pmap(jax.vmap(_scan_kernel, in_axes=axes), in_axes=axes),
+            shard_fn,
         )
     return _grid_cache["jffc"]
 
@@ -508,19 +571,22 @@ def _event_grid_compiled(policy: str):
         _grid_cache[key] = (
             vmapped,
             jax.pmap(jax.vmap(fn, in_axes=axes), in_axes=axes),
+            jax.vmap(fn, in_axes=axes),
         )
     return _grid_cache[key]
 
 
 def run_jffc_scan_grid(times: np.ndarray, works: np.ndarray,
                        slot_rate: np.ndarray, slot_prio: np.ndarray,
-                       devices: Optional[int] = None
+                       devices: Optional[int] = None,
+                       impl: Optional[str] = None
                        ) -> Tuple[np.ndarray, np.ndarray]:
     """:func:`run_jffc_scan_batch` with device sharding: the stacked
-    (S, n) grid splits over ``D`` devices (``pmap`` of the vmapped
-    kernel), one shard per device; ``devices=None`` uses every visible
-    device, 1 forces the single-device ``vmap`` fallback."""
-    vmapped, pmapped = _jffc_grid_compiled()
+    (S, n) grid splits over ``D`` devices, one contiguous row block per
+    device; ``devices=None`` uses every visible device, 1 forces the
+    single-device ``vmap`` fallback.  ``impl`` picks ``"shard_map"``
+    (default) or the legacy ``"pmap"`` parity anchor."""
+    vmapped, pmapped, shard_fn = _jffc_grid_compiled()
     C = len(slot_rate)
     S = times.shape[0]
     with jax.experimental.enable_x64():
@@ -531,8 +597,9 @@ def run_jffc_scan_grid(times: np.ndarray, works: np.ndarray,
         const = (jnp.asarray(slot_rate, jnp.float64),
                  jnp.asarray(slot_prio, jnp.float64), fs0,
                  jnp.float64(0.0))
-        starts, finishes, _slots = _run_sharded(vmapped, pmapped, (tw,),
-                                                const, S, devices)
+        starts, finishes, _slots = _run_sharded(vmapped, pmapped, shard_fn,
+                                                "jffc", (tw,), const, S,
+                                                devices, impl)
     return starts, finishes
 
 
@@ -540,12 +607,13 @@ def run_event_scan_grid(policy: str, times: np.ndarray, works: np.ndarray,
                         us: np.ndarray, slot_rate: np.ndarray,
                         slot_chain: np.ndarray, rates: Sequence[float],
                         caps: Sequence[int], chain_order: Sequence[int],
-                        devices: Optional[int] = None):
+                        devices: Optional[int] = None,
+                        impl: Optional[str] = None):
     """Fresh-state event kernel over a stacked (S, n) policy/seed grid,
     sharded over devices like :func:`run_jffc_scan_grid`.  ``us`` is the
     (S, n) stack of counter-scheme uniforms (zeros for deterministic
     policies).  Returns numpy ``(ys, st, fin)`` with leading axis S."""
-    vmapped, pmapped = _event_grid_compiled(policy)
+    vmapped, pmapped, shard_fn = _event_grid_compiled(policy)
     capsf, rank, c_mu, inv_mu = _chain_consts(rates, caps, chain_order)
     C = len(slot_rate)
     K = len(rates)
@@ -566,7 +634,7 @@ def run_event_scan_grid(policy: str, times: np.ndarray, works: np.ndarray,
                  jnp.zeros((K,), jnp.float64),             # run0
                  jnp.zeros((K,), jnp.float64),             # nsys0
                  jnp.float64(0.0))                         # seqc0
-        ys, _sl, st, fin, _qh, _qn, _sq = _run_sharded(vmapped, pmapped,
-                                                       row_args, const, S,
-                                                       devices)
+        ys, _sl, st, fin, _qh, _qn, _sq = _run_sharded(
+            vmapped, pmapped, shard_fn, ("event", policy), row_args, const,
+            S, devices, impl)
     return ys, st, fin

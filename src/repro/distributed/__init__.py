@@ -1,3 +1,9 @@
+from .mesh import (
+    STAGE_AXIS,
+    ensure_host_device_flag,
+    stage_devices,
+    stage_mesh,
+)
 from .sharding import (
     ShardingContext,
     batch_shardings,
@@ -8,6 +14,7 @@ from .sharding import (
 )
 
 __all__ = [
+    "STAGE_AXIS", "ensure_host_device_flag", "stage_devices", "stage_mesh",
     "ShardingContext", "batch_shardings", "cache_shardings",
     "opt_shardings", "param_pspec", "params_shardings",
 ]

@@ -1,0 +1,63 @@
+"""Stage meshes + host-device virtualization for pipeline-parallel serving.
+
+The pipeline engine (serving/pipeline.py) places each chain hop's layer
+range on a device of a 1-D :class:`jax.sharding.Mesh` over axis
+``"stage"``.  On a real deployment those are distinct accelerators; in CI
+and on developer laptops XLA can split the host CPU into N virtual
+devices:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8
+
+set **before** jax first initializes a backend (before the first device
+query / computation — merely importing jax is fine).  The CI jax matrix
+runs under that flag, which is also what finally exercises the sweep's
+multi-device grid dispatch (core/engines/jax_scan.py) on more than one
+device.
+
+``ensure_host_device_flag`` is the programmatic version for benchmark
+entry points: call it at module import time, before anything touches a
+jax device.
+"""
+from __future__ import annotations
+
+import os
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+import jax
+from jax.sharding import Mesh
+
+STAGE_AXIS = "stage"
+HOST_DEVICE_FLAG = "--xla_force_host_platform_device_count"
+
+
+def ensure_host_device_flag(n: int = 8) -> None:
+    """Append ``--xla_force_host_platform_device_count=n`` to ``XLA_FLAGS``
+    unless some such flag is already present.  Only effective before jax
+    initializes its backends — callers must invoke this before the first
+    device query (benchmark mains do it at module top)."""
+    flags = os.environ.get("XLA_FLAGS", "")
+    if HOST_DEVICE_FLAG not in flags:
+        os.environ["XLA_FLAGS"] = f"{flags} {HOST_DEVICE_FLAG}={n}".strip()
+
+
+def stage_devices(num_stages: int, devices: Optional[Sequence] = None) -> List:
+    """One device per pipeline stage, cycling round-robin when the host has
+    fewer devices than stages (co-located stages still pipeline correctly —
+    they just share that device's throughput)."""
+    if num_stages < 1:
+        raise ValueError(f"num_stages must be >= 1, got {num_stages}")
+    devs = list(devices) if devices is not None else list(jax.local_devices())
+    return [devs[k % len(devs)] for k in range(num_stages)]
+
+
+def stage_mesh(num_stages: int, devices: Optional[Sequence] = None) -> Mesh:
+    """The 1-D ``"stage"`` mesh behind a pipeline: one entry per *distinct*
+    device in stage order (meshes cannot repeat devices, so with more
+    stages than devices the mesh holds the device cycle once)."""
+    uniq: List = []
+    for d in stage_devices(num_stages, devices):
+        if d not in uniq:
+            uniq.append(d)
+    return Mesh(np.array(uniq), (STAGE_AXIS,))

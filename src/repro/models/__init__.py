@@ -1,4 +1,4 @@
-from .model import Model
+from .model import LayerSlice, Model
 from .transformer import stages, layer_kind
 
-__all__ = ["Model", "stages", "layer_kind"]
+__all__ = ["LayerSlice", "Model", "stages", "layer_kind"]

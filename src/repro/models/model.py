@@ -252,3 +252,123 @@ class Model:
 
     def cache_specs(self, batch: int, max_seq: int):
         return jax.eval_shape(lambda: self.init_cache(batch, max_seq))
+
+    # -- layer slicing (pipeline stages) ------------------------------------------
+    def layer_slice(self, lo: int, hi: int) -> "LayerSlice":
+        """A view over the contiguous global layer range ``[lo, hi)`` — the
+        unit a pipeline stage executes (see serving/pipeline.py)."""
+        return LayerSlice(self, lo, hi)
+
+
+class LayerSlice:
+    """A contiguous global layer range ``[lo, hi)`` of a :class:`Model`.
+
+    Exposes the per-range pieces of the model surface that a pipeline stage
+    needs — ``slice_params`` / ``init_cache`` / ``cache_specs`` over just
+    these layers, plus block-only forwards (``seq_blocks`` /
+    ``decode_blocks``) with the same scan-vs-unrolled structure as the full
+    model.  A full-range slice (``lo=0, hi=num_layers``) traces graphs
+    identical to ``Model.prefill`` / ``Model.decode_step`` once composed
+    with ``embed_inputs`` and ``logits``, which is what makes single-stage
+    pipeline execution bit-identical to the monolithic engines.
+
+    Embedding / head / final-norm parameters ride along in every slice:
+    the first stage embeds, the last applies the head (possibly tied to
+    the embedding), and they are small next to the block stack.
+    """
+
+    def __init__(self, model: Model, lo: int, hi: int):
+        L = model.cfg.num_layers
+        if not (0 <= lo < hi <= L):
+            raise ValueError(f"layer range [{lo}, {hi}) outside [0, {L}]")
+        self.model = model
+        self.cfg = model.cfg
+        self.lo = lo
+        self.hi = hi
+        pieces = []
+        for si, st in enumerate(model.stages):
+            a = max(lo, st.first_layer) - st.first_layer
+            b = min(hi, st.first_layer + st.count) - st.first_layer
+            if b > a:
+                pieces.append((si, a, b))
+        self._pieces: Tuple[Tuple[int, int, int], ...] = tuple(pieces)
+        self.stages: Tuple[Stage, ...] = tuple(
+            Stage(model.stages[si].kind, b - a, model.stages[si].first_layer + a)
+            for si, a, b in pieces)
+
+    @property
+    def num_layers(self) -> int:
+        return self.hi - self.lo
+
+    def slice_params(self, params: Params) -> Params:
+        """Params holding only this range's blocks: ``"stages"`` entries
+        align with :attr:`stages`; everything else passes through."""
+        out = {k: v for k, v in params.items() if k != "stages"}
+        out["stages"] = [
+            jax.tree.map(lambda t, _a=a, _b=b: t[_a:_b], params["stages"][si])
+            for si, a, b in self._pieces]
+        return out
+
+    def init_cache(self, batch: int, max_seq: int) -> list:
+        cfg = self.cfg
+        caches = []
+        for st in self.stages:
+            one = init_layer_cache(cfg, st.kind, batch, max_seq)
+            caches.append(jax.tree.map(
+                lambda a: jnp.broadcast_to(a[None], (st.count, *a.shape)), one))
+        return caches
+
+    def cache_specs(self, batch: int, max_seq: int):
+        return jax.eval_shape(lambda: self.init_cache(batch, max_seq))
+
+    def seq_blocks(self, params: Params, cache: list, x: jnp.ndarray,
+                   ) -> Tuple[jnp.ndarray, list]:
+        """Sequence forward (prefill) over just this range's blocks."""
+        cfg = self.cfg
+        positions = jnp.arange(x.shape[1])[None, :]
+        new_caches = []
+        for pi, st in enumerate(self.stages):
+            sp = params["stages"][pi]
+
+            def body_c(h, args, _kind=st.kind):
+                lp, lc = args
+                h, nc = block_seq(cfg, _kind, lp, h, positions, lc)
+                return h, nc
+            if cfg.scan_layers and st.count > 1:
+                x, nc = jax.lax.scan(body_c, x, (sp, cache[pi]))
+            else:
+                ncs = []
+                for l in range(st.count):
+                    lp = jax.tree.map(lambda a: a[l], sp)
+                    lc = jax.tree.map(lambda a: a[l], cache[pi])
+                    x, nc_l = body_c(x, (lp, lc))
+                    ncs.append(nc_l)
+                nc = jax.tree.map(lambda *a: jnp.stack(a), *ncs)
+            new_caches.append(nc)
+        return x, new_caches
+
+    def decode_blocks(self, params: Params, cache: list, x: jnp.ndarray,
+                      lengths: jnp.ndarray) -> Tuple[jnp.ndarray, list]:
+        """One decode step over just this range's blocks (hidden in/out)."""
+        cfg = self.cfg
+        new_caches = []
+        for pi, st in enumerate(self.stages):
+            sp = params["stages"][pi]
+
+            def body(h, args, _kind=st.kind):
+                lp, lc = args
+                h, nc = block_decode(cfg, _kind, lp, h, lengths, lc)
+                return h, nc
+
+            if cfg.scan_layers and st.count > 1:
+                x, nc = jax.lax.scan(body, x, (sp, cache[pi]))
+            else:
+                ncs = []
+                for l in range(st.count):
+                    lp = jax.tree.map(lambda a: a[l], sp)
+                    lc = jax.tree.map(lambda a: a[l], cache[pi])
+                    x, nc_l = body(x, (lp, lc))
+                    ncs.append(nc_l)
+                nc = jax.tree.map(lambda *a: jnp.stack(a), *ncs)
+            new_caches.append(nc)
+        return x, new_caches

@@ -340,12 +340,59 @@ def decode_orchestrator_trace(orch: Any,
                else qp.take_new(s.t1))
         packed.append(Span(s.name, s.cat, s.t0, s.t1, s.pid, tid, s.args))
 
+    # ---- pipeline-stage lanes -------------------------------------------
+    # Pipeline engines built with trace_schedule=True record the logical
+    # 1F schedule (round, tick, stage, microbatch) as plain host-side dicts
+    # — still zero device-side instrumentation, the PR 7 contract.  Each
+    # (chain, stage) pair becomes a lane whose spans subdivide the decode
+    # round into ticks, with one track per microbatch, so Perfetto shows
+    # the wavefront overlap: stage k+1 on microbatch j-1 while stage k
+    # runs j.
+    n_stage_spans = 0
+    next_pid = max(lanes) + 1 if lanes else FIRST_CHAIN_LANE
+    for idx, eng in enumerate(getattr(orch, "engines", [])):
+        sched = getattr(eng, "stage_schedule", None)
+        if not sched:
+            continue
+        plan = getattr(eng, "plan", None)
+        stage_pid: Dict[int, int] = {}
+        for k in range(getattr(eng, "num_stages", 0)):
+            label = f"chain[{idx}]/stage[{k}]"
+            if plan is not None:
+                label += f" L{plan[k].lo}:{plan[k].hi}"
+            dev = getattr(eng, "devices", None)
+            if dev is not None:
+                label += f" @{dev[k]}"
+            stage_pid[k] = next_pid
+            lanes[next_pid] = label
+            next_pid += 1
+        # round timestamps -> tick widths: a round's ticks split the gap
+        # to the next round (or the median round gap for the last one)
+        rounds = sorted({float(e["now"]) for e in sched})
+        gaps = [b - a for a, b in zip(rounds, rounds[1:]) if b > a]
+        default_gap = sorted(gaps)[len(gaps) // 2] if gaps else 1.0
+        gap_of = {t: (rounds[i + 1] - t if i + 1 < len(rounds)
+                      and rounds[i + 1] > t else default_gap)
+                  for i, t in enumerate(rounds)}
+        for e in sched:
+            t = float(e["now"])
+            dt_tick = gap_of[t] / max(int(e["n_ticks"]), 1)
+            t0 = t + int(e["tick"]) * dt_tick
+            spans_args = {"round": int(e["round"]), "tick": int(e["tick"]),
+                          "ubatch": int(e["ubatch"]), "rows": int(e["rows"]),
+                          "chain": idx}
+            packed.append(Span(f"mb{int(e['ubatch'])}", "pipeline",
+                               t0, t0 + dt_tick, stage_pid[int(e["stage"])],
+                               int(e["ubatch"]), spans_args))
+            n_stage_spans += 1
+
     out_meta = {
         "plane": "live",
         "n_finished": len(orch.finished),
         "n_failed": len(orch.failed),
         "n_deferred": len(orch.deferred),
         "recompositions": getattr(orch, "recompositions", 0),
+        "n_stage_spans": n_stage_spans,
     }
     out_meta.update(meta or {})
     return RunTrace(spans=packed, markers=all_markers, lanes=lanes,

@@ -13,6 +13,9 @@ from .request import Request, State
 _LAZY = {
     "ChainEngine": "engine",
     "PagedChainEngine": "engine",
+    "PipelineChainEngine": "pipeline",
+    "StageSpec": "pipeline",
+    "plan_stages": "pipeline",
     "SlotCache": "kv_cache",
     "PagedCache": "kv_cache",
     "PageAccounting": "kv_cache",
@@ -22,7 +25,8 @@ _LAZY = {
 }
 
 __all__ = [
-    "ChainEngine", "PagedChainEngine", "SlotCache", "PagedCache",
+    "ChainEngine", "PagedChainEngine", "PipelineChainEngine", "StageSpec",
+    "plan_stages", "SlotCache", "PagedCache",
     "PageAccounting", "PAGE_SIZE", "service_spec_for", "tau_estimates",
     "Orchestrator", "OrchestratorConfig", "Request", "State",
     "MockEngine", "mock_orchestrator",

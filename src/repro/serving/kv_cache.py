@@ -43,7 +43,8 @@ recurrent state as seq-independent.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional, Tuple
+import math
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -120,14 +121,36 @@ class SlotCache:
     cache leaf (axis 1, after the per-stage layer axis) belongs to request i.
     """
 
-    def __init__(self, model: Model, capacity: int, max_seq: int):
+    def __init__(self, model: Model, capacity: int, max_seq: int,
+                 device=None, materialize: bool = True):
         self.model = model
         self.capacity = capacity
         self.max_seq = max_seq
-        self.cache = model.init_cache(capacity, max_seq)
+        self.device = device
+        if materialize:
+            cache = model.init_cache(capacity, max_seq)
+            if device is not None:
+                cache = jax.device_put(cache, device)
+            self.cache = cache
+        else:
+            # accounting-only master: slot lifecycle without leaves (the
+            # leaves live in per-stage leaf_range views)
+            self.cache = None
         self.free: List[int] = list(range(capacity))
         self._active: set = set()
         self.lengths = np.zeros((capacity,), np.int32)
+
+    def leaf_range(self, model_slice, device=None) -> "SlotCache":
+        """A pipeline-stage view: its own device-resident cache leaves for
+        ``model_slice``'s layer range, sharing this cache's slot accounting
+        (free list, active set, lengths) *by reference* — acquire/release on
+        any view or the master is visible to all."""
+        view = SlotCache(model_slice, self.capacity, self.max_seq,
+                         device=device)
+        view.free = self.free
+        view._active = self._active
+        view.lengths = self.lengths
+        return view
 
     def acquire(self) -> Optional[int]:
         if not self.free:
@@ -197,6 +220,36 @@ class PageAccounting:
     def gb_for_pages(self, pages: int) -> float:
         return self.slot_gb * (pages / self.pages_per_slot)
 
+    def split(self, layer_counts: Sequence[int]) -> Tuple["PageAccounting", ...]:
+        """Per-pipeline-stage grants: a stage serving ``n_k`` of the range's
+        ``L`` layers holds ``slot_gb * n_k / L`` of the slot's cache bytes.
+
+        Conservation is exact *by construction*, not by rounding luck: the
+        last stage takes the residual ``slot_gb - sum(earlier grants)``
+        (nudged by ulps against float double-rounding), so summing the
+        grants left-to-right reproduces the paper's ``s_c`` bit-for-bit —
+        the control-plane contract survives sharding the cache over stages.
+        """
+        counts = [int(c) for c in layer_counts]
+        if not counts or any(c <= 0 for c in counts):
+            raise ValueError(f"layer counts must be positive, got {layer_counts}")
+        L = sum(counts)
+        grants: List[float] = [self.slot_gb * (c / L) for c in counts[:-1]]
+        acc = 0.0
+        for g in grants:
+            acc += g
+        last = self.slot_gb - acc
+        for _ in range(4):          # double-rounding guard (at most 1-2 ulps)
+            total = acc + last
+            if total == self.slot_gb:
+                break
+            last = math.nextafter(
+                last, -math.inf if total > self.slot_gb else math.inf)
+        if acc + last != self.slot_gb:
+            raise AssertionError("stage grant residual failed to close")
+        grants.append(last)
+        return tuple(dataclasses.replace(self, slot_gb=g) for g in grants)
+
 
 class PagedCache:
     """Paged KV cache: pooled fixed-size token pages + per-slot block tables.
@@ -218,7 +271,8 @@ class PagedCache:
 
     def __init__(self, model: Model, num_slots: int, max_seq: int,
                  page_size: int = PAGE_SIZE,
-                 total_pages: Optional[int] = None):
+                 total_pages: Optional[int] = None,
+                 device=None, materialize: bool = True):
         if page_size < 1 or (page_size & (page_size - 1)):
             raise ValueError(f"page_size must be a power of two, got {page_size}")
         if max_seq % page_size:
@@ -250,14 +304,23 @@ class PagedCache:
             and a.shape[2] != b.shape[2]
             for a, b in zip(flat, flat2))
         self._one_specs = flat
-        self.leaves: List[jnp.ndarray] = []
-        for spec, paged in zip(flat, self._paged):
-            if paged:
-                shape = (spec.shape[0], total_pages + 1, page_size,
-                         *spec.shape[3:])
-            else:
-                shape = (spec.shape[0], num_slots, *spec.shape[2:])
-            self.leaves.append(jnp.zeros(shape, spec.dtype))
+        self.device = device
+        if materialize:
+            self.leaves: List[jnp.ndarray] = []
+            for spec, paged in zip(flat, self._paged):
+                if paged:
+                    shape = (spec.shape[0], total_pages + 1, page_size,
+                             *spec.shape[3:])
+                else:
+                    shape = (spec.shape[0], num_slots, *spec.shape[2:])
+                leaf = jnp.zeros(shape, spec.dtype)
+                if device is not None:
+                    leaf = jax.device_put(leaf, device)
+                self.leaves.append(leaf)
+        else:
+            # accounting-only master: block table / free stack / lengths
+            # without pool buffers (the leaves live in leaf_range views)
+            self.leaves = None
 
         self.block_table = np.full((num_slots, self.pages_per_slot), -1,
                                    np.int32)
@@ -267,6 +330,25 @@ class PagedCache:
         self._active: set = set()
         self._free_pages: List[int] = list(range(total_pages))
         self._write_jit = jax.jit(self._write_impl, donate_argnums=(0,))
+
+    def leaf_range(self, model_slice, device=None) -> "PagedCache":
+        """A pipeline-stage view: its own device-resident pool buffers for
+        ``model_slice``'s layer range, sharing this cache's page accounting
+        (block table, free-page stack, per-slot lengths, slot free list)
+        *by reference*.  Page ids are global, so one ``decode_view`` from
+        the master indexes every stage's pool identically, and the sum of
+        per-stage memory grants is the master's grant exactly (see
+        :meth:`PageAccounting.split`)."""
+        view = PagedCache(model_slice, self.num_slots, self.max_seq,
+                          page_size=self.page_size,
+                          total_pages=self.total_pages, device=device)
+        view.block_table = self.block_table
+        view.pages_used = self.pages_used
+        view.lengths = self.lengths
+        view.free = self.free
+        view._active = self._active
+        view._free_pages = self._free_pages
+        return view
 
     # -- accounting ------------------------------------------------------------
     @property
@@ -371,12 +453,17 @@ class PagedCache:
         one_leaves, treedef = jax.tree_util.tree_flatten(cache_one)
         if treedef != self._treedef:
             raise ValueError("cache_one structure does not match the model cache")
-        pad_len = next(
-            one.shape[2] for one, paged in zip(one_leaves, self._paged) if paged)
-        n_chunks = pad_len // self.page_size
-        n_real = min(self.pages_for(true_len), n_chunks)
-        ids = np.full((n_chunks,), self.scratch_page, np.int32)
-        ids[:n_real] = self.block_table[slot, :n_real]
+        pads = [one.shape[2]
+                for one, paged in zip(one_leaves, self._paged) if paged]
+        if pads:
+            n_chunks = pads[0] // self.page_size
+            n_real = min(self.pages_for(true_len), n_chunks)
+            ids = np.full((n_chunks,), self.scratch_page, np.int32)
+            ids[:n_real] = self.block_table[slot, :n_real]
+        else:
+            # resident-only layer range (e.g. a pure-SSM pipeline stage):
+            # nothing paged to scatter, slot rows only
+            ids = np.zeros((0,), np.int32)
         self.leaves = self._write_jit(
             self.leaves, one_leaves, jnp.asarray(ids),
             jnp.asarray(slot, jnp.int32))

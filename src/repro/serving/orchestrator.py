@@ -301,22 +301,7 @@ class Orchestrator:
             m.counter("orch.completions").inc(len(done))
             m.gauge("orch.queue_len").set(len(self.queue))
             m.gauge("orch.deferred").set(len(self.deferred))
-            m.gauge("orch.active_slots").set(
-                sum(e.num_active for e in self.engines))
-            # data-plane gauges, still round-granularity only (the PR 7
-            # zero-hot-loop contract): free pages across paged engines,
-            # per-engine batch occupancy, live prefill-jit specializations
-            pages = [e.free_pages for e in self.engines
-                     if hasattr(e, "free_pages")]
-            if pages:
-                m.gauge("orch.free_pages").set(sum(pages))
-            m.gauge("orch.prefill_buckets").set(
-                sum(getattr(e, "prefill_bucket_count", 0)
-                    for e in self.engines))
-            occ = m.histogram("orch.batch_occupancy")
-            for e in self.engines:
-                if e.capacity:
-                    occ.record(e.num_active / e.capacity)
+            self._publish_engine_gauges()
             h = m.histogram("orch.response_s")
             for req in done:
                 rt = req.response_time()
@@ -325,6 +310,31 @@ class Orchestrator:
         for hook in self.step_hooks:
             hook(self, now)
         return done
+
+    def _publish_engine_gauges(self) -> None:
+        """Data-plane gauges, round-granularity only (the PR 7 zero-hot-loop
+        contract): active slots, free pages across paged engines, per-engine
+        batch occupancy, live prefill-jit specializations.  Called from
+        :meth:`step` *and* from every eviction / preemption / recomposition
+        path — a page freed by ``evict_all`` must show up in
+        ``orch.free_pages`` without waiting for the next decode round, or
+        traces read as phantom page leaks."""
+        if self.metrics is None:
+            return
+        m = self.metrics
+        m.gauge("orch.active_slots").set(
+            sum(e.num_active for e in self.engines))
+        pages = [e.free_pages for e in self.engines
+                 if hasattr(e, "free_pages")]
+        if pages:
+            m.gauge("orch.free_pages").set(sum(pages))
+        m.gauge("orch.prefill_buckets").set(
+            sum(getattr(e, "prefill_bucket_count", 0)
+                for e in self.engines))
+        occ = m.histogram("orch.batch_occupancy")
+        for e in self.engines:
+            if e.capacity:
+                occ.record(e.num_active / e.capacity)
 
     def drain(self, now_fn=None, max_rounds: int = 100_000) -> None:
         """Run decode rounds until queue + deferred + engines are empty."""
@@ -384,6 +394,7 @@ class Orchestrator:
         self._recompose_preserving(now, drain=True)
         for req in survivors:
             self._resubmit(req, now)
+        self._publish_engine_gauges()
         return requeued
 
     def add_server(self, server: Server, now: float = 0.0,
@@ -411,6 +422,7 @@ class Orchestrator:
             self.warming.pop(sid, None)
         before = sum(len(e.requests) for e in self.draining)
         self._recompose_preserving(now, drain=True)
+        self._publish_engine_gauges()
         return sum(len(e.requests) for e in self.draining) - before
 
     def _expire_warming(self, now: float) -> None:
@@ -452,6 +464,7 @@ class Orchestrator:
         self.engines = new_engines
         for req in evicted:
             self._resubmit(req, now)
+        self._publish_engine_gauges()
 
     def report_tau(self, sid: str, observed_scale: float, now: float = 0.0) -> None:
         """EWMA straggler feedback: observed_scale = measured/nominal time."""

@@ -1,0 +1,502 @@
+"""Pipeline-parallel chain execution: the paper's placement, run as stages.
+
+A chain is the GBP-CR placement (the paper's ``x`` variable) made concrete:
+hop ``h`` of a chain puts ``chain.blocks[h]`` consecutive model blocks on
+one server.  The monolithic engines (engine.py) preserve that structure
+only in accounting — the whole block stack executes as one jit on one
+device.  Here each hop becomes a *pipeline stage*: :func:`plan_stages`
+maps the per-hop block counts to contiguous layer ranges, each range runs
+on its own device of the 1-D ``"stage"`` mesh
+(:func:`repro.distributed.stage_mesh`), holding only its layers' parameters
+(:meth:`Model.layer_slice`) and — via :meth:`PagedCache.leaf_range` /
+:meth:`SlotCache.leaf_range` — exactly its layers' KV leaves.  Slot and
+page *accounting* stay shared by reference, and the per-stage memory
+grants of :meth:`PageAccounting.split` sum to the paper's ``s_c``
+bit-for-bit: sharding the cache never changes the control-plane contract.
+
+Decode rounds run a microbatched 1F schedule: the active slots split into
+``M`` microbatches; at tick ``t`` stage ``k`` runs microbatch ``t - k``,
+so stage ``k+1`` processes microbatch ``j-1`` while stage ``k`` processes
+``j`` — ``S + M - 1`` ticks per round instead of ``S * M`` stage-calls of
+latency.  Activations hand off stage-to-stage via per-stage jit +
+``device_put`` (the portable fallback of the shard_map collective-permute
+design: XLA's CPU backend has no cross-device DMA, and explicit transfers
+keep each stage's trace donate-able and device-committed).  Even with
+stages sharing one physical core the schedule wins: batch size and page
+count bucket *per microbatch* instead of globally, so e.g. a 9-slot round
+pads to 4+2+2+2 = 10 decode rows at ``M=4`` where the monolithic engine
+pads to 16 — less padded row work per layer at identical token streams.
+
+Single-stage mode is the parity anchor: ``num_stages=1`` composes the
+same embed → blocks → logits graph as ``PagedChainEngine._step_impl`` /
+``ChainEngine`` and is CI-gated bit-identical to both monolithic engines
+on both KV layouts; microbatching only regroups rows of a row-independent
+batched decode, so any ``M`` yields the same greedy streams.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.chains import Chain
+from repro.distributed.mesh import stage_devices, stage_mesh
+from repro.models import Model
+from .engine import DECODE_SHAPE_LIMIT, PREFILL_BUCKET_LIMIT, _bucket, _pow2
+from .kv_cache import PAGE_SIZE, PagedCache, SlotCache
+from .request import Request, State
+
+
+@dataclasses.dataclass(frozen=True)
+class StageSpec:
+    """One pipeline stage: a contiguous global layer range ``[lo, hi)`` and
+    the chain hops (placement entries) whose blocks it executes."""
+
+    index: int
+    lo: int
+    hi: int
+    hops: Tuple[int, ...]
+
+    @property
+    def num_layers(self) -> int:
+        return self.hi - self.lo
+
+
+def plan_stages(blocks: Sequence[int], num_stages: int) -> List[StageSpec]:
+    """Map the chain's per-hop block counts (one GBP-CR placement row) to
+    ``num_stages`` contiguous layer ranges.
+
+    Cuts prefer hop boundaries — a hop's blocks live on one server, and
+    splitting inside a hop models slicing a server, which only happens when
+    there are more stages than hops.  With fewer stages than hops,
+    contiguous hops merge greedily toward equal layer counts; with more,
+    ideal equal-layer cuts subdivide hops.  ``num_stages`` clamps to
+    ``[1, total layers]``.
+    """
+    counts = [int(b) for b in blocks]
+    if not counts or any(b <= 0 for b in counts):
+        raise ValueError(f"hop block counts must be positive, got {blocks}")
+    H = len(counts)
+    L = sum(counts)
+    S = max(1, min(int(num_stages), L))
+    bounds = [0]
+    for b in counts:
+        bounds.append(bounds[-1] + b)
+    specs: List[StageSpec] = []
+    if S <= H:
+        start = 0
+        for k in range(S):
+            stages_left = S - k
+            max_end = H - (stages_left - 1)
+            end = start + 1
+            target = (L - bounds[start]) / stages_left
+            while end < max_end:
+                cur = bounds[end] - bounds[start]
+                nxt = bounds[end + 1] - bounds[start]
+                if abs(nxt - target) <= abs(cur - target):
+                    end += 1
+                else:
+                    break
+            specs.append(StageSpec(k, bounds[start], bounds[end],
+                                   tuple(range(start, end))))
+            start = end
+    else:
+        cuts = [0]
+        for i in range(1, S):
+            c = round(i * L / S)
+            c = max(c, cuts[-1] + 1)
+            cuts.append(min(c, L - (S - i)))
+        cuts.append(L)
+        for k in range(S):
+            lo, hi = cuts[k], cuts[k + 1]
+            hops = tuple(h for h in range(H)
+                         if bounds[h] < hi and bounds[h + 1] > lo)
+            specs.append(StageSpec(k, lo, hi, hops))
+    return specs
+
+
+class PipelineChainEngine:
+    """Chain engine executing the hop placement as pipeline stages.
+
+    Drop-in for ``ChainEngine`` / ``PagedChainEngine``: same factory
+    signature ``(model, params, chain, capacity, max_seq)`` plus keyword
+    knobs, same orchestrator surface (``admit`` / ``step`` / ``evict_all``
+    / ``take_preempted`` / ``free_pages`` / ``prefill_bucket_count``), and
+    — the contract the parity tests gate — identical greedy token streams.
+
+    ``kv_layout`` picks the per-stage cache: ``"paged"`` shares one page
+    accounting across stage-local pools (preemption on exhaustion, as in
+    ``PagedChainEngine``); ``"slotted"`` shares the slot free list across
+    stage-local slot buffers.  ``num_stages=None`` means one stage per
+    chain hop.  ``microbatches`` bounds the decode-round split (clamped to
+    the active-slot count each round).
+    """
+
+    def __init__(self, model: Model, params, chain: Chain, capacity: int,
+                 max_seq: int, *, kv_layout: str = "paged",
+                 page_size: int = PAGE_SIZE, oversubscribe: float = 1.0,
+                 num_stages: Optional[int] = None, microbatches: int = 1,
+                 devices: Optional[Sequence] = None,
+                 trace_schedule: bool = False):
+        if kv_layout not in ("slotted", "paged"):
+            raise ValueError(f"unknown kv_layout {kv_layout!r}")
+        if microbatches < 1:
+            raise ValueError(f"microbatches must be >= 1, got {microbatches}")
+        self.model = model
+        self.chain = chain
+        self.capacity = capacity
+        self.max_seq = max_seq
+        self.kv_layout = kv_layout
+        self.page_size = page_size
+        self.microbatches = int(microbatches)
+        self.plan = plan_stages(
+            chain.blocks, len(chain.blocks) if num_stages is None
+            else int(num_stages))
+        self.num_stages = len(self.plan)
+        self.devices = stage_devices(self.num_stages, devices)
+        self.mesh = stage_mesh(self.num_stages, devices)
+        self.trace_schedule = trace_schedule
+        self.stage_schedule: List[dict] = []
+
+        self.slices = [model.layer_slice(sp.lo, sp.hi) for sp in self.plan]
+        self.stage_params = [
+            jax.device_put(sl.slice_params(params), dev)
+            for sl, dev in zip(self.slices, self.devices)]
+
+        if kv_layout == "paged":
+            num_slots = max(1, int(capacity * oversubscribe))
+            pages_per_slot = -(-max_seq // page_size)
+            self.cache = PagedCache(model, num_slots, max_seq,
+                                    page_size=page_size,
+                                    total_pages=capacity * pages_per_slot,
+                                    materialize=False)
+        else:
+            self.cache = SlotCache(model, capacity, max_seq,
+                                   materialize=False)
+        self.stage_caches = [self.cache.leaf_range(sl, device=dev)
+                             for sl, dev in zip(self.slices, self.devices)]
+
+        self.requests: Dict[int, Request] = {}      # slot -> request
+        self.preempted: List[Request] = []
+        self._admit_seq: Dict[int, int] = {}
+        self._seq = 0
+        self._round = 0
+
+        S = self.num_stages
+        self._prefill_jits = [jax.jit(self._make_prefill(k)) for k in range(S)]
+        self._fixup_jits = [jax.jit(self._make_fixup(k)) for k in range(S)]
+        if kv_layout == "paged":
+            self._step_jits = [jax.jit(self._make_paged_step(k),
+                                       donate_argnums=(1,)) for k in range(S)]
+        else:
+            self._step_jits = [jax.jit(self._make_slotted_step(k),
+                                       donate_argnums=(1,)) for k in range(S)]
+        self._prefill_shapes: set = set()
+        self._step_shapes: List[set] = [set() for _ in range(S)]
+
+    # -- stage programs ----------------------------------------------------------
+    # Composed over all stages these are the *same graphs* the monolithic
+    # engines jit (embed -> blocks -> logits; identical page gather/scatter),
+    # split at hidden-state boundaries — the bit-parity anchor.
+
+    def _make_prefill(self, k: int):
+        sl = self.slices[k]
+        first, last = k == 0, k == self.num_stages - 1
+        model = self.model
+
+        def fn(params, cache, x):
+            if first:
+                x = model.embed_inputs(params, {"tokens": x})
+            x, new_cache = sl.seq_blocks(params, cache, x)
+            out = model.logits(params, x[:, -1]) if last else x
+            return out, new_cache
+        return fn
+
+    def _make_fixup(self, k: int):
+        # bucketed-prefill boundary fixup: one decode step over the batch-1
+        # stage buffers (the paged engine's buffer-side fixup, per stage)
+        sl = self.slices[k]
+        first, last = k == 0, k == self.num_stages - 1
+        model = self.model
+
+        def fn(params, cache, x, lengths):
+            if first:
+                x = jnp.take(params["embed"], x, axis=0)
+            x, new_cache = sl.decode_blocks(params, cache, x, lengths)
+            out = model.logits(params, x) if last else x
+            return out, new_cache
+        return fn
+
+    def _make_paged_step(self, k: int):
+        sl = self.slices[k]
+        first, last = k == 0, k == self.num_stages - 1
+        model = self.model
+        view = self.stage_caches[k]
+
+        def fn(params, leaves, page_ids, slot_idx, x, lengths,
+               write_page, write_off):
+            nb = lengths.shape[0]
+            dense = []
+            for leaf, paged in zip(leaves, view._paged):
+                if paged:
+                    g = leaf[:, page_ids]      # (L, nb, npg, page, *tail)
+                    dense.append(g.reshape(leaf.shape[0], nb, -1,
+                                           *leaf.shape[3:]))
+                else:
+                    dense.append(leaf[:, slot_idx])
+            cache = jax.tree_util.tree_unflatten(view._treedef, dense)
+            if first:
+                x = jnp.take(params["embed"], x, axis=0)
+            x, new_cache = sl.decode_blocks(params, cache, x, lengths)
+            out = model.logits(params, x) if last else x
+            new_flat, _ = jax.tree_util.tree_flatten(new_cache)
+            rows = jnp.arange(nb)
+            new_leaves = []
+            for leaf, nd, paged in zip(leaves, new_flat, view._paged):
+                if paged:
+                    val = nd[:, rows, lengths]         # (L, nb, *tail)
+                    new_leaves.append(
+                        leaf.at[:, write_page, write_off].set(val))
+                else:
+                    new_leaves.append(leaf.at[:, slot_idx].set(nd))
+            return out, new_leaves
+        return fn
+
+    def _make_slotted_step(self, k: int):
+        sl = self.slices[k]
+        first, last = k == 0, k == self.num_stages - 1
+        model = self.model
+
+        def fn(params, cache, rows, x, lengths):
+            sub = jax.tree.map(lambda a: a[:, rows], cache)
+            if first:
+                x = jnp.take(params["embed"], x, axis=0)
+            x, new_sub = sl.decode_blocks(params, sub, x, lengths)
+            out = model.logits(params, x) if last else x
+            new_cache = jax.tree.map(
+                lambda full, nd: full.at[:, rows].set(nd), cache, new_sub)
+            return out, new_cache
+        return fn
+
+    # -- jit-cache hygiene -------------------------------------------------------
+    @property
+    def prefill_bucket_count(self) -> int:
+        return len(self._prefill_shapes)
+
+    def _prefill_cache_guard(self, key) -> None:
+        if key not in self._prefill_shapes \
+                and len(self._prefill_shapes) >= PREFILL_BUCKET_LIMIT:
+            for j in self._prefill_jits:
+                j.clear_cache()
+            for j in self._fixup_jits:
+                j.clear_cache()
+            self._prefill_shapes.clear()
+        self._prefill_shapes.add(key)
+
+    def _step_cache_guard(self, k: int, key) -> None:
+        shapes = self._step_shapes[k]
+        if key not in shapes and len(shapes) >= DECODE_SHAPE_LIMIT:
+            self._step_jits[k].clear_cache()
+            shapes.clear()
+        shapes.add(key)
+
+    # -- admission --------------------------------------------------------------
+    @property
+    def has_free_slot(self) -> bool:
+        return bool(self.cache.free)
+
+    @property
+    def num_active(self) -> int:
+        return len(self.requests)
+
+    @property
+    def free_pages(self) -> int:
+        if self.kv_layout != "paged":
+            # slotted engines have no page pool; AttributeError keeps the
+            # orchestrator's hasattr() gauge filter honest
+            raise AttributeError("free_pages")
+        return self.cache.free_pages
+
+    def admit(self, req: Request, now: float = 0.0) -> bool:
+        tokens = req.context_tokens
+        true_len = len(tokens)
+        if self.kv_layout == "paged":
+            slot = self.cache.acquire(true_len)
+            if slot is None:
+                return False             # no slot, or page budget exhausted
+            pad_to = min(max(_bucket(true_len), self.page_size), self.max_seq)
+        else:
+            slot = self.cache.acquire()
+            if slot is None:
+                return False
+            pad_to = min(_bucket(true_len), self.max_seq)
+        padded = np.zeros((1, pad_to), np.int32)
+        padded[0, :true_len] = tokens
+        self._prefill_cache_guard((1, pad_to))
+        # Prefill flows through the stages sequentially (batch-1: nothing to
+        # overlap); each stage fills its own right-sized buffer.
+        bufs = []
+        x = jnp.asarray(padded)
+        for k in range(self.num_stages):
+            if self.kv_layout == "paged":
+                buf = self.stage_caches[k].prefill_buffer(pad_to)
+            else:
+                buf = self.slices[k].init_cache(1, self.max_seq)
+            x = jax.device_put(x, self.devices[k])
+            x, buf = self._prefill_jits[k](self.stage_params[k], buf, x)
+            bufs.append(buf)
+        if true_len == pad_to:
+            next_tok = int(jnp.argmax(x[0]))
+        else:
+            # boundary fixup as in the monolithic engines: re-feed the true
+            # last token at its own position through all stages (identical
+            # k/v rewritten, correct boundary logits)
+            fx = jnp.asarray([int(tokens[-1])], jnp.int32)
+            lpos = jnp.asarray([true_len - 1], jnp.int32)
+            for k in range(self.num_stages):
+                fx = jax.device_put(fx, self.devices[k])
+                fx, bufs[k] = self._fixup_jits[k](
+                    self.stage_params[k], bufs[k], fx,
+                    jax.device_put(lpos, self.devices[k]))
+            next_tok = int(jnp.argmax(fx[0]))
+        for k in range(self.num_stages):
+            self.stage_caches[k].write_prefill(slot, bufs[k], true_len)
+        req.slot = slot
+        req.state = State.RUNNING
+        if req.start_time is None:
+            req.start_time = now
+        self.requests[slot] = req
+        self._admit_seq[slot] = self._seq
+        self._seq += 1
+        req.output.append(next_tok)
+        if req.done:
+            req.state = State.DONE
+            req.finish_time = now
+            self._release(slot)
+        return True
+
+    def _release(self, slot: int) -> None:
+        self.requests.pop(slot, None)
+        self._admit_seq.pop(slot, None)
+        self.cache.release(slot)
+
+    def _preempt(self, slot: int) -> None:
+        req = self.requests[slot]
+        req.state = State.QUEUED
+        req.slot = None
+        req.chain_idx = None
+        req.retries += 1
+        self.preempted.append(req)
+        self._release(slot)
+
+    def take_preempted(self) -> List[Request]:
+        out, self.preempted = self.preempted, []
+        return out
+
+    # -- decode ----------------------------------------------------------------
+    def _run_stage(self, k: int, meta: dict, x):
+        x = jax.device_put(x, self.devices[k])
+        view = self.stage_caches[k]
+        if self.kv_layout == "paged":
+            self._step_cache_guard(
+                k, (meta["page_ids"].shape, meta["slot_idx"].shape))
+            out, view.leaves = self._step_jits[k](
+                self.stage_params[k], view.leaves,
+                jnp.asarray(meta["page_ids"]), jnp.asarray(meta["slot_idx"]),
+                x, jnp.asarray(meta["lengths"]),
+                jnp.asarray(meta["write_page"]), jnp.asarray(meta["write_off"]))
+        else:
+            self._step_cache_guard(k, meta["rows"].shape)
+            out, view.cache = self._step_jits[k](
+                self.stage_params[k], view.cache,
+                jnp.asarray(meta["rows"]), x, jnp.asarray(meta["lengths"]))
+        return out
+
+    def step(self, now: float = 0.0) -> List[Request]:
+        """One decode round: split the active slots into microbatches, run
+        the 1F wavefront over the stages, then collect completions in
+        ascending slot order (the monolithic engines' order)."""
+        if not self.requests:
+            return []
+        if self.kv_layout == "paged":
+            # guarantee a write page per active row, preempting the
+            # youngest on exhaustion — identical to PagedChainEngine
+            alive = sorted(self.requests, key=lambda s: self._admit_seq[s])
+            for slot in list(alive):
+                if slot not in alive:
+                    continue
+                while slot in alive \
+                        and not self.cache.ensure_decode_write(slot):
+                    self._preempt(alive.pop())
+            if not alive:
+                return []
+        else:
+            alive = list(self.requests)
+        active = sorted(alive)
+        M = min(self.microbatches, len(active))
+        groups = [list(map(int, g)) for g in
+                  np.array_split(np.asarray(active, np.int64), M)]
+        S = self.num_stages
+        # Per-microbatch gathered views, all against the round-start
+        # accounting (each slot is in exactly one microbatch, so writes are
+        # disjoint and group order cannot change any row's inputs).
+        metas, xs = [], []
+        for g in groups:
+            gn = len(g)
+            nb = _pow2(gn)
+            tokens = np.zeros((nb,), np.int32)
+            for i, slot in enumerate(g):
+                tokens[i] = self.requests[slot].output[-1]
+            tokens[gn:] = tokens[0]             # pad rows mirror row 0
+            if self.kv_layout == "paged":
+                npg = _pow2(max(int(self.cache.pages_used[s]) for s in g))
+                metas.append(self.cache.decode_view(g, nb, npg))
+            else:
+                rows = np.asarray(g + [g[0]] * (nb - gn), np.int32)
+                metas.append({"rows": rows,
+                              "lengths": self.cache.lengths[rows]})
+            xs.append(jnp.asarray(tokens))
+        # 1F wavefront: tick t runs microbatch t-k on stage k (k descending
+        # so a microbatch advances at most one stage per tick)
+        for t in range(S + M - 1):
+            for k in range(S - 1, -1, -1):
+                j = t - k
+                if 0 <= j < M:
+                    xs[j] = self._run_stage(k, metas[j], xs[j])
+                    if self.trace_schedule:
+                        self.stage_schedule.append({
+                            "now": now, "round": self._round, "tick": t,
+                            "n_ticks": S + M - 1, "stage": k, "ubatch": j,
+                            "rows": len(groups[j])})
+        self._round += 1
+        finished = []
+        for j, g in enumerate(groups):
+            nxt = np.asarray(jnp.argmax(xs[j][:len(g)], axis=-1))
+            for i, slot in enumerate(g):
+                self.cache.lengths[slot] += 1
+                req = self.requests[slot]
+                req.output.append(int(nxt[i]))
+                if req.done:
+                    req.state = State.DONE
+                    req.finish_time = now
+                    finished.append(req)
+                    self._release(slot)
+        return finished
+
+    # -- failover ----------------------------------------------------------------
+    def evict_all(self) -> List[Request]:
+        out = []
+        for slot, req in list(self.requests.items()):
+            req.state = State.QUEUED
+            req.slot = None
+            req.chain_idx = None
+            req.retries += 1
+            out.append(req)
+            self.cache.release(slot)
+        self.requests.clear()
+        self._admit_seq.clear()
+        out.extend(self.take_preempted())
+        return out

@@ -1,0 +1,475 @@
+"""Pipeline-parallel chain execution: stage planning, s_c grant
+conservation, bit-parity vs the monolithic engines, microbatch stream
+invariance, LivePlane wiring, gauges/traces, and the shard_map grid path.
+
+Multi-device cases skip cleanly on a single-device host; the CI jax matrix
+runs this file under ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+which makes them real."""
+import json
+import os
+import types
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get
+from repro.core import Server
+from repro.core.chains import Chain
+from repro.models import Model
+from repro.serving import (
+    ChainEngine,
+    PagedChainEngine,
+    PipelineChainEngine,
+    Request,
+    State,
+    StageSpec,
+    plan_stages,
+    service_spec_for,
+)
+from repro.serving.kv_cache import PageAccounting
+
+multi_device = pytest.mark.skipif(
+    jax.local_device_count() < 2,
+    reason="needs >= 2 local devices "
+           "(set XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+
+
+@pytest.fixture(scope="module")
+def tiny4():
+    """4-layer reduced model + a 2-hop chain (2 blocks per hop)."""
+    cfg = get("stablelm-1.6b").reduced(num_layers=4, vocab_size=128,
+                                       attn_chunk_threshold=1 << 30)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    chain = Chain(("s0", "s1"), (2, 2), 1.0)
+    return cfg, model, params, chain
+
+
+def _mk_request(rid, prompt_len, n_new, seed=0):
+    rng = np.random.default_rng(seed + rid)
+    return Request(rid=rid,
+                   prompt=rng.integers(1, 100, prompt_len).astype(np.int32),
+                   max_new_tokens=n_new)
+
+
+def _reqs(seed=0):
+    # mixed non-pow2 prompts (boundary fixup) + enough decode to cross a
+    # page boundary; request count > capacity to stagger admissions
+    return [_mk_request(i, 5 + 7 * i, 12 + 4 * (i % 3), seed=seed)
+            for i in range(5)]
+
+
+def _drain(eng, reqs):
+    pending = list(reqs)
+    while pending or eng.requests:
+        while pending and eng.has_free_slot and eng.admit(pending[0]):
+            pending.pop(0)
+        eng.step()
+    return [list(r.output) for r in reqs]
+
+
+# ---------------------------------------------------------------------------
+# Stage planning
+# ---------------------------------------------------------------------------
+
+def test_plan_stages_one_stage_per_hop():
+    plan = plan_stages([2, 2], 2)
+    assert plan == [StageSpec(0, 0, 2, (0,)), StageSpec(1, 2, 4, (1,))]
+
+
+def test_plan_stages_merges_toward_equal_layers():
+    # [3, 1, 4] at S=2: merging hops 0+1 (4 layers) vs hop 2 (4 layers)
+    # beats any other contiguous cut
+    plan = plan_stages([3, 1, 4], 2)
+    assert [(sp.lo, sp.hi, sp.hops) for sp in plan] \
+        == [(0, 4, (0, 1)), (4, 8, (2,))]
+
+
+def test_plan_stages_splits_inside_hops_when_oversubscribed():
+    # more stages than hops: equal-layer cuts subdivide hops
+    plan = plan_stages([2, 2], 4)
+    assert [(sp.lo, sp.hi) for sp in plan] == [(0, 1), (1, 2), (2, 3), (3, 4)]
+    assert [sp.hops for sp in plan] == [(0,), (0,), (1,), (1,)]
+
+
+def test_plan_stages_covers_layers_contiguously():
+    for blocks, S in [([5], 3), ([1, 1, 1], 8), ([4], 1), ([2, 3, 1, 6], 3)]:
+        plan = plan_stages(blocks, S)
+        L = sum(blocks)
+        assert plan[0].lo == 0 and plan[-1].hi == L
+        assert all(a.hi == b.lo for a, b in zip(plan, plan[1:]))
+        assert all(sp.num_layers >= 1 for sp in plan)
+        assert len(plan) == max(1, min(S, L))
+    with pytest.raises(ValueError, match="positive"):
+        plan_stages([2, 0], 2)
+
+
+# ---------------------------------------------------------------------------
+# s_c grant conservation
+# ---------------------------------------------------------------------------
+
+def test_stage_grants_conserve_s_c_exactly():
+    """sum(per-stage grants) == the paper's s_c bit-for-bit, not approx."""
+    spec = service_spec_for(get("qwen3-8b"), max_seq=4096)
+    acct = PageAccounting.from_spec(spec, max_seq=4096)
+    for counts in ([7], [3, 4], [2, 2, 3], [1] * 7, [6, 1], [5, 2, 9]):
+        parts = acct.split(counts)
+        assert len(parts) == len(counts)
+        acc = 0.0
+        for p in parts:
+            acc += p.slot_gb
+        assert acc == acct.slot_gb          # exact float equality
+        # every stage keeps the slot's page geometry
+        assert all(p.pages_per_slot == acct.pages_per_slot for p in parts)
+
+
+def test_engine_plan_grants_conserve_s_c(tiny4):
+    cfg, model, params, chain = tiny4
+    spec = service_spec_for(cfg, max_seq=128)
+    acct = PageAccounting.from_spec(spec, max_seq=128)
+    for S in (1, 2, 3, 4):
+        plan = plan_stages(chain.blocks, S)
+        parts = acct.split([sp.num_layers for sp in plan])
+        acc = 0.0
+        for p in parts:
+            acc += p.slot_gb
+        assert acc == acct.slot_gb
+
+
+# ---------------------------------------------------------------------------
+# Bit-parity vs the monolithic engines
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("layout", ["slotted", "paged"])
+def test_single_stage_matches_monolithic(tiny4, layout):
+    """The CI parity anchor: num_stages=1 composes the monolithic graph."""
+    cfg, model, params, chain = tiny4
+    mono_cls = ChainEngine if layout == "slotted" else PagedChainEngine
+    mono = mono_cls(model, params, chain, 4, 128)
+    pipe = PipelineChainEngine(model, params, chain, 4, 128,
+                               kv_layout=layout, num_stages=1)
+    assert pipe.num_stages == 1
+    out_mono = _drain(mono, _reqs())
+    out_pipe = _drain(pipe, _reqs())
+    assert out_mono == out_pipe
+
+
+@pytest.mark.parametrize("layout,stages,micro", [
+    ("paged", None, 1),      # one stage per hop
+    ("paged", 2, 4),
+    ("slotted", 4, 2),       # intra-hop splits
+])
+def test_multistage_matches_monolithic(tiny4, layout, stages, micro):
+    """Splitting the block stack at hidden-state boundaries and regrouping
+    rows into microbatches never changes the greedy streams."""
+    cfg, model, params, chain = tiny4
+    mono_cls = ChainEngine if layout == "slotted" else PagedChainEngine
+    mono = mono_cls(model, params, chain, 4, 128)
+    pipe = PipelineChainEngine(model, params, chain, 4, 128,
+                               kv_layout=layout, num_stages=stages,
+                               microbatches=micro)
+    assert pipe.num_stages == (len(chain.blocks) if stages is None
+                               else stages)
+    assert _drain(mono, _reqs(seed=3)) == _drain(pipe, _reqs(seed=3))
+
+
+def test_microbatch_count_is_stream_invariant(tiny4):
+    """M=1 vs M=4: identical greedy token streams (rows are independent)."""
+    cfg, model, params, chain = tiny4
+    outs = []
+    for micro in (1, 4):
+        pipe = PipelineChainEngine(model, params, chain, 4, 128,
+                                   kv_layout="paged", microbatches=micro)
+        outs.append(_drain(pipe, _reqs(seed=7)))
+    assert outs[0] == outs[1]
+
+
+def test_pipeline_preemption_parity(tiny4):
+    """Page exhaustion preempts the same victims in the same order as
+    PagedChainEngine, and resubmission completes with identical streams."""
+    cfg, model, params, chain = tiny4
+
+    def run(factory):
+        eng = factory()
+        reqs = [_mk_request(i, 30, 40) for i in range(3)]
+        for r in reqs:
+            assert eng.admit(r)
+        preempted = []
+        while eng.requests:
+            eng.step()
+            preempted += eng.take_preempted()
+        order = [r.rid for r in preempted]
+        for r in preempted:
+            assert r.state == State.QUEUED and r.retries == 1
+            eng.admit(r)
+            while eng.requests:
+                eng.step()
+        return order, [list(r.output) for r in reqs]
+
+    mono = run(lambda: PagedChainEngine(model, params, chain, 1, 128,
+                                        oversubscribe=3.0))
+    pipe = run(lambda: PipelineChainEngine(model, params, chain, 1, 128,
+                                           kv_layout="paged",
+                                           oversubscribe=3.0,
+                                           microbatches=2))
+    assert mono == pipe
+    assert mono[0], "pool pressure must preempt"
+
+
+def test_pipeline_free_pages_surface(tiny4):
+    """Paged pipelines report the shared pool; slotted ones raise
+    AttributeError so the orchestrator's hasattr() gauge filter skips them.
+    evict_all returns every page."""
+    cfg, model, params, chain = tiny4
+    paged = PipelineChainEngine(model, params, chain, 2, 64,
+                                kv_layout="paged")
+    total = paged.free_pages
+    r = _mk_request(0, 20, 50)
+    assert paged.admit(r)
+    assert paged.free_pages < total
+    evicted = paged.evict_all()
+    assert [q.rid for q in evicted] == [0]
+    assert paged.free_pages == total
+
+    slotted = PipelineChainEngine(model, params, chain, 2, 64,
+                                  kv_layout="slotted")
+    assert not hasattr(slotted, "free_pages")
+
+
+@multi_device
+def test_pipeline_stages_on_distinct_devices(tiny4):
+    """With >= 2 local devices the hop placement lands on distinct devices
+    of the "stage" mesh, and cross-device handoff preserves parity."""
+    cfg, model, params, chain = tiny4
+    pipe = PipelineChainEngine(model, params, chain, 4, 128,
+                               kv_layout="paged", microbatches=2)
+    assert pipe.num_stages == 2
+    assert pipe.devices[0] != pipe.devices[1]
+    assert pipe.mesh.axis_names == ("stage",)
+    mono = PagedChainEngine(model, params, chain, 4, 128)
+    assert _drain(mono, _reqs(seed=11)) == _drain(pipe, _reqs(seed=11))
+
+
+# ---------------------------------------------------------------------------
+# distributed.mesh helpers
+# ---------------------------------------------------------------------------
+
+def test_ensure_host_device_flag(monkeypatch):
+    from repro.distributed import ensure_host_device_flag
+    from repro.distributed.mesh import HOST_DEVICE_FLAG
+
+    monkeypatch.delenv("XLA_FLAGS", raising=False)
+    ensure_host_device_flag(8)
+    assert os.environ["XLA_FLAGS"] == f"{HOST_DEVICE_FLAG}=8"
+    before = os.environ["XLA_FLAGS"]
+    ensure_host_device_flag(4)              # already present: no-op
+    assert os.environ["XLA_FLAGS"] == before
+    monkeypatch.setenv("XLA_FLAGS", "--other_flag=1")
+    ensure_host_device_flag(2)
+    assert os.environ["XLA_FLAGS"] \
+        == f"--other_flag=1 {HOST_DEVICE_FLAG}=2"
+
+
+def test_stage_devices_round_robin():
+    from repro.distributed import stage_devices, stage_mesh
+
+    devs = list(jax.local_devices())
+    got = stage_devices(len(devs) * 2 + 1)
+    assert len(got) == len(devs) * 2 + 1
+    assert all(g == devs[k % len(devs)] for k, g in enumerate(got))
+    mesh = stage_mesh(len(devs) * 2 + 1)
+    # meshes cannot repeat devices: the cycle appears exactly once
+    assert mesh.devices.size == len(devs)
+    with pytest.raises(ValueError, match="num_stages"):
+        stage_devices(0)
+
+
+# ---------------------------------------------------------------------------
+# LivePlane wiring
+# ---------------------------------------------------------------------------
+
+def test_live_plane_pipeline_knobs_validate():
+    from repro import api
+
+    with pytest.raises(api.SpecError, match="parallelism"):
+        api.LivePlane(parallelism="ring")
+    with pytest.raises(api.SpecError, match="microbatches"):
+        api.LivePlane(parallelism="pipeline", microbatches=0)
+    with pytest.raises(api.SpecError, match="pipeline_stages"):
+        api.LivePlane(parallelism="pipeline", pipeline_stages=0)
+    # pipeline-only knobs are rejected in single mode (silent no-ops would
+    # poison the results store)
+    with pytest.raises(api.SpecError, match="parallelism"):
+        api.LivePlane(microbatches=4)
+    with pytest.raises(api.SpecError, match="parallelism"):
+        api.LivePlane(pipeline_stages=2)
+
+
+def test_live_plane_pipeline_store_key_and_round_trip():
+    from repro import api
+
+    single = api.LivePlane()
+    pipe = api.LivePlane(parallelism="pipeline", pipeline_stages=2,
+                         microbatches=4)
+    assert single.store_key() != pipe.store_key()
+    assert "parallelism=pipeline" in pipe.store_key()
+    d = json.loads(json.dumps(pipe.to_dict()))
+    back = api.LivePlane.from_dict(d)
+    assert back.parallelism == "pipeline"
+    assert back.pipeline_stages == 2 and back.microbatches == 4
+    assert back.store_key() == pipe.store_key()
+
+
+def test_live_plane_pipeline_rejects_mock_engine():
+    from repro import api
+    from repro.core import ServiceSpec
+
+    spec = api.ExperimentSpec(
+        cluster=api.ClusterSpec(
+            servers=(Server("s0", 16.0, 0.05, 0.08),),
+            service=ServiceSpec(num_blocks=4, block_size_gb=1.0,
+                                cache_size_gb=0.1)),
+        scenario=api.ScenarioSpec(horizon=5.0),
+        workload=api.WorkloadSpec(base_rate=1.0),
+        seed=0)
+    with pytest.raises(api.SpecError, match="engine='jax'"):
+        api.run(spec, plane=api.LivePlane(parallelism="pipeline"))
+
+
+# ---------------------------------------------------------------------------
+# Gauges + flight-recorder stage lanes
+# ---------------------------------------------------------------------------
+
+def test_eviction_publishes_gauges_immediately(tiny4):
+    """A page freed by failover shows in orch.free_pages without waiting
+    for the next decode round (no phantom page leaks in traces)."""
+    from functools import partial
+
+    from repro.obs import MetricsRegistry
+    from repro.serving import Orchestrator, OrchestratorConfig
+
+    cfg, model, params, chain = tiny4
+    spec = service_spec_for(cfg, max_seq=128)
+    mem = (spec.block_size_gb * cfg.num_layers
+           + spec.cache_size_gb * cfg.num_layers * 6)
+    servers = [Server(f"s{i}", mem, 0.05, 0.02 * (1 + i % 2))
+               for i in range(4)]
+    orch = Orchestrator(
+        servers, spec, model, params, 0.5,
+        OrchestratorConfig(max_seq=128,
+                           engine_factory=partial(PagedChainEngine,
+                                                  page_size=16)))
+    orch.metrics = MetricsRegistry()
+    for i in range(6):
+        orch.submit(_mk_request(i, 8, 30))
+    orch.step()
+    victim = orch.engines[0].chain.servers[0]
+    orch.fail_server(victim)
+    snap = orch.metrics.snapshot().as_dict()
+    live_pages = sum(e.free_pages for e in orch.engines
+                     if hasattr(e, "free_pages"))
+    assert snap["orch.free_pages"] == live_pages
+    assert snap["orch.batch_occupancy"]["count"] > 0
+    orch.drain()
+
+
+def test_trace_records_stage_lanes(tiny4):
+    """trace_schedule=True records the 1F wavefront; decode_orchestrator_
+    trace turns it into one lane per (chain, stage) with tick spans."""
+    from repro.obs.decode import decode_orchestrator_trace
+
+    cfg, model, params, chain = tiny4
+    pipe = PipelineChainEngine(model, params, chain, 4, 128,
+                               kv_layout="paged", microbatches=2,
+                               trace_schedule=True)
+    reqs = [_mk_request(i, 8, 6) for i in range(4)]
+    now = 0.0
+    pending = list(reqs)
+    while pending or pipe.requests:
+        while pending and pipe.has_free_slot and pipe.admit(pending[0], now):
+            pending.pop(0)
+        pipe.step(now)
+        now += 0.5
+    assert pipe.stage_schedule
+    # every round's ticks obey the wavefront: stage k runs ubatch t - k
+    for e in pipe.stage_schedule:
+        assert e["ubatch"] == e["tick"] - e["stage"]
+    orch = types.SimpleNamespace(engines=[pipe], finished=list(reqs),
+                                 failed=[], deferred=[])
+    tr = decode_orchestrator_trace(orch)
+    assert tr.meta["n_stage_spans"] == len(pipe.stage_schedule)
+    stage_lanes = [v for v in tr.lanes.values() if "/stage[" in v]
+    assert len(stage_lanes) == pipe.num_stages
+    spans = [s for s in tr.spans if s.cat == "pipeline"]
+    assert len(spans) == len(pipe.stage_schedule)
+    assert all(s.t1 > s.t0 for s in spans)
+
+
+# ---------------------------------------------------------------------------
+# shard_map grid dispatch (PR 6 sweep path on real shards)
+# ---------------------------------------------------------------------------
+
+def _grid_inputs(S=13, n=60):
+    from repro.core.engines import jax_scan as js
+
+    rng = np.random.default_rng(0)
+    times = np.sort(rng.exponential(1.0, (S, n)), axis=1)
+    works = rng.exponential(2.0, (S, n))
+    us = rng.random((S, n))
+    slot_rate, slot_prio, slot_chain = js.slot_layout(
+        [2.0, 1.0], [3, 3], [0, 1])
+    return js, times, works, us, slot_rate, slot_prio, slot_chain
+
+
+def test_grid_impl_rejects_unknown():
+    js, times, works, *_rest = _grid_inputs(2, 8)
+    slot_rate, slot_prio = _rest[1], _rest[2]
+    with pytest.raises(ValueError, match="grid impl"):
+        js.run_jffc_scan_grid(times, works, slot_rate, slot_prio,
+                              impl="spmd")
+
+
+@multi_device
+def test_shard_map_matches_pmap_bitwise():
+    """The migration gate: shard_map (default) == legacy pmap == vmap,
+    exact equality, including non-divisible row counts (padding)."""
+    js, times, works, us, slot_rate, slot_prio, slot_chain = _grid_inputs()
+    ref = js.run_jffc_scan_grid(times, works, slot_rate, slot_prio,
+                                devices=1)
+    for impl in ("shard_map", "pmap"):
+        got = js.run_jffc_scan_grid(times, works, slot_rate, slot_prio,
+                                    impl=impl)
+        assert all(np.array_equal(a, b) for a, b in zip(ref, got)), impl
+    for pol in ("jffs", "jsq"):
+        ref = js.run_event_scan_grid(pol, times, works, us, slot_rate,
+                                     slot_chain, [2.0, 1.0], [3, 3], [0, 1],
+                                     devices=1)
+        sm = js.run_event_scan_grid(pol, times, works, us, slot_rate,
+                                    slot_chain, [2.0, 1.0], [3, 3], [0, 1],
+                                    impl="shard_map")
+        pm = js.run_event_scan_grid(pol, times, works, us, slot_rate,
+                                    slot_chain, [2.0, 1.0], [3, 3], [0, 1],
+                                    impl="pmap")
+        assert all(np.array_equal(a, b) for a, b in zip(ref, sm)), pol
+        assert all(np.array_equal(a, b) for a, b in zip(ref, pm)), pol
+
+
+@multi_device
+def test_sharded_sweep_parity_through_run_grid():
+    """ROADMAP gate: the sweep's run_grid one-pass path is bit-stable on a
+    real multi-shard host (devices=1 vs all visible devices)."""
+    from repro.core.engines.batched import run_grid
+    from repro.core.workload import poisson_exponential_np
+
+    traces = [poisson_exponential_np(4.8, 400, seed=s) for s in range(5)]
+    times = np.stack([t for t, _ in traces])
+    works = np.stack([w for _, w in traces])
+    for policy in ("jffc", "sed"):
+        a = run_grid(policy, [2.0, 1.0], [2, 4], times, works, devices=1)
+        b = run_grid(policy, [2.0, 1.0], [2, 4], times, works)
+        for x, y in zip(a, b):
+            assert np.array_equal(x.response_times, y.response_times)
+            assert np.array_equal(x.waiting_times, y.waiting_times)
+            assert x.sim_time == y.sim_time
